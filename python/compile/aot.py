@@ -1,0 +1,103 @@
+"""AOT: lower the BNN forward pass (Pallas kernels included) to HLO text.
+
+The interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Weights are lowered as *runtime arguments* (not baked constants) so one
+artifact serves every trained model of the same architecture — the same
+runtime-reconfigurability the paper gets from storing weights in MAU
+tables / CLS memory.  Argument order: ``w_0, ..., w_{L-1}, x``.
+
+Artifacts (per architecture × batch size)::
+
+    artifacts/<key>_b<batch>.hlo.txt
+    artifacts/manifest.json        # shapes + arg order for the Rust runtime
+    artifacts/model.hlo.txt        # default target (mlp256, batch 1)
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import BLOCK_SIZE
+from .model import BnnArch, USE_CASE_ARCHS, bnn_forward
+
+# Architectures to ship. "mlp256" covers both 256-bit traffic use cases;
+# the tomography sizes share the 152-bit input.
+AOT_ARCHS: dict[str, BnnArch] = {
+    "mlp256": USE_CASE_ARCHS["traffic"],
+    "tomo32": USE_CASE_ARCHS["tomography_32"],
+    "tomo64": USE_CASE_ARCHS["tomography_64"],
+    "tomo128": USE_CASE_ARCHS["tomography_128"],
+}
+BATCH_SIZES = (1, 32, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_arch(arch: BnnArch, batch: int) -> str:
+    """Lower ``bnn_forward`` for one architecture + batch size."""
+
+    def fn(*args):
+        *weights, x = args
+        return (bnn_forward(list(weights), x),)
+
+    w_specs = [
+        jax.ShapeDtypeStruct(s, jnp.uint32) for s in arch.weight_shapes
+    ]
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, arch.weight_shapes[0][1]), jnp.uint32
+    )
+    lowered = jax.jit(fn).lower(*w_specs, x_spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+    for key, arch in AOT_ARCHS.items():
+        for batch in BATCH_SIZES:
+            name = f"{key}_b{batch}"
+            text = lower_arch(arch, batch)
+            (out / f"{name}.hlo.txt").write_text(text)
+            manifest[name] = {
+                "file": f"{name}.hlo.txt",
+                "in_bits": arch.in_bits,
+                "neurons": list(arch.neurons),
+                "batch": batch,
+                "in_words": arch.weight_shapes[0][1],
+                "weight_shapes": [list(s) for s in arch.weight_shapes],
+                "out_neurons": arch.neurons[-1],
+            }
+            print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+    # Makefile's canonical default target.
+    (out / "model.hlo.txt").write_text((out / "mlp256_b1.hlo.txt").read_text())
+    manifest["model"] = dict(manifest["mlp256_b1"], file="model.hlo.txt")
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

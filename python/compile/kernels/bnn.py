@@ -1,0 +1,153 @@
+"""Layer-1 Pallas kernels: the binary fully-connected layer (Algorithm 1).
+
+The paper's compute hot-spot is the XNOR + popcount + sign loop of a binary
+FC layer.  This module implements it as Pallas kernels so the whole model
+lowers into one HLO module (AOT'd by ``compile/aot.py`` and executed from
+Rust via PJRT).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the NIC targets pack
+weights into ``block_size``-bit registers (NFP: 32b), keep them resident in
+the fastest memory (NFP CLS / FPGA BRAM), and popcount either with a lookup
+table (FPGA) or a shift/mask/add tree (P4, HAKMEM AI memo 239 item 169).
+On TPU the analogue is:
+
+* packed ``uint32`` words on the innermost (lane) axis → one VPU op handles
+  32 × vector-width binary synapses;
+* weights + one batch tile in VMEM via ``BlockSpec`` → one HBM fetch of the
+  weights per batch tile, exactly the "load once, stream inputs" schedule;
+* popcount as the HAKMEM bit-slice tree (5 vector ops/word) rather than an
+  LUT gather, which the VPU does not do efficiently.  The MXU is left idle
+  on purpose: a binary layer is bitwise work, not a bf16 matmul.
+
+Kernels MUST run with ``interpret=True`` here (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BLOCK_SIZE, padded_bits
+
+# Batch-tile row count.  8×128 is the VPU register tile; 128 rows keeps the
+# scores block (TB × N ≤ 128×128 int32 = 64KB) comfortably inside VMEM next
+# to the packed weights (≤ 4KB for the paper's NNs).
+MAX_BATCH_TILE = 128
+
+
+def popcount_u32(v: jax.Array) -> jax.Array:
+    """HAKMEM-169 bit-slice popcount over uint32 lanes (5 vector ops).
+
+    Matches Algorithm 2 of the paper, which the NNtoP4 compiler unrolls
+    across PISA pipeline stages; here the same tree vectorizes on the VPU.
+    """
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    # Horizontal byte-sum via multiply-accumulate; the high byte holds the
+    # total.  uint32 wrap-around is intentional and exact here.
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def _scores_kernel(x_ref, w_ref, o_ref):
+    """Score tile: o[b, n] = sum_j popcount(~(x[b, j] ^ w[n, j]))."""
+    x = x_ref[...]  # [TB, IW] uint32
+    w = w_ref[...]  # [N, IW] uint32
+    xnor = ~(x[:, None, :] ^ w[None, :, :])  # [TB, N, IW]
+    o_ref[...] = jnp.sum(popcount_u32(xnor).astype(jnp.int32), axis=-1)
+
+
+def _fc_kernel(x_ref, w_ref, o_ref, *, thr: int, n_out: int):
+    """Packed binary FC tile: sign-threshold scores, pack bits into uint32."""
+    x = x_ref[...]
+    w = w_ref[...]
+    xnor = ~(x[:, None, :] ^ w[None, :, :])
+    scores = jnp.sum(popcount_u32(xnor).astype(jnp.int32), axis=-1)  # [TB, N]
+    bits = (scores >= thr).astype(jnp.uint32)
+    p = padded_bits(n_out)
+    if p != n_out:
+        bits = jnp.pad(bits, ((0, 0), (0, p - n_out)))
+    words = bits.reshape(bits.shape[0], p // BLOCK_SIZE, BLOCK_SIZE)
+    shifts = jnp.arange(BLOCK_SIZE, dtype=jnp.uint32)
+    o_ref[...] = jnp.sum(words << shifts, axis=-1).astype(jnp.uint32)
+
+
+def _batch_tile(batch: int) -> int:
+    if batch <= MAX_BATCH_TILE:
+        return batch
+    if batch % MAX_BATCH_TILE != 0:
+        raise ValueError(f"batch {batch} must divide by {MAX_BATCH_TILE}")
+    return MAX_BATCH_TILE
+
+
+def bnn_fc_scores(x_packed: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """Pallas binary-FC scores: int32[batch, n_neurons] popcount sums.
+
+    Args:
+      x_packed: uint32[batch, in_words].
+      w_packed: uint32[n_neurons, in_words]; ``in_words`` must match.
+    """
+    b, iw = x_packed.shape
+    n, iw_w = w_packed.shape
+    if iw != iw_w:
+        raise ValueError(f"in_words mismatch: x has {iw}, w has {iw_w}")
+    tb = _batch_tile(b)
+    return pl.pallas_call(
+        _scores_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, iw), lambda i: (i, 0)),   # stream batch tiles
+            pl.BlockSpec((n, iw), lambda i: (0, 0)),    # weights resident
+        ],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x_packed, w_packed)
+
+
+def bnn_fc(x_packed: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """Pallas packed binary FC layer (Algorithm 1).
+
+    Returns uint32[batch, ceil(n/32)] packed sign bits, threshold =
+    ``in_bits / 2`` over the padded input width.
+    """
+    b, iw = x_packed.shape
+    n, iw_w = w_packed.shape
+    if iw != iw_w:
+        raise ValueError(f"in_words mismatch: x has {iw}, w has {iw_w}")
+    thr = (iw * BLOCK_SIZE) // 2
+    ow = padded_bits(n) // BLOCK_SIZE
+    tb = _batch_tile(b)
+    kernel = functools.partial(_fc_kernel, thr=thr, n_out=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, ow), jnp.uint32),
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, iw), lambda i: (i, 0)),
+            pl.BlockSpec((n, iw), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ow), lambda i: (i, 0)),
+        interpret=True,
+    )(x_packed, w_packed)
+
+
+def vmem_footprint_bytes(batch: int, in_words: int, n_neurons: int) -> int:
+    """Estimated VMEM bytes for one grid step of :func:`bnn_fc`.
+
+    Used by DESIGN.md §Perf to check the kernel stays VMEM-resident:
+    input tile + weights + xnor/popcount intermediate + scores + output.
+    """
+    tb = _batch_tile(batch)
+    ow = padded_bits(n_neurons) // BLOCK_SIZE
+    x_b = tb * in_words * 4
+    w_b = n_neurons * in_words * 4
+    inter_b = tb * n_neurons * in_words * 4  # xnor tile (dominant term)
+    scores_b = tb * n_neurons * 4
+    out_b = tb * ow * 4
+    return x_b + w_b + inter_b + scores_b + out_b

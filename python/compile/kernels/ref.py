@@ -1,0 +1,151 @@
+"""Pure-jnp reference oracle for the binary fully-connected layer.
+
+This module is the single source of truth for the semantics of the paper's
+Algorithm 1 (N3IC, §3.1): for every output neuron,
+
+    s        = sum_j popcount( XNOR(w[j], x[j]) )        # j over 32b words
+    bit      = 1  if s >= sign_thr  else 0
+    sign_thr = in_bits / 2
+
+where ``in_bits`` is the (padded) number of binary inputs.  Inputs, weights
+and outputs use the {0, 1} encoding of the {-1, +1} algebra: for ±1 vectors
+``a``, ``b`` with bit encodings ``x``, ``w``::
+
+    dot(a, b) = 2 * popcount(XNOR(x, w)) - in_bits
+
+so ``s >= in_bits/2  <=>  dot >= 0`` — the sign activation.
+
+Everything here is plain ``jax.numpy`` (no Pallas) and is used by pytest as
+the correctness oracle for the Pallas kernel in :mod:`bnn` and, via exported
+golden files, for every Rust executor (bnn-exec, NFP sim, PISA interp, FPGA
+sim, PJRT runtime).
+
+Packing convention (shared with Rust): bit ``i`` of the logical input vector
+lives in word ``i // 32``, bit position ``i % 32`` (little-endian within the
+word).  All logical widths are padded to a multiple of 32 with 0-bits
+(i.e. -1 in the ±1 algebra); training uses the same padding, so thresholds
+stay exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK_SIZE = 32  # the paper's block_size for the NFP / P4 targets
+
+
+def padded_bits(n: int) -> int:
+    """Logical width ``n`` padded up to a multiple of BLOCK_SIZE."""
+    return ((n + BLOCK_SIZE - 1) // BLOCK_SIZE) * BLOCK_SIZE
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Pack a (..., n_bits) 0/1 array into (..., ceil(n/32)) uint32 words.
+
+    Bit i goes to word i//32, position i%32.  Pads with zeros.
+    """
+    bits = np.asarray(bits, dtype=np.uint32)
+    n = bits.shape[-1]
+    p = padded_bits(n)
+    if p != n:
+        pad = np.zeros(bits.shape[:-1] + (p - n,), dtype=np.uint32)
+        bits = np.concatenate([bits, pad], axis=-1)
+    words = bits.reshape(bits.shape[:-1] + (p // BLOCK_SIZE, BLOCK_SIZE))
+    shifts = np.arange(BLOCK_SIZE, dtype=np.uint32)
+    return (words << shifts).sum(axis=-1).astype(np.uint32)
+
+
+def unpack_bits(words: np.ndarray, n_bits: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`; returns a (..., n_bits) 0/1 uint8 array."""
+    words = np.asarray(words, dtype=np.uint32)
+    shifts = np.arange(BLOCK_SIZE, dtype=np.uint32)
+    bits = (words[..., :, None] >> shifts) & 1
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * BLOCK_SIZE,))
+    return bits[..., :n_bits].astype(np.uint8)
+
+
+def bnn_fc_scores_ref(x_packed: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """Reference: integer XNOR-popcount scores.
+
+    Args:
+      x_packed: uint32[batch, in_words] packed inputs.
+      w_packed: uint32[n_neurons, in_words] packed weights.
+
+    Returns:
+      int32[batch, n_neurons] scores ``s`` (popcount sums).
+    """
+    xnor = ~(x_packed[:, None, :] ^ w_packed[None, :, :])  # [B, N, IW]
+    pop = jax.lax.population_count(xnor.astype(jnp.uint32))
+    return jnp.sum(pop.astype(jnp.int32), axis=-1)
+
+
+def pack_bits_jnp(bits: jax.Array, n_bits: int) -> jax.Array:
+    """jnp version of :func:`pack_bits` over the last axis (0/1 ints)."""
+    p = padded_bits(n_bits)
+    if p != n_bits:
+        pad = jnp.zeros(bits.shape[:-1] + (p - n_bits,), dtype=bits.dtype)
+        bits = jnp.concatenate([bits, pad], axis=-1)
+    words = bits.reshape(bits.shape[:-1] + (p // BLOCK_SIZE, BLOCK_SIZE))
+    shifts = jnp.arange(BLOCK_SIZE, dtype=jnp.uint32)
+    return jnp.sum(words.astype(jnp.uint32) << shifts, axis=-1).astype(jnp.uint32)
+
+
+def bnn_fc_ref(x_packed: jax.Array, w_packed: jax.Array) -> jax.Array:
+    """Reference: packed binary FC layer (Algorithm 1).
+
+    Returns uint32[batch, ceil(n_neurons/32)] packed activation bits with
+    ``bit = s >= in_bits/2`` (``in_bits`` = padded input width).
+    """
+    n = w_packed.shape[0]
+    in_bits = w_packed.shape[1] * BLOCK_SIZE
+    thr = in_bits // 2
+    scores = bnn_fc_scores_ref(x_packed, w_packed)
+    bits = (scores >= thr).astype(jnp.uint32)  # [B, N]
+    return pack_bits_jnp(bits, n)
+
+
+def bnn_mlp_ref(layers: list[jax.Array], x_packed: jax.Array) -> jax.Array:
+    """Reference multi-layer BNN: hidden layers sign-packed, final raw scores.
+
+    Args:
+      layers: list of uint32[n_k, in_words_k] packed weight matrices.
+      x_packed: uint32[batch, in_words_0].
+
+    Returns:
+      int32[batch, n_last] final-layer scores (argmax = predicted class).
+    """
+    h = x_packed
+    for w in layers[:-1]:
+        h = bnn_fc_ref(h, w)
+    return bnn_fc_scores_ref(h, layers[-1])
+
+
+def float_mlp_ref(layers_pm1: list[np.ndarray], x_pm1: np.ndarray) -> np.ndarray:
+    """±1-algebra float reference (cross-checks the packed semantics).
+
+    ``layers_pm1`` are float matrices with entries in {-1, +1} shaped
+    [n_k, in_bits_k]; ``x_pm1`` is [batch, in_bits_0] in {-1, +1}.
+    Hidden activation is sign(dot) with sign(0) = +1.  Returns the final
+    layer's integer scores ``s = (dot + in_bits) / 2``.
+
+    Padding: both activations and weight columns are padded with -1 up to
+    the next multiple of 32, mirroring the 0-bit padding of the packed path
+    (pad positions always match, adding +1 each to the popcount score).
+    """
+
+    def pad_pm1(a: np.ndarray, p: int) -> np.ndarray:
+        if a.shape[1] < p:  # pad with -1 (the 0-bit)
+            a = np.concatenate([a, -np.ones((a.shape[0], p - a.shape[1]))], axis=1)
+        return a
+
+    h = np.asarray(x_pm1, dtype=np.float64)
+    for w in layers_pm1[:-1]:
+        p = padded_bits(w.shape[1])
+        h, w = pad_pm1(h, p), pad_pm1(np.asarray(w, np.float64), p)
+        h = np.where(h @ w.T >= 0, 1.0, -1.0)
+    w = layers_pm1[-1]
+    p = padded_bits(w.shape[1])
+    h, w = pad_pm1(h, p), pad_pm1(np.asarray(w, np.float64), p)
+    return ((h @ w.T + p) / 2).astype(np.int64)

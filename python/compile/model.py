@@ -1,0 +1,136 @@
+"""Layer-2: the binarized-MLP compute graph in JAX, calling the L1 kernels.
+
+A BNN model here is a list of packed uint32 weight matrices
+``[n_k, in_words_k]`` (see ``kernels/ref.py`` for the bit conventions).
+Hidden layers apply the packed sign activation; the final layer returns raw
+int32 popcount scores so the consumer (the Rust coordinator, or the paper's
+output selector) can argmax / threshold them.
+
+The forward pass lowers — kernels included — into a single HLO module via
+``aot.py``; the Rust runtime executes it through PJRT with Python entirely
+out of the request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bnn as bnn_kernels
+from .kernels import ref as bnn_ref
+from .kernels.ref import BLOCK_SIZE, pack_bits, padded_bits
+
+
+@dataclass(frozen=True)
+class BnnArch:
+    """Architecture of a binarized MLP: logical widths, unpadded.
+
+    ``in_bits`` is the logical input width (e.g. 256 for the traffic use
+    cases, 152 for tomography); ``neurons`` the per-layer neuron counts
+    (e.g. (32, 16, 2)).
+    """
+
+    in_bits: int
+    neurons: tuple[int, ...]
+
+    @property
+    def layer_in_bits(self) -> tuple[int, ...]:
+        """Padded input width of each layer."""
+        widths = [padded_bits(self.in_bits)]
+        widths += [padded_bits(n) for n in self.neurons[:-1]]
+        return tuple(widths)
+
+    @property
+    def weight_shapes(self) -> tuple[tuple[int, int], ...]:
+        """Packed weight shapes [(n_k, in_words_k), ...]."""
+        return tuple(
+            (n, ib // BLOCK_SIZE)
+            for n, ib in zip(self.neurons, self.layer_in_bits)
+        )
+
+    @property
+    def total_weight_bits(self) -> int:
+        return sum(n * ib for n, ib in zip(self.neurons, self.layer_in_bits))
+
+    @property
+    def memory_bytes(self) -> int:
+        """Binary-model memory footprint (packed weights)."""
+        return self.total_weight_bits // 8
+
+    @property
+    def float_memory_bytes(self) -> int:
+        """Full-precision equivalent (4B/weight), for Table 1/5."""
+        return self.total_weight_bits * 4
+
+    def describe(self) -> str:
+        ns = ", ".join(str(n) for n in self.neurons)
+        return f"{self.in_bits}b → [{ns}]"
+
+
+@dataclass
+class BnnModel:
+    """A trained, packed BNN: architecture + uint32 weight matrices."""
+
+    arch: BnnArch
+    weights: list[np.ndarray] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        shapes = self.arch.weight_shapes
+        if len(self.weights) != len(shapes):
+            raise ValueError(
+                f"{len(self.weights)} weight matrices for {len(shapes)} layers"
+            )
+        for k, (w, s) in enumerate(zip(self.weights, shapes)):
+            if tuple(w.shape) != s:
+                raise ValueError(f"layer {k}: shape {w.shape} != expected {s}")
+            if w.dtype != np.uint32:
+                raise ValueError(f"layer {k}: dtype {w.dtype} != uint32")
+
+    @classmethod
+    def from_pm1(cls, arch: BnnArch, layers_pm1: list[np.ndarray]) -> "BnnModel":
+        """Build from ±1 float weight matrices [n_k, in_bits_k(padded)]."""
+        packed = [pack_bits((w > 0).astype(np.uint32)) for w in layers_pm1]
+        return cls(arch, packed)
+
+
+def bnn_forward(weights: list[jax.Array], x_packed: jax.Array) -> jax.Array:
+    """Full BNN forward on Pallas kernels: packed input → final int32 scores.
+
+    This is the function ``aot.py`` lowers to HLO.  ``weights`` become
+    compile-time constants when closed over, or runtime arguments when
+    passed — we pass them as arguments so one artifact serves any model of
+    the same architecture (runtime reconfiguration, like the paper's
+    MAU-table weight store).
+    """
+    h = x_packed
+    for w in weights[:-1]:
+        h = bnn_kernels.bnn_fc(h, w)
+    return bnn_kernels.bnn_fc_scores(h, weights[-1])
+
+
+def bnn_forward_ref(weights: list[jax.Array], x_packed: jax.Array) -> jax.Array:
+    """Same graph on the pure-jnp oracle (used in tests / L2 perf checks)."""
+    return bnn_ref.bnn_mlp_ref(list(weights), x_packed)
+
+
+def predict_classes(model: BnnModel, x_packed: np.ndarray) -> np.ndarray:
+    """Convenience: argmax of the final scores (ties → lowest index)."""
+    scores = bnn_forward([jnp.asarray(w) for w in model.weights],
+                         jnp.asarray(x_packed))
+    return np.asarray(jnp.argmax(scores, axis=-1))
+
+
+# The paper's evaluated architectures (§5 Table 1, App. C Table 5).
+USE_CASE_ARCHS: dict[str, BnnArch] = {
+    # Traffic classification: 16 flow features × 16b = 256 inputs.
+    "traffic": BnnArch(in_bits=256, neurons=(32, 16, 2)),
+    # Anomaly detection: same shape, different dataset.
+    "anomaly": BnnArch(in_bits=256, neurons=(32, 16, 2)),
+    # Network tomography: 19 probe delays × 8b = 152 inputs, three sizes.
+    "tomography_32": BnnArch(in_bits=152, neurons=(32, 16, 2)),
+    "tomography_64": BnnArch(in_bits=152, neurons=(64, 32, 2)),
+    "tomography_128": BnnArch(in_bits=152, neurons=(128, 64, 2)),
+}

@@ -1,0 +1,38 @@
+"""Export-format tests: model JSON, goldens, and the cross-language
+feature-layout golden consumed by the Rust test suite."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from compile.kernels.ref import pack_bits
+from train.binarize import featurize
+from train.export import write_feature_layout_golden
+
+
+def test_feature_layout_golden_contents(tmp_path: Path):
+    write_feature_layout_golden(tmp_path)
+    data = json.loads((tmp_path / "feature_layout.golden.json").read_text())
+    cases = data["cases"]
+    assert len(cases) == 8
+    shapes = {(len(c["values"]), c["feature_bits"], c["in_bits"]) for c in cases}
+    assert shapes == {(16, 16, 256), (19, 8, 152)}
+    for c in cases:
+        # Each case is internally consistent: recompute the packing.
+        x = np.array([c["values"]], dtype=np.uint16)
+        pm1 = featurize(x, c["feature_bits"], c["in_bits"])
+        packed = pack_bits((pm1 > 0).astype(np.uint32))[0]
+        assert [int(w) for w in packed] == c["packed"]
+        # Word count matches the padded width.
+        assert len(c["packed"]) == (c["in_bits"] + 31) // 32
+
+
+def test_feature_layout_golden_deterministic(tmp_path: Path):
+    a = tmp_path / "a"
+    b = tmp_path / "b"
+    write_feature_layout_golden(a)
+    write_feature_layout_golden(b)
+    assert (a / "feature_layout.golden.json").read_text() == (
+        b / "feature_layout.golden.json"
+    ).read_text()

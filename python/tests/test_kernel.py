@@ -1,0 +1,102 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (the core signal).
+
+Hypothesis sweeps shapes and random packed inputs; every case asserts exact
+integer equality (binary algebra — no tolerance needed).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bnn, ref
+
+
+def rand_packed(rng, rows, words):
+    return rng.integers(0, 2**32, size=(rows, words), dtype=np.uint32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.sampled_from([1, 2, 7, 32]),
+    in_words=st.sampled_from([1, 2, 5, 8]),
+    neurons=st.sampled_from([1, 2, 16, 32, 33, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scores_kernel_matches_ref(batch, in_words, neurons, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_packed(rng, batch, in_words)
+    w = rand_packed(rng, neurons, in_words)
+    got = np.asarray(bnn.bnn_fc_scores(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.bnn_fc_scores_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.sampled_from([1, 3, 32]),
+    in_words=st.sampled_from([1, 4, 8]),
+    neurons=st.sampled_from([2, 16, 32, 48, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fc_kernel_matches_ref(batch, in_words, neurons, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_packed(rng, batch, in_words)
+    w = rand_packed(rng, neurons, in_words)
+    got = np.asarray(bnn.bnn_fc(jnp.asarray(x), jnp.asarray(w)))
+    want = np.asarray(ref.bnn_fc_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(v=st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+def test_popcount_u32(v):
+    arr = jnp.asarray(np.array(v, dtype=np.uint32))
+    got = np.asarray(bnn.popcount_u32(arr))
+    want = np.array([bin(x).count("1") for x in v], dtype=np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    for n_bits in [1, 31, 32, 33, 152, 256]:
+        bits = rng.integers(0, 2, size=(5, n_bits)).astype(np.uint8)
+        packed = ref.pack_bits(bits)
+        assert packed.shape == (5, ref.padded_bits(n_bits) // 32)
+        np.testing.assert_array_equal(ref.unpack_bits(packed, n_bits), bits)
+
+
+def test_scores_against_pm1_float_reference():
+    """XNOR-popcount algebra == ±1 dot-product algebra, end to end."""
+    rng = np.random.default_rng(7)
+    dims = [64, 32, 16, 4]
+    layers_pm1 = [
+        rng.choice([-1.0, 1.0], size=(dims[k + 1], dims[k]))
+        for k in range(len(dims) - 1)
+    ]
+    x_bits = rng.integers(0, 2, size=(16, dims[0]))
+    x_pm1 = np.where(x_bits > 0, 1.0, -1.0)
+    packed_layers = [
+        jnp.asarray(ref.pack_bits((w > 0).astype(np.uint32)))
+        for w in layers_pm1
+    ]
+    x_packed = jnp.asarray(ref.pack_bits(x_bits))
+    got = np.asarray(ref.bnn_mlp_ref(packed_layers, x_packed))
+    want = ref.float_mlp_ref(layers_pm1, x_pm1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mismatched_words_raises():
+    x = jnp.zeros((1, 2), jnp.uint32)
+    w = jnp.zeros((4, 3), jnp.uint32)
+    with pytest.raises(ValueError):
+        bnn.bnn_fc_scores(x, w)
+    with pytest.raises(ValueError):
+        bnn.bnn_fc(x, w)
+
+
+def test_vmem_footprint_small_nets_fit():
+    # Paper's use-case nets must fit VMEM (≈16MB) with huge headroom.
+    fp = bnn.vmem_footprint_bytes(batch=128, in_words=8, n_neurons=32)
+    assert fp < 1 << 20  # < 1MB

@@ -1,0 +1,80 @@
+"""L2 tests: model architecture math, forward pass, export formats."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import BnnArch, BnnModel, bnn_forward, bnn_forward_ref, USE_CASE_ARCHS
+from train.export import golden_for, model_to_dict
+
+
+def random_model(arch: BnnArch, seed=0) -> BnnModel:
+    rng = np.random.default_rng(seed)
+    pm1 = [
+        rng.choice([-1.0, 1.0], size=(n, ib))
+        for n, ib in zip(arch.neurons, arch.layer_in_bits)
+    ]
+    return BnnModel.from_pm1(arch, pm1)
+
+
+def test_arch_shapes_and_memory():
+    a = USE_CASE_ARCHS["traffic"]
+    assert a.weight_shapes == ((32, 8), (16, 1), (2, 1))
+    assert a.memory_bytes == 1096  # Table 1: 1.1 KB
+    assert a.float_memory_bytes == 35072  # Table 5: 35 KB
+    t = USE_CASE_ARCHS["tomography_128"]
+    assert t.weight_shapes == ((128, 5), (64, 4), (2, 2))
+    assert 3300 < t.memory_bytes < 3700  # Table 5: 3.4 KB
+
+
+def test_forward_kernel_vs_ref_all_archs():
+    rng = np.random.default_rng(1)
+    for name, arch in USE_CASE_ARCHS.items():
+        model = random_model(arch, seed=hash(name) % 2**31)
+        w = [jnp.asarray(x) for x in model.weights]
+        x = jnp.asarray(
+            rng.integers(0, 2**32, size=(4, arch.weight_shapes[0][1]), dtype=np.uint32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(bnn_forward(w, x)), np.asarray(bnn_forward_ref(w, x)), err_msg=name
+        )
+
+
+def test_model_shape_validation():
+    arch = USE_CASE_ARCHS["traffic"]
+    model = random_model(arch)
+    bad = [w.copy() for w in model.weights]
+    bad[0] = bad[0][:, :-1]
+    with pytest.raises(ValueError):
+        BnnModel(arch, bad)
+
+
+def test_export_roundtrip_schema():
+    arch = USE_CASE_ARCHS["anomaly"]
+    model = random_model(arch, seed=7)
+    d = model_to_dict("anomaly", model, {"bnn_test_acc": 0.85})
+    text = json.dumps(d)
+    back = json.loads(text)
+    assert back["neurons"] == [32, 16, 2]
+    assert back["layers"][0]["threshold"] == 128
+    assert len(back["layers"][0]["words"]) == 32 * 8
+    # thresholds are half the padded input width for every layer
+    for lyr in back["layers"]:
+        assert lyr["threshold"] == lyr["in_words"] * 16
+
+
+def test_golden_consistency():
+    arch = USE_CASE_ARCHS["traffic"]
+    model = random_model(arch, seed=3)
+    g = golden_for("traffic", model, n_vectors=4)
+    assert len(g["inputs"]) == 4
+    for x, scores, cls in zip(g["inputs"], g["scores"], g["classes"]):
+        xp = jnp.asarray(np.array([x], dtype=np.uint32))
+        want = np.asarray(
+            ref.bnn_mlp_ref([jnp.asarray(w) for w in model.weights], xp)
+        )[0]
+        np.testing.assert_array_equal(np.array(scores), want)
+        assert cls == int(want.argmax())

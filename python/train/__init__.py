@@ -1,0 +1,2 @@
+# Build-time training package: synthetic datasets + STE binarization.
+# Never imported at runtime; `make artifacts` runs it once.

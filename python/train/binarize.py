@@ -1,0 +1,239 @@
+"""Courbariaux–Bengio binarization training (straight-through estimator).
+
+Implements the paper's §3.1 training recipe: canonical back-propagation on
+latent real-valued weights clipped to [-1, 1]; forward pass uses the sign of
+the weights and sign activations; gradients flow through sign via the
+straight-through estimator (identity inside the clip region).  After
+training, weights are thresholded at 0 → {0, 1} bits and packed for the
+XNOR-popcount executors.
+
+The float (non-binarized) MLP baseline for Table 1/5's "MLP" column is also
+trained here.  Optimizer is a self-contained Adam (no optax dependency).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import padded_bits
+from compile.model import BnnArch, BnnModel
+
+
+def featurize(x_int: np.ndarray, feature_bits: int, in_bits: int) -> np.ndarray:
+    """Expand integer features to ±1 bit inputs, padded to ``in_bits``.
+
+    Each feature contributes its binary digits MSB-first ("provide each bit
+    as separated input to the MLP", App. C).  Pad positions are -1.
+    """
+    n, f = x_int.shape
+    shifts = np.arange(feature_bits - 1, -1, -1)
+    bits = (x_int[:, :, None].astype(np.int64) >> shifts) & 1
+    bits = bits.reshape(n, f * feature_bits)
+    assert bits.shape[1] <= in_bits
+    out = -np.ones((n, padded_bits(in_bits)), dtype=np.float32)
+    out[:, : bits.shape[1]] = np.where(bits > 0, 1.0, -1.0)
+    return out
+
+
+def _pad_pm1(h: jax.Array, width: int) -> jax.Array:
+    """Pad activations with -1 up to ``width`` (the packed 0-bit padding)."""
+    if h.shape[1] < width:
+        h = jnp.concatenate(
+            [h, -jnp.ones((h.shape[0], width - h.shape[1]), h.dtype)], axis=1
+        )
+    return h
+
+
+def _ste_sign(x: jax.Array) -> jax.Array:
+    """sign(x) with sign(0)=+1; backward = identity clipped to [-1, 1]."""
+    xc = jnp.clip(x, -1.0, 1.0)
+    s = jnp.where(x >= 0, 1.0, -1.0)
+    return xc + jax.lax.stop_gradient(s - xc)
+
+
+def _init_params(arch: BnnArch, key: jax.Array) -> list[jax.Array]:
+    dims_in = [padded_bits(b) for b in arch.layer_in_bits]
+    params = []
+    for n, d in zip(arch.neurons, dims_in):
+        key, sub = jax.random.split(key)
+        params.append(jax.random.uniform(sub, (n, d), minval=-0.9, maxval=0.9))
+    return params
+
+
+def _bnn_forward_train(params: list[jax.Array], x: jax.Array) -> jax.Array:
+    """Training-time forward: mirrors the packed inference path exactly.
+
+    Hidden activations are ±1 signs of the binary dot; pre-activations are
+    normalized by fan-in before the STE so the clip region is meaningful.
+    The final layer returns the (scaled) binary dot as logits.
+    """
+    h = x
+    for w in params[:-1]:
+        h = _pad_pm1(h, w.shape[1])
+        wb = _ste_sign(w)
+        pre = h @ wb.T / w.shape[1]  # normalized binary dot
+        h = _ste_sign(pre)
+    w = params[-1]
+    h = _pad_pm1(h, w.shape[1])
+    return h @ _ste_sign(w).T / jnp.sqrt(w.shape[1])
+
+
+def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+@dataclass
+class TrainResult:
+    model: BnnModel
+    train_acc: float
+    test_acc: float
+
+
+def _adam_update(grads, params, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, m_, v_: jnp.clip(p - lr * m_ / (jnp.sqrt(v_) + eps), -1.0, 1.0),
+        params, mh, vh,
+    )
+    return params, m, v
+
+
+def train_bnn(
+    arch: BnnArch,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_test: np.ndarray,
+    y_test: np.ndarray,
+    feature_bits: int,
+    *,
+    epochs: int = 120,
+    batch: int = 512,
+    lr: float = 5e-3,
+    seed: int = 0,
+) -> TrainResult:
+    """Train a binarized MLP; returns the packed model + accuracies."""
+    xt = jnp.asarray(featurize(x_train, feature_bits, arch.in_bits))
+    xe = jnp.asarray(featurize(x_test, feature_bits, arch.in_bits))
+    yt, ye = jnp.asarray(y_train), jnp.asarray(y_test)
+    key = jax.random.PRNGKey(seed)
+    params = _init_params(arch, key)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, t, lr_t, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p: _xent(_bnn_forward_train(p, xb), yb)
+        )(params)
+        params, m, v = _adam_update(grads, params, m, v, t, lr_t)
+        return params, m, v, loss
+
+    @jax.jit
+    def accuracy(params, x, y):
+        pred = jnp.argmax(_bnn_forward_train(params, x), axis=-1)
+        return jnp.mean(pred == y)
+
+    n = xt.shape[0]
+    steps_per_epoch = max(1, n // batch)
+    rng = np.random.default_rng(seed)
+    t = 0
+    for e in range(epochs):
+        # Cosine decay helps the latent weights settle near their final
+        # signs; without it sign flips keep churning late in training.
+        lr_t = lr * 0.5 * (1 + np.cos(np.pi * e / epochs))
+        order = rng.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = order[s * batch : (s + 1) * batch]
+            t += 1
+            params, m, v, _ = step(params, m, v, t, lr_t, xt[idx], yt[idx])
+
+    pm1 = [np.where(np.asarray(w) >= 0, 1.0, -1.0) for w in params]
+    model = BnnModel.from_pm1(arch, pm1)
+    # Report accuracy of the *deployed* packed model (exact integer path),
+    # not the training surrogate.
+    from compile.kernels.ref import bnn_mlp_ref, pack_bits
+
+    def packed_acc(x_pm1, y):
+        xp = jnp.asarray(pack_bits((np.asarray(x_pm1) > 0).astype(np.uint32)))
+        scores = bnn_mlp_ref([jnp.asarray(w) for w in model.weights], xp)
+        return float(jnp.mean(jnp.argmax(scores, axis=-1) == y))
+
+    return TrainResult(
+        model=model,
+        train_acc=packed_acc(xt, yt),
+        test_acc=packed_acc(xe, ye),
+    )
+
+
+def train_float_mlp(
+    arch: BnnArch,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    x_test: np.ndarray,
+    y_test: np.ndarray,
+    feature_bits: int,
+    *,
+    epochs: int = 60,
+    batch: int = 512,
+    lr: float = 1e-3,
+    seed: int = 0,
+) -> float:
+    """Full-precision MLP baseline (ReLU + bias); returns test accuracy.
+
+    Same widths as the BNN; this is the "MLP" column of Table 1/5.
+    """
+    xt = jnp.asarray(featurize(x_train, feature_bits, arch.in_bits))
+    xe = jnp.asarray(featurize(x_test, feature_bits, arch.in_bits))
+    yt, ye = jnp.asarray(y_train), jnp.asarray(y_test)
+    key = jax.random.PRNGKey(seed + 100)
+    dims_in = [padded_bits(b) for b in arch.layer_in_bits]
+    params = []
+    for n_, d in zip(arch.neurons, dims_in):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (n_, d)) * jnp.sqrt(2.0 / d)
+        params.append({"w": w, "b": jnp.zeros((n_,))})
+
+    def fwd(params, x):
+        h = x
+        for lyr in params[:-1]:
+            h = _pad_pm1(h, lyr["w"].shape[1])
+            h = jax.nn.relu(h @ lyr["w"].T + lyr["b"])
+        h = _pad_pm1(h, params[-1]["w"].shape[1])
+        return h @ params[-1]["w"].T + params[-1]["b"]
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, t, xb, yb):
+        loss, grads = jax.value_and_grad(lambda p: _xent(fwd(p, xb), yb))(params)
+        m = jax.tree.map(lambda m_, g: 0.9 * m_ + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda v_, g: 0.999 * v_ + 0.001 * g * g, v, grads)
+        params = jax.tree.map(
+            lambda p, m_, v_: p
+            - lr * (m_ / (1 - 0.9**t)) / (jnp.sqrt(v_ / (1 - 0.999**t)) + 1e-8),
+            params, m, v,
+        )
+        return params, m, v
+
+    n = xt.shape[0]
+    steps_per_epoch = max(1, n // batch)
+    rng = np.random.default_rng(seed)
+    t = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(steps_per_epoch):
+            idx = order[s * batch : (s + 1) * batch]
+            t += 1
+            params, m, v = step(params, m, v, t, xt[idx], yt[idx])
+    pred = jnp.argmax(fwd(params, xe), axis=-1)
+    return float(jnp.mean(pred == ye))

@@ -1,0 +1,106 @@
+"""Export trained BNNs + golden vectors for the Rust layer.
+
+Formats (consumed by ``rust/src/bnn/model.rs`` via serde):
+
+``artifacts/models/<name>.json``::
+
+    {
+      "name": "traffic",
+      "in_bits": 256,                  # logical input width
+      "neurons": [32, 16, 2],
+      "layers": [
+        {"neurons": 32, "in_words": 8, "threshold": 128,
+         "words": [u32, ...]}          # row-major [neurons × in_words]
+      ],
+      "metrics": {"bnn_test_acc": .., "float_test_acc": ..,
+                  "memory_bytes": .., "float_memory_bytes": ..}
+    }
+
+``artifacts/models/<name>.golden.json``: packed inputs + final scores +
+argmax classes computed through the **Pallas kernel path** (so every Rust
+executor is cross-checked against L1, not just the jnp oracle).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import BLOCK_SIZE, pack_bits
+from compile.model import BnnModel, bnn_forward
+
+
+def model_to_dict(name: str, model: BnnModel, metrics: dict) -> dict:
+    arch = model.arch
+    layers = []
+    for w, in_bits in zip(model.weights, arch.layer_in_bits):
+        layers.append({
+            "neurons": int(w.shape[0]),
+            "in_words": int(w.shape[1]),
+            "threshold": int(in_bits // 2),
+            "words": [int(v) for v in w.reshape(-1)],
+        })
+    return {
+        "name": name,
+        "in_bits": int(arch.in_bits),
+        "neurons": [int(n) for n in arch.neurons],
+        "layers": layers,
+        "metrics": metrics,
+    }
+
+
+def golden_for(name: str, model: BnnModel, n_vectors: int = 16,
+               seed: int = 99) -> dict:
+    rng = np.random.default_rng(seed)
+    in_words = model.arch.weight_shapes[0][1]
+    x = rng.integers(0, 2**32, size=(n_vectors, in_words), dtype=np.uint32)
+    scores = np.asarray(
+        bnn_forward([jnp.asarray(w) for w in model.weights], jnp.asarray(x))
+    )
+    return {
+        "model": name,
+        "in_words": in_words,
+        "inputs": [[int(v) for v in row] for row in x],
+        "scores": [[int(v) for v in row] for row in scores],
+        "classes": [int(c) for c in scores.argmax(axis=1)],
+    }
+
+
+def write_model(out_dir: Path, name: str, model: BnnModel, metrics: dict) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{name}.json").write_text(
+        json.dumps(model_to_dict(name, model, metrics)))
+    (out_dir / f"{name}.golden.json").write_text(
+        json.dumps(golden_for(name, model)))
+
+
+def write_feature_layout_golden(out_dir: Path, seed: int = 77) -> None:
+    """Cross-language golden: quantized features → packed input words.
+
+    Pins the MSB-first, feature-major bit layout shared by
+    ``train.binarize.featurize`` (training) and the Rust
+    ``net::features`` module (runtime); checked by pytest *and* cargo
+    test so the two ends can never drift apart silently.
+    """
+    from train.binarize import featurize
+
+    rng = np.random.default_rng(seed)
+    cases = []
+    for n_feat, bits, in_bits in [(16, 16, 256), (19, 8, 152)]:
+        for _ in range(4):
+            vals = rng.integers(0, 2**bits, n_feat).tolist()
+            x = np.array([vals], dtype=np.uint16)
+            pm1 = featurize(x, bits, in_bits)
+            packed = pack_bits((pm1 > 0).astype(np.uint32))[0].tolist()
+            cases.append({
+                "values": vals,
+                "feature_bits": bits,
+                "in_bits": in_bits,
+                "packed": [int(w) for w in packed],
+            })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "feature_layout.golden.json").write_text(
+        json.dumps({"cases": cases}))

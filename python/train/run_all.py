@@ -1,0 +1,119 @@
+"""Train every use-case BNN and export models + goldens + summary.
+
+Regenerates the accuracy side of the paper's evaluation:
+
+* Table 1 / Table 5 — per-use-case NN size, memory, MLP vs binarized
+  accuracy (``artifacts/summary.json``).
+* Fig 16 / Fig 34 — tomography accuracy distribution across queues for the
+  three NN sizes (``artifacts/tomography_accuracy.json``).
+
+Usage::
+
+    python -m train.run_all [--out ../artifacts] [--full] [--quick]
+
+``--full`` trains all 17 tomography queues (paper's box plot); the default
+trains 5 representative queues to keep `make artifacts` fast.  ``--quick``
+cuts epochs (CI smoke).  Deterministic for a fixed flag set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from compile.model import USE_CASE_ARCHS
+from train import datasets
+from train.binarize import train_bnn, train_float_mlp
+from train.export import write_model
+
+
+def train_use_case(name, arch, ds, *, epochs, float_epochs, lr=5e-3, seed=0):
+    (xt, yt), (xe, ye) = ds.split()
+    res = train_bnn(arch, xt, yt, xe, ye, ds.feature_bits,
+                    epochs=epochs, lr=lr, seed=seed)
+    float_acc = train_float_mlp(arch, xt, yt, xe, ye, ds.feature_bits,
+                                epochs=float_epochs, seed=seed)
+    metrics = {
+        "bnn_test_acc": round(res.test_acc, 4),
+        "bnn_train_acc": round(res.train_acc, 4),
+        "float_test_acc": round(float_acc, 4),
+        "memory_bytes": arch.memory_bytes,
+        "float_memory_bytes": arch.float_memory_bytes,
+    }
+    return res.model, metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="all 17 tomography queues (slow)")
+    ap.add_argument("--quick", action="store_true", help="reduced epochs")
+    args = ap.parse_args()
+    out = Path(args.out)
+    models_dir = out / "models"
+    e_bnn = 20 if args.quick else 60
+    e_flt = 10 if args.quick else 40
+    e_tomo = 30 if args.quick else 150
+
+    summary = {}
+
+    print("[traffic] training ...", flush=True)
+    ds = datasets.make_traffic_classification()
+    model, metrics = train_use_case(
+        "traffic", USE_CASE_ARCHS["traffic"], ds,
+        epochs=e_bnn, float_epochs=e_flt)
+    write_model(models_dir, "traffic", model, metrics)
+    summary["traffic"] = metrics
+    print(f"[traffic] bnn={metrics['bnn_test_acc']} float={metrics['float_test_acc']}")
+
+    print("[anomaly] training ...", flush=True)
+    ds = datasets.make_anomaly_detection()
+    model, metrics = train_use_case(
+        "anomaly", USE_CASE_ARCHS["anomaly"], ds,
+        epochs=e_bnn, float_epochs=e_flt)
+    write_model(models_dir, "anomaly", model, metrics)
+    summary["anomaly"] = metrics
+    print(f"[anomaly] bnn={metrics['bnn_test_acc']} float={metrics['float_test_acc']}")
+
+    # Tomography: one binary classifier per monitored queue, three NN sizes.
+    ds, labels_all = datasets.make_tomography()
+    queues = range(datasets.N_QUEUES) if args.full else [0, 4, 8, 12, 16]
+    tomo_acc: dict[str, dict[str, float]] = {}
+    for size in (32, 64, 128):
+        arch = USE_CASE_ARCHS[f"tomography_{size}"]
+        accs = {}
+        for q in queues:
+            dq = datasets.Dataset(x=ds.x, y=labels_all[:, q],
+                                  feature_bits=8, name=f"tomo_q{q}")
+            model, metrics = train_use_case(
+                f"tomography_{size}_q{q}", arch, dq,
+                epochs=e_tomo // 2 if args.quick else e_tomo,
+                float_epochs=e_flt, lr=8e-3, seed=q)
+            accs[f"q{q}"] = metrics
+            # Queue 0 is the canonical model used by the Rust benches.
+            if q == 0:
+                write_model(models_dir, f"tomography_{size}", model, metrics)
+        tomo_acc[str(size)] = {
+            k: v["bnn_test_acc"] for k, v in accs.items()}
+        tomo_acc[f"{size}_float"] = {
+            k: v["float_test_acc"] for k, v in accs.items()}
+        med = sorted(tomo_acc[str(size)].values())[len(accs) // 2]
+        summary[f"tomography_{size}"] = {
+            "median_bnn_acc": med,
+            "memory_bytes": arch.memory_bytes,
+            "float_memory_bytes": arch.float_memory_bytes,
+        }
+        print(f"[tomography_{size}] median bnn acc={med}")
+
+    (out / "tomography_accuracy.json").write_text(json.dumps(tomo_acc, indent=1))
+    (out / "summary.json").write_text(json.dumps(summary, indent=1))
+    from train.export import write_feature_layout_golden
+
+    write_feature_layout_golden(out)
+    print(f"wrote {out}/summary.json")
+
+
+if __name__ == "__main__":
+    main()

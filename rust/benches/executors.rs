@@ -1,0 +1,83 @@
+//! Benches over the *real* executors (the perf-pass targets).
+//!
+//! Covers the hot paths behind Figs. 13/14 (traffic nets), Fig. 15
+//! (tomography net), Fig. 25/26 (big FCs) — measured wall-clock on this
+//! host via the in-tree harness (`n3ic::bench`), recorded in
+//! EXPERIMENTS.md §Perf alongside the modeled numbers.
+
+use n3ic::bench::{bench, group};
+use n3ic::bnn::{BnnExecutor, BnnLayer, BnnModel};
+use n3ic::bnnexec::HostExecutor;
+use n3ic::pisa::compile_bnn;
+
+fn main() {
+    group("core_inference (one inference, bit-exact executor)");
+    for (name, in_bits, arch) in [
+        ("traffic_32_16_2", 256usize, vec![32usize, 16, 2]),
+        ("tomo_128_64_2", 152, vec![128, 64, 2]),
+        ("fc_4096x2048", 4096, vec![2048]),
+    ] {
+        let model = BnnModel::random(name, in_bits, &arch, 1);
+        let x = BnnLayer::random(1, in_bits, 7).words;
+        let mut exec = BnnExecutor::new(model.clone());
+        let mut scores = vec![0i32; model.out_neurons()];
+        bench(name, || {
+            exec.infer(std::hint::black_box(&x), &mut scores);
+            scores[0]
+        });
+    }
+
+    group("bnnexec_batch (host baseline, real wall clock)");
+    let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+    for batch in [32usize, 1024] {
+        let inputs: Vec<Vec<u32>> = (0..batch)
+            .map(|i| BnnLayer::random(1, 256, i as u64).words)
+            .collect();
+        let mut host = HostExecutor::new(model.clone());
+        let mut classes = Vec::with_capacity(batch);
+        let r = bench(&format!("batch{batch}"), || {
+            host.run_batch(std::hint::black_box(&inputs), &mut classes);
+            classes.len()
+        });
+        println!(
+            "  -> {:.2}M inferences/s on this host (paper's Haswell: 1.18M/s)",
+            batch as f64 * r.per_second() / 1e6
+        );
+    }
+
+    group("pisa_interpreter (NNtoP4 functional path)");
+    let prog = compile_bnn(&model).unwrap();
+    let x = BnnLayer::random(1, 256, 3).words;
+    bench("pisa_interpreter_traffic", || {
+        std::hint::black_box(prog.run(std::hint::black_box(&x)))
+    });
+
+    // The AOT/PJRT path (L1+L2 through XLA): per-call overhead vs the
+    // native core — quantifies why the coordinator keeps the bit-exact
+    // Rust path on the per-packet fast path and uses PJRT for batches.
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        group("pjrt_artifact (AOT JAX/Pallas via XLA)");
+        let m = n3ic::bnn::BnnModel::load_named(&artifacts, "traffic")
+            .unwrap_or_else(|_| BnnModel::random("traffic", 256, &[32, 16, 2], 1));
+        let mut rt = n3ic::runtime::PjrtRuntime::new(&artifacts).unwrap();
+        let key1 = n3ic::runtime::Manifest::key_for(&m, 1);
+        let x1 = vec![BnnLayer::random(1, 256, 5).words];
+        rt.infer_batch(&key1, &m, &x1).unwrap(); // warm compile
+        bench("pjrt_batch1", || {
+            rt.infer_batch(&key1, &m, std::hint::black_box(&x1)).unwrap()
+        });
+        let key256 = n3ic::runtime::Manifest::key_for(&m, 256);
+        let x256: Vec<Vec<u32>> = (0..256)
+            .map(|i| BnnLayer::random(1, 256, i).words)
+            .collect();
+        rt.infer_batch(&key256, &m, &x256).unwrap();
+        let r = bench("pjrt_batch256", || {
+            rt.infer_batch(&key256, &m, std::hint::black_box(&x256)).unwrap()
+        });
+        println!(
+            "  -> {:.2}M inferences/s through the AOT artifact at batch 256",
+            256.0 * r.per_second() / 1e6
+        );
+    }
+}

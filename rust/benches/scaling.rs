@@ -1,0 +1,34 @@
+//! Benches for the device-model engines (Figs. 17/18, 21–31): the NFP
+//! queueing simulation, the fat-tree discrete-event core, and the NNtoP4
+//! compiler — the compute that regenerates the scaling figures.
+
+use n3ic::bench::{bench, group};
+use n3ic::bnn::BnnModel;
+use n3ic::fattree::{FatTreeSim, IncastWorkload, SimConfig, Topology};
+use n3ic::nfp::{MemKind, NfpSim};
+use n3ic::pisa::compile_bnn;
+
+fn main() {
+    group("simulation engines");
+    let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+    bench("nfp_sim_20k_events", || {
+        let sim = NfpSim::new(&model, MemKind::Cls, 480);
+        sim.run(1.81e6, 20_000, 3).completed_per_sec
+    });
+
+    bench("fattree_50_rounds", || {
+        let topo = Topology::new();
+        let cfg = SimConfig {
+            probe_interval_ns: 1e6,
+            ..SimConfig::default()
+        };
+        let mut wl = IncastWorkload::new(&topo, &cfg);
+        let mut sim = FatTreeSim::new(topo, cfg, 1);
+        sim.run(50, &mut wl).len()
+    });
+
+    group("compilers");
+    bench("nntop4_compile_traffic", || {
+        compile_bnn(std::hint::black_box(&model)).unwrap().total_ops()
+    });
+}

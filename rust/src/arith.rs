@@ -1,0 +1,144 @@
+//! Arithmetic-intensity model of NN layers (Fig. 4 motivation).
+//!
+//! The paper instruments VGG16 on a Haswell core and shows convolutional
+//! layers are compute-bound (high IPC, few L3 misses) while fully-connected
+//! layers are memory-bound (low IPC, many misses).  We model the underlying
+//! quantity directly: **operations per byte of parameter data loaded**
+//! (arithmetic intensity), which is what the IPC/miss counters proxy.
+//!
+//! conv: every weight is reused across all output positions of its feature
+//! map → ops/byte grows with the spatial output size.  FC: every weight is
+//! used exactly once per inference → ops/byte is a small constant (2 ops
+//! per 4-byte weight = 0.5 op/B).
+
+/// A VGG16-style layer for the intensity model.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: &'static str,
+    pub kind: LayerKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Convolution: (in_ch, out_ch, kernel, out_h, out_w).
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        out_hw: usize,
+    },
+    /// Fully connected: (in_features, out_features).
+    Fc { inf: usize, outf: usize },
+}
+
+impl LayerSpec {
+    /// Multiply-accumulate count for one inference.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv {
+                in_ch,
+                out_ch,
+                k,
+                out_hw,
+            } => (in_ch * out_ch * k * k * out_hw * out_hw) as u64,
+            LayerKind::Fc { inf, outf } => (inf * outf) as u64,
+        }
+    }
+
+    /// Parameter bytes loaded (float32 weights).
+    pub fn param_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv {
+                in_ch, out_ch, k, ..
+            } => (in_ch * out_ch * k * k * 4) as u64,
+            LayerKind::Fc { inf, outf } => (inf * outf * 4) as u64,
+        }
+    }
+
+    /// Arithmetic intensity: ops (2×MAC) per parameter byte.
+    pub fn ops_per_byte(&self) -> f64 {
+        2.0 * self.macs() as f64 / self.param_bytes() as f64
+    }
+
+    /// Modeled IPC on a Haswell-class core: saturates at ~3.2 for
+    /// compute-bound layers and drops toward ~0.4 for memory-bound ones
+    /// (the two plateaus visible in Fig. 4).
+    pub fn modeled_ipc(&self) -> f64 {
+        let i = self.ops_per_byte();
+        0.4 + 2.8 * (i / (i + 32.0))
+    }
+
+    /// Modeled L3 misses per kilo-instruction (inverse shape of IPC).
+    pub fn modeled_l3_mpki(&self) -> f64 {
+        let i = self.ops_per_byte();
+        24.0 * 32.0 / (i + 32.0)
+    }
+}
+
+/// The VGG16 layer sequence used in Fig. 4.
+pub fn vgg16() -> Vec<LayerSpec> {
+    use LayerKind::*;
+    let conv = |name, in_ch, out_ch, out_hw| LayerSpec {
+        name,
+        kind: Conv {
+            in_ch,
+            out_ch,
+            k: 3,
+            out_hw,
+        },
+    };
+    vec![
+        conv("conv1_1", 3, 64, 224),
+        conv("conv1_2", 64, 64, 224),
+        conv("conv2_1", 64, 128, 112),
+        conv("conv2_2", 128, 128, 112),
+        conv("conv3_1", 128, 256, 56),
+        conv("conv3_2", 256, 256, 56),
+        conv("conv3_3", 256, 256, 56),
+        conv("conv4_1", 256, 512, 28),
+        conv("conv4_2", 512, 512, 28),
+        conv("conv4_3", 512, 512, 28),
+        conv("conv5_1", 512, 512, 14),
+        conv("conv5_2", 512, 512, 14),
+        conv("conv5_3", 512, 512, 14),
+        LayerSpec { name: "fc6", kind: Fc { inf: 25088, outf: 4096 } },
+        LayerSpec { name: "fc7", kind: Fc { inf: 4096, outf: 4096 } },
+        LayerSpec { name: "fc8", kind: Fc { inf: 4096, outf: 1000 } },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_layers_are_memory_bound() {
+        for l in vgg16() {
+            match l.kind {
+                LayerKind::Fc { .. } => {
+                    assert!((l.ops_per_byte() - 0.5).abs() < 1e-9);
+                    assert!(l.modeled_ipc() < 0.6, "{}", l.name);
+                }
+                LayerKind::Conv { .. } => {
+                    assert!(l.ops_per_byte() > 90.0, "{}", l.name);
+                    assert!(l.modeled_ipc() > 2.0, "{}", l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_misses_below_fc_misses() {
+        let layers = vgg16();
+        let conv_mpki = layers[0].modeled_l3_mpki();
+        let fc_mpki = layers[14].modeled_l3_mpki();
+        assert!(fc_mpki > 10.0 * conv_mpki);
+    }
+
+    #[test]
+    fn vgg16_macs_total_plausible() {
+        // VGG16 is ~15.5 GMACs; our spec should land in that ballpark.
+        let total: u64 = vgg16().iter().map(|l| l.macs()).sum();
+        assert!((14_000_000_000..17_000_000_000).contains(&total));
+    }
+}

@@ -1,0 +1,88 @@
+//! Minimal micro-benchmark harness (offline substitute for criterion).
+//!
+//! Used by the `cargo bench` binaries (`rust/benches/*.rs`, harness =
+//! false).  Methodology: warm up, then run timed batches until both a
+//! minimum wall time and a minimum iteration count are reached; report
+//! mean ns/iter, the median of batch means, and throughput.
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub ns_per_iter: f64,
+    pub median_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.ns_per_iter
+    }
+}
+
+/// Run a closure under the harness and print a criterion-style line.
+pub fn bench<F: FnMut() -> R, R>(name: &str, mut f: F) -> BenchResult {
+    // Warm-up: ~50 ms.
+    let w0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while w0.elapsed().as_millis() < 50 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+    }
+    // Choose batch size so one batch is ~20 ms.
+    let est_ns = w0.elapsed().as_nanos() as f64 / warm_iters as f64;
+    let batch = ((20e6 / est_ns).ceil() as u64).max(1);
+    let mut batch_means: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_millis() < 400 || batch_means.len() < 5 {
+        let b0 = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        let ns = b0.elapsed().as_nanos() as f64 / batch as f64;
+        batch_means.push(ns);
+        total_iters += batch;
+        if batch_means.len() > 200 {
+            break;
+        }
+    }
+    batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = batch_means[batch_means.len() / 2];
+    let mean = batch_means.iter().sum::<f64>() / batch_means.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        ns_per_iter: mean,
+        median_ns: median,
+        iters: total_iters,
+    };
+    println!(
+        "{:40} {:>12.1} ns/iter (median {:>12.1})  {:>14.0} /s  [{} iters]",
+        r.name,
+        r.ns_per_iter,
+        r.median_ns,
+        r.per_second(),
+        r.iters
+    );
+    r
+}
+
+/// Group header, for readable `cargo bench` output.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop_addition", || std::hint::black_box(1u64) + 1);
+        assert!(r.ns_per_iter > 0.0);
+        assert!(r.ns_per_iter < 1_000.0); // an add is not a microsecond
+        assert!(r.iters > 1000);
+    }
+}

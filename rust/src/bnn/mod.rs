@@ -1,0 +1,47 @@
+//! Packed binary-MLP core: the paper's Algorithm 1, bit-exact.
+//!
+//! Every executor in this crate — the host `bnn-exec` baseline, the NFP,
+//! PISA and FPGA device models, and the PJRT runtime — computes *exactly*
+//! this function; integration tests assert cross-executor equality and
+//! equality with golden vectors produced by the Python/Pallas layer.
+//!
+//! Bit conventions match `python/compile/kernels/ref.py`: bit `i` of a
+//! logical vector lives in word `i / 32`, position `i % 32`; widths are
+//! padded to multiples of 32 with 0-bits (−1 in the ±1 algebra); hidden
+//! layers threshold at `in_bits / 2`; the final layer returns raw integer
+//! popcount scores (argmax = class).
+
+pub mod exec;
+mod model;
+
+pub use exec::{argmax, infer_packed, infer_scores, layer_forward, BnnExecutor};
+pub use model::{BnnLayer, BnnModel, ModelMetrics, load_golden, Golden};
+
+/// Word width of the packed representation (the paper's `block_size`).
+pub const BLOCK_SIZE: usize = 32;
+
+/// Pad a logical bit-width up to a whole number of 32-bit words.
+pub const fn padded_bits(n: usize) -> usize {
+    n.div_ceil(BLOCK_SIZE) * BLOCK_SIZE
+}
+
+/// Number of 32-bit words holding `n` logical bits.
+pub const fn words_for(n: usize) -> usize {
+    n.div_ceil(BLOCK_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_math() {
+        assert_eq!(padded_bits(1), 32);
+        assert_eq!(padded_bits(32), 32);
+        assert_eq!(padded_bits(33), 64);
+        assert_eq!(padded_bits(152), 160);
+        assert_eq!(padded_bits(256), 256);
+        assert_eq!(words_for(152), 5);
+        assert_eq!(words_for(256), 8);
+    }
+}

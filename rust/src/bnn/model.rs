@@ -1,0 +1,314 @@
+//! BNN model representation + JSON (de)serialization of trained artifacts.
+
+use super::{padded_bits, words_for, BLOCK_SIZE};
+use crate::json::Json;
+use crate::Result;
+
+/// One binary fully-connected layer, weights packed row-major.
+#[derive(Debug, Clone)]
+pub struct BnnLayer {
+    /// Number of output neurons (logical, unpadded).
+    pub neurons: usize,
+    /// Packed input words per neuron (`padded_bits(in) / 32`).
+    pub in_words: usize,
+    /// Sign threshold: popcount-sum ≥ threshold → bit 1.  Always
+    /// `in_words * 16` (= half the padded input bits) per Algorithm 1.
+    pub threshold: i32,
+    /// Weights, `neurons × in_words` row-major.
+    pub words: Vec<u32>,
+}
+
+impl BnnLayer {
+    /// Build from packed rows; validates dimensions.
+    pub fn new(neurons: usize, in_words: usize, words: Vec<u32>) -> Result<Self> {
+        anyhow::ensure!(
+            words.len() == neurons * in_words,
+            "layer needs {neurons}×{in_words} words, got {}",
+            words.len()
+        );
+        Ok(Self {
+            neurons,
+            in_words,
+            threshold: (in_words * BLOCK_SIZE / 2) as i32,
+            words,
+        })
+    }
+
+    /// Random layer (deterministic LCG) — used by benches and tests.
+    pub fn random(neurons: usize, in_bits: usize, seed: u64) -> Self {
+        let in_words = words_for(in_bits);
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        let mut next = || {
+            // xorshift64*
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            (state.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 32) as u32
+        };
+        let words = (0..neurons * in_words).map(|_| next()).collect();
+        Self {
+            neurons,
+            in_words,
+            threshold: (in_words * BLOCK_SIZE / 2) as i32,
+            words,
+        }
+    }
+
+    /// Row slice of one neuron's packed weights.
+    #[inline]
+    pub fn row(&self, neuron: usize) -> &[u32] {
+        &self.words[neuron * self.in_words..(neuron + 1) * self.in_words]
+    }
+
+    /// Packed output words this layer produces.
+    pub fn out_words(&self) -> usize {
+        words_for(self.neurons)
+    }
+
+    /// Weight memory, packed (bytes).
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Total 32-bit weight words processed per inference (the unit of the
+    /// NFP/bnn-exec cost models).
+    pub fn work_words(&self) -> usize {
+        self.neurons * self.in_words
+    }
+}
+
+/// Accuracy / memory metadata exported by the Python training pass.
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    pub bnn_test_acc: f64,
+    pub bnn_train_acc: f64,
+    pub float_test_acc: f64,
+    pub memory_bytes: usize,
+    pub float_memory_bytes: usize,
+}
+
+impl ModelMetrics {
+    fn from_json(v: &Json) -> Self {
+        let f = |k: &str| v.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        Self {
+            bnn_test_acc: f("bnn_test_acc"),
+            bnn_train_acc: f("bnn_train_acc"),
+            float_test_acc: f("float_test_acc"),
+            memory_bytes: f("memory_bytes") as usize,
+            float_memory_bytes: f("float_memory_bytes") as usize,
+        }
+    }
+}
+
+/// A full binarized MLP (the unit N3IC deploys per use case).
+#[derive(Debug, Clone)]
+pub struct BnnModel {
+    pub name: String,
+    /// Logical (unpadded) input width in bits.
+    pub in_bits: usize,
+    /// Logical neuron counts per layer, e.g. `[32, 16, 2]`.
+    pub neurons: Vec<usize>,
+    pub layers: Vec<BnnLayer>,
+    pub metrics: ModelMetrics,
+}
+
+impl BnnModel {
+    /// Load a trained model JSON exported by `python/train/export.py`.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let data = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let v = Json::parse(&data)?;
+        let name = v.req_str("name")?.to_string();
+        let in_bits = v.req_usize("in_bits")?;
+        let neurons: Vec<usize> = v
+            .req_array("neurons")?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let mut layers = Vec::new();
+        for lv in v.req_array("layers")? {
+            let words: Vec<u32> = lv
+                .req_array("words")?
+                .iter()
+                .map(|x| x.as_u64().unwrap_or(0) as u32)
+                .collect();
+            layers.push(BnnLayer {
+                neurons: lv.req_usize("neurons")?,
+                in_words: lv.req_usize("in_words")?,
+                threshold: lv.req_usize("threshold")? as i32,
+                words,
+            });
+        }
+        let metrics = v
+            .get("metrics")
+            .map(ModelMetrics::from_json)
+            .unwrap_or_default();
+        let model = Self {
+            name,
+            in_bits,
+            neurons,
+            layers,
+            metrics,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Load by name from an artifacts directory (`<dir>/models/<name>.json`).
+    pub fn load_named(artifacts: &std::path::Path, name: &str) -> Result<Self> {
+        Self::load(&artifacts.join("models").join(format!("{name}.json")))
+    }
+
+    /// Structural consistency: widths chain, thresholds are Algorithm 1's.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "model has no layers");
+        anyhow::ensure!(
+            self.layers.len() == self.neurons.len(),
+            "layers/neurons mismatch"
+        );
+        let mut in_words = words_for(padded_bits(self.in_bits));
+        for (k, layer) in self.layers.iter().enumerate() {
+            anyhow::ensure!(
+                layer.in_words == in_words,
+                "layer {k}: in_words {} != expected {in_words}",
+                layer.in_words
+            );
+            anyhow::ensure!(
+                layer.neurons == self.neurons[k],
+                "layer {k}: neuron count mismatch"
+            );
+            anyhow::ensure!(
+                layer.words.len() == layer.neurons * layer.in_words,
+                "layer {k}: weight length"
+            );
+            anyhow::ensure!(
+                layer.threshold == (layer.in_words * BLOCK_SIZE / 2) as i32,
+                "layer {k}: threshold is not in_bits/2"
+            );
+            in_words = layer.out_words();
+        }
+        Ok(())
+    }
+
+    /// Random model for benches/tests (e.g. a single FC layer sweep).
+    pub fn random(name: &str, in_bits: usize, neurons: &[usize], seed: u64) -> Self {
+        let mut layers = Vec::new();
+        let mut in_b = padded_bits(in_bits);
+        for (k, &n) in neurons.iter().enumerate() {
+            layers.push(BnnLayer::random(n, in_b, seed ^ (k as u64) << 17));
+            in_b = padded_bits(n);
+        }
+        Self {
+            name: name.to_string(),
+            in_bits,
+            neurons: neurons.to_vec(),
+            layers,
+            metrics: ModelMetrics::default(),
+        }
+    }
+
+    /// Packed input words expected by layer 0.
+    pub fn in_words(&self) -> usize {
+        self.layers[0].in_words
+    }
+
+    /// Output neuron count of the final layer.
+    pub fn out_neurons(&self) -> usize {
+        *self.neurons.last().unwrap()
+    }
+
+    /// Packed weight memory over all layers (bytes) — Table 1's "Memory".
+    pub fn memory_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.memory_bytes()).sum()
+    }
+
+    /// Total weight words touched per inference (cost-model unit).
+    pub fn work_words(&self) -> usize {
+        self.layers.iter().map(|l| l.work_words()).sum()
+    }
+
+    /// Architecture string, e.g. `256b→[32, 16, 2]`.
+    pub fn describe(&self) -> String {
+        format!("{}b→{:?}", self.in_bits, self.neurons)
+    }
+}
+
+/// Golden test vectors produced by the **Pallas** path in Python.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub model: String,
+    pub in_words: usize,
+    pub inputs: Vec<Vec<u32>>,
+    pub scores: Vec<Vec<i32>>,
+    pub classes: Vec<usize>,
+}
+
+/// Load `<dir>/models/<name>.golden.json`.
+pub fn load_golden(artifacts: &std::path::Path, name: &str) -> Result<Golden> {
+    let path = artifacts.join("models").join(format!("{name}.golden.json"));
+    let data = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let v = Json::parse(&data)?;
+    let vec_u32 = |j: &Json| -> Vec<u32> {
+        j.as_array()
+            .unwrap_or(&[])
+            .iter()
+            .map(|x| x.as_u64().unwrap_or(0) as u32)
+            .collect()
+    };
+    let vec_i32 = |j: &Json| -> Vec<i32> {
+        j.as_array()
+            .unwrap_or(&[])
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0) as i32)
+            .collect()
+    };
+    Ok(Golden {
+        model: v.req_str("model")?.to_string(),
+        in_words: v.req_usize("in_words")?,
+        inputs: v.req_array("inputs")?.iter().map(vec_u32).collect(),
+        scores: v.req_array("scores")?.iter().map(vec_i32).collect(),
+        classes: v
+            .req_array("classes")?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_model_validates() {
+        let m = BnnModel::random("t", 256, &[32, 16, 2], 7);
+        m.validate().unwrap();
+        assert_eq!(m.in_words(), 8);
+        assert_eq!(m.out_neurons(), 2);
+        // 32×8 + 16×1 + 2×1 words = 274 words = 1096 B (Table 1's 1.1KB).
+        assert_eq!(m.work_words(), 274);
+        assert_eq!(m.memory_bytes(), 1096);
+    }
+
+    #[test]
+    fn tomography_memory_matches_table5() {
+        // 128-64-2 on 152-bit input: Table 5 reports 3.4 KB binarized.
+        let m = BnnModel::random("tomo", 152, &[128, 64, 2], 1);
+        // 128×5 + 64×4 + 2×2 words = 900 words = 3600 B — Table 5 reports
+        // 3.4 KB for the unpadded 152/128/64-bit widths (3472 B); our
+        // 32-bit padding adds ~4%.
+        assert_eq!(m.memory_bytes(), (128 * 5 + 64 * 4 + 2 * 2) * 4);
+        assert!((3300..3700).contains(&m.memory_bytes()));
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let mut m = BnnModel::random("t", 64, &[8, 2], 3);
+        m.layers[1].threshold += 1;
+        assert!(m.validate().is_err());
+        let mut m2 = BnnModel::random("t", 64, &[8, 2], 3);
+        m2.layers[0].words.pop();
+        assert!(m2.validate().is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! `bnn-exec` — the host-CPU comparison system (§6 "Comparison term").
+//!
+//! Two faces, used together by the experiment drivers:
+//!
+//! * a **real executor** ([`HostExecutor`]): runs Algorithm 1 on this
+//!   machine with 64-bit popcounts and batching — bit-exact with every
+//!   other executor (this is also the production hot path when N3IC is
+//!   deployed in "host" mode);
+//! * a **cost model** ([`HostCostModel`]): reproduces the paper's Haswell
+//!   E5-1630v3 numbers (batch latency/throughput incl. the PCIe fetch of
+//!   flow statistics from the NIC and the result writeback), so figures
+//!   can be regenerated with the paper's absolute scales.
+//!
+//! Cost-model calibration anchors (§6.1, Fig. 6/14, App. B.1.2): max
+//! 1.18M flows/s on one core at batch 10k; ~1 ms latency at batch 1k and
+//! ~8 ms at 10k; 10s of µs at batch 1; ~40 µs for one tomography probe
+//! set; ~100 µs for a 4096×2048 FC (a quarter of N3IC-NFP's 400 µs).
+
+use crate::bnn::{BnnExecutor, BnnModel};
+use crate::pcie::PcieModel;
+
+/// Real batched executor (one worker = one CPU core).
+pub struct HostExecutor {
+    exec: BnnExecutor,
+    /// Scores scratch, reused across batch items.
+    scores: Vec<i32>,
+}
+
+impl HostExecutor {
+    pub fn new(model: BnnModel) -> Self {
+        let n = model.out_neurons();
+        Self {
+            exec: BnnExecutor::new(model),
+            scores: vec![0; n],
+        }
+    }
+
+    pub fn model(&self) -> &BnnModel {
+        self.exec.model()
+    }
+
+    /// Run a batch of packed inputs; writes one class per input.
+    pub fn run_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        classes.clear();
+        for x in inputs {
+            self.exec.infer(x, &mut self.scores);
+            classes.push(crate::bnn::exec::argmax(&self.scores));
+        }
+    }
+
+    /// Single inference returning final scores (hot-path form).
+    pub fn infer(&mut self, x: &[u32], scores: &mut [i32]) {
+        self.exec.infer(x, scores)
+    }
+}
+
+/// Calibrated Haswell cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct HostCostModel {
+    /// Effective cost per 64-bit weight qword (XNOR+popcnt+load), ns.
+    pub per_qword_ns: f64,
+    /// Per-neuron overhead (threshold, pack), ns.
+    pub per_neuron_ns: f64,
+    /// Per-layer loop overhead, ns.
+    pub per_layer_ns: f64,
+    /// Per-flow dispatch overhead (stats copy, batching bookkeeping), ns.
+    pub per_flow_ns: f64,
+    /// Fixed per-batch I/O cost: PCIe descriptor rings + driver/syscall
+    /// path to fetch statistics from the NIC and write the result back.
+    pub per_batch_io_ns: f64,
+    pub pcie: PcieModel,
+}
+
+impl Default for HostCostModel {
+    fn default() -> Self {
+        Self {
+            per_qword_ns: 0.8,
+            per_neuron_ns: 2.0,
+            per_layer_ns: 120.0,
+            per_flow_ns: 180.0,
+            per_batch_io_ns: 20_000.0,
+            pcie: PcieModel::default(),
+        }
+    }
+}
+
+impl HostCostModel {
+    /// Pure inference time of one input on one core (ns).
+    pub fn inference_ns(&self, model: &BnnModel) -> f64 {
+        let mut t = 0.0;
+        for layer in &model.layers {
+            let qwords = layer.neurons * layer.in_words.div_ceil(2);
+            t += qwords as f64 * self.per_qword_ns
+                + layer.neurons as f64 * self.per_neuron_ns
+                + self.per_layer_ns;
+        }
+        t
+    }
+
+    /// End-to-end latency of a batch of `b` flows (ns): PCIe fetch of
+    /// `b × stats_bytes`, inference, result writeback.
+    pub fn batch_latency_ns(&self, model: &BnnModel, b: usize) -> f64 {
+        let stats_bytes = 32 * b; // 16×16b features per flow
+        let fetch = self.pcie.transfer_ns(stats_bytes);
+        let write = self.pcie.transfer_ns(b); // 1B class per flow
+        self.per_batch_io_ns
+            + fetch
+            + write
+            + b as f64 * (self.inference_ns(model) + self.per_flow_ns)
+    }
+
+    /// Sustained throughput of one core at batch size `b` (flows/s).
+    pub fn throughput_per_sec(&self, model: &BnnModel, b: usize) -> f64 {
+        b as f64 * 1e9 / self.batch_latency_ns(model, b)
+    }
+
+    /// Max batch admissible under a latency budget (paper: 7 ms cap from
+    /// the TPU paper's interactive-serving rule).
+    pub fn max_batch_under(&self, model: &BnnModel, budget_ns: f64) -> usize {
+        let mut b = 1;
+        while self.batch_latency_ns(model, b * 2) <= budget_ns && b < 1 << 20 {
+            b *= 2;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traffic() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    #[test]
+    fn executor_matches_core_bnn() {
+        let model = traffic();
+        let mut host = HostExecutor::new(model.clone());
+        let inputs: Vec<Vec<u32>> = (0..32)
+            .map(|i| crate::bnn::BnnLayer::random(1, 256, 50 + i).words)
+            .collect();
+        let mut classes = Vec::new();
+        host.run_batch(&inputs, &mut classes);
+        for (x, &c) in inputs.iter().zip(&classes) {
+            assert_eq!(c, crate::bnn::infer_packed(&model, x));
+        }
+    }
+
+    #[test]
+    fn max_throughput_near_1_18m() {
+        // §6.1: "bnn-exec maximum throughput is 1.18M analyzed flows/s,
+        // when using very large batches of 10K flows".
+        let m = HostCostModel::default();
+        let tput = m.throughput_per_sec(&traffic(), 10_000);
+        assert!(
+            (1.0e6..1.6e6).contains(&tput),
+            "tput={tput}"
+        );
+    }
+
+    #[test]
+    fn batch_latency_anchors() {
+        // Fig. 14: ~1 ms at batch 1k, ~8 ms at 10k, 10s of µs at batch 1.
+        let m = HostCostModel::default();
+        let t = traffic();
+        let l1 = m.batch_latency_ns(&t, 1) / 1000.0;
+        let l1k = m.batch_latency_ns(&t, 1000) / 1e6;
+        let l10k = m.batch_latency_ns(&t, 10_000) / 1e6;
+        assert!((15.0..80.0).contains(&l1), "batch1 {l1}µs");
+        assert!((0.5..1.6).contains(&l1k), "batch1k {l1k}ms");
+        assert!((5.0..11.0).contains(&l10k), "batch10k {l10k}ms");
+    }
+
+    #[test]
+    fn tomography_latency_about_40us() {
+        // Fig. 15: bnn-exec processes a probe set in ~40 µs (batch 1).
+        let m = HostCostModel::default();
+        let tomo = BnnModel::random("tomo", 152, &[128, 64, 2], 2);
+        let l = m.batch_latency_ns(&tomo, 1) / 1000.0;
+        assert!((25.0..55.0).contains(&l), "{l}µs");
+    }
+
+    #[test]
+    fn big_fc_quarter_of_nfp_model_parallel() {
+        // Fig. 25: bnn-exec ≈ 100 µs for 4096×2048 (N3IC-NFP is 4×).
+        let m = HostCostModel::default();
+        let fc = BnnModel::random("fc", 4096, &[2048], 3);
+        let inf = m.inference_ns(&fc) / 1000.0;
+        assert!((80.0..140.0).contains(&inf), "{inf}µs");
+    }
+
+    #[test]
+    fn batch_under_7ms_budget_matches_appendix() {
+        // App. B.1.2: 7 ms budget → batch 64 for the 2k-neuron layer
+        // (powers of two; our search returns the nearest power).
+        let m = HostCostModel::default();
+        let fc = BnnModel::random("fc", 4096, &[2048], 3);
+        let b = m.max_batch_under(&fc, 7e6);
+        assert!((32..=128).contains(&b), "batch={b}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Launcher configuration: artifacts location, device selection, service
+//! parameters.  Loaded from JSON (`--config`) with CLI overrides.
+
+use std::path::PathBuf;
+use std::str::FromStr;
+
+use crate::json::Json;
+
+/// Which executor backend the coordinator drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// NFP4000 SoC model, data-parallel mode (N3IC-NFP).
+    Nfp,
+    /// PISA pipeline model compiled by NNtoP4 (N3IC-P4).
+    Pisa,
+    /// Dedicated hardware NN-executor model (N3IC-FPGA).
+    Fpga,
+    /// Host CPU `bnn-exec` baseline (over simulated PCIe).
+    Host,
+    /// PJRT runtime executing the AOT JAX/Pallas artifact.
+    Pjrt,
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Backend::Nfp => "nfp",
+            Backend::Pisa => "pisa",
+            Backend::Fpga => "fpga",
+            Backend::Host => "host",
+            Backend::Pjrt => "pjrt",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "nfp" => Backend::Nfp,
+            "pisa" | "p4" => Backend::Pisa,
+            "fpga" => Backend::Fpga,
+            "host" | "bnn-exec" => Backend::Host,
+            "pjrt" => Backend::Pjrt,
+            other => anyhow::bail!(
+                "unknown backend '{other}' (nfp|pisa|fpga|host|pjrt)"
+            ),
+        })
+    }
+}
+
+/// Top-level service configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Artifacts directory (models/, *.hlo.txt, manifest.json).
+    pub artifacts: PathBuf,
+    /// Model name to deploy (e.g. "traffic").
+    pub model: String,
+    /// Executor backend.
+    pub backend: Backend,
+    /// Offered load for simulated drivers (flows per second).
+    pub flows_per_sec: f64,
+    /// Batch size for the host baseline.
+    pub batch: usize,
+    /// NFP threads dedicated to NN execution.
+    pub nfp_threads: usize,
+    /// Number of FPGA NN-executor modules.
+    pub fpga_modules: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            model: "traffic".into(),
+            backend: Backend::Fpga,
+            flows_per_sec: 1_800_000.0,
+            batch: 1,
+            nfp_threads: 480,
+            fpga_modules: 1,
+        }
+    }
+}
+
+impl Config {
+    pub fn load(path: &std::path::Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        let mut c = Self::default();
+        if let Some(a) = v.get("artifacts").and_then(Json::as_str) {
+            c.artifacts = PathBuf::from(a);
+        }
+        if let Some(m) = v.get("model").and_then(Json::as_str) {
+            c.model = m.to_string();
+        }
+        if let Some(b) = v.get("backend").and_then(Json::as_str) {
+            c.backend = b.parse()?;
+        }
+        if let Some(f) = v.get("flows_per_sec").and_then(Json::as_f64) {
+            c.flows_per_sec = f;
+        }
+        if let Some(b) = v.get("batch").and_then(Json::as_usize) {
+            c.batch = b;
+        }
+        if let Some(t) = v.get("nfp_threads").and_then(Json::as_usize) {
+            c.nfp_threads = t;
+        }
+        if let Some(m) = v.get("fpga_modules").and_then(Json::as_usize) {
+            c.fpga_modules = m;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::from_str("fpga").unwrap(), Backend::Fpga);
+        assert_eq!(Backend::from_str("p4").unwrap(), Backend::Pisa);
+        assert!(Backend::from_str("gpu").is_err());
+        assert_eq!(Backend::Host.to_string(), "host");
+    }
+
+    #[test]
+    fn config_from_json() {
+        let dir = std::env::temp_dir().join("n3ic_cfg_test.json");
+        std::fs::write(
+            &dir,
+            r#"{"model":"anomaly","backend":"nfp","batch":64,"nfp_threads":120}"#,
+        )
+        .unwrap();
+        let c = Config::load(&dir).unwrap();
+        assert_eq!(c.model, "anomaly");
+        assert_eq!(c.backend, Backend::Nfp);
+        assert_eq!(c.batch, 64);
+        assert_eq!(c.nfp_threads, 120);
+        assert_eq!(c.fpga_modules, 1); // default preserved
+        std::fs::remove_file(dir).ok();
+    }
+}

@@ -1,0 +1,77 @@
+//! Batching policy for the host path (Fig. 6): batches amortize PCIe and
+//! dispatch overheads at the price of queueing latency — the trade-off
+//! N3IC exists to avoid.
+
+/// Size/timeout batcher: emits a batch when `max_size` is reached or the
+/// oldest element is older than `max_wait_ns`.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    pub max_size: usize,
+    pub max_wait_ns: f64,
+    buf: Vec<(f64, T)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_size: usize, max_wait_ns: f64) -> Self {
+        Self {
+            max_size: max_size.max(1),
+            max_wait_ns,
+            buf: Vec::new(),
+        }
+    }
+
+    /// Push an item at time `now_ns`; returns a full batch if ready.
+    pub fn push(&mut self, now_ns: f64, item: T) -> Option<Vec<(f64, T)>> {
+        self.buf.push((now_ns, item));
+        if self.buf.len() >= self.max_size {
+            return Some(std::mem::take(&mut self.buf));
+        }
+        None
+    }
+
+    /// Time-based flush: call with the current time; emits if the oldest
+    /// item has waited too long.
+    pub fn poll(&mut self, now_ns: f64) -> Option<Vec<(f64, T)>> {
+        match self.buf.first() {
+            Some(&(t0, _)) if now_ns - t0 >= self.max_wait_ns => {
+                Some(std::mem::take(&mut self.buf))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_trigger() {
+        let mut b = Batcher::new(3, 1e9);
+        assert!(b.push(0.0, "a").is_none());
+        assert!(b.push(1.0, "b").is_none());
+        let batch = b.push(2.0, "c").unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn timeout_trigger() {
+        let mut b = Batcher::new(100, 1000.0);
+        b.push(0.0, 1u32);
+        b.push(10.0, 2);
+        assert!(b.poll(500.0).is_none());
+        let batch = b.poll(1000.0).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn empty_poll_is_none() {
+        let mut b: Batcher<u32> = Batcher::new(4, 10.0);
+        assert!(b.poll(1e12).is_none());
+    }
+}

@@ -1,0 +1,126 @@
+//! The N3IC coordinator (§3.2, Fig. 7): triggers, input/output selectors,
+//! flow shunting, batching, and the serving loop.
+//!
+//! This is the paper's system contribution seen from the NIC: the NN
+//! executor is a data-plane module triggered by packet events or by the
+//! forwarding module (e.g. "enough packets received for a flow"), with
+//! selectors choosing where inputs come from and where verdicts go.
+
+pub mod batcher;
+pub mod multinn;
+pub mod selector;
+pub mod service;
+pub mod shunt;
+pub mod trigger;
+
+pub use batcher::Batcher;
+pub use selector::{InputSelector, OutputSelector};
+pub use service::{CoordinatorService, PacketEvent, ServiceStats};
+pub use shunt::{ShuntDecision, ShuntRouter};
+pub use trigger::TriggerCondition;
+
+use crate::bnn::BnnModel;
+
+/// Uniform executor interface implemented by every backend (NFP / PISA /
+/// FPGA device models, host `bnn-exec`, PJRT runtime).
+pub trait NnExecutor: Send {
+    /// Bit-exact classification of one packed input.
+    fn classify(&mut self, x: &[u32]) -> usize;
+    /// Raw final-layer scores.
+    fn scores(&mut self, x: &[u32], out: &mut [i32]);
+    /// Modeled (or measured) per-inference latency in ns.
+    fn latency_ns(&self) -> f64;
+    /// Backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Host / device adapters for the trait.
+pub struct CoreExecutor {
+    exec: crate::bnn::BnnExecutor,
+    latency_ns: f64,
+    name: &'static str,
+}
+
+impl CoreExecutor {
+    /// Wrap the bit-exact core with a backend-specific latency model.
+    pub fn new(model: BnnModel, latency_ns: f64, name: &'static str) -> Self {
+        Self {
+            exec: crate::bnn::BnnExecutor::new(model),
+            latency_ns,
+            name,
+        }
+    }
+
+    /// N3IC-FPGA executor adapter.
+    pub fn fpga(model: BnnModel) -> Self {
+        let lat = crate::fpga::FpgaTiming::new(&model).latency_ns();
+        Self::new(model, lat, "n3ic-fpga")
+    }
+
+    /// N3IC-NFP (data-parallel, CLS) adapter.
+    pub fn nfp(model: BnnModel) -> Self {
+        let lat = crate::nfp::DataParallelCost::new(&model, crate::nfp::MemKind::Cls)
+            .mean_ns();
+        Self::new(model, lat, "n3ic-nfp")
+    }
+
+    /// Host `bnn-exec` adapter (batch-1 latency incl. PCIe).
+    pub fn host(model: BnnModel) -> Self {
+        let lat = crate::bnnexec::HostCostModel::default().batch_latency_ns(&model, 1);
+        Self::new(model, lat, "bnn-exec")
+    }
+
+    /// N3IC-P4 adapter; fails for models the PISA target cannot fit.
+    pub fn pisa(model: BnnModel) -> Result<Self, crate::pisa::CompileError> {
+        let prog = crate::pisa::compile_bnn(&model)?;
+        let lat = prog.latency_ns(64);
+        Ok(Self::new(model, lat, "n3ic-p4"))
+    }
+}
+
+impl NnExecutor for CoreExecutor {
+    fn classify(&mut self, x: &[u32]) -> usize {
+        self.exec.classify(x)
+    }
+
+    fn scores(&mut self, x: &[u32], out: &mut [i32]) {
+        self.exec.infer(x, out)
+    }
+
+    fn latency_ns(&self) -> f64 {
+        self.latency_ns
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_packed, BnnLayer, BnnModel};
+
+    #[test]
+    fn adapters_bit_exact_and_latency_ordered() {
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+        let x = BnnLayer::random(1, 256, 99).words;
+        let want = infer_packed(&model, &x);
+        let mut fpga = CoreExecutor::fpga(model.clone());
+        let mut nfp = CoreExecutor::nfp(model.clone());
+        let mut host = CoreExecutor::host(model.clone());
+        let mut pisa = CoreExecutor::pisa(model.clone()).unwrap();
+        for e in [&mut fpga as &mut dyn NnExecutor, &mut nfp, &mut host, &mut pisa] {
+            assert_eq!(e.classify(&x), want, "{}", e.name());
+        }
+        // Fig. 14 ordering: FPGA < P4 < NFP; batch-1 host is in the NFP's
+        // 10s-of-µs neighbourhood, while any throughput-equivalent batch
+        // puts the host 10-100× above every N3IC variant.
+        assert!(fpga.latency_ns() < pisa.latency_ns());
+        assert!(pisa.latency_ns() < nfp.latency_ns());
+        assert!(host.latency_ns() > 10_000.0); // 10s of µs at batch 1
+        let host_b1k = crate::bnnexec::HostCostModel::default()
+            .batch_latency_ns(&model, 1000);
+        assert!(nfp.latency_ns() * 10.0 < host_b1k);
+    }
+}

@@ -1,0 +1,131 @@
+//! Multi-NN scheduling on one NIC (§7: "it is possible to include
+//! multiple [executor modules] if the need arises" / the tomography use
+//! case runs one NN per monitored queue).
+//!
+//! Models a bank of executor slots (FPGA modules, or NFP thread groups)
+//! serving a set of deployed NNs round-robin, and answers the §6.2
+//! question: how many NNs fit a probe period on a given backend?
+
+use crate::bnn::{BnnExecutor, BnnModel};
+
+/// A set of deployed models sharing `slots` hardware executors.
+pub struct MultiNnScheduler {
+    execs: Vec<BnnExecutor>,
+    /// Per-model device latency (ns) — from the backend timing model.
+    latency_ns: Vec<f64>,
+    /// Parallel executor slots (FPGA modules / chain instances).
+    pub slots: usize,
+}
+
+impl MultiNnScheduler {
+    pub fn new(models: Vec<(BnnModel, f64)>, slots: usize) -> Self {
+        let (execs, latency_ns): (Vec<_>, Vec<_>) = models
+            .into_iter()
+            .map(|(m, l)| (BnnExecutor::new(m), l))
+            .unzip();
+        Self {
+            execs,
+            latency_ns,
+            slots: slots.max(1),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.execs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.execs.is_empty()
+    }
+
+    /// Run every deployed NN on its input slice; returns argmax classes.
+    /// (Functionally sequential — device parallelism only affects time.)
+    pub fn classify_all(&mut self, inputs: &[Vec<u32>]) -> Vec<usize> {
+        assert_eq!(inputs.len(), self.execs.len());
+        self.execs
+            .iter_mut()
+            .zip(inputs)
+            .map(|(e, x)| e.classify(x))
+            .collect()
+    }
+
+    /// Makespan of one sweep over all NNs with `slots` parallel executors
+    /// (longest-processing-time greedy — the static schedule a NIC would
+    /// bake in).
+    pub fn sweep_latency_ns(&self) -> f64 {
+        let mut order: Vec<f64> = self.latency_ns.clone();
+        order.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let mut loads = vec![0.0f64; self.slots];
+        for l in order {
+            // place on least-loaded slot
+            let (i, _) = loads
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            loads[i] += l;
+        }
+        loads.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Max NNs of uniform latency `l` that fit `period_ns` on `slots`.
+    pub fn capacity(l_ns: f64, slots: usize, period_ns: f64) -> usize {
+        if l_ns <= 0.0 {
+            return usize::MAX;
+        }
+        ((period_ns / l_ns).floor() as usize) * slots.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::FpgaTiming;
+
+    fn tomo_bank(n: usize, slots: usize) -> MultiNnScheduler {
+        let models: Vec<(BnnModel, f64)> = (0..n)
+            .map(|q| {
+                let m = BnnModel::random(&format!("q{q}"), 152, &[128, 64, 2], q as u64);
+                let l = FpgaTiming::new(&m).latency_ns();
+                (m, l)
+            })
+            .collect();
+        MultiNnScheduler::new(models, slots)
+    }
+
+    #[test]
+    fn seventeen_queues_fit_400g_on_two_modules() {
+        // 17 × ~1.7 µs serial = ~28 µs > 25 µs budget on one module;
+        // two modules halve the sweep → fits (the §7 scaling argument).
+        let one = tomo_bank(17, 1);
+        let two = tomo_bank(17, 2);
+        assert!(one.sweep_latency_ns() > 25_000.0, "{}", one.sweep_latency_ns());
+        assert!(two.sweep_latency_ns() <= 25_000.0, "{}", two.sweep_latency_ns());
+    }
+
+    #[test]
+    fn sweep_latency_scales_inverse_with_slots() {
+        let b1 = tomo_bank(16, 1).sweep_latency_ns();
+        let b4 = tomo_bank(16, 4).sweep_latency_ns();
+        assert!((b1 / b4 - 4.0).abs() < 0.2, "{b1} vs {b4}");
+    }
+
+    #[test]
+    fn classify_all_matches_individual_executors() {
+        let mut bank = tomo_bank(5, 2);
+        let inputs: Vec<Vec<u32>> = (0..5)
+            .map(|i| crate::bnn::BnnLayer::random(1, 152, 100 + i).words)
+            .collect();
+        let got = bank.classify_all(&inputs);
+        for (q, x) in inputs.iter().enumerate() {
+            let m = BnnModel::random(&format!("q{q}"), 152, &[128, 64, 2], q as u64);
+            assert_eq!(got[q], crate::bnn::infer_packed(&m, x));
+        }
+    }
+
+    #[test]
+    fn capacity_arithmetic() {
+        assert_eq!(MultiNnScheduler::capacity(1_700.0, 1, 25_000.0), 14);
+        assert_eq!(MultiNnScheduler::capacity(1_700.0, 4, 25_000.0), 56);
+    }
+}

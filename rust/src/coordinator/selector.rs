@@ -1,0 +1,125 @@
+//! Input/output selectors (§3.2, Fig. 7): where the NN executor's input
+//! comes from and where its verdict goes.  "When the input and output
+//! selectors are configured to read or to write to a packet field, the NN
+//! Executor works as an inline module."
+
+use crate::net::features::FeatureVector;
+use crate::net::flow::FlowStats;
+
+/// Where the NN input comes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputSelector {
+    /// Read packed words directly from a packet field offset (inline mode:
+    /// e.g. probe payloads carrying delay vectors).
+    PacketField { offset: usize },
+    /// Read from a memory region (collected flow statistics).
+    FlowStats,
+}
+
+/// Where the inference result goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputSelector {
+    /// Write the class into a packet field (inline tagging: the forwarding
+    /// module can match on it for flow steering).
+    PacketField { offset: usize },
+    /// Write into a memory region the host can DMA (the shunting path).
+    Memory,
+}
+
+/// Materialized NN input with provenance.
+#[derive(Debug, Clone)]
+pub struct SelectedInput {
+    pub packed: Vec<u32>,
+}
+
+impl InputSelector {
+    /// Build the packed input for an event.
+    pub fn select(
+        &self,
+        payload_words: Option<&[u32]>,
+        stats: Option<&FlowStats>,
+        in_words: usize,
+    ) -> Option<SelectedInput> {
+        match self {
+            InputSelector::PacketField { offset } => {
+                let w = payload_words?;
+                if w.len() < offset + in_words {
+                    return None;
+                }
+                Some(SelectedInput {
+                    packed: w[*offset..offset + in_words].to_vec(),
+                })
+            }
+            InputSelector::FlowStats => {
+                let s = stats?;
+                let fv = FeatureVector::from_stats(s);
+                Some(SelectedInput {
+                    packed: fv.pack().to_vec(),
+                })
+            }
+        }
+    }
+}
+
+/// Verdict sink with both destinations observable (tests/metrics).
+#[derive(Debug, Default, Clone)]
+pub struct OutputSink {
+    /// (flow/packet tag, class) pairs written to packet fields.
+    pub inline_tags: Vec<(u64, usize)>,
+    /// Classes written to the shared memory region.
+    pub memory: Vec<(u64, usize)>,
+}
+
+impl OutputSink {
+    pub fn write(&mut self, sel: OutputSelector, id: u64, class: usize) {
+        match sel {
+            OutputSelector::PacketField { .. } => self.inline_tags.push((id, class)),
+            OutputSelector::Memory => self.memory.push((id, class)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::packet::{Packet, Proto};
+
+    #[test]
+    fn packet_field_selection() {
+        let words: Vec<u32> = (0..12).collect();
+        let sel = InputSelector::PacketField { offset: 2 };
+        let got = sel.select(Some(&words), None, 8).unwrap();
+        assert_eq!(got.packed, (2..10).collect::<Vec<u32>>());
+        // Too-short payload → None.
+        assert!(sel.select(Some(&words[..5]), None, 8).is_none());
+        assert!(sel.select(None, None, 8).is_none());
+    }
+
+    #[test]
+    fn flow_stats_selection_matches_feature_pack() {
+        let mut s = FlowStats::default();
+        let p = Packet {
+            ts_ns: 10.0,
+            src_ip: 1,
+            dst_ip: 2,
+            src_port: 7,
+            dst_port: 443,
+            proto: Proto::Tcp,
+            size: 900,
+            tcp_flags: 0x12,
+        };
+        s.update(&p, true);
+        let sel = InputSelector::FlowStats;
+        let got = sel.select(None, Some(&s), 8).unwrap();
+        assert_eq!(got.packed, FeatureVector::from_stats(&s).pack().to_vec());
+    }
+
+    #[test]
+    fn output_sink_routes() {
+        let mut sink = OutputSink::default();
+        sink.write(OutputSelector::Memory, 1, 0);
+        sink.write(OutputSelector::PacketField { offset: 0 }, 2, 1);
+        assert_eq!(sink.memory, vec![(1, 0)]);
+        assert_eq!(sink.inline_tags, vec![(2, 1)]);
+    }
+}

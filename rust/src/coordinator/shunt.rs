@@ -1,0 +1,98 @@
+//! Flow shunting (§5 #1, Fig. 11): N3IC pre-classifies on the NIC and
+//! forwards only the "needs deeper analysis" share to the host
+//! middlebox, splitting the classification task across the PCIe boundary.
+
+use super::NnExecutor;
+
+/// Where a flow goes after NIC pre-classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShuntDecision {
+    /// Handled entirely on the NIC (e.g. class == P2P → police/steer).
+    Nic(usize),
+    /// Escalated to the host for fine-grained classification.
+    Host,
+}
+
+/// Router: class `nic_class` is terminal on the NIC; everything else is
+/// shunted to the host.
+pub struct ShuntRouter<E: NnExecutor> {
+    pub nic_exec: E,
+    /// Class the NIC handles terminally (paper: P2P = 1).
+    pub nic_class: usize,
+    pub stats: ShuntStats,
+}
+
+/// Counters for the shunting split.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ShuntStats {
+    pub total: u64,
+    pub kept_on_nic: u64,
+    pub sent_to_host: u64,
+}
+
+impl ShuntStats {
+    /// Fraction of traffic the host no longer sees.
+    pub fn offload_ratio(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.kept_on_nic as f64 / self.total as f64
+        }
+    }
+}
+
+impl<E: NnExecutor> ShuntRouter<E> {
+    pub fn new(nic_exec: E, nic_class: usize) -> Self {
+        Self {
+            nic_exec,
+            nic_class,
+            stats: ShuntStats::default(),
+        }
+    }
+
+    /// Classify on the NIC and decide the flow's path.
+    pub fn route(&mut self, x: &[u32]) -> ShuntDecision {
+        self.stats.total += 1;
+        let class = self.nic_exec.classify(x);
+        if class == self.nic_class {
+            self.stats.kept_on_nic += 1;
+            ShuntDecision::Nic(class)
+        } else {
+            self.stats.sent_to_host += 1;
+            ShuntDecision::Host
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{BnnLayer, BnnModel};
+    use crate::coordinator::CoreExecutor;
+
+    #[test]
+    fn router_splits_and_counts() {
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 5);
+        let mut router = ShuntRouter::new(CoreExecutor::fpga(model.clone()), 1);
+        let mut nic = 0;
+        let mut host = 0;
+        for seed in 0..200 {
+            let x = BnnLayer::random(1, 256, seed).words;
+            match router.route(&x) {
+                ShuntDecision::Nic(c) => {
+                    assert_eq!(c, 1);
+                    nic += 1;
+                }
+                ShuntDecision::Host => host += 1,
+            }
+        }
+        assert_eq!(router.stats.total, 200);
+        assert_eq!(router.stats.kept_on_nic, nic);
+        assert_eq!(router.stats.sent_to_host, host);
+        assert!(
+            (router.stats.offload_ratio() - nic as f64 / 200.0).abs() < 1e-12
+        );
+        // A random model splits both ways on random inputs.
+        assert!(nic > 0 && host > 0, "nic={nic} host={host}");
+    }
+}

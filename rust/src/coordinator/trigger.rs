@@ -1,0 +1,62 @@
+//! Trigger conditions (§3.2/§4.1): when the forwarding module hands a
+//! flow to the NN executor.  "Typical conditions could be the arrival of
+//! a new flow, the reception of a predefined number of packets for a
+//! given flow, the parsing of a given value in a packet header."
+
+use crate::net::packet::Packet;
+
+/// When to fire the NN executor for a packet/flow event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TriggerCondition {
+    /// Fire on the first packet of every new flow.
+    NewFlow,
+    /// Fire when a flow reaches exactly `n` packets (enough statistics).
+    EveryNPackets(u32),
+    /// Fire when a header field matches (dst_port == value).
+    DstPort(u16),
+    /// Fire for every packet (the stress-test configuration, App. B.1.1).
+    EveryPacket,
+}
+
+impl TriggerCondition {
+    /// Decide for a packet given flow state after the statistics update.
+    pub fn fires(&self, pkt: &Packet, is_new_flow: bool, flow_pkts: u32) -> bool {
+        match *self {
+            TriggerCondition::NewFlow => is_new_flow,
+            TriggerCondition::EveryNPackets(n) => flow_pkts == n,
+            TriggerCondition::DstPort(p) => pkt.dst_port == p,
+            TriggerCondition::EveryPacket => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::packet::Proto;
+
+    fn pkt(dst_port: u16) -> Packet {
+        Packet {
+            ts_ns: 0.0,
+            src_ip: 1,
+            dst_ip: 2,
+            src_port: 9,
+            dst_port,
+            proto: Proto::Tcp,
+            size: 64,
+            tcp_flags: 0,
+        }
+    }
+
+    #[test]
+    fn conditions() {
+        let p = pkt(443);
+        assert!(TriggerCondition::NewFlow.fires(&p, true, 1));
+        assert!(!TriggerCondition::NewFlow.fires(&p, false, 5));
+        assert!(TriggerCondition::EveryNPackets(10).fires(&p, false, 10));
+        assert!(!TriggerCondition::EveryNPackets(10).fires(&p, false, 11));
+        assert!(TriggerCondition::DstPort(443).fires(&p, false, 3));
+        assert!(!TriggerCondition::DstPort(80).fires(&p, false, 3));
+        assert!(TriggerCondition::EveryPacket.fires(&p, false, 7));
+    }
+}

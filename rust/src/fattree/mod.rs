@@ -1,0 +1,18 @@
+//! Discrete-event CLOS fat-tree simulator — the ns-3 substitute for the
+//! SIMON network-tomography use case (§5 #3, App. C.2, Fig. 33).
+//!
+//! Two-pod topology: 4 ToR + 4 aggregation + 2 core switches, 32 hosts
+//! (8 per ToR).  All traffic of interest flows toward host 0; the 17
+//! output queues on host-0-bound paths are the monitored set.  Probes are
+//! periodically sent from 19 selected hosts to host 0 and their one-way
+//! delays recorded — the BNN input.
+
+pub mod probes;
+pub mod sim;
+pub mod topology;
+pub mod workload;
+
+pub use probes::{ProbeCollector, ProbeSample};
+pub use sim::{FatTreeSim, SimConfig};
+pub use topology::{Topology, N_MONITORED_QUEUES, N_PROBE_PATHS};
+pub use workload::IncastWorkload;

@@ -1,0 +1,112 @@
+//! Probe-delay collection + quantization: the bridge from the fat-tree
+//! simulator to the BNN input format (19 × 8-bit delays, App. C.2).
+
+use super::sim::ProbeRound;
+use crate::net::features::pack_features;
+
+/// One quantized probe sample ready for inference.
+#[derive(Debug, Clone)]
+pub struct ProbeSample {
+    /// Quantized one-way delays (19 × 8-bit).
+    pub delays_q: Vec<u16>,
+    /// Ground-truth congestion label per monitored queue.
+    pub congested: Vec<bool>,
+    /// Packed BNN input (5 words = 160 bits for 152 used).
+    pub packed: Vec<u32>,
+}
+
+/// Collects rounds, fits the quantization scale, emits samples.
+pub struct ProbeCollector {
+    /// Delay scale: value mapped to 255 (p99 of observed delays).
+    pub scale_ns: f64,
+    /// Queue-size congestion threshold (packets).
+    pub threshold: usize,
+}
+
+impl ProbeCollector {
+    /// Fit scale/threshold from a calibration set of rounds: scale at the
+    /// ~p99 delay, threshold at the `congested_frac` occupancy quantile.
+    pub fn fit(rounds: &[ProbeRound], congested_frac: f64) -> Self {
+        let mut delays: Vec<f64> = rounds
+            .iter()
+            .flat_map(|r| r.delays_ns.iter().copied())
+            .collect();
+        delays.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let scale_ns = if delays.is_empty() {
+            1.0
+        } else {
+            delays[((delays.len() - 1) as f64 * 0.99) as usize].max(1.0)
+        };
+        let mut sizes: Vec<usize> = rounds
+            .iter()
+            .flat_map(|r| r.queue_sizes.iter().copied())
+            .collect();
+        sizes.sort_unstable();
+        let threshold = if sizes.is_empty() {
+            1
+        } else {
+            sizes[((sizes.len() - 1) as f64 * (1.0 - congested_frac)) as usize].max(1)
+        };
+        Self {
+            scale_ns,
+            threshold,
+        }
+    }
+
+    /// Quantize one round into a BNN-ready sample.
+    pub fn sample(&self, round: &ProbeRound) -> ProbeSample {
+        let delays_q: Vec<u16> = round
+            .delays_ns
+            .iter()
+            .map(|&d| ((d * 255.0 / self.scale_ns).clamp(0.0, 255.0)) as u16)
+            .collect();
+        let congested = round
+            .queue_sizes
+            .iter()
+            .map(|&s| s > self.threshold)
+            .collect();
+        let packed = pack_features(&delays_q, 8, 5);
+        ProbeSample {
+            delays_q,
+            congested,
+            packed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fattree::sim::ProbeRound;
+
+    fn mk_round(base: f64) -> ProbeRound {
+        ProbeRound {
+            t_ns: 0.0,
+            delays_ns: (0..19).map(|i| base + i as f64 * 100.0).collect(),
+            queue_sizes: (0..17).map(|i| i * 2).collect(),
+        }
+    }
+
+    #[test]
+    fn fit_and_quantize() {
+        let rounds: Vec<ProbeRound> = (0..50).map(|i| mk_round(1000.0 + i as f64 * 50.0)).collect();
+        let c = ProbeCollector::fit(&rounds, 0.25);
+        assert!(c.scale_ns > 1000.0);
+        let s = c.sample(&rounds[10]);
+        assert_eq!(s.delays_q.len(), 19);
+        assert_eq!(s.packed.len(), 5);
+        assert!(s.delays_q.iter().all(|&v| v <= 255));
+        // Monotone: later probes (longer delays) → larger quantized value.
+        assert!(s.delays_q[18] >= s.delays_q[0]);
+    }
+
+    #[test]
+    fn threshold_separates_queues() {
+        let rounds: Vec<ProbeRound> = (0..50).map(|i| mk_round(i as f64)).collect();
+        let c = ProbeCollector::fit(&rounds, 0.25);
+        let s = c.sample(&rounds[0]);
+        let congested = s.congested.iter().filter(|&&b| b).count();
+        // roughly the top quarter of queues
+        assert!((2..=7).contains(&congested), "{congested}");
+    }
+}

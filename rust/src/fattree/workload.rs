@@ -1,0 +1,140 @@
+//! Incast workload generator (App. C.2: "The datacenter operates under an
+//! incast traffic load").
+//!
+//! Bursty on/off senders target host 0: each sender alternates between
+//! idle and burst states; during bursts it emits packets at a high rate.
+//! Aggregate load is scaled by `SimConfig::load` relative to the host-0
+//! access link.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::net::traffic::Rng;
+
+use super::sim::SimConfig;
+use super::topology::{Topology, N_HOSTS};
+
+/// Per-sender on/off state.
+pub struct IncastWorkload {
+    burst: Vec<bool>,
+    /// Mean packets/interval per sender when bursting.
+    burst_pkts: f64,
+    /// Baseline packets/interval when idle.
+    idle_pkts: f64,
+    /// State-flip probabilities per interval (sticky bursts).
+    p_enter: f64,
+    p_exit: f64,
+}
+
+impl IncastWorkload {
+    pub fn new(_topo: &Topology, cfg: &SimConfig) -> Self {
+        // Scale so that with ~25% of senders bursting the bottleneck sees
+        // cfg.load × capacity.
+        let cap_pkts_per_interval =
+            cfg.link_gbps * cfg.probe_interval_ns / (cfg.pkt_bytes as f64 * 8.0);
+        let expected_bursters = (N_HOSTS - 1) as f64 * 0.25;
+        let burst_pkts = cfg.load * cap_pkts_per_interval / expected_bursters;
+        Self {
+            burst: vec![false; N_HOSTS],
+            burst_pkts,
+            idle_pkts: burst_pkts * 0.05,
+            p_enter: 0.09,
+            p_exit: 0.30,
+        }
+    }
+
+    /// Emit (time, src) events for [t0, t1) into the heap.
+    pub fn fill_interval(
+        &mut self,
+        t0: f64,
+        t1: f64,
+        rng: &mut Rng,
+        heap: &mut BinaryHeap<Reverse<(u64, usize)>>,
+    ) {
+        let dt = t1 - t0;
+        for h in 1..N_HOSTS {
+            // sticky on/off flip
+            let r = rng.next_f64();
+            self.burst[h] = if self.burst[h] {
+                r > self.p_exit
+            } else {
+                r < self.p_enter
+            };
+            let mean = if self.burst[h] {
+                self.burst_pkts
+            } else {
+                self.idle_pkts
+            };
+            // Poisson(mean) arrivals uniform in the interval.
+            let n = poisson(rng, mean);
+            for _ in 0..n {
+                let ts = t0 + rng.next_f64() * dt;
+                heap.push(Reverse((ts as u64, h)));
+            }
+        }
+    }
+
+    /// Currently bursting sender count (tests).
+    pub fn active_bursters(&self) -> usize {
+        self.burst.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Knuth Poisson sampler, capped for safety at high means (uses normal
+/// approximation above 64).
+fn poisson(rng: &mut Rng, mean: f64) -> usize {
+    if mean <= 0.0 {
+        return 0;
+    }
+    if mean > 64.0 {
+        // normal approximation
+        let u1 = rng.next_f64().max(1e-12);
+        let u2 = rng.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        return (mean + z * mean.sqrt()).max(0.0) as usize;
+    }
+    let l = (-mean).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.next_f64();
+        if p <= l || k > 10_000 {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mean = 7.5;
+        let total: usize = (0..n).map(|_| poisson(&mut rng, mean)).sum();
+        let emp = total as f64 / n as f64;
+        assert!((emp - mean).abs() < 0.15, "emp={emp}");
+    }
+
+    #[test]
+    fn burst_states_sticky_and_bounded() {
+        let topo = Topology::new();
+        let cfg = SimConfig::default();
+        let mut wl = IncastWorkload::new(&topo, &cfg);
+        let mut rng = Rng::new(3);
+        let mut heap = BinaryHeap::new();
+        let mut active_sum = 0usize;
+        for i in 0..200 {
+            wl.fill_interval(i as f64 * 1e6, (i + 1) as f64 * 1e6, &mut rng, &mut heap);
+            active_sum += wl.active_bursters();
+        }
+        let mean_active = active_sum as f64 / 200.0;
+        // Stationary burst fraction ≈ p_enter/(p_enter+p_exit) ≈ 0.23.
+        let frac = mean_active / (N_HOSTS - 1) as f64;
+        assert!((0.1..0.4).contains(&frac), "frac={frac}");
+        assert!(!heap.is_empty());
+    }
+}

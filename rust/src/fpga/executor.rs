@@ -1,0 +1,189 @@
+//! Cycle-accurate N3IC-FPGA NN-executor model.
+
+use crate::bnn::{padded_bits, BnnExecutor, BnnModel};
+
+/// FPGA clock: 200 MHz for both N3IC-FPGA and N3IC-P4 (§6 Testbed).
+pub const CLOCK_HZ: f64 = 200e6;
+pub const CYCLE_NS: f64 = 1e9 / CLOCK_HZ;
+
+/// BRAM row width (§4.3: "tables ... with a width of 256b").
+pub const BRAM_ROW_BITS: usize = 256;
+/// Cycles per BRAM row read (§4.3: "Each row can be read in 2 clock
+/// cycles").
+pub const CYCLES_PER_ROW: usize = 2;
+/// Pipeline depth of one layer block (§4.3: read/XNOR → LT popcount →
+/// sum/sign).
+pub const PIPELINE_STAGES: usize = 3;
+/// Input load + output drain between inferences (module reuse overhead).
+pub const SETUP_CYCLES: usize = 30;
+
+/// Timing model of one NN-executor module for a fixed model.
+#[derive(Debug, Clone)]
+pub struct FpgaTiming {
+    /// BRAM rows per layer (weights packed: multiple narrow neurons per
+    /// row, or one row per wide neuron).
+    pub rows_per_layer: Vec<usize>,
+    pub total_rows: usize,
+    pub latency_cycles: usize,
+}
+
+impl FpgaTiming {
+    pub fn new(model: &BnnModel) -> Self {
+        let mut rows_per_layer = Vec::new();
+        let mut cycles = 0usize;
+        for layer in &model.layers {
+            let in_bits = layer.in_words * 32;
+            let rows = rows_for(layer.neurons, in_bits);
+            cycles += rows * CYCLES_PER_ROW + PIPELINE_STAGES;
+            rows_per_layer.push(rows);
+        }
+        let total_rows = rows_per_layer.iter().sum();
+        Self {
+            rows_per_layer,
+            total_rows,
+            latency_cycles: cycles,
+        }
+    }
+
+    /// Inference latency (ns) — Fig. 18/28.
+    pub fn latency_ns(&self) -> f64 {
+        self.latency_cycles as f64 * CYCLE_NS
+    }
+
+    /// Per-module throughput (inferences/s) — Fig. 17/27: one inference
+    /// in flight per module (the design computes neurons serially in a
+    /// loop structure, §6.4).
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / ((self.latency_cycles + SETUP_CYCLES) as f64 * CYCLE_NS)
+    }
+}
+
+/// How many 256-bit BRAM rows hold `neurons` of `in_bits` weights each:
+/// narrow neurons pack multiple per row; wide neurons take ceil(bits/256)
+/// rows each.
+pub fn rows_for(neurons: usize, in_bits: usize) -> usize {
+    let in_bits = padded_bits(in_bits);
+    if in_bits <= BRAM_ROW_BITS {
+        let per_row = BRAM_ROW_BITS / in_bits;
+        neurons.div_ceil(per_row)
+    } else {
+        neurons * in_bits.div_ceil(BRAM_ROW_BITS)
+    }
+}
+
+/// A bank of parallel NN-executor modules (functional + timed).
+pub struct FpgaExecutor {
+    exec: BnnExecutor,
+    pub timing: FpgaTiming,
+    pub modules: usize,
+}
+
+impl FpgaExecutor {
+    pub fn new(model: BnnModel, modules: usize) -> Self {
+        let timing = FpgaTiming::new(&model);
+        Self {
+            exec: BnnExecutor::new(model),
+            timing,
+            modules: modules.max(1),
+        }
+    }
+
+    pub fn model(&self) -> &BnnModel {
+        self.exec.model()
+    }
+
+    /// Bit-exact inference (the functional half of the model).
+    pub fn infer(&mut self, x: &[u32], scores: &mut [i32]) {
+        self.exec.infer(x, scores)
+    }
+
+    pub fn classify(&mut self, x: &[u32]) -> usize {
+        self.exec.classify(x)
+    }
+
+    /// Aggregate throughput: modules run independent inferences (Fig. 27/
+    /// 29 — "each NN Executor module increases by about 1.8M inferences
+    /// per second").
+    pub fn throughput_per_sec(&self) -> f64 {
+        self.modules as f64 * self.timing.throughput_per_sec()
+    }
+
+    /// Latency is per-module, unaffected by the module count (Fig. 28).
+    pub fn latency_ns(&self) -> f64 {
+        self.timing.latency_ns()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traffic() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    fn tomo128() -> BnnModel {
+        BnnModel::random("tomo", 152, &[128, 64, 2], 2)
+    }
+
+    #[test]
+    fn row_packing() {
+        assert_eq!(rows_for(32, 256), 32); // 1 neuron/row
+        assert_eq!(rows_for(16, 32), 2); // 8 neurons/row
+        assert_eq!(rows_for(2, 32), 1);
+        assert_eq!(rows_for(128, 160), 128); // 160b < 256 → 1/row
+        assert_eq!(rows_for(4, 512), 8); // wide: 2 rows/neuron
+    }
+
+    #[test]
+    fn traffic_latency_half_microsecond() {
+        // Fig. 14: N3IC-FPGA p95 ≈ 0.5 µs for the traffic nets.
+        let t = FpgaTiming::new(&traffic());
+        let lat = t.latency_ns();
+        assert!((300.0..650.0).contains(&lat), "lat={lat}ns");
+    }
+
+    #[test]
+    fn module_throughput_about_1_8m() {
+        // Fig. 29: ~1.8M inferences/s per module on the anomaly NN.
+        let t = FpgaTiming::new(&traffic());
+        let tput = t.throughput_per_sec();
+        assert!((1.5e6..2.5e6).contains(&tput), "tput={tput}");
+    }
+
+    #[test]
+    fn tomography_latency_under_2us() {
+        // §6.2: "below 2µs for N3IC-FPGA" on the 128-64-2 net.
+        let t = FpgaTiming::new(&tomo128());
+        assert!(t.latency_ns() < 2_000.0, "lat={}", t.latency_ns());
+        // And above the traffic net's latency (bigger NN).
+        assert!(t.latency_ns() > FpgaTiming::new(&traffic()).latency_ns());
+    }
+
+    #[test]
+    fn modules_scale_throughput_not_latency() {
+        let e1 = FpgaExecutor::new(traffic(), 1);
+        let e16 = FpgaExecutor::new(traffic(), 16);
+        assert!((e16.throughput_per_sec() / e1.throughput_per_sec() - 16.0).abs() < 1e-9);
+        assert_eq!(e1.latency_ns(), e16.latency_ns());
+    }
+
+    #[test]
+    fn functional_path_bit_exact() {
+        let model = traffic();
+        let mut f = FpgaExecutor::new(model.clone(), 4);
+        let x = crate::bnn::BnnLayer::random(1, 256, 9).words;
+        assert_eq!(f.classify(&x), crate::bnn::infer_packed(&model, &x));
+    }
+
+    #[test]
+    fn latency_linear_in_nn_size() {
+        // Fig. 28: latency grows linearly with neurons (256-bit input FC).
+        let l32 = FpgaTiming::new(&BnnModel::random("a", 256, &[32], 1)).latency_cycles;
+        let l64 = FpgaTiming::new(&BnnModel::random("b", 256, &[64], 1)).latency_cycles;
+        let l128 = FpgaTiming::new(&BnnModel::random("c", 256, &[128], 1)).latency_cycles;
+        assert!(l64 > l32 && l128 > l64);
+        let r = (l128 - l64) as f64 / (l64 - l32) as f64;
+        assert!((r - 2.0).abs() < 0.2, "r={r}");
+    }
+}

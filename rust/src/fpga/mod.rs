@@ -1,0 +1,17 @@
+//! N3IC-FPGA: the dedicated hardware NN-executor module (§4.3).
+//!
+//! * [`executor`] — cycle-accurate model of the Verilog design: per-layer
+//!   blocks, 256-bit BRAM rows read in 2 cycles, 8-bit popcount LTs,
+//!   3-stage pipeline, 200 MHz clock; multiple modules in parallel.
+//! * [`resources`] — LUT/BRAM accounting calibrated to Table 2 and
+//!   Figs. 29–31 (linear scaling per module; CAM-based weight store).
+//!
+//! The executor also *computes* (bit-exactly, via the shared [`crate::bnn`]
+//! core) so functional tests cover it like real hardware would be covered
+//! by a testbench.
+
+pub mod executor;
+pub mod resources;
+
+pub use executor::{FpgaExecutor, FpgaTiming};
+pub use resources::{FpgaResources, VIRTEX7_BRAM, VIRTEX7_LUT};

@@ -1,0 +1,142 @@
+//! FPGA resource accounting (Table 2, Figs. 29–31).
+//!
+//! Structural model calibrated to the paper's synthesis results on the
+//! Virtex-7 690T: the reference NIC baseline plus per-module costs that
+//! scale with the popcount-LT count and the CAM-backed weight store.
+
+use crate::bnn::BnnModel;
+
+use super::executor::{rows_for, FpgaTiming};
+
+/// Virtex-7 690T totals (Table 2 percentages are relative to these).
+pub const VIRTEX7_LUT: usize = 433_200;
+pub const VIRTEX7_BRAM: usize = 1_470;
+
+/// NetFPGA reference NIC baseline (Table 2 row 1).
+pub const REFERENCE_NIC_LUT: usize = 49_400;
+pub const REFERENCE_NIC_BRAM: usize = 194;
+
+/// LUT/BRAM usage of a design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaResources {
+    pub lut: usize,
+    pub bram: usize,
+}
+
+impl FpgaResources {
+    pub fn lut_pct(&self) -> f64 {
+        self.lut as f64 * 100.0 / VIRTEX7_LUT as f64
+    }
+
+    pub fn bram_pct(&self) -> f64 {
+        self.bram as f64 * 100.0 / VIRTEX7_BRAM as f64
+    }
+
+    pub fn reference_nic() -> Self {
+        Self {
+            lut: REFERENCE_NIC_LUT,
+            bram: REFERENCE_NIC_BRAM,
+        }
+    }
+
+    /// One NN-executor module for `model`:
+    /// * control/pipeline base ≈ 500 LUTs;
+    /// * one 256-entry popcount LT per 8 input bits per layer ≈ 55 LUTs
+    ///   each (§4.3: "Each block has n/8 of these LTs");
+    /// * CAM-backed weight rows ≈ 1 BRAM per 2.2 rows + 2 fixed (the CAM
+    ///   IP is not shared between modules — footnote 12).
+    pub fn executor_module(model: &BnnModel) -> Self {
+        let mut lts = 0usize;
+        let mut rows = 0usize;
+        for layer in &model.layers {
+            let in_bits = layer.in_words * 32;
+            lts += in_bits / 8;
+            rows += rows_for(layer.neurons, in_bits);
+        }
+        Self {
+            lut: 500 + lts * 55,
+            bram: 2 + (rows as f64 / 2.2).round() as usize,
+        }
+    }
+
+    /// Full N3IC-FPGA design: reference NIC + `modules` executor modules
+    /// (management logic is negligible — App. B.2).
+    pub fn n3ic_fpga(model: &BnnModel, modules: usize) -> Self {
+        let m = Self::executor_module(model);
+        Self {
+            lut: REFERENCE_NIC_LUT + m.lut * modules,
+            bram: REFERENCE_NIC_BRAM + m.bram * modules,
+        }
+    }
+
+    /// Aggregate throughput/resources trade-off point (Figs. 29–31).
+    pub fn scaling_point(model: &BnnModel, modules: usize) -> (f64, Self) {
+        let tput = FpgaTiming::new(model).throughput_per_sec() * modules as f64;
+        (tput, Self::n3ic_fpga(model, modules))
+    }
+
+    /// Footnote-12 ablation: share one CAM weight store across all
+    /// modules (weights are read-only).  BRAM then pays the store once
+    /// plus a small per-module read-port cost; LUTs are unchanged.
+    pub fn n3ic_fpga_shared_cam(model: &BnnModel, modules: usize) -> Self {
+        let m = Self::executor_module(model);
+        let per_module_ports = 2; // replicated read port + mux
+        Self {
+            lut: REFERENCE_NIC_LUT + m.lut * modules,
+            bram: REFERENCE_NIC_BRAM + m.bram + per_module_ports * modules.saturating_sub(1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traffic() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    #[test]
+    fn table2_single_module() {
+        // Table 2: N3IC-FPGA = 52.0k LUT (12.0%), 211 BRAM (14.4%).
+        let r = FpgaResources::n3ic_fpga(&traffic(), 1);
+        assert!((50_500..54_000).contains(&r.lut), "lut={}", r.lut);
+        assert!((205..218).contains(&r.bram), "bram={}", r.bram);
+        assert!((11.5..12.6).contains(&r.lut_pct()), "{}", r.lut_pct());
+        assert!((13.9..14.9).contains(&r.bram_pct()), "{}", r.bram_pct());
+    }
+
+    #[test]
+    fn sixteen_modules_ten_pct_luts_nineteen_pct_brams() {
+        // §6.4: 16 modules → +10% LUTs, +19% BRAMs over the reference.
+        let r1 = FpgaResources::reference_nic();
+        let r16 = FpgaResources::n3ic_fpga(&traffic(), 16);
+        let extra_lut_pct = (r16.lut - r1.lut) as f64 * 100.0 / VIRTEX7_LUT as f64;
+        let extra_bram_pct = (r16.bram - r1.bram) as f64 * 100.0 / VIRTEX7_BRAM as f64;
+        assert!((8.0..12.0).contains(&extra_lut_pct), "{extra_lut_pct}");
+        assert!((16.0..22.0).contains(&extra_bram_pct), "{extra_bram_pct}");
+    }
+
+    #[test]
+    fn linear_scaling_figs_29_31() {
+        let m = traffic();
+        let (t1, r1) = FpgaResources::scaling_point(&m, 1);
+        let (t4, r4) = FpgaResources::scaling_point(&m, 4);
+        let (t8, r8) = FpgaResources::scaling_point(&m, 8);
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+        assert!((t8 / t1 - 8.0).abs() < 1e-9);
+        let dl14 = r4.lut - r1.lut;
+        let dl48 = r8.lut - r4.lut;
+        assert!((dl14 as f64 / 3.0 - (dl48 as f64 / 4.0)).abs() < 1.0);
+        assert!(r8.bram - r4.bram == (r4.bram - r1.bram) / 3 * 4);
+    }
+
+    #[test]
+    fn bigger_nets_use_more_brams() {
+        let small = FpgaResources::executor_module(&traffic());
+        let big = FpgaResources::executor_module(&BnnModel::random(
+            "tomo", 152, &[128, 64, 2], 2,
+        ));
+        assert!(big.bram > small.bram * 3);
+    }
+}

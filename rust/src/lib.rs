@@ -1,0 +1,50 @@
+//! # N3IC — binary neural network inference in the NIC data plane
+//!
+//! Full-system reproduction of *"Running Neural Network Inference on the
+//! NIC"* (Siracusano et al., 2020) as a three-layer Rust + JAX + Pallas
+//! stack.  This crate is Layer 3: everything that runs at request time —
+//! the NIC device models, the packet/flow substrate, the N3IC coordinator,
+//! the host-CPU baseline (`bnn-exec`), and a PJRT runtime that executes the
+//! AOT-compiled JAX/Pallas model (`artifacts/*.hlo.txt`).  Python never
+//! appears on the request path.
+//!
+//! ## Module map (DESIGN.md §3 inventory)
+//!
+//! * [`bnn`] — packed binary-MLP model + the bit-exact executor shared by
+//!   every device model (Algorithm 1 of the paper).
+//! * [`pcie`] — analytic PCIe transfer-cost model (Fig. 3 motivation).
+//! * [`arith`] — arithmetic-intensity model of NN layers (Fig. 4).
+//! * [`net`] — packets, parsing, flow table, statistics, traffic generators.
+//! * [`nfp`] — Netronome NFP4000 SoC model (islands/MEs/threads, CLS/CTM/
+//!   IMEM/EMEM, data-parallel + model-parallel execution, Fig. 19–26).
+//! * [`pisa`] — PISA match-action pipeline + the NNtoP4 compiler (§4.2).
+//! * [`fpga`] — the dedicated NN-executor hardware module model (§4.3).
+//! * [`fattree`] — discrete-event CLOS fat-tree network simulator (the
+//!   ns-3 substitute for the SIMON tomography use case).
+//! * [`tomography`] — modified-SIMON probe/inference pipeline (§5 #3).
+//! * [`bnnexec`] — the host-CPU comparison system (§6 "comparison term").
+//! * [`coordinator`] — triggers, input/output selectors, flow shunting,
+//!   batching: the NIC-side orchestration of §3.2.
+//! * [`runtime`] — PJRT loader/executor for the AOT artifacts.
+//! * [`experiments`] — one reproduction driver per paper table/figure.
+
+pub mod arith;
+pub mod bench;
+pub mod bnn;
+pub mod bnnexec;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fattree;
+pub mod fpga;
+pub mod json;
+pub mod metrics;
+pub mod net;
+pub mod nfp;
+pub mod pcie;
+pub mod pisa;
+pub mod runtime;
+pub mod tomography;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,223 @@
+//! `repro` — the N3IC launcher.
+//!
+//! Subcommands:
+//! * `serve`        — run the coordinator service on generated traffic
+//!   (the end-to-end request path; Python never runs here).
+//! * `experiment`   — regenerate a paper table/figure (or `all`).
+//! * `models`       — list trained models in the artifacts directory.
+//! * `compile-p4`   — run NNtoP4 and print the generated P4₁₆ source.
+//!
+//! Flag parsing is hand-rolled (the build is offline; no clap).
+
+use std::path::PathBuf;
+
+use n3ic::bnn::BnnModel;
+use n3ic::config::Backend;
+use n3ic::coordinator::{
+    CoordinatorService, CoreExecutor, NnExecutor, OutputSelector, PacketEvent,
+    TriggerCondition,
+};
+use n3ic::net::traffic::{CbrSpec, TrafficGen};
+
+const USAGE: &str = "\
+repro — N3IC: NN inference in the NIC data plane
+
+USAGE:
+  repro [--artifacts DIR] <command> [options]
+
+COMMANDS:
+  serve        --model NAME --backend nfp|pisa|fpga|host|pjrt
+               --packets N --flows N --trigger-pkts N
+  experiment   <fig03|...|tab02|abl-crossover|abl-cam|all>
+  models
+  compile-p4   --model NAME [--format p4|bmv2]
+";
+
+/// Tiny flag parser: --key value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Self { flags, positional }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn load_model(artifacts: &std::path::Path, name: &str) -> BnnModel {
+    BnnModel::load_named(artifacts, name).unwrap_or_else(|e| {
+        eprintln!("warning: {e}; using random weights for shape {name}");
+        match name {
+            "tomography_128" => BnnModel::random(name, 152, &[128, 64, 2], 1),
+            "tomography_64" => BnnModel::random(name, 152, &[64, 32, 2], 1),
+            "tomography_32" => BnnModel::random(name, 152, &[32, 16, 2], 1),
+            _ => BnnModel::random(name, 256, &[32, 16, 2], 1),
+        }
+    })
+}
+
+fn main() -> n3ic::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "serve" => serve(&args, &artifacts),
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .unwrap_or("all");
+            if id == "all" {
+                for e in n3ic::experiments::ALL {
+                    println!("{}", n3ic::experiments::run(e, &artifacts)?);
+                }
+            } else {
+                println!("{}", n3ic::experiments::run(id, &artifacts)?);
+            }
+            Ok(())
+        }
+        "models" => {
+            let dir = artifacts.join("models");
+            let mut found = false;
+            if let Ok(rd) = std::fs::read_dir(&dir) {
+                let mut entries: Vec<_> = rd.flatten().map(|e| e.path()).collect();
+                entries.sort();
+                for p in entries {
+                    let name = p
+                        .file_name()
+                        .unwrap_or_default()
+                        .to_string_lossy()
+                        .to_string();
+                    if name.ends_with(".json") && !name.ends_with(".golden.json") {
+                        if let Ok(m) = BnnModel::load(&p) {
+                            found = true;
+                            println!(
+                                "{:18} {:16} {:5}B  bin_acc={:.3} mlp_acc={:.3}",
+                                m.name,
+                                m.describe(),
+                                m.memory_bytes(),
+                                m.metrics.bnn_test_acc,
+                                m.metrics.float_test_acc
+                            );
+                        }
+                    }
+                }
+            }
+            if !found {
+                println!("no models in {} — run `make artifacts`", dir.display());
+            }
+            Ok(())
+        }
+        "compile-p4" => {
+            let m = load_model(&artifacts, &args.get("model", "traffic"));
+            let prog =
+                n3ic::pisa::compile_bnn(&m).map_err(|e| anyhow::anyhow!("{e}"))?;
+            match args.get("format", "p4").as_str() {
+                "bmv2" => println!("{}", n3ic::pisa::bmv2::to_bmv2_json(&m, &prog).dump()),
+                _ => println!("{}", n3ic::pisa::p4gen::to_p4(&m, &prog)),
+            }
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
+    let model_name = args.get("model", "traffic");
+    let backend: Backend = args.get("backend", "fpga").parse()?;
+    let packets = args.get_u64("packets", 1_000_000);
+    let flows = args.get_u64("flows", 100_000);
+    let trigger_pkts = args.get_u64("trigger-pkts", 10) as u32;
+
+    let m = load_model(artifacts, &model_name);
+    let exec = match backend {
+        Backend::Fpga => CoreExecutor::fpga(m),
+        Backend::Nfp => CoreExecutor::nfp(m),
+        Backend::Host => CoreExecutor::host(m),
+        Backend::Pisa => {
+            CoreExecutor::pisa(m).map_err(|e| anyhow::anyhow!("{e}"))?
+        }
+        Backend::Pjrt => {
+            // Verify the AOT artifact end to end, then serve through the
+            // bit-exact core with the runtime's measured latency.
+            let mut rt = n3ic::runtime::PjrtRuntime::new(artifacts)?;
+            let key = n3ic::runtime::Manifest::key_for(&m, 1);
+            let x = vec![0u32; m.in_words()];
+            let t0 = std::time::Instant::now();
+            let _ = rt.infer_batch(&key, &m, std::slice::from_ref(&x))?;
+            let lat = t0.elapsed().as_nanos() as f64;
+            println!("pjrt backend verified on {}", rt.platform());
+            CoreExecutor::new(m, lat, "pjrt")
+        }
+    };
+    let mut svc = CoordinatorService::new(
+        exec,
+        TriggerCondition::EveryNPackets(trigger_pkts),
+        OutputSelector::Memory,
+    );
+    let mut gen = TrafficGen::new(
+        CbrSpec {
+            gbps: 40.0,
+            pkt_size: 256,
+        },
+        flows,
+        7,
+    );
+    let t0 = std::time::Instant::now();
+    for _ in 0..packets {
+        let p = gen.next_packet();
+        svc.handle(&PacketEvent {
+            packet: p,
+            payload_words: None,
+        });
+    }
+    let wall = t0.elapsed();
+    let st = &svc.stats;
+    println!("== serve report ==");
+    println!("backend          : {}", svc.exec.name());
+    println!("packets          : {}", st.packets);
+    println!("flows tracked    : {}", svc.flows.len());
+    println!("nn inferences    : {}", st.inferences);
+    println!("class histogram  : {:?}", &st.classes[..2]);
+    println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
+    println!(
+        "host wall        : {:.2} s ({:.2} Mpkt/s through the pipeline)",
+        wall.as_secs_f64(),
+        st.packets as f64 / wall.as_secs_f64() / 1e6
+    );
+    Ok(())
+}

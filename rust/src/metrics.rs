@@ -1,0 +1,167 @@
+//! Latency/throughput metrics: fixed-bucket log histogram + summaries.
+//!
+//! Used by every experiment driver to report the paper's metrics
+//! (median / 95th-percentile latency, sustained throughput).
+
+/// Log-bucketed latency histogram (ns), 1ns .. ~17min range.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Buckets at sub-decade resolution: 10^(k/8) ns.
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: f64,
+    max_ns: f64,
+}
+
+const BUCKETS: usize = 8 * 13; // 13 decades × 8 buckets
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum_ns: 0.0,
+            max_ns: 0.0,
+        }
+    }
+
+    fn bucket(ns: f64) -> usize {
+        if ns <= 1.0 {
+            return 0;
+        }
+        let b = (ns.log10() * 8.0) as usize;
+        b.min(BUCKETS - 1)
+    }
+
+    pub fn record(&mut self, ns: f64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.total += 1;
+        self.sum_ns += ns;
+        if ns > self.max_ns {
+            self.max_ns = ns;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.total as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> f64 {
+        self.max_ns
+    }
+
+    /// Percentile (0..=100) via bucket midpoint interpolation.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                // geometric midpoint of bucket b
+                return 10f64.powf((b as f64 + 0.5) / 8.0);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.percentile_ns(50.0) / 1000.0
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.percentile_ns(95.0) / 1000.0
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.percentile_ns(99.0) / 1000.0
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Simple throughput meter over a simulated time window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Throughput {
+    pub events: u64,
+    pub window_ns: f64,
+}
+
+impl Throughput {
+    pub fn per_second(&self) -> f64 {
+        if self.window_ns <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 * 1e9 / self.window_ns
+        }
+    }
+
+    pub fn mpps(&self) -> f64 {
+        self.per_second() / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered_and_plausible() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 100.0); // 100ns..100µs uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_ns(50.0);
+        let p95 = h.percentile_ns(95.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 < p95 && p95 <= p99);
+        // ~50µs and ~95µs within bucket resolution (×10^(1/8) ≈ ±33%)
+        assert!((35_000.0..70_000.0).contains(&p50), "p50={p50}");
+        assert!((70_000.0..140_000.0).contains(&p95), "p95={p95}");
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(10.0);
+        b.record(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max_ns() == 1000.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Throughput {
+            events: 1_800_000,
+            window_ns: 1e9,
+        };
+        assert!((t.per_second() - 1.8e6).abs() < 1.0);
+        assert!((t.mpps() - 1.8).abs() < 1e-9);
+    }
+}

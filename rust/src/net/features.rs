@@ -1,0 +1,167 @@
+//! Feature extraction: flow statistics → the BNN's packed 256-bit input.
+//!
+//! App. C: "16 most important features ... each selected feature's numeric
+//! value falls in the range [0, 65k], we represented them using 16b for
+//! each, and provide each bit as separated input to the MLP."  The bit
+//! layout (MSB-first per feature, feature-major) matches
+//! `python/train/binarize.featurize` exactly — asserted by an integration
+//! test against exported vectors.
+
+use super::flow::FlowStats;
+use crate::bnn::{words_for, BLOCK_SIZE};
+
+pub const N_FEATURES: usize = 16;
+pub const FEATURE_BITS: usize = 16;
+pub const INPUT_BITS: usize = N_FEATURES * FEATURE_BITS; // 256
+
+/// The quantized 16×16b feature vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureVector(pub [u16; N_FEATURES]);
+
+impl FeatureVector {
+    /// Compute the App.-C-style features from flow statistics.  Scales are
+    /// fixed so values use the full 16-bit range on realistic traffic —
+    /// the same scaling the Python dataset generator uses.
+    pub fn from_stats(s: &FlowStats) -> Self {
+        let sat = |v: f64| v.clamp(0.0, 65535.0) as u16;
+        let mean = s.mean_size() as f64;
+        let var = if s.pkts > 0 {
+            (s.size_sq_sum as f64 / s.pkts as f64 - mean * mean).max(0.0)
+        } else {
+            0.0
+        };
+        let dur_ms = s.duration_ns() / 1e6;
+        let up_ratio = if s.pkts > 0 {
+            s.pkts_fwd as f64 / s.pkts as f64
+        } else {
+            0.0
+        };
+        let up_bytes_ratio = if s.bytes > 0 {
+            s.bytes_fwd as f64 / s.bytes as f64
+        } else {
+            0.0
+        };
+        FeatureVector([
+            sat(mean * 40.0),                      // 0 mean pkt size
+            sat(s.min_size as f64 * 40.0),         // 1 min pkt size
+            sat(s.max_size as f64 * 40.0),         // 2 max pkt size
+            sat(var.sqrt() * 40.0),                // 3 size std
+            sat(dur_ms * 100.0),                   // 4 duration
+            sat(s.pkts as f64 * 20.0),             // 5 total pkts
+            sat(s.bytes as f64 / 16.0),            // 6 total bytes
+            sat(s.mean_iat_ns() / 250.0),          // 7 mean IAT
+            sat(s.iat_max_ns / 4000.0),            // 8 max IAT
+            sat(up_ratio * 65535.0),               // 9 up/down pkt ratio
+            sat(up_bytes_ratio * 65535.0),         // 10 up/down byte ratio
+            s.src_port,                            // 11 src port
+            s.dst_port,                            // 12 dst port
+            sat(s.tcp_flag_counts as f64 * 8192.0 / s.pkts.max(1) as f64), // 13
+            sat((s.tcp_flag_or as f64) * 256.0),   // 14 flag union
+            sat(if dur_ms > 0.0 {                  // 15 burstiness proxy
+                s.pkts as f64 / dur_ms * 100.0
+            } else {
+                0.0
+            }),
+        ])
+    }
+
+    /// Bit-expand (MSB-first per feature) and pack into uint32 words —
+    /// identical to `featurize` + `pack_bits` on the Python side.
+    pub fn pack(&self) -> [u32; words_for(INPUT_BITS)] {
+        let mut out = [0u32; words_for(INPUT_BITS)];
+        let mut bit_idx = 0usize;
+        for &feat in &self.0 {
+            for b in (0..FEATURE_BITS).rev() {
+                if (feat >> b) & 1 == 1 {
+                    out[bit_idx / BLOCK_SIZE] |= 1 << (bit_idx % BLOCK_SIZE);
+                }
+                bit_idx += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Pack arbitrary quantized features with `feature_bits` each, padding to
+/// `in_words` words (the tomography path: 19 × 8-bit delays → 5 words).
+pub fn pack_features(values: &[u16], feature_bits: usize, in_words: usize) -> Vec<u32> {
+    let mut out = vec![0u32; in_words];
+    let mut bit_idx = 0usize;
+    for &v in values {
+        for b in (0..feature_bits).rev() {
+            if (v >> b) & 1 == 1 {
+                out[bit_idx / BLOCK_SIZE] |= 1 << (bit_idx % BLOCK_SIZE);
+            }
+            bit_idx += 1;
+        }
+    }
+    assert!(bit_idx <= in_words * BLOCK_SIZE, "features overflow input");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_layout_msb_first() {
+        // Feature 0 = 0x8000 → logical bit 0 set → word 0 bit 0.
+        let mut f = FeatureVector([0; 16]);
+        f.0[0] = 0x8000;
+        let p = f.pack();
+        assert_eq!(p[0] & 1, 1);
+        assert_eq!(p.iter().map(|w| w.count_ones()).sum::<u32>(), 1);
+        // Feature 0 = 1 → logical bit 15 → word 0 bit 15.
+        f.0[0] = 1;
+        let p = f.pack();
+        assert_eq!((p[0] >> 15) & 1, 1);
+        // Feature 2 = 0x8000 → logical bit 32 → word 1 bit 0.
+        f.0[0] = 0;
+        f.0[2] = 0x8000;
+        let p = f.pack();
+        assert_eq!(p[1] & 1, 1);
+    }
+
+    #[test]
+    fn pack_features_generic_matches_struct() {
+        let f = FeatureVector([
+            1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 0xFFFF,
+        ]);
+        let a = f.pack().to_vec();
+        let b = pack_features(&f.0, 16, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tomography_packing_19x8() {
+        let delays: Vec<u16> = (0..19).map(|i| (i * 13 % 256) as u16).collect();
+        let p = pack_features(&delays, 8, 5);
+        assert_eq!(p.len(), 5);
+        // 152 bits used; top 8 bits of word 4 must stay zero.
+        assert_eq!(p[4] >> 24, 0);
+    }
+
+    #[test]
+    fn features_saturate() {
+        let mut s = FlowStats::default();
+        let p = crate::net::packet::Packet {
+            ts_ns: 0.0,
+            src_ip: 1,
+            dst_ip: 2,
+            src_port: 1,
+            dst_port: 2,
+            proto: crate::net::packet::Proto::Tcp,
+            size: 1500,
+            tcp_flags: 0xFF,
+        };
+        for i in 0..10_000 {
+            let mut q = p;
+            q.ts_ns = i as f64;
+            s.update(&q, true);
+        }
+        let f = FeatureVector::from_stats(&s);
+        assert_eq!(f.0[2], 60000); // max pkt size 1500 × scale 40
+        assert_eq!(f.0[5], 65535); // 10k packets × 20 saturates
+        assert_eq!(f.0[9], 65535); // all-forward ratio
+    }
+}

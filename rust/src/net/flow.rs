@@ -1,0 +1,275 @@
+//! Flow table + per-flow statistics (the NIC's SRAM state).
+//!
+//! The statistics mirror the 16 features of App. C (packet sizes, counts,
+//! inter-arrival times, direction ratios, port/flag information) so the
+//! feature extractor can build the BNN's 256-bit input without touching
+//! payload bytes ("we assumed encrypted").
+
+use super::packet::{Packet, Proto};
+
+/// Bidirectional 5-tuple key (canonicalized so both directions map to one
+/// flow; direction is recovered per packet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FlowKey {
+    pub ip_a: u32,
+    pub ip_b: u32,
+    pub port_a: u16,
+    pub port_b: u16,
+    pub proto: u8,
+}
+
+impl FlowKey {
+    /// Canonical key: (ip, port) pairs ordered so A ≤ B.
+    pub fn from_packet(p: &Packet) -> (Self, bool) {
+        let fwd = (p.src_ip, p.src_port) <= (p.dst_ip, p.dst_port);
+        let key = if fwd {
+            Self {
+                ip_a: p.src_ip,
+                ip_b: p.dst_ip,
+                port_a: p.src_port,
+                port_b: p.dst_port,
+                proto: p.proto.number(),
+            }
+        } else {
+            Self {
+                ip_a: p.dst_ip,
+                ip_b: p.src_ip,
+                port_a: p.dst_port,
+                port_b: p.src_port,
+                proto: p.proto.number(),
+            }
+        };
+        (key, fwd)
+    }
+}
+
+/// Per-flow running statistics (all integer/fixed-point, NIC-computable).
+#[derive(Debug, Clone, Default)]
+pub struct FlowStats {
+    pub pkts: u32,
+    pub bytes: u64,
+    pub pkts_fwd: u32,
+    pub bytes_fwd: u64,
+    pub min_size: u16,
+    pub max_size: u16,
+    /// Sum of packet sizes (for the mean) and of squared sizes (for the
+    /// std proxy) — both maintainable with NIC integer ALUs.
+    pub size_sum: u64,
+    pub size_sq_sum: u64,
+    pub first_ts_ns: f64,
+    pub last_ts_ns: f64,
+    /// Sum of inter-arrival times and count (mean IAT).
+    pub iat_sum_ns: f64,
+    pub iat_max_ns: f64,
+    pub tcp_flag_or: u8,
+    pub tcp_flag_counts: u32,
+    pub src_port: u16,
+    pub dst_port: u16,
+}
+
+impl FlowStats {
+    pub fn update(&mut self, p: &Packet, forward: bool) {
+        if self.pkts == 0 {
+            self.first_ts_ns = p.ts_ns;
+            self.min_size = p.size;
+            self.max_size = p.size;
+            self.src_port = p.src_port;
+            self.dst_port = p.dst_port;
+        } else {
+            let iat = (p.ts_ns - self.last_ts_ns).max(0.0);
+            self.iat_sum_ns += iat;
+            if iat > self.iat_max_ns {
+                self.iat_max_ns = iat;
+            }
+            self.min_size = self.min_size.min(p.size);
+            self.max_size = self.max_size.max(p.size);
+        }
+        self.pkts += 1;
+        self.bytes += p.size as u64;
+        self.size_sum += p.size as u64;
+        self.size_sq_sum += (p.size as u64) * (p.size as u64);
+        if forward {
+            self.pkts_fwd += 1;
+            self.bytes_fwd += p.size as u64;
+        }
+        if p.proto == Proto::Tcp {
+            self.tcp_flag_or |= p.tcp_flags;
+            self.tcp_flag_counts += p.tcp_flags.count_ones();
+        }
+        self.last_ts_ns = p.ts_ns;
+    }
+
+    pub fn mean_size(&self) -> u32 {
+        if self.pkts == 0 {
+            0
+        } else {
+            (self.size_sum / self.pkts as u64) as u32
+        }
+    }
+
+    pub fn duration_ns(&self) -> f64 {
+        (self.last_ts_ns - self.first_ts_ns).max(0.0)
+    }
+
+    pub fn mean_iat_ns(&self) -> f64 {
+        if self.pkts <= 1 {
+            0.0
+        } else {
+            self.iat_sum_ns / (self.pkts - 1) as f64
+        }
+    }
+}
+
+/// Open-addressing flow table sized like NIC SRAM tables; the paper's
+/// per-packet work is parse + lookup + counter update.
+pub struct FlowTable {
+    slots: Vec<Option<(FlowKey, FlowStats)>>,
+    mask: usize,
+    pub occupied: usize,
+    /// Lookups that probed more than one slot (collision metric).
+    pub probe_overflows: u64,
+}
+
+impl FlowTable {
+    /// `capacity` is rounded up to a power of two.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.next_power_of_two().max(16);
+        Self {
+            slots: (0..cap * 2).map(|_| None).collect(),
+            mask: cap * 2 - 1,
+            occupied: 0,
+            probe_overflows: 0,
+        }
+    }
+
+    #[inline]
+    fn hash(key: &FlowKey) -> usize {
+        // FxHash-style multiply-xor over the 13 key bytes.
+        let mut h: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        for v in [
+            key.ip_a as u64,
+            key.ip_b as u64,
+            ((key.port_a as u64) << 16) | key.port_b as u64,
+            key.proto as u64,
+        ] {
+            h = (h ^ v).wrapping_mul(0x2127_599b_f432_5c37);
+            h ^= h >> 29;
+        }
+        h as usize
+    }
+
+    /// Update stats for a packet; returns (stats snapshot ref, is_new_flow,
+    /// packet count after update).
+    pub fn update(&mut self, p: &Packet) -> (&FlowStats, bool, u32) {
+        let (key, fwd) = FlowKey::from_packet(p);
+        let mut idx = Self::hash(&key) & self.mask;
+        let mut probes = 0;
+        loop {
+            match &self.slots[idx] {
+                Some((k, _)) if *k == key => break,
+                None => break,
+                _ => {
+                    idx = (idx + 1) & self.mask;
+                    probes += 1;
+                    if probes > self.mask {
+                        panic!("flow table full");
+                    }
+                }
+            }
+        }
+        if probes > 0 {
+            self.probe_overflows += 1;
+        }
+        let is_new = self.slots[idx].is_none();
+        if is_new {
+            self.slots[idx] = Some((key, FlowStats::default()));
+            self.occupied += 1;
+        }
+        let entry = self.slots[idx].as_mut().unwrap();
+        entry.1.update(p, fwd);
+        let pkts = entry.1.pkts;
+        (&self.slots[idx].as_ref().unwrap().1, is_new, pkts)
+    }
+
+    pub fn get(&self, key: &FlowKey) -> Option<&FlowStats> {
+        let mut idx = Self::hash(key) & self.mask;
+        loop {
+            match &self.slots[idx] {
+                Some((k, s)) if k == key => return Some(s),
+                None => return None,
+                _ => idx = (idx + 1) & self.mask,
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.occupied
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.occupied == 0
+    }
+
+    /// Iterate all live flows (export path / end-of-run analysis).
+    pub fn iter(&self) -> impl Iterator<Item = (&FlowKey, &FlowStats)> {
+        self.slots.iter().filter_map(|s| s.as_ref().map(|(k, v)| (k, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkt(src_ip: u32, sport: u16, ts: f64, size: u16) -> Packet {
+        Packet {
+            ts_ns: ts,
+            src_ip,
+            dst_ip: 99,
+            src_port: sport,
+            dst_port: 443,
+            proto: Proto::Tcp,
+            size,
+            tcp_flags: 0x10,
+        }
+    }
+
+    #[test]
+    fn bidirectional_key_canonical() {
+        let a = pkt(5, 1000, 0.0, 100);
+        let mut b = a;
+        std::mem::swap(&mut b.src_ip, &mut b.dst_ip);
+        std::mem::swap(&mut b.src_port, &mut b.dst_port);
+        let (ka, fa) = FlowKey::from_packet(&a);
+        let (kb, fb) = FlowKey::from_packet(&b);
+        assert_eq!(ka, kb);
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut t = FlowTable::new(64);
+        let (_, new1, c1) = t.update(&pkt(1, 10, 0.0, 100));
+        assert!(new1 && c1 == 1);
+        let (_, new2, c2) = t.update(&pkt(1, 10, 1000.0, 300));
+        assert!(!new2 && c2 == 2);
+        let (key, _) = FlowKey::from_packet(&pkt(1, 10, 0.0, 0));
+        let s = t.get(&key).unwrap();
+        assert_eq!(s.pkts, 2);
+        assert_eq!(s.bytes, 400);
+        assert_eq!(s.min_size, 100);
+        assert_eq!(s.max_size, 300);
+        assert_eq!(s.mean_size(), 200);
+        assert!((s.mean_iat_ns() - 1000.0).abs() < 1e-9);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn many_flows_no_collision_loss() {
+        let mut t = FlowTable::new(4096);
+        for i in 0..3000u32 {
+            t.update(&pkt(i, (i % 60000) as u16, i as f64, 64));
+        }
+        assert_eq!(t.len(), 3000);
+        assert_eq!(t.iter().count(), 3000);
+    }
+}

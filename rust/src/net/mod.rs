@@ -1,0 +1,19 @@
+//! Packet / flow substrate: the plumbing every NIC model shares.
+//!
+//! * [`packet`] — minimal Ethernet/IPv4/TCP-UDP header model + parser.
+//! * [`flow`] — 5-tuple keys, per-flow statistics, the hash flow table
+//!   the NIC keeps in SRAM.
+//! * [`features`] — the 16 × 16-bit feature vector (App. C) extracted
+//!   from flow statistics and packed into the BNN's 256-bit input.
+//! * [`traffic`] — workload generators standing in for the paper's DPDK
+//!   pktgen: constant-bit-rate streams and flow-arrival processes.
+
+pub mod features;
+pub mod flow;
+pub mod packet;
+pub mod traffic;
+
+pub use features::FeatureVector;
+pub use flow::{FlowKey, FlowStats, FlowTable};
+pub use packet::{Packet, ParsedHeaders, Proto};
+pub use traffic::{CbrSpec, FlowArrivals, TrafficGen};

@@ -1,0 +1,199 @@
+//! Traffic generators — the in-process stand-in for the paper's 40Gb/s
+//! DPDK pktgen (DESIGN.md substitution S7).
+//!
+//! Two processes are provided:
+//! * [`CbrSpec`] — constant-bit-rate packet stream at a given rate and
+//!   packet size (the §6 testbed loads, e.g. 40Gb/s@256B = 18.1 Mpps).
+//! * [`FlowArrivals`] — Poisson flow arrivals with per-flow packet trains
+//!   (the "1.8M flows/s, ~10 packets per flow" analysis workload).
+
+use super::packet::{Packet, Proto};
+
+/// Deterministic xorshift64* PRNG (no external dependency, reproducible).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential variate with the given mean.
+    #[inline]
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// Constant-bit-rate stream specification.
+#[derive(Debug, Clone, Copy)]
+pub struct CbrSpec {
+    pub gbps: f64,
+    pub pkt_size: u16,
+}
+
+impl CbrSpec {
+    /// Packets per second for this rate/size (wire bytes only; preamble
+    /// and IFG ignored, as in the paper's Mpps arithmetic: 40Gb/s@256B ≈
+    /// 18.1Mpps, 40Gb/s@1500B ≈ 3.3Mpps).
+    pub fn pps(&self) -> f64 {
+        self.gbps * 1e9 / (self.pkt_size as f64 * 8.0 + 160.0)
+    }
+
+    /// Inter-packet gap in ns.
+    pub fn gap_ns(&self) -> f64 {
+        1e9 / self.pps()
+    }
+}
+
+/// Iterator-style generator of packets from a set of concurrent flows.
+pub struct TrafficGen {
+    rng: Rng,
+    spec: CbrSpec,
+    n_flows: u64,
+    t_ns: f64,
+}
+
+impl TrafficGen {
+    pub fn new(spec: CbrSpec, n_flows: u64, seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            spec,
+            n_flows: n_flows.max(1),
+            t_ns: 0.0,
+        }
+    }
+
+    /// Next packet (round-robin-ish over flows, CBR pacing).
+    pub fn next_packet(&mut self) -> Packet {
+        let flow = self.rng.below(self.n_flows);
+        self.t_ns += self.spec.gap_ns();
+        let tcp = flow % 4 != 0;
+        Packet {
+            ts_ns: self.t_ns,
+            src_ip: 0x0A00_0000 | (flow as u32 & 0xFFFF),
+            dst_ip: 0x0B00_0000 | ((flow >> 16) as u32 & 0xFF),
+            src_port: 1024 + (flow % 50000) as u16,
+            dst_port: if tcp { 443 } else { 53 },
+            proto: if tcp { Proto::Tcp } else { Proto::Udp },
+            size: self.spec.pkt_size,
+            tcp_flags: if tcp { 0x10 } else { 0 },
+        }
+    }
+}
+
+/// Poisson flow arrivals; each flow emits a geometric packet train.
+pub struct FlowArrivals {
+    rng: Rng,
+    /// Mean new flows per second.
+    pub flow_rate: f64,
+    /// Mean packets per flow (paper: ~10 at 40Gb/s@256B → 1.8M flows/s).
+    pub pkts_per_flow: f64,
+    t_ns: f64,
+    next_id: u64,
+}
+
+/// One flow arrival event: id + start time + packet count.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowEvent {
+    pub id: u64,
+    pub ts_ns: f64,
+    pub pkts: u32,
+}
+
+impl FlowArrivals {
+    pub fn new(flow_rate: f64, pkts_per_flow: f64, seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            flow_rate,
+            pkts_per_flow,
+            t_ns: 0.0,
+            next_id: 0,
+        }
+    }
+
+    pub fn next_flow(&mut self) -> FlowEvent {
+        self.t_ns += self.rng.exp(1e9 / self.flow_rate);
+        let mut pkts = 1u32;
+        // geometric with mean pkts_per_flow
+        let p = 1.0 / self.pkts_per_flow;
+        while self.rng.next_f64() > p && pkts < 10_000 {
+            pkts += 1;
+        }
+        let ev = FlowEvent {
+            id: self.next_id,
+            ts_ns: self.t_ns,
+            pkts,
+        };
+        self.next_id += 1;
+        ev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cbr_rates_match_paper_arithmetic() {
+        let s = CbrSpec { gbps: 40.0, pkt_size: 256 };
+        assert!((s.pps() / 1e6 - 18.1).abs() < 0.3, "pps={}", s.pps());
+        let s2 = CbrSpec { gbps: 40.0, pkt_size: 1500 };
+        assert!((s2.pps() / 1e6 - 3.28).abs() < 0.1);
+    }
+
+    #[test]
+    fn traffic_gen_paces_monotonically() {
+        let mut g = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 512 }, 100, 1);
+        let mut last = 0.0;
+        for _ in 0..1000 {
+            let p = g.next_packet();
+            assert!(p.ts_ns > last);
+            last = p.ts_ns;
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_hit_rate() {
+        let mut fa = FlowArrivals::new(1_000_000.0, 10.0, 42);
+        let mut last = 0.0;
+        let n = 200_000;
+        let mut total_pkts = 0u64;
+        for _ in 0..n {
+            let ev = fa.next_flow();
+            last = ev.ts_ns;
+            total_pkts += ev.pkts as u64;
+        }
+        let rate = n as f64 * 1e9 / last;
+        assert!((rate / 1_000_000.0 - 1.0).abs() < 0.05, "rate={rate}");
+        let mean_pkts = total_pkts as f64 / n as f64;
+        assert!((mean_pkts - 10.0).abs() < 0.5, "mean={mean_pkts}");
+    }
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

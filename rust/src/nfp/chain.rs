@@ -1,0 +1,147 @@
+//! Model-parallel execution: the notification chain (App. A, Fig. 19/20).
+//!
+//! For big NNs (weights in EMEM), dispatch threads trigger a statically
+//! configured chain of executor threads.  A start notification propagates
+//! down the chain; each executor computes its neuron slice reading weights
+//! from contiguous EMEM; the end notification propagates back.  Latency is
+//! chain propagation + the slowest executor slice + result writeback.
+
+use crate::bnn::BnnModel;
+
+use super::memory::{MemKind, MemSpec};
+
+/// Chain configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ChainConfig {
+    /// Executor threads in the chain (e.g. 128 or 256).
+    pub executors: usize,
+    /// Dispatcher threads per ME (App. A: two per ME suffice).
+    pub dispatchers_per_me: usize,
+    /// Per-hop notification cost (ME-to-ME signal, ns).
+    pub notify_ns: f64,
+    /// Per-word EMEM cost for the chain's *bulk sequential* reads — lower
+    /// than random-access (DRAM burst locality): calibrated to Fig. 25's
+    /// 400 µs for a 4096×2048 FC with 256 executors.
+    pub burst_read_ns: f64,
+    /// IMEM result writeback per executor (ns).
+    pub writeback_ns: f64,
+}
+
+impl Default for ChainConfig {
+    fn default() -> Self {
+        Self {
+            executors: 256,
+            dispatchers_per_me: 2,
+            notify_ns: 50.0,
+            burst_read_ns: 350.0,
+            writeback_ns: 300.0,
+        }
+    }
+}
+
+/// Model-parallel executor model.
+#[derive(Debug, Clone)]
+pub struct ModelParallel {
+    pub cfg: ChainConfig,
+    pub model: BnnModel,
+}
+
+impl ModelParallel {
+    pub fn new(model: BnnModel, cfg: ChainConfig) -> Self {
+        Self { cfg, model }
+    }
+
+    /// Neurons computed by each executor for a layer of `n` neurons
+    /// (App. A example: 4096 neurons / 128 executors = 32 each).
+    pub fn neurons_per_executor(&self, layer_neurons: usize) -> usize {
+        layer_neurons.div_ceil(self.cfg.executors)
+    }
+
+    /// Latency of one full-model inference (ns): per layer, start-chain +
+    /// parallel slice work + back-propagated end notification; layers are
+    /// sequential (the dispatcher synchronizes between layers).
+    pub fn latency_ns(&self) -> f64 {
+        let e = self.cfg.executors as f64;
+        let mut total = 0.0;
+        for layer in &self.model.layers {
+            let slice_words =
+                self.neurons_per_executor(layer.neurons) * layer.in_words;
+            let work = slice_words as f64 * self.cfg.burst_read_ns;
+            let chain = 2.0 * e * self.cfg.notify_ns; // start + end sweeps
+            total += chain + work + self.cfg.writeback_ns;
+        }
+        total
+    }
+
+    /// Throughput: the chain processes one inference at a time (no
+    /// batching on the NFP — App. B.1.2).
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.latency_ns()
+    }
+
+    /// EMEM footprint check.
+    pub fn fits_memory(&self) -> bool {
+        MemSpec::get(MemKind::Emem)
+            .size_bytes
+            .checked_sub(self.model.memory_bytes())
+            .is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+
+    /// Paper Fig. 25 workload: single FC, 4096 inputs, 2k–16k neurons.
+    fn big_fc(neurons: usize) -> BnnModel {
+        BnnModel::random("big", 4096, &[neurons], 1)
+    }
+
+    #[test]
+    fn fig25_latency_anchors() {
+        // Paper: 400 µs (2k neurons) → 2700 µs (16k), 256 executors.
+        let cfg = ChainConfig::default();
+        let l2k = ModelParallel::new(big_fc(2048), cfg).latency_ns() / 1000.0;
+        let l16k = ModelParallel::new(big_fc(16384), cfg).latency_ns() / 1000.0;
+        assert!((330.0..500.0).contains(&l2k), "2k: {l2k}µs");
+        assert!((2_300.0..3_200.0).contains(&l16k), "16k: {l16k}µs");
+        // Linear in size: 16k/2k ≈ 8×, modulo fixed chain overhead.
+        assert!((6.0..9.0).contains(&(l16k / l2k)));
+    }
+
+    #[test]
+    fn more_executors_reduce_latency_until_chain_dominates() {
+        let mk = |e| {
+            ModelParallel::new(
+                big_fc(4096),
+                ChainConfig {
+                    executors: e,
+                    ..ChainConfig::default()
+                },
+            )
+            .latency_ns()
+        };
+        let l64 = mk(64);
+        let l256 = mk(256);
+        assert!(l256 < l64);
+        // Chain propagation eventually wins: 4096 executors slower than 1024.
+        assert!(mk(4096) > mk(1024));
+    }
+
+    #[test]
+    fn neurons_split_evenly() {
+        let mp = ModelParallel::new(big_fc(4096), ChainConfig::default());
+        assert_eq!(mp.neurons_per_executor(4096), 16);
+    }
+
+    #[test]
+    fn model_must_fit_emem() {
+        // 16k × 4096 bits = 8 MB > 3 MB EMEM SRAM → does not fit;
+        // the paper runs it from DRAM-backed EMEM (cache misses included
+        // in the burst-read calibration), so we only check the arithmetic.
+        let mp = ModelParallel::new(big_fc(16384), ChainConfig::default());
+        assert_eq!(mp.model.memory_bytes(), 16384 * 128 * 4);
+        assert!(mp.fits_memory() || mp.model.memory_bytes() > 3 << 20);
+    }
+}

@@ -1,0 +1,135 @@
+//! Data-parallel per-inference service-time model (one thread runs the
+//! whole NN; many threads run different inferences in parallel — Fig. 19
+//! left, §4.1).
+
+use crate::bnn::BnnModel;
+use crate::net::traffic::Rng;
+
+use super::memory::{MemKind, MemSpec};
+
+/// Per-word execute cost on an ME: XNOR + popcount-accumulate + loop
+/// bookkeeping.  ~6–7 instructions at 800 MHz ≈ 8 ns (the NFP has no
+/// single-cycle popcount; micro-C lowers to the HAKMEM sequence).
+pub const EXEC_PER_WORD_NS: f64 = 8.0;
+
+/// Service-time model for running `model` out of `mem`.
+#[derive(Debug, Clone)]
+pub struct DataParallelCost {
+    pub mem: MemSpec,
+    /// Total weight words read per inference.
+    pub words: usize,
+    /// Deterministic base service time (ns).
+    pub base_ns: f64,
+}
+
+impl DataParallelCost {
+    pub fn new(model: &BnnModel, mem: MemKind) -> Self {
+        let spec = MemSpec::get(mem);
+        let words = model.work_words();
+        let base_ns = words as f64 * (EXEC_PER_WORD_NS + spec.effective_read_ns());
+        Self {
+            mem: spec,
+            words,
+            base_ns,
+        }
+    }
+
+    /// Mean service time (ns) of one inference on one thread.
+    pub fn mean_ns(&self) -> f64 {
+        self.base_ns
+    }
+
+    /// Sample a service time: base × U[0.9, 1.1) plus an exponential
+    /// bus-stall tail (8% of base mean) — yields the p95/mean ≈ 1.2–1.3
+    /// the paper reports (42 µs p95 vs ~31 µs mean on CLS).
+    pub fn sample_ns(&self, rng: &mut Rng) -> f64 {
+        self.base_ns * (0.9 + 0.2 * rng.next_f64()) + rng.exp(0.08 * self.base_ns)
+    }
+
+    /// Max sustainable inferences/s with `threads` NN threads (thread
+    /// parallelism capped by the memory's aggregate bandwidth).
+    pub fn max_throughput(&self, threads: usize) -> f64 {
+        let thread_cap = threads as f64 / (self.base_ns * 1e-9);
+        let bytes_per_inf = self.words as f64 * 4.0;
+        let bw_cap = self.mem.bandwidth_bps / bytes_per_inf;
+        thread_cap.min(bw_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+
+    fn traffic_model() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    #[test]
+    fn cls_service_time_matches_paper_band() {
+        // Paper: p95 = 42 µs on CLS for the 32-16-2 net → mean ≈ 30 µs.
+        let c = DataParallelCost::new(&traffic_model(), MemKind::Cls);
+        let mean_us = c.mean_ns() / 1000.0;
+        assert!((25.0..36.0).contains(&mean_us), "mean={mean_us}µs");
+    }
+
+    #[test]
+    fn imem_emem_stress_throughput_1_4m() {
+        // Paper Fig. 23: stress throughput drops to ~1.4 Mpps on both.
+        for mem in [MemKind::Imem, MemKind::Emem] {
+            let c = DataParallelCost::new(&traffic_model(), mem);
+            let tput = c.max_throughput(480);
+            assert!(
+                (1.1e6..1.7e6).contains(&tput),
+                "{mem:?} tput={tput}"
+            );
+        }
+    }
+
+    #[test]
+    fn emem_latency_below_imem_but_throughput_equal_shape() {
+        // The arbiter artefact: IMEM latency > EMEM latency.
+        let ti = DataParallelCost::new(&traffic_model(), MemKind::Imem).mean_ns();
+        let te = DataParallelCost::new(&traffic_model(), MemKind::Emem).mean_ns();
+        assert!(ti > te);
+        // Paper: IMEM p95 352 µs, EMEM p95 230 µs.
+        assert!((300_000.0..400_000.0).contains(&ti), "imem {ti}");
+        assert!((180_000.0..260_000.0).contains(&te), "emem {te}");
+    }
+
+    #[test]
+    fn sampling_tail() {
+        let c = DataParallelCost::new(&traffic_model(), MemKind::Cls);
+        let mut rng = Rng::new(3);
+        let mut v: Vec<f64> = (0..4000).map(|_| c.sample_ns(&mut rng)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let p95 = v[(v.len() as f64 * 0.95) as usize];
+        let ratio = p95 / mean;
+        assert!((1.05..1.5).contains(&ratio), "p95/mean={ratio}");
+        // p95 in the paper's 42 µs neighborhood.
+        assert!((34_000.0..50_000.0).contains(&p95), "p95={p95}");
+    }
+
+    #[test]
+    fn throughput_scales_linearly_with_inverse_size() {
+        // Fig. 22: FC 256-in with 32/64/128 neurons — linear scaling.
+        let t32 = DataParallelCost::new(
+            &BnnModel::random("a", 256, &[32], 1),
+            MemKind::Cls,
+        )
+        .max_throughput(480);
+        let t64 = DataParallelCost::new(
+            &BnnModel::random("b", 256, &[64], 1),
+            MemKind::Cls,
+        )
+        .max_throughput(480);
+        let t128 = DataParallelCost::new(
+            &BnnModel::random("c", 256, &[128], 1),
+            MemKind::Cls,
+        )
+        .max_throughput(480);
+        assert!((t32 / t64 - 2.0).abs() < 0.05);
+        assert!((t64 / t128 - 2.0).abs() < 0.05);
+    }
+}

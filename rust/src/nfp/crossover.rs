@@ -1,0 +1,144 @@
+//! Data-parallel vs model-parallel crossover analysis (App. A: "When NNs
+//! are larger, running them in a single thread would take long, making the
+//! use of multiple threads more effective, even if synchronization among
+//! threads incurs some overhead").
+//!
+//! The ablation the appendix discusses but does not plot: for a growing FC
+//! layer, when does the notification chain beat one-thread-per-inference?
+//! Also models the *straggler* effect of asymmetric neuron assignment the
+//! appendix calls out ("this in fact rises a problem of stragglers that
+//! harms the overall performance").
+
+use crate::bnn::BnnModel;
+
+use super::chain::{ChainConfig, ModelParallel};
+use super::cost::DataParallelCost;
+use super::memory::{MemKind, MemSpec};
+
+/// One row of the crossover sweep.  Data-parallel runs one inference per
+/// thread (480 concurrent); model-parallel dedicates the whole chain to a
+/// single inference — so the trade is dp-throughput vs mp-latency, and
+/// the interesting question is where each axis flips.
+#[derive(Debug, Clone, Copy)]
+pub struct CrossoverPoint {
+    pub neurons: usize,
+    /// Which memory data-parallel mode must use (CLS if it fits, else EMEM).
+    pub dp_mem: MemKind,
+    pub dp_latency_ns: f64,
+    pub mp_latency_ns: f64,
+    /// Aggregate data-parallel throughput with 480 threads (inf/s).
+    pub dp_tput: f64,
+    /// Chain throughput: one inference at a time (inf/s).
+    pub mp_tput: f64,
+    /// The chain cuts latency for this size.
+    pub mp_latency_wins: bool,
+    /// Data-parallel still delivers more aggregate throughput.
+    pub dp_tput_wins: bool,
+}
+
+/// Sweep FC sizes and report the data- vs model-parallel latency frontier.
+pub fn crossover_sweep(in_bits: usize, sizes: &[usize], cfg: ChainConfig) -> Vec<CrossoverPoint> {
+    sizes
+        .iter()
+        .map(|&n| {
+            let model = BnnModel::random("fc", in_bits, &[n], 1);
+            // Data-parallel keeps weights in CLS only while they fit.
+            let dp_mem = if MemSpec::get(MemKind::Cls).fits(model.memory_bytes()) {
+                MemKind::Cls
+            } else {
+                MemKind::Emem
+            };
+            let cost = DataParallelCost::new(&model, dp_mem);
+            let dp = cost.mean_ns();
+            let dp_tput = cost.max_throughput(super::chip::TOTAL_THREADS);
+            let mp_model = ModelParallel::new(model, cfg);
+            let mp = mp_model.latency_ns();
+            let mp_tput = mp_model.throughput_per_sec();
+            CrossoverPoint {
+                neurons: n,
+                dp_mem,
+                dp_latency_ns: dp,
+                mp_latency_ns: mp,
+                dp_tput,
+                mp_tput,
+                mp_latency_wins: mp < dp,
+                dp_tput_wins: dp_tput > mp_tput,
+            }
+        })
+        .collect()
+}
+
+/// Straggler model: if one executor in the chain is assigned `skew`× the
+/// even neuron share, layer completion waits for it (App. A's argument for
+/// symmetric assignment).
+pub fn straggler_latency_ns(model: &BnnModel, cfg: ChainConfig, skew: f64) -> f64 {
+    let mp = ModelParallel::new(model.clone(), cfg);
+    let even = mp.latency_ns();
+    // The slowest executor's work term scales by `skew`; chain/notify
+    // overhead is unchanged.
+    let layer_work: f64 = model
+        .layers
+        .iter()
+        .map(|l| {
+            (mp.neurons_per_executor(l.neurons) * l.in_words) as f64 * cfg.burst_read_ns
+        })
+        .sum();
+    even + layer_work * (skew - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_cuts_latency_dp_keeps_throughput() {
+        let pts = crossover_sweep(
+            4096,
+            &[32, 128, 512, 2048, 8192],
+            ChainConfig::default(),
+        );
+        for p in &pts {
+            // The chain always wins single-inference latency on wide
+            // (4096-bit) inputs — that is *why* App. A built it.
+            assert!(p.mp_latency_wins, "{p:?}");
+            // Aggregate throughput belongs to data-parallel while weights
+            // stay in CLS; once they spill to EMEM, DRAM bandwidth caps
+            // the 480 threads and the burst-reading chain wins *both*
+            // axes — the full justification for model-parallel mode.
+            if p.dp_mem == MemKind::Cls {
+                assert!(p.dp_tput_wins, "{p:?}");
+            }
+        }
+        // The spilled regime exists and flips the throughput axis too.
+        assert!(pts.iter().any(|p| p.dp_mem == MemKind::Emem && !p.dp_tput_wins));
+        // CLS→EMEM spill: big layers pay the slower memory in dp mode.
+        assert_eq!(pts[0].dp_mem, MemKind::Cls);
+        assert_eq!(pts.last().unwrap().dp_mem, MemKind::Emem);
+        // Latency advantage grows with size (chain overhead amortizes).
+        let small = pts[0].dp_latency_ns / pts[0].mp_latency_ns;
+        let big = pts[4].dp_latency_ns / pts[4].mp_latency_ns;
+        assert!(big > small, "small={small} big={big}");
+    }
+
+    #[test]
+    fn cls_spill_point_matches_capacity() {
+        // 4096-in FC: CLS (64KB, ×2 headroom rule) fits up to ~64 neurons.
+        let pts = crossover_sweep(4096, &[32, 64, 128], ChainConfig::default());
+        assert_eq!(pts[0].dp_mem, MemKind::Cls);
+        assert_eq!(pts[2].dp_mem, MemKind::Emem);
+    }
+
+    #[test]
+    fn stragglers_hurt_linearly() {
+        let model = BnnModel::random("fc", 4096, &[4096], 2);
+        let cfg = ChainConfig::default();
+        let even = straggler_latency_ns(&model, cfg, 1.0);
+        let skew2 = straggler_latency_ns(&model, cfg, 2.0);
+        let skew4 = straggler_latency_ns(&model, cfg, 4.0);
+        assert!(skew2 > even && skew4 > skew2);
+        // Linear in skew: equal increments.
+        let d1 = skew2 - even;
+        let d2 = skew4 - skew2;
+        assert!((d2 / d1 - 2.0).abs() < 1e-9);
+    }
+}

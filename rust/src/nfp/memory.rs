@@ -1,0 +1,135 @@
+//! NFP4000 memory hierarchy (Table 3) + calibrated contention model.
+
+/// The four memory areas of the NFP4000 (§4.1, Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    /// 64 KB per-island scratch, 25–62.5 ns — where N3IC keeps weights.
+    Cls,
+    /// 256 KB per-island packet memory, 62.5–125 ns (avoided: packets).
+    Ctm,
+    /// 4 MB shared SRAM, 187.5–312.5 ns.
+    Imem,
+    /// 3 MB SRAM cache + DRAM, 312.5–625 ns.
+    Emem,
+}
+
+impl std::fmt::Display for MemKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MemKind::Cls => "CLS",
+            MemKind::Ctm => "CTM",
+            MemKind::Imem => "IMEM",
+            MemKind::Emem => "EMEM",
+        })
+    }
+}
+
+/// Access-time + capacity + calibrated contention parameters for one area.
+#[derive(Debug, Clone, Copy)]
+pub struct MemSpec {
+    pub kind: MemKind,
+    /// Table 3 min/max access time (ns).
+    pub access_min_ns: f64,
+    pub access_max_ns: f64,
+    /// Capacity in bytes.
+    pub size_bytes: usize,
+    /// Calibrated bus/arbiter contention multiplier under full NN load
+    /// (App. B.1: the IMEM arbiter behaves anomalously — "using the IMEM
+    /// is slower than using the EMEM ... an artefact of the NFP's memory
+    /// access arbiter" — hence its large factor).
+    pub contention: f64,
+    /// Aggregate bandwidth cap in bytes/s (f64::INFINITY for per-island
+    /// SRAM that the 480 threads cannot saturate).
+    pub bandwidth_bps: f64,
+}
+
+impl MemSpec {
+    pub fn get(kind: MemKind) -> Self {
+        match kind {
+            MemKind::Cls => Self {
+                kind,
+                access_min_ns: 25.0,
+                access_max_ns: 62.5,
+                size_bytes: 64 << 10,
+                contention: 2.3,
+                bandwidth_bps: f64::INFINITY,
+            },
+            MemKind::Ctm => Self {
+                kind,
+                access_min_ns: 62.5,
+                access_max_ns: 125.0,
+                size_bytes: 256 << 10,
+                contention: 2.0,
+                bandwidth_bps: f64::INFINITY,
+            },
+            MemKind::Imem => Self {
+                kind,
+                access_min_ns: 187.5,
+                access_max_ns: 312.5,
+                size_bytes: 4 << 20,
+                contention: 5.0,
+                bandwidth_bps: f64::INFINITY,
+            },
+            MemKind::Emem => Self {
+                kind,
+                access_min_ns: 312.5,
+                access_max_ns: 625.0,
+                size_bytes: 3 << 20,
+                contention: 1.6,
+                bandwidth_bps: 1.53e9,
+            },
+        }
+    }
+
+    /// Mean raw access time (ns).
+    pub fn access_mean_ns(&self) -> f64 {
+        0.5 * (self.access_min_ns + self.access_max_ns)
+    }
+
+    /// Effective per-32b-word read cost under NN load (ns).
+    pub fn effective_read_ns(&self) -> f64 {
+        self.access_mean_ns() * self.contention
+    }
+
+    /// Whether a model of `bytes` packed weights fits this area, leaving
+    /// the paper's margin for per-thread state (§6.4: the traffic NNs use
+    /// 1.5% of CLS).
+    pub fn fits(&self, bytes: usize) -> bool {
+        bytes * 2 <= self.size_bytes // ×2: intermediate buffers + headroom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_access_times() {
+        // Exactly Table 3.
+        let cls = MemSpec::get(MemKind::Cls);
+        assert_eq!((cls.access_min_ns, cls.access_max_ns), (25.0, 62.5));
+        let ctm = MemSpec::get(MemKind::Ctm);
+        assert_eq!((ctm.access_min_ns, ctm.access_max_ns), (62.5, 125.0));
+        let imem = MemSpec::get(MemKind::Imem);
+        assert_eq!((imem.access_min_ns, imem.access_max_ns), (187.5, 312.5));
+        let emem = MemSpec::get(MemKind::Emem);
+        assert_eq!((emem.access_min_ns, emem.access_max_ns), (312.5, 625.0));
+        assert_eq!(cls.size_bytes, 65536);
+        assert_eq!(imem.size_bytes, 4 << 20);
+    }
+
+    #[test]
+    fn imem_slower_than_emem_under_contention() {
+        // The paper's observed arbiter artefact must be reproduced.
+        let imem = MemSpec::get(MemKind::Imem);
+        let emem = MemSpec::get(MemKind::Emem);
+        assert!(imem.effective_read_ns() > emem.effective_read_ns());
+    }
+
+    #[test]
+    fn traffic_nn_fits_cls() {
+        let cls = MemSpec::get(MemKind::Cls);
+        assert!(cls.fits(1096)); // Table 1: 1.1 KB
+        assert!(!cls.fits(64 << 10));
+    }
+}

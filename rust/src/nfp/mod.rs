@@ -1,0 +1,59 @@
+//! Netronome NFP4000 SoC model (N3IC-NFP, §4.1 + Appendices A/B.1).
+//!
+//! The NFP4000 is modeled at the level that determines the paper's
+//! numbers: **memory access time × Algorithm-1 word count**, hidden (or
+//! not) by multi-threaded micro-engines.
+//!
+//! * [`memory`] — the four memory areas with Table 3's access times, plus
+//!   calibrated bus-contention factors and bandwidth caps.
+//! * [`cost`] — per-inference service-time model for data-parallel mode.
+//! * [`sim`] — M/G/c-style discrete-event simulation of NN threads under
+//!   offered flow load, plus the forwarding-budget model (Fig. 5, 21).
+//! * [`chain`] — model-parallel notification-chain execution for big NNs
+//!   (App. A, Fig. 19/20/25/26).
+//!
+//! Calibration: constants are fitted to the paper's published anchors
+//! (Table 3 access times; 42/352/230 µs 95th-pct latency for CLS/IMEM/
+//! EMEM; 1.4 Mpps stress throughput on IMEM/EMEM; 90-thread 40Gb/s@256B
+//! forwarding baseline; model-parallel 400–2700 µs for 2k–16k neurons).
+//! See EXPERIMENTS.md for the paper-vs-measured table.
+
+pub mod chain;
+pub mod cost;
+pub mod crossover;
+pub mod memory;
+pub mod sim;
+
+pub use chain::{ChainConfig, ModelParallel};
+pub use crossover::{crossover_sweep, CrossoverPoint};
+pub use cost::DataParallelCost;
+pub use memory::{MemKind, MemSpec};
+pub use sim::{ForwardingModel, NfpSim, SimReport};
+
+/// Chip-level constants (NFP4000, §4.1).
+pub mod chip {
+    /// Micro-engine clock (Hz).
+    pub const ME_CLOCK_HZ: f64 = 800e6;
+    /// Islands with programmable MEs.
+    pub const ISLANDS: usize = 6;
+    /// MEs per island (60 total, 480 threads: "480 available threads").
+    pub const MES_PER_ISLAND: usize = 10;
+    /// Hardware threads per ME.
+    pub const THREADS_PER_ME: usize = 8;
+    /// Total hardware threads.
+    pub const TOTAL_THREADS: usize = ISLANDS * MES_PER_ISLAND * THREADS_PER_ME;
+    /// Threads needed for plain 40Gb/s@256B forwarding + stats (§6.1).
+    pub const FORWARDING_THREADS: usize = 90;
+    /// Line-rate packet processing time budget implied by the baseline:
+    /// 90 threads / 18.1 Mpps ≈ 4.97 µs per packet.
+    pub const PKT_PROCESS_NS: f64 = 90.0 / 18.1e6 * 1e9;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn chip_constants() {
+        assert_eq!(super::chip::TOTAL_THREADS, 480);
+        assert!((super::chip::PKT_PROCESS_NS - 4972.0).abs() < 5.0);
+    }
+}

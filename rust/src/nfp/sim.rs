@@ -1,0 +1,236 @@
+//! Discrete-event simulation of N3IC-NFP under offered load, plus the
+//! forwarding-budget model (Fig. 5 / Fig. 21).
+
+use std::collections::BinaryHeap;
+
+use crate::bnn::BnnModel;
+use crate::metrics::LatencyHistogram;
+use crate::net::traffic::Rng;
+
+use super::chip;
+use super::cost::DataParallelCost;
+use super::memory::MemKind;
+
+/// Result of an NFP simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub offered_per_sec: f64,
+    pub completed_per_sec: f64,
+    pub latency: LatencyHistogram,
+    /// Fraction of offered inferences dropped (queue overflow).
+    pub drop_frac: f64,
+    /// Forwarding throughput achieved while running NN load (Mpps).
+    pub forwarding_mpps: f64,
+}
+
+/// M/G/c queueing simulation: `threads` NN executors serve Poisson flow
+/// arrivals with service times from [`DataParallelCost`].
+pub struct NfpSim {
+    pub cost: DataParallelCost,
+    pub threads: usize,
+    /// Queue bound (NIC work queues are shallow; beyond this, drops).
+    pub queue_cap: usize,
+}
+
+impl NfpSim {
+    pub fn new(model: &BnnModel, mem: MemKind, threads: usize) -> Self {
+        Self {
+            cost: DataParallelCost::new(model, mem),
+            threads,
+            // NIC work queues are shallow — overload shows up as drops,
+            // not multi-ms latency (the paper's stress 95th percentiles
+            // stay within ~1.5× the service time).
+            queue_cap: 256,
+        }
+    }
+
+    /// Simulate `n_events` flow arrivals at `rate_per_sec`; returns the
+    /// latency distribution and achieved throughput.
+    pub fn run(&self, rate_per_sec: f64, n_events: usize, seed: u64) -> SimReport {
+        let mut rng = Rng::new(seed);
+        let mut latency = LatencyHistogram::new();
+        // Bandwidth cap: model as a reduction of effective service slots.
+        let eff_rate = self.cost.max_throughput(self.threads);
+        // server completion times (min-heap via Reverse)
+        let mut servers: BinaryHeap<std::cmp::Reverse<u64>> = BinaryHeap::new();
+        for _ in 0..self.threads {
+            servers.push(std::cmp::Reverse(0));
+        }
+        let mut t_ns = 0.0f64;
+        let mut dropped = 0usize;
+        let mut completed = 0usize;
+        let mut last_finish = 0.0f64;
+        // Service-time inflation when offered load approaches the memory
+        // bandwidth cap (DRAM queueing): scale by 1/(1-ρ_bw) up to 4×.
+        let bw_cap = {
+            let bytes_per_inf = self.cost.words as f64 * 4.0;
+            self.cost.mem.bandwidth_bps / bytes_per_inf
+        };
+        for _ in 0..n_events {
+            t_ns += rng.exp(1e9 / rate_per_sec);
+            let arrival = t_ns as u64;
+            let std::cmp::Reverse(free_at) = servers.pop().unwrap();
+            let start = free_at.max(arrival);
+            // Queue bound: if the backlog (start - arrival) exceeds the
+            // queue capacity in service-time units, drop.
+            let backlog_ns = start.saturating_sub(arrival) as f64;
+            if backlog_ns > self.queue_cap as f64 * self.cost.mean_ns() / self.threads as f64 {
+                servers.push(std::cmp::Reverse(free_at));
+                dropped += 1;
+                continue;
+            }
+            // DRAM-bandwidth bound: when the thread pool could outrun the
+            // memory system, per-read stalls stretch the service time so
+            // completions settle at the bandwidth cap.
+            let thread_cap = self.threads as f64 / (self.cost.mean_ns() * 1e-9);
+            let inflation = (thread_cap / bw_cap).clamp(1.0, 4.0);
+            let service = self.cost.sample_ns(&mut rng) * inflation;
+            let finish = start + service as u64;
+            servers.push(std::cmp::Reverse(finish));
+            latency.record((finish - arrival) as f64);
+            completed += 1;
+            last_finish = last_finish.max(finish as f64);
+        }
+        let window = last_finish.max(t_ns);
+        let completed_per_sec = completed as f64 * 1e9 / window;
+        // Forwarding impact: NN work steals thread capacity from the pool.
+        let fwd = ForwardingModel::default();
+        let forwarding_mpps = fwd.achieved_mpps(
+            chip::TOTAL_THREADS,
+            completed_per_sec.min(eff_rate),
+            self.cost.mean_ns(),
+        );
+        SimReport {
+            offered_per_sec: rate_per_sec,
+            completed_per_sec,
+            latency,
+            drop_frac: dropped as f64 / n_events as f64,
+            forwarding_mpps,
+        }
+    }
+}
+
+/// Forwarding-capacity model: the interplay between packet forwarding and
+/// NN execution on the shared thread pool (Fig. 5 / Fig. 21).
+#[derive(Debug, Clone, Copy)]
+pub struct ForwardingModel {
+    /// Line rate in Mpps for the reference workload (40Gb/s@256B).
+    pub line_mpps: f64,
+    /// Per-packet processing time (parse + lookup + counters), ns.
+    pub pkt_ns: f64,
+}
+
+impl Default for ForwardingModel {
+    fn default() -> Self {
+        Self {
+            line_mpps: 18.1,
+            pkt_ns: chip::PKT_PROCESS_NS,
+        }
+    }
+}
+
+impl ForwardingModel {
+    /// Achieved forwarding rate given `threads` total, an NN completion
+    /// rate, and the NN service time: NN work occupies
+    /// `nn_rate × t_nn` thread-seconds per second; the rest forwards.
+    pub fn achieved_mpps(&self, threads: usize, nn_rate: f64, t_nn_ns: f64) -> f64 {
+        let nn_threads = nn_rate * t_nn_ns * 1e-9;
+        let free = (threads as f64 - nn_threads).max(0.0);
+        let capacity_mpps = free / (self.pkt_ns * 1e-9) / 1e6;
+        capacity_mpps.min(self.line_mpps)
+    }
+
+    /// Fig. 5: forwarding throughput when performing `extra_ops` integer
+    /// operations per packet at `gbps`/`pkt_size` load.  The NFP has a
+    /// fixed instruction budget; throughput holds at line rate until the
+    /// budget is exhausted, then degrades as 1/ops.
+    pub fn ops_budget_mpps(&self, gbps: f64, pkt_size: u16, extra_ops: u64) -> f64 {
+        let line_pps = gbps * 1e9 / (pkt_size as f64 * 8.0 + 160.0);
+        // Aggregate instruction rate: 60 MEs × 800 MHz, ~1 op/cycle,
+        // with baseline parse/forward work taking ~600 ops/packet.
+        let total_ops_per_sec = 60.0 * chip::ME_CLOCK_HZ;
+        let ops_per_pkt = 600.0 + extra_ops as f64;
+        let compute_pps = total_ops_per_sec / ops_per_pkt;
+        line_pps.min(compute_pps) / 1e6
+    }
+
+    /// Fig. 5's "available budget": ops/packet sustainable at line rate.
+    pub fn ops_budget_at_line_rate(&self, gbps: f64, pkt_size: u16) -> u64 {
+        let line_pps = gbps * 1e9 / (pkt_size as f64 * 8.0 + 160.0);
+        let total_ops_per_sec = 60.0 * chip::ME_CLOCK_HZ;
+        (total_ops_per_sec / line_pps - 600.0).max(0.0) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+
+    fn traffic() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    #[test]
+    fn meets_1_8m_offered_load_on_cls() {
+        // Fig. 13: N3IC-NFP matches 1.81M flow analyses/s.
+        let sim = NfpSim::new(&traffic(), MemKind::Cls, 480);
+        let r = sim.run(1.81e6, 120_000, 7);
+        assert!(r.drop_frac < 0.01, "drops={}", r.drop_frac);
+        assert!(
+            (r.completed_per_sec / 1.81e6 - 1.0).abs() < 0.05,
+            "tput={}",
+            r.completed_per_sec
+        );
+        // Fig. 14: p95 ≈ 42 µs.
+        let p95 = r.latency.p95_us();
+        assert!((30.0..60.0).contains(&p95), "p95={p95}µs");
+        // Forwarding stays at line rate (Fig. 13: 40Gb/s@256B).
+        assert!(r.forwarding_mpps > 18.0, "fwd={}", r.forwarding_mpps);
+    }
+
+    #[test]
+    fn emem_saturates_near_1_4m() {
+        let sim = NfpSim::new(&traffic(), MemKind::Emem, 480);
+        let r = sim.run(3.0e6, 60_000, 3);
+        assert!(
+            (1.0e6..1.8e6).contains(&r.completed_per_sec),
+            "tput={}",
+            r.completed_per_sec
+        );
+    }
+
+    #[test]
+    fn fewer_threads_lower_throughput() {
+        // §6.4: 120 threads → ~10× fewer analyzed flows than 480.
+        let sim480 = NfpSim::new(&traffic(), MemKind::Cls, 480);
+        let sim30 = NfpSim::new(&traffic(), MemKind::Cls, 30);
+        let cap480 = sim480.cost.max_throughput(480);
+        let cap30 = sim30.cost.max_throughput(30);
+        assert!((cap480 / cap30 - 16.0).abs() < 0.1);
+        // 30 NN threads still analyze >100k flows/s (paper's point).
+        assert!(cap30 > 100_000.0, "cap30={cap30}");
+    }
+
+    #[test]
+    fn ops_budget_512b_is_about_10k() {
+        // §2.1: "considering an average case of 512B input packets ... the
+        // available budget is of 10K operations per-packet".
+        let f = ForwardingModel::default();
+        let budget = f.ops_budget_at_line_rate(25.0, 512);
+        assert!((7_000..13_000).contains(&budget), "budget={budget}");
+        // Budget grows superlinearly when packets double (fewer pps).
+        let b1024 = f.ops_budget_at_line_rate(25.0, 1024);
+        assert!(b1024 > 2 * budget - 1000);
+    }
+
+    #[test]
+    fn ops_budget_curve_flat_then_declining() {
+        let f = ForwardingModel::default();
+        let at_0 = f.ops_budget_mpps(25.0, 512, 0);
+        let at_budget = f.ops_budget_mpps(25.0, 512, 8_000);
+        let at_10x = f.ops_budget_mpps(25.0, 512, 80_000);
+        assert!((at_0 - at_budget).abs() / at_0 < 0.15);
+        assert!(at_10x < at_0 / 5.0);
+    }
+}

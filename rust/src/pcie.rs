@@ -1,0 +1,91 @@
+//! Analytic PCIe transfer-cost model (DESIGN.md substitution S9).
+//!
+//! Reproduces the §2.1 motivation measurements (Fig. 3): on the paper's
+//! testbed (PCIe x16 v3.0, NVIDIA GTX 1080 Ti), transferring "just few
+//! bytes of input vector and retrieving back the result" costs 8–10 µs —
+//! latency-dominated; bandwidth only matters for large batches.
+//!
+//! Model: `t(bytes) = base_latency + bytes / bandwidth`, applied once per
+//! direction.  The GPU-offload path of Fig. 2 crosses PCIe up to four
+//! times; helpers below compose the crossings for each deployment.
+
+/// Nanoseconds, the time unit used across all cost models in this crate.
+pub type Nanos = f64;
+
+/// PCIe link model.
+#[derive(Debug, Clone, Copy)]
+pub struct PcieModel {
+    /// One-way DMA setup + completion latency (ns).  Fig. 3 shows ~8–10 µs
+    /// for a 1 B payload round trip (write + read), i.e. ~4.25 µs/way.
+    pub base_latency_ns: Nanos,
+    /// Effective payload bandwidth (bytes/ns = GB/s).  PCIe x16 v3.0
+    /// delivers ~12.8 GB/s of usable DMA bandwidth.
+    pub bandwidth_gbps: Nanos,
+}
+
+impl Default for PcieModel {
+    fn default() -> Self {
+        Self {
+            base_latency_ns: 4_250.0,
+            bandwidth_gbps: 12.8,
+        }
+    }
+}
+
+impl PcieModel {
+    /// One-way transfer cost for `bytes` of payload.
+    pub fn transfer_ns(&self, bytes: usize) -> Nanos {
+        self.base_latency_ns + bytes as f64 / self.bandwidth_gbps
+    }
+
+    /// Fig. 3's experiment: send `bytes` to the GPU, read back a 1 B
+    /// result — one round trip.
+    pub fn rtt_ns(&self, bytes: usize) -> Nanos {
+        self.transfer_ns(bytes) + self.transfer_ns(1)
+    }
+
+    /// GPU-offload path of Fig. 2 when the inference result must return to
+    /// the NIC for a forwarding decision: NIC→host, host→GPU, GPU→host,
+    /// host→NIC = four crossings.
+    pub fn gpu_offload_ns(&self, input_bytes: usize, result_bytes: usize) -> Nanos {
+        2.0 * self.transfer_ns(input_bytes) + 2.0 * self.transfer_ns(result_bytes)
+    }
+
+    /// Host-CPU offload (the `bnn-exec` deployment): statistics fetched
+    /// NIC→host and the result written back host→NIC.
+    pub fn host_offload_ns(&self, input_bytes: usize, result_bytes: usize) -> Nanos {
+        self.transfer_ns(input_bytes) + self.transfer_ns(result_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_transfer_rtt_is_8_to_10_us() {
+        // The paper's headline motivation number.
+        let m = PcieModel::default();
+        for bytes in [1, 32, 256] {
+            let rtt = m.rtt_ns(bytes);
+            assert!(
+                (8_000.0..=10_500.0).contains(&rtt),
+                "{bytes}B RTT {rtt}ns outside the paper's 8–10µs band"
+            );
+        }
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_transfers() {
+        let m = PcieModel::default();
+        let t = m.transfer_ns(128 << 20); // 128 MB
+        assert!(t > 9_000_000.0); // ≫ base latency
+        assert!((t - 128.0 * 1024.0 * 1024.0 / 12.8) < 10_000.0);
+    }
+
+    #[test]
+    fn gpu_path_costs_more_than_host_path() {
+        let m = PcieModel::default();
+        assert!(m.gpu_offload_ns(64, 4) > m.host_offload_ns(64, 4));
+    }
+}

@@ -1,0 +1,345 @@
+//! NNtoP4: compile a BNN architecture into a PISA pipeline program.
+//!
+//! Follows Fig. 9's five logical steps per layer: (1) replicate the input
+//! across per-neuron PHV lanes, (2) XNOR with constant weights (the
+//! P4-NetFPGA port bakes weights as constants — §4.2 "we had to write the
+//! weights as constant values in the MAU's operations code"), (3) popcount
+//! via Algorithm 2's shift/mask/add tree, (4) mask-based SIGN, (5) fold
+//! the resulting bits into packed fields for the next layer.
+//!
+//! The compiler enforces the PISA resource constraints that produce the
+//! paper's scaling wall: a layer needing more parallel lane bits than the
+//! PHV can hold fails to compile (§6.3: N3IC-P4 "could not scale" to
+//! 128-neuron layers).
+
+use crate::bnn::{BnnLayer, BnnModel};
+
+use super::program::{Op, PisaProgram, Stage};
+
+/// P4-NetFPGA pipeline clock (§6 Testbed: 200 MHz).
+pub const PISA_CLOCK_HZ: f64 = 200e6;
+
+/// Maximum PHV bits available for one layer's parallel neuron lanes.
+/// Calibrated so 64-neuron × 256-bit layers compile and 128-neuron ones
+/// do not (Fig. 17/18: "results for 128 neurons are missing").
+pub const PHV_MAX_LANE_BITS: usize = 16_384;
+
+/// Popcount tree masks/shifts (HAKMEM / Algorithm 2 over 32-bit words).
+const POPCOUNT_LEVELS: [(u32, u32); 5] = [
+    (0x5555_5555, 1),
+    (0x3333_3333, 2),
+    (0x0F0F_0F0F, 4),
+    (0x00FF_00FF, 8),
+    (0x0000_FFFF, 16),
+];
+
+/// Compilation failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    /// Layer lanes exceed the PHV (the paper's scaling wall).
+    PhvOverflow {
+        layer: usize,
+        needed_bits: usize,
+        limit: usize,
+    },
+    /// Model failed structural validation.
+    InvalidModel(String),
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::PhvOverflow {
+                layer,
+                needed_bits,
+                limit,
+            } => write!(
+                f,
+                "layer {layer}: {needed_bits} PHV lane bits exceed the {limit}-bit PISA budget"
+            ),
+            CompileError::InvalidModel(m) => write!(f, "invalid model: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+/// Compile a whole BNN into one pipeline program.
+pub fn compile_bnn(model: &BnnModel) -> Result<PisaProgram, CompileError> {
+    model
+        .validate()
+        .map_err(|e| CompileError::InvalidModel(e.to_string()))?;
+    // Constraint check first (the paper's Table 2 / §6.3 behaviour).
+    for (k, layer) in model.layers.iter().enumerate() {
+        let lane_bits = layer.neurons * layer.in_words * 32;
+        if lane_bits > PHV_MAX_LANE_BITS {
+            return Err(CompileError::PhvOverflow {
+                layer: k,
+                needed_bits: lane_bits,
+                limit: PHV_MAX_LANE_BITS,
+            });
+        }
+    }
+
+    let mut b = Builder::new(model.in_words());
+    let mut input_fields: Vec<usize> = (0..model.in_words()).collect();
+    let n_layers = model.layers.len();
+    for (k, layer) in model.layers.iter().enumerate() {
+        let is_last = k == n_layers - 1;
+        input_fields = b.emit_layer(layer, &input_fields, is_last, k);
+    }
+    Ok(b.finish(input_fields))
+}
+
+struct Builder {
+    next_field: usize,
+    in_words: usize,
+    stages: Vec<Stage>,
+}
+
+impl Builder {
+    fn new(in_words: usize) -> Self {
+        Self {
+            next_field: in_words,
+            in_words,
+            stages: Vec::new(),
+        }
+    }
+
+    fn alloc(&mut self, n: usize) -> usize {
+        let base = self.next_field;
+        self.next_field += n;
+        base
+    }
+
+    fn stage(&mut self, label: impl Into<String>) -> &mut Stage {
+        self.stages.push(Stage {
+            ops: Vec::new(),
+            label: label.into(),
+        });
+        self.stages.last_mut().unwrap()
+    }
+
+    /// Emit one layer; returns the fields holding its output (packed words
+    /// for hidden layers, raw scores for the last).
+    fn emit_layer(
+        &mut self,
+        layer: &BnnLayer,
+        input: &[usize],
+        is_last: bool,
+        k: usize,
+    ) -> Vec<usize> {
+        let n = layer.neurons;
+        let iw = layer.in_words;
+        let lanes = n * iw;
+        // Lane fields: t (running popcount value), a/bb (tree scratch).
+        let t0 = self.alloc(lanes);
+        let a0 = self.alloc(lanes);
+        let b0 = self.alloc(lanes);
+
+        // Step 1+2 (Fig. 9): replicate + XNOR with constant weights.  The
+        // replication is implicit in reading `input[j]` from every lane.
+        let st = self.stage(format!("L{k}.xnor"));
+        for neuron in 0..n {
+            for j in 0..iw {
+                st.ops.push(Op::XnorConst {
+                    dst: t0 + neuron * iw + j,
+                    a: input[j],
+                    k: layer.row(neuron)[j],
+                });
+            }
+        }
+
+        // Step 3: Algorithm 2 popcount tree — 3 MAU stages per level.
+        for (lvl, (mask, sh)) in POPCOUNT_LEVELS.iter().enumerate() {
+            let st = self.stage(format!("L{k}.pop{lvl}.split"));
+            for l in 0..lanes {
+                st.ops.push(Op::AndConst {
+                    dst: a0 + l,
+                    a: t0 + l,
+                    k: *mask,
+                });
+                st.ops.push(Op::Shr {
+                    dst: b0 + l,
+                    a: t0 + l,
+                    sh: *sh,
+                });
+            }
+            let st = self.stage(format!("L{k}.pop{lvl}.mask"));
+            for l in 0..lanes {
+                st.ops.push(Op::AndConst {
+                    dst: b0 + l,
+                    a: b0 + l,
+                    k: *mask,
+                });
+            }
+            let st = self.stage(format!("L{k}.pop{lvl}.add"));
+            for l in 0..lanes {
+                st.ops.push(Op::Add {
+                    dst: t0 + l,
+                    a: a0 + l,
+                    b: b0 + l,
+                });
+            }
+        }
+
+        // Word-sum per neuron: pairwise reduction tree over the iw lanes.
+        let mut stride = 1;
+        while stride < iw {
+            let st = self.stage(format!("L{k}.sum{stride}"));
+            for neuron in 0..n {
+                let mut j = 0;
+                while j + stride < iw {
+                    st.ops.push(Op::Add {
+                        dst: t0 + neuron * iw + j,
+                        a: t0 + neuron * iw + j,
+                        b: t0 + neuron * iw + j + stride,
+                    });
+                    j += stride * 2;
+                }
+            }
+            stride *= 2;
+        }
+        // Scores now live at t0 + neuron*iw.
+
+        if is_last {
+            // Copy scores to compact output fields.
+            let out = self.alloc(n);
+            let st = self.stage(format!("L{k}.out"));
+            for neuron in 0..n {
+                st.ops.push(Op::Copy {
+                    dst: out + neuron,
+                    a: t0 + neuron * iw,
+                });
+            }
+            return (out..out + n).collect();
+        }
+
+        // Step 4: mask-based SIGN (no `if` in P4-SDNet MAU ops).
+        let bits = self.alloc(n);
+        let st = self.stage(format!("L{k}.sign"));
+        for neuron in 0..n {
+            st.ops.push(Op::GeConst {
+                dst: bits + neuron,
+                a: t0 + neuron * iw,
+                k: layer.threshold as u32,
+            });
+        }
+
+        // Step 5: fold bits into packed words: shift, then OR-reduce.
+        let st = self.stage(format!("L{k}.shift"));
+        for neuron in 0..n {
+            st.ops.push(Op::Shl {
+                dst: bits + neuron,
+                a: bits + neuron,
+                sh: (neuron % 32) as u32,
+            });
+        }
+        let ow = layer.out_words();
+        // OR-reduction tree within each 32-neuron group.
+        let mut stride = 1;
+        while stride < 32 {
+            let st = self.stage(format!("L{k}.fold{stride}"));
+            for w in 0..ow {
+                let base = w * 32;
+                let group = (n - base).min(32);
+                let mut j = 0;
+                while j + stride < group {
+                    st.ops.push(Op::Or {
+                        dst: bits + base + j,
+                        a: bits + base + j,
+                        b: bits + base + j + stride,
+                    });
+                    j += stride * 2;
+                }
+            }
+            stride *= 2;
+        }
+        (0..ow).map(|w| bits + w * 32).collect()
+    }
+
+    fn finish(self, out_fields: Vec<usize>) -> PisaProgram {
+        // Compact outputs are contiguous only for the last layer; record
+        // base/count directly.
+        let out_base = out_fields[0];
+        let out_count = out_fields.len();
+        debug_assert!(out_fields
+            .iter()
+            .enumerate()
+            .all(|(i, &f)| f == out_base + i));
+        PisaProgram {
+            phv_fields: self.next_field,
+            in_words: self.in_words,
+            out_base,
+            out_count,
+            stages: self.stages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_scores, BnnLayer, BnnModel};
+
+    #[test]
+    fn compiled_pipeline_bit_exact_traffic_net() {
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 11);
+        let prog = compile_bnn(&model).unwrap();
+        prog.check_stage_hazards().unwrap();
+        for seed in 0..20 {
+            let x = BnnLayer::random(1, 256, 1000 + seed).words;
+            assert_eq!(prog.run(&x), infer_scores(&model, &x), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn compiled_pipeline_bit_exact_tomo32() {
+        let model = BnnModel::random("tomo32", 152, &[32, 16, 2], 5);
+        let prog = compile_bnn(&model).unwrap();
+        for seed in 0..10 {
+            let x = BnnLayer::random(1, 152, 2000 + seed).words;
+            assert_eq!(prog.run(&x), infer_scores(&model, &x));
+        }
+    }
+
+    #[test]
+    fn single_fc_layers_up_to_64_compile() {
+        for n in [32usize, 64] {
+            let model = BnnModel::random("fc", 256, &[n], 1);
+            assert!(compile_bnn(&model).is_ok(), "{n} neurons must compile");
+        }
+    }
+
+    #[test]
+    fn scaling_wall_at_128_neurons() {
+        // §6.3: "results for 128 neurons are missing. As anticipated,
+        // N3IC-P4 could not scale to handle such layers."
+        let model = BnnModel::random("fc", 256, &[128], 1);
+        match compile_bnn(&model) {
+            Err(CompileError::PhvOverflow { needed_bits, .. }) => {
+                assert_eq!(needed_bits, 128 * 256);
+            }
+            other => panic!("expected PHV overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tomography_128_rejected_tomo32_accepted() {
+        // §6.2: "N3IC-P4 cannot scale to run such NN, and can only run the
+        // smaller 32, 16, 2 neurons networks".
+        let big = BnnModel::random("t128", 152, &[128, 64, 2], 1);
+        assert!(compile_bnn(&big).is_err());
+        let small = BnnModel::random("t32", 152, &[32, 16, 2], 1);
+        assert!(compile_bnn(&small).is_ok());
+    }
+
+    #[test]
+    fn latency_in_paper_band() {
+        // Fig. 14/15: ~2 µs for the 32-16-2 nets.
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 3);
+        let prog = compile_bnn(&model).unwrap();
+        let lat = prog.latency_ns(64);
+        assert!((800.0..3_500.0).contains(&lat), "lat={lat}ns");
+    }
+}

@@ -1,0 +1,22 @@
+//! N3IC-P4: PISA match-action pipeline + the NNtoP4 compiler (§4.2).
+//!
+//! * [`program`] — the pipeline IR (PHV fields + per-stage ALU ops) and a
+//!   bit-exact interpreter (stands in for bmv2 functional testing).
+//! * [`compiler`] — **NNtoP4**: BNN architecture → pipeline program,
+//!   using only P4-expressible operations: XNOR, the HAKMEM shift/mask/add
+//!   popcount tree (Algorithm 2), mask-based SIGN (P4-SDNet has no `if`
+//!   in MAU ops), and bit folding.
+//! * [`p4gen`] — emits actual P4₁₆ source for the generated pipeline.
+//! * [`resources`] — PHV width / stage / LUT accounting that reproduces
+//!   the paper's scaling wall (128-neuron layers do not fit) and the
+//!   Table 2 footprint.
+
+pub mod bmv2;
+pub mod compiler;
+pub mod p4gen;
+pub mod program;
+pub mod resources;
+
+pub use compiler::{compile_bnn, CompileError};
+pub use program::{Op, PisaProgram, Stage};
+pub use resources::PisaResources;

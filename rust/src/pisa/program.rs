@@ -1,0 +1,206 @@
+//! PISA pipeline IR + interpreter.
+//!
+//! A program operates on a PHV (packet header vector) of 32-bit fields.
+//! Stages execute in sequence; ops inside a stage execute in parallel
+//! (reads see the previous stage's values), matching MAU semantics.
+//! Only operations available to P4 targets are representable: bitwise
+//! logic, shifts, integer add/sub, constants — no loops, no `if` (the
+//! SIGN function is built from masks, §4.2).
+
+/// A single ALU operation.  `dst`/`a`/`b` are PHV field indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// dst = ~(a ^ const)
+    XnorConst { dst: usize, a: usize, k: u32 },
+    /// dst = a & const
+    AndConst { dst: usize, a: usize, k: u32 },
+    /// dst = a >> shift (logical)
+    Shr { dst: usize, a: usize, sh: u32 },
+    /// dst = a + b
+    Add { dst: usize, a: usize, b: usize },
+    /// dst = a + const
+    AddConst { dst: usize, a: usize, k: u32 },
+    /// dst = a - const
+    SubConst { dst: usize, a: usize, k: u32 },
+    /// dst = a | b
+    Or { dst: usize, a: usize, b: usize },
+    /// dst = (a << shift)
+    Shl { dst: usize, a: usize, sh: u32 },
+    /// dst = const
+    Const { dst: usize, k: u32 },
+    /// dst = a
+    Copy { dst: usize, a: usize },
+    /// Mask-based sign: dst = (a >= k) ? 1 : 0, computed as
+    /// ((a - k) >> 31) ^ 1 on two's-complement fields (no branch).
+    GeConst { dst: usize, a: usize, k: u32 },
+}
+
+impl Op {
+    pub fn dst(&self) -> usize {
+        match *self {
+            Op::XnorConst { dst, .. }
+            | Op::AndConst { dst, .. }
+            | Op::Shr { dst, .. }
+            | Op::Add { dst, .. }
+            | Op::AddConst { dst, .. }
+            | Op::SubConst { dst, .. }
+            | Op::Or { dst, .. }
+            | Op::Shl { dst, .. }
+            | Op::Const { dst, .. }
+            | Op::Copy { dst, .. }
+            | Op::GeConst { dst, .. } => dst,
+        }
+    }
+}
+
+/// One logical pipeline stage (ops execute in parallel).
+#[derive(Debug, Clone, Default)]
+pub struct Stage {
+    pub ops: Vec<Op>,
+    pub label: String,
+}
+
+/// A compiled pipeline program.
+#[derive(Debug, Clone)]
+pub struct PisaProgram {
+    /// Number of PHV fields (each 32 bits).
+    pub phv_fields: usize,
+    /// Input words are loaded into fields [0, in_words).
+    pub in_words: usize,
+    /// Output scores live in fields [out_base, out_base + out_count).
+    pub out_base: usize,
+    pub out_count: usize,
+    pub stages: Vec<Stage>,
+}
+
+impl PisaProgram {
+    /// Execute the pipeline on packed input words; returns output scores.
+    ///
+    /// MAU semantics: within a stage, all reads observe the PHV as left by
+    /// the previous stage.
+    pub fn run(&self, input: &[u32]) -> Vec<i32> {
+        assert_eq!(input.len(), self.in_words, "input word count");
+        let mut phv = vec![0u32; self.phv_fields];
+        phv[..self.in_words].copy_from_slice(input);
+        let mut next = phv.clone();
+        for stage in &self.stages {
+            for op in &stage.ops {
+                let v = match *op {
+                    Op::XnorConst { a, k, .. } => !(phv[a] ^ k),
+                    Op::AndConst { a, k, .. } => phv[a] & k,
+                    Op::Shr { a, sh, .. } => phv[a] >> sh,
+                    Op::Add { a, b, .. } => phv[a].wrapping_add(phv[b]),
+                    Op::AddConst { a, k, .. } => phv[a].wrapping_add(k),
+                    Op::SubConst { a, k, .. } => phv[a].wrapping_sub(k),
+                    Op::Or { a, b, .. } => phv[a] | phv[b],
+                    Op::Shl { a, sh, .. } => phv[a] << sh,
+                    Op::Const { k, .. } => k,
+                    Op::Copy { a, .. } => phv[a],
+                    Op::GeConst { a, k, .. } => {
+                        // mask trick: sign bit of (a - k) as i32, inverted
+                        ((((phv[a].wrapping_sub(k) as i32) >> 31) as u32) & 1) ^ 1
+                    }
+                };
+                next[op.dst()] = v;
+            }
+            phv.copy_from_slice(&next);
+        }
+        (self.out_base..self.out_base + self.out_count)
+            .map(|i| phv[i] as i32)
+            .collect()
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.stages.iter().map(|s| s.ops.len()).sum()
+    }
+
+    /// Pipeline latency at 200 MHz assuming `ops_per_mau` ops fused per
+    /// MAU stage (P4-SDNet packs many ops per MAU, §4.2).
+    pub fn latency_ns(&self, ops_per_mau: usize) -> f64 {
+        let maus: usize = self
+            .stages
+            .iter()
+            .map(|s| s.ops.len().div_ceil(ops_per_mau).max(1))
+            .sum();
+        maus as f64 * 5.0 * 2.0 // 2 cycles per MAU at 200 MHz
+    }
+
+    /// Initiation interval: fully pipelined, one packet per cycle per MAU
+    /// — throughput is clock-bound (the paper's "very high throughput at
+    /// the cost of limited scalability").
+    pub fn throughput_per_sec(&self) -> f64 {
+        super::compiler::PISA_CLOCK_HZ
+    }
+
+    /// Verify no op writes a field read by another op in the same stage
+    /// with a different value semantics — i.e., SSA-per-stage sanity.
+    pub fn check_stage_hazards(&self) -> Result<(), String> {
+        for (i, stage) in self.stages.iter().enumerate() {
+            let mut written = std::collections::HashSet::new();
+            for op in &stage.ops {
+                if !written.insert(op.dst()) {
+                    return Err(format!(
+                        "stage {i} ({}) writes field {} twice",
+                        stage.label,
+                        op.dst()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ge_const_mask_trick() {
+        let prog = PisaProgram {
+            phv_fields: 2,
+            in_words: 1,
+            out_base: 1,
+            out_count: 1,
+            stages: vec![Stage {
+                ops: vec![Op::GeConst { dst: 1, a: 0, k: 5 }],
+                label: "sign".into(),
+            }],
+        };
+        assert_eq!(prog.run(&[4])[0], 0);
+        assert_eq!(prog.run(&[5])[0], 1);
+        assert_eq!(prog.run(&[6])[0], 1);
+        assert_eq!(prog.run(&[0])[0], 0);
+    }
+
+    #[test]
+    fn stage_parallelism_reads_previous_values() {
+        // swap two fields in one stage — only possible with MAU semantics.
+        let prog = PisaProgram {
+            phv_fields: 3,
+            in_words: 2,
+            out_base: 0,
+            out_count: 2,
+            stages: vec![Stage {
+                ops: vec![Op::Copy { dst: 0, a: 1 }, Op::Copy { dst: 1, a: 0 }],
+                label: "swap".into(),
+            }],
+        };
+        assert_eq!(prog.run(&[7, 9]), vec![9, 7]);
+    }
+
+    #[test]
+    fn hazard_detection() {
+        let bad = PisaProgram {
+            phv_fields: 2,
+            in_words: 1,
+            out_base: 0,
+            out_count: 1,
+            stages: vec![Stage {
+                ops: vec![Op::Const { dst: 1, k: 1 }, Op::Const { dst: 1, k: 2 }],
+                label: "dup".into(),
+            }],
+        };
+        assert!(bad.check_stage_hazards().is_err());
+    }
+}

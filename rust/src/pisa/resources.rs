@@ -1,0 +1,70 @@
+//! N3IC-P4 FPGA-resource accounting (Table 2 row 3).
+//!
+//! The P4-NetFPGA toolchain expands and unrolls the pipeline into the
+//! FPGA fabric (§6.3), so LUT/BRAM cost scales with the *total unrolled
+//! compute*: every weight bit becomes dedicated XNOR/popcount-tree logic.
+//! Calibrated to Table 2: the traffic net (8,768 weight bits) costs
+//! +95.1k LUTs and +324 BRAMs over the reference NIC.
+
+use crate::bnn::BnnModel;
+
+use crate::fpga::resources::{FpgaResources, REFERENCE_NIC_BRAM, REFERENCE_NIC_LUT};
+
+/// LUTs per unrolled weight bit (XNOR + share of the popcount tree +
+/// sign/fold logic).
+pub const LUT_PER_WEIGHT_BIT: f64 = 10.8;
+/// BRAMs per weight bit (MAU lookup-table structures the toolchain emits
+/// even for constant weights).
+pub const BRAM_PER_WEIGHT_BIT: f64 = 0.037;
+
+/// Total weight bits across layers (padded widths — what gets unrolled).
+pub fn unrolled_weight_bits(model: &BnnModel) -> usize {
+    model
+        .layers
+        .iter()
+        .map(|l| l.neurons * l.in_words * 32)
+        .sum()
+}
+
+/// Resource usage of the full N3IC-P4 design for `model`.
+#[derive(Debug, Clone, Copy)]
+pub struct PisaResources {
+    pub design: FpgaResources,
+}
+
+impl PisaResources {
+    pub fn for_model(model: &BnnModel) -> Self {
+        let bits = unrolled_weight_bits(model) as f64;
+        Self {
+            design: FpgaResources {
+                lut: REFERENCE_NIC_LUT + (bits * LUT_PER_WEIGHT_BIT) as usize,
+                bram: REFERENCE_NIC_BRAM + (bits * BRAM_PER_WEIGHT_BIT) as usize,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_n3ic_p4_row() {
+        // Table 2: N3IC-P4 = 144.5k LUT (33.4%), 518 BRAM (35.2%).
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+        let r = PisaResources::for_model(&model).design;
+        assert!((138_000..152_000).contains(&r.lut), "lut={}", r.lut);
+        assert!((490..545).contains(&r.bram), "bram={}", r.bram);
+        assert!((32.0..35.0).contains(&r.lut_pct()), "{}", r.lut_pct());
+    }
+
+    #[test]
+    fn p4_dwarfs_dedicated_module() {
+        // §6.4: P4 uses "a large amount of NIC resources" vs the module.
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+        let p4 = PisaResources::for_model(&model).design;
+        let fpga = FpgaResources::n3ic_fpga(&model, 1);
+        assert!(p4.lut > 2 * fpga.lut);
+        assert!(p4.bram > 2 * fpga.bram);
+    }
+}

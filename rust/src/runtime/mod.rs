@@ -1,0 +1,246 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) produced by
+//! the Python/JAX/Pallas compile pass and execute them from Rust.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).  Artifacts take
+//! the packed weight matrices as runtime arguments (`w_0..w_{L-1}, x`), so
+//! one compiled executable serves any trained model of its architecture.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::bnn::BnnModel;
+use crate::json::Json;
+use crate::Result;
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub in_bits: usize,
+    pub neurons: Vec<usize>,
+    pub batch: usize,
+    pub in_words: usize,
+    pub weight_shapes: Vec<Vec<usize>>,
+    pub out_neurons: usize,
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest(pub HashMap<String, ArtifactSpec>);
+
+impl Manifest {
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(artifacts.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let obj = v
+            .as_object()
+            .ok_or_else(|| anyhow::anyhow!("manifest is not an object"))?;
+        let mut m = HashMap::new();
+        for (k, e) in obj {
+            let usizes = |key: &str| -> Result<Vec<usize>> {
+                Ok(e.req_array(key)?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect())
+            };
+            let weight_shapes = e
+                .req_array("weight_shapes")?
+                .iter()
+                .map(|row| {
+                    row.as_array()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|x| x.as_usize().unwrap_or(0))
+                        .collect()
+                })
+                .collect();
+            m.insert(
+                k.clone(),
+                ArtifactSpec {
+                    file: e.req_str("file")?.to_string(),
+                    in_bits: e.req_usize("in_bits")?,
+                    neurons: usizes("neurons")?,
+                    batch: e.req_usize("batch")?,
+                    in_words: e.req_usize("in_words")?,
+                    weight_shapes,
+                    out_neurons: e.req_usize("out_neurons")?,
+                },
+            );
+        }
+        Ok(Self(m))
+    }
+
+    /// Artifact key for an architecture + batch (e.g. mlp256_b32).
+    pub fn key_for(model: &BnnModel, batch: usize) -> String {
+        let arch = match (model.in_bits, model.neurons.as_slice()) {
+            (256, [32, 16, 2]) => "mlp256",
+            (152, [32, 16, 2]) => "tomo32",
+            (152, [64, 32, 2]) => "tomo64",
+            (152, [128, 64, 2]) => "tomo128",
+            _ => "custom",
+        };
+        format!("{arch}_b{batch}")
+    }
+}
+
+/// A loaded, compiled executable for one (architecture, batch) pair.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+/// The runtime: one PJRT CPU client + an executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, PjrtExecutable>,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifacts: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let manifest = Manifest::load(artifacts)?;
+        Ok(Self {
+            client,
+            artifacts: artifacts.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest key (cached).
+    pub fn load(&mut self, key: &str) -> Result<&PjrtExecutable> {
+        if !self.cache.contains_key(key) {
+            let spec = self
+                .manifest
+                .0
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("artifact {key} not in manifest"))?
+                .clone();
+            let path = self.artifacts.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {key}: {e:?}"))?;
+            self.cache.insert(key.to_string(), PjrtExecutable { exe, spec });
+        }
+        Ok(&self.cache[key])
+    }
+
+    /// Execute a whole batch: `inputs` is `batch × in_words` packed rows;
+    /// returns `batch × out_neurons` scores.  Weights travel as arguments
+    /// (runtime reconfiguration, mirroring the paper's MAU/CLS stores).
+    pub fn infer_batch(
+        &mut self,
+        key: &str,
+        model: &BnnModel,
+        inputs: &[Vec<u32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        let exe = self.load(key)?;
+        let spec = exe.spec.clone();
+        anyhow::ensure!(
+            inputs.len() == spec.batch,
+            "batch {} != artifact batch {}",
+            inputs.len(),
+            spec.batch
+        );
+        anyhow::ensure!(
+            model.neurons == spec.neurons && model.in_words() == spec.in_words,
+            "model/artifact architecture mismatch"
+        );
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(model.layers.len() + 1);
+        for layer in &model.layers {
+            let lit = xla::Literal::vec1(layer.words.as_slice())
+                .reshape(&[layer.neurons as i64, layer.in_words as i64])
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            args.push(lit);
+        }
+        let flat: Vec<u32> = inputs.iter().flatten().copied().collect();
+        let x = xla::Literal::vec1(flat.as_slice())
+            .reshape(&[spec.batch as i64, spec.in_words as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        args.push(x);
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let scores: Vec<i32> = out.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        anyhow::ensure!(
+            scores.len() == spec.batch * spec.out_neurons,
+            "unexpected output size {}",
+            scores.len()
+        );
+        Ok(scores
+            .chunks(spec.out_neurons)
+            .map(|c| c.to_vec())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_scores, load_golden};
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn pjrt_matches_core_and_pallas_goldens() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let dir = artifacts_dir();
+        let model = BnnModel::load_named(&dir, "traffic").unwrap();
+        let golden = load_golden(&dir, "traffic").unwrap();
+        let mut rt = PjrtRuntime::new(&dir).unwrap();
+        let key = Manifest::key_for(&model, 1);
+        for (x, want) in golden.inputs.iter().zip(&golden.scores).take(4) {
+            let got = rt
+                .infer_batch(&key, &model, std::slice::from_ref(x))
+                .unwrap();
+            assert_eq!(&got[0], want, "PJRT vs Pallas golden");
+            assert_eq!(got[0], infer_scores(&model, x), "PJRT vs Rust core");
+        }
+    }
+
+    #[test]
+    fn batch32_artifact_consistent() {
+        if !have_artifacts() {
+            return;
+        }
+        let dir = artifacts_dir();
+        let model = BnnModel::load_named(&dir, "traffic").unwrap();
+        let mut rt = PjrtRuntime::new(&dir).unwrap();
+        let key = Manifest::key_for(&model, 32);
+        let inputs: Vec<Vec<u32>> = (0..32)
+            .map(|i| crate::bnn::BnnLayer::random(1, 256, 500 + i).words)
+            .collect();
+        let got = rt.infer_batch(&key, &model, &inputs).unwrap();
+        for (x, row) in inputs.iter().zip(&got) {
+            assert_eq!(row, &infer_scores(&model, x));
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Cross-language layout pinning: the Rust feature packer must produce
+//! bit-for-bit the same packed words as `train.binarize.featurize` +
+//! `pack_bits` in Python (the training-time view of the same features).
+//! Golden produced by `train.export.write_feature_layout_golden`.
+
+use std::path::PathBuf;
+
+use n3ic::json::Json;
+use n3ic::net::features::pack_features;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn feature_layout_matches_python() {
+    let path = artifacts().join("feature_layout.golden.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let v = Json::parse(&text).unwrap();
+    let cases = v.req_array("cases").unwrap();
+    assert!(!cases.is_empty());
+    for (i, c) in cases.iter().enumerate() {
+        let values: Vec<u16> = c
+            .req_array("values")
+            .unwrap()
+            .iter()
+            .map(|x| x.as_u64().unwrap() as u16)
+            .collect();
+        let feature_bits = c.req_usize("feature_bits").unwrap();
+        let in_bits = c.req_usize("in_bits").unwrap();
+        let want: Vec<u32> = c
+            .req_array("packed")
+            .unwrap()
+            .iter()
+            .map(|x| x.as_u64().unwrap() as u32)
+            .collect();
+        let in_words = n3ic::bnn::words_for(in_bits);
+        let got = pack_features(&values, feature_bits, in_words);
+        assert_eq!(got, want, "case {i}: rust pack diverged from python");
+    }
+}
+
+#[test]
+fn flow_feature_struct_matches_generic_packer() {
+    // FeatureVector::pack (the runtime path) must equal pack_features
+    // (the golden-checked path) for 16×16b inputs.
+    use n3ic::net::features::FeatureVector;
+    let f = FeatureVector([
+        0, 1, 0x8000, 0xFFFF, 12345, 54321, 7, 9, 11, 13, 17, 19, 23, 29, 31, 37,
+    ]);
+    assert_eq!(f.pack().to_vec(), pack_features(&f.0, 16, 8));
+}

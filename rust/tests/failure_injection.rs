@@ -1,0 +1,123 @@
+//! Failure-injection tests: malformed artifacts, missing files, and
+//! boundary conditions must fail loudly and precisely (a deployed NIC
+//! service cannot limp along with a half-loaded model).
+
+use std::path::PathBuf;
+
+use n3ic::bnn::BnnModel;
+use n3ic::json::Json;
+use n3ic::runtime::PjrtRuntime;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("n3ic_fail_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(d.join("models")).unwrap();
+    d
+}
+
+fn write_model(dir: &PathBuf, name: &str, body: &str) {
+    std::fs::write(dir.join("models").join(format!("{name}.json")), body).unwrap();
+}
+
+#[test]
+fn missing_model_file_reports_path() {
+    let err = BnnModel::load_named(&PathBuf::from("/nonexistent"), "traffic")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("/nonexistent"), "{err}");
+    assert!(err.contains("traffic.json"), "{err}");
+}
+
+#[test]
+fn truncated_json_rejected() {
+    let d = tmpdir("trunc");
+    write_model(&d, "m", r#"{"name":"m","in_bits":64,"neurons":[8,2],"layers":[{"neuro"#);
+    assert!(BnnModel::load_named(&d, "m").is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn wrong_weight_count_rejected() {
+    let d = tmpdir("badlen");
+    // 8-neuron layer over 64 bits needs 16 words; give 15.
+    let words: Vec<String> = (0..15).map(|i| i.to_string()).collect();
+    write_model(
+        &d,
+        "m",
+        &format!(
+            r#"{{"name":"m","in_bits":64,"neurons":[8],
+               "layers":[{{"neurons":8,"in_words":2,"threshold":32,
+               "words":[{}]}}]}}"#,
+            words.join(",")
+        ),
+    );
+    let err = BnnModel::load_named(&d, "m").unwrap_err().to_string();
+    assert!(err.contains("weight length"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupted_threshold_rejected() {
+    let d = tmpdir("thr");
+    let words: Vec<String> = (0..16).map(|_| "0".to_string()).collect();
+    write_model(
+        &d,
+        "m",
+        &format!(
+            r#"{{"name":"m","in_bits":64,"neurons":[8],
+               "layers":[{{"neurons":8,"in_words":2,"threshold":31,
+               "words":[{}]}}]}}"#,
+            words.join(",")
+        ),
+    );
+    let err = BnnModel::load_named(&d, "m").unwrap_err().to_string();
+    assert!(err.contains("threshold"), "{err}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn runtime_without_manifest_fails() {
+    let d = tmpdir("noman");
+    assert!(PjrtRuntime::new(&d).is_err());
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn runtime_rejects_unknown_artifact_and_bad_batch() {
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&artifacts).unwrap();
+    let model = BnnModel::load_named(&artifacts, "traffic")
+        .unwrap_or_else(|_| BnnModel::random("traffic", 256, &[32, 16, 2], 1));
+    // Unknown key.
+    let x = vec![0u32; model.in_words()];
+    let err = rt
+        .infer_batch("nope_b1", &model, std::slice::from_ref(&x))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not in manifest"), "{err}");
+    // Wrong batch size for a valid artifact.
+    let err = rt
+        .infer_batch("mlp256_b32", &model, std::slice::from_ref(&x))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("batch"), "{err}");
+    // Wrong architecture for the artifact.
+    let tomo = BnnModel::random("tomo", 152, &[128, 64, 2], 1);
+    let xt = vec![0u32; tomo.in_words()];
+    let err = rt
+        .infer_batch("mlp256_b1", &tomo, std::slice::from_ref(&xt))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mismatch"), "{err}");
+}
+
+#[test]
+fn json_numbers_preserve_u32_exactly() {
+    // The weight path must not lose bits through the f64 JSON layer.
+    for v in [0u32, 1, 0x7FFF_FFFF, 0x8000_0000, u32::MAX] {
+        let j = Json::parse(&format!("[{v}]")).unwrap();
+        assert_eq!(j.as_array().unwrap()[0].as_u64().unwrap() as u32, v);
+    }
+}

@@ -1,0 +1,149 @@
+//! Cross-layer integration tests: every executor (host core, FPGA model,
+//! PISA interpreter, PJRT artifact) must agree bit-for-bit with the
+//! Pallas-kernel goldens exported by the Python build pass, and the
+//! end-to-end pipelines must compose.
+//!
+//! Property-style tests use the crate's deterministic RNG in place of
+//! proptest (the build is offline).
+
+use std::path::PathBuf;
+
+use n3ic::bnn::{infer_packed, infer_scores, load_golden, BnnLayer, BnnModel};
+use n3ic::coordinator::{
+    CoordinatorService, CoreExecutor, OutputSelector, PacketEvent, TriggerCondition,
+};
+use n3ic::net::traffic::{CbrSpec, Rng, TrafficGen};
+use n3ic::pisa::compile_bnn;
+use n3ic::runtime::{Manifest, PjrtRuntime};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn trained_models() -> Vec<BnnModel> {
+    ["traffic", "anomaly", "tomography_32", "tomography_64", "tomography_128"]
+        .iter()
+        .filter_map(|n| BnnModel::load_named(&artifacts(), n).ok())
+        .collect()
+}
+
+#[test]
+fn goldens_cover_all_trained_models() {
+    let models = trained_models();
+    if models.is_empty() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for m in &models {
+        let g = load_golden(&artifacts(), &m.name).expect("golden");
+        assert_eq!(g.in_words, m.in_words());
+        for ((x, scores), class) in g.inputs.iter().zip(&g.scores).zip(&g.classes) {
+            assert_eq!(&infer_scores(m, x), scores, "{} core vs pallas", m.name);
+            assert_eq!(infer_packed(m, x), *class, "{} argmax", m.name);
+        }
+    }
+}
+
+#[test]
+fn pisa_pipeline_agrees_with_goldens() {
+    for m in trained_models() {
+        let Ok(prog) = compile_bnn(&m) else {
+            // tomography_64/128 exceed the PISA budget — expected.
+            assert!(m.neurons[0] > 32, "{} should compile", m.name);
+            continue;
+        };
+        let g = load_golden(&artifacts(), &m.name).unwrap();
+        for (x, want) in g.inputs.iter().zip(&g.scores) {
+            assert_eq!(&prog.run(x), want, "{} pisa vs pallas", m.name);
+        }
+    }
+}
+
+#[test]
+fn pjrt_agrees_with_goldens_all_models() {
+    if !artifacts().join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&artifacts()).unwrap();
+    for m in trained_models() {
+        let key = Manifest::key_for(&m, 1);
+        let g = load_golden(&artifacts(), &m.name).unwrap();
+        for (x, want) in g.inputs.iter().zip(&g.scores).take(4) {
+            let got = rt.infer_batch(&key, &m, std::slice::from_ref(x)).unwrap();
+            assert_eq!(&got[0], want, "{} pjrt vs pallas", m.name);
+        }
+    }
+}
+
+/// Property: for random models and inputs, the PISA pipeline, the FPGA
+/// functional path and the core executor are identical.
+#[test]
+fn property_cross_executor_equality() {
+    let mut rng = Rng::new(2024);
+    for case in 0..25 {
+        let in_bits = [64usize, 128, 152, 256][(rng.below(4)) as usize];
+        let n1 = [8usize, 16, 32][(rng.below(3)) as usize];
+        let model = BnnModel::random(
+            &format!("prop{case}"),
+            in_bits,
+            &[n1, 8, 2],
+            rng.next_u64(),
+        );
+        let prog = compile_bnn(&model).unwrap();
+        let mut fpga = n3ic::fpga::FpgaExecutor::new(model.clone(), 1);
+        for _ in 0..4 {
+            let x = BnnLayer::random(1, in_bits, rng.next_u64()).words;
+            let core = infer_scores(&model, &x);
+            assert_eq!(prog.run(&x), core, "case {case}");
+            let mut fpga_scores = vec![0i32; 2];
+            fpga.infer(&x, &mut fpga_scores);
+            assert_eq!(fpga_scores, core, "case {case}");
+        }
+    }
+}
+
+/// Property: flow-statistics features are deterministic and stable under
+/// packet reordering of identical packets (same sizes/timestamps set).
+#[test]
+fn property_feature_determinism() {
+    use n3ic::net::features::FeatureVector;
+    use n3ic::net::flow::FlowTable;
+    let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 512 }, 4, 9);
+    let pkts: Vec<_> = (0..64).map(|_| gen.next_packet()).collect();
+    let run = |pkts: &[n3ic::net::packet::Packet]| {
+        let mut t = FlowTable::new(64);
+        let mut last = None;
+        for p in pkts {
+            let (s, _, _) = t.update(p);
+            last = Some(FeatureVector::from_stats(s).pack());
+        }
+        last.unwrap()
+    };
+    assert_eq!(run(&pkts), run(&pkts));
+}
+
+/// End to end: the coordinator over generated traffic with a trained
+/// model classifies every triggered flow and the results match direct
+/// inference on the same features.
+#[test]
+fn e2e_coordinator_with_trained_model() {
+    let model = BnnModel::load_named(&artifacts(), "traffic")
+        .unwrap_or_else(|_| BnnModel::random("traffic", 256, &[32, 16, 2], 1));
+    let mut svc = CoordinatorService::new(
+        CoreExecutor::fpga(model.clone()),
+        TriggerCondition::EveryNPackets(10),
+        OutputSelector::Memory,
+    );
+    let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, 300, 5);
+    for _ in 0..20_000 {
+        let p = gen.next_packet();
+        svc.handle(&PacketEvent { packet: p, payload_words: None });
+    }
+    assert!(svc.stats.inferences > 100, "{}", svc.stats.inferences);
+    assert_eq!(svc.stats.inferences as usize, svc.sink.memory.len());
+    // Class histogram covers only valid classes.
+    let total: u64 = svc.stats.classes.iter().sum();
+    assert_eq!(total, svc.stats.inferences);
+    assert_eq!(svc.stats.classes[2..].iter().sum::<u64>(), 0);
+}
