@@ -1,0 +1,183 @@
+//! `batch_engine` — the throughput acceptance grid for the batched
+//! inference subsystem: serial per-item loop (the old
+//! `HostExecutor::run_batch`) vs the weight-stationary tiled
+//! [`BatchKernel`] vs the [`ShardedEngine`], on the paper's
+//! `traffic_32_16_2` model at batch 1/32/1024 × 1/2/4 shards.
+//!
+//! Besides the human-readable table it writes `BENCH.json` at the repo
+//! root so the perf trajectory is machine-trackable PR over PR.
+//! Regenerate with:
+//!
+//! ```text
+//! cd rust && cargo bench --bench batch_engine
+//! ```
+//!
+//! `N3IC_BENCH_SMOKE=1` gives a quick CI pass (written to
+//! `BENCH.smoke.json` so noisy numbers never clobber the tracked file);
+//! `N3IC_BENCH_ENFORCE=1` turns missed acceptance floors into a nonzero
+//! exit code.
+
+use n3ic::bench::{bench, group, smoke_mode, BenchResult};
+use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnLayer, BnnModel, ShardedEngine};
+
+const MODEL_NAME: &str = "traffic_32_16_2";
+const BATCHES: [usize; 3] = [1, 32, 1024];
+const SHARDS: [usize; 3] = [1, 2, 4];
+
+struct Row {
+    kind: &'static str,
+    batch: usize,
+    shards: usize,
+    ns_per_batch: f64,
+    flows_per_sec: f64,
+}
+
+fn push_row(rows: &mut Vec<Row>, kind: &'static str, batch: usize, shards: usize, r: &BenchResult) {
+    rows.push(Row {
+        kind,
+        batch,
+        shards,
+        ns_per_batch: r.ns_per_iter,
+        flows_per_sec: batch as f64 * r.per_second(),
+    });
+}
+
+fn inputs_for(batch: usize) -> Vec<Vec<u32>> {
+    (0..batch)
+        .map(|i| BnnLayer::random(1, 256, 9000 + i as u64).words)
+        .collect()
+}
+
+fn find(rows: &[Row], kind: &str, batch: usize, shards: usize) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.kind == kind && r.batch == batch && r.shards == shards)
+        .map(|r| r.flows_per_sec)
+}
+
+fn main() {
+    let model = BnnModel::random(MODEL_NAME, 256, &[32, 16, 2], 1);
+    let mut rows: Vec<Row> = Vec::new();
+
+    group("batch_engine / serial (per-item loop, the pre-kernel baseline)");
+    for batch in BATCHES {
+        let inputs = inputs_for(batch);
+        let mut exec = BnnExecutor::new(model.clone());
+        let mut scores = vec![0i32; model.out_neurons()];
+        let mut classes: Vec<usize> = Vec::with_capacity(batch);
+        let r = bench(&format!("serial_b{batch}"), || {
+            classes.clear();
+            for x in &inputs {
+                exec.infer(std::hint::black_box(x), &mut scores);
+                classes.push(argmax(&scores));
+            }
+            classes.len()
+        });
+        push_row(&mut rows, "serial", batch, 1, &r);
+    }
+
+    group("batch_engine / tiled (weight-stationary kernel, single core)");
+    for batch in BATCHES {
+        let inputs = inputs_for(batch);
+        let mut kernel = BatchKernel::new(&model);
+        let mut classes: Vec<usize> = Vec::with_capacity(batch);
+        let r = bench(&format!("tiled_b{batch}"), || {
+            kernel.run_batch(std::hint::black_box(&inputs), &mut classes);
+            classes.len()
+        });
+        push_row(&mut rows, "tiled", batch, 1, &r);
+    }
+
+    group("batch_engine / sharded (tiled kernel × worker threads)");
+    for shards in SHARDS {
+        for batch in BATCHES {
+            // Shared handle built once: the timed loop pays one Arc
+            // clone per shard, not a deep copy of the batch (which
+            // serial/tiled rows don't pay either).
+            let inputs = std::sync::Arc::new(inputs_for(batch));
+            let mut engine = ShardedEngine::new(&model, shards);
+            let mut classes: Vec<usize> = Vec::with_capacity(batch);
+            let r = bench(&format!("sharded_s{shards}_b{batch}"), || {
+                engine.run_batch_shared(std::hint::black_box(&inputs), &mut classes);
+                classes.len()
+            });
+            push_row(&mut rows, "sharded", batch, shards, &r);
+        }
+    }
+
+    println!("\n== batch_engine summary ==");
+    // With N3IC_BENCH_ENFORCE set, missed floors fail the process (the
+    // machine-checked form of the acceptance criteria).  Off by default:
+    // smoke-mode numbers are too noisy to gate on.
+    let enforce = std::env::var_os("N3IC_BENCH_ENFORCE").is_some();
+    let mut floors_missed = false;
+    if let (Some(serial), Some(tiled)) = (
+        find(&rows, "serial", 1024, 1),
+        find(&rows, "tiled", 1024, 1),
+    ) {
+        let ratio = tiled / serial;
+        floors_missed |= ratio < 2.0;
+        println!(
+            "tiled kernel @ batch 1024 : {:.2}M flows/s = {ratio:.2}x the serial loop \
+             (acceptance floor: 2x)",
+            tiled / 1e6
+        );
+    }
+    if let (Some(s1), Some(s4)) = (
+        find(&rows, "sharded", 1024, 1),
+        find(&rows, "sharded", 1024, 4),
+    ) {
+        let ratio = s4 / s1;
+        // Only meaningful where 4 workers have >1 core to land on.
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        floors_missed |= cores > 1 && ratio < 1.5;
+        println!(
+            "4 shards  @ batch 1024    : {:.2}M flows/s = {ratio:.2}x one shard \
+             (acceptance floor on multi-core hosts: 1.5x; {cores} cores here)",
+            s4 / 1e6
+        );
+    }
+
+    let json = render_json(&rows);
+    // Smoke numbers are noise: keep them out of the tracked perf record.
+    let fname = if smoke_mode() { "BENCH.smoke.json" } else { "BENCH.json" };
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(fname);
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
+
+    if enforce && floors_missed {
+        eprintln!("batch_engine: acceptance floor missed (see summary above)");
+        std::process::exit(1);
+    }
+}
+
+/// Hand-rolled JSON (the crate's json module is parse-only by design).
+fn render_json(rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"batch_engine\",\n");
+    s.push_str(&format!("  \"model\": \"{MODEL_NAME}\",\n"));
+    s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+    s.push_str(&format!(
+        "  \"threads_available\": {},\n",
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kind\": \"{}\", \"batch\": {}, \"shards\": {}, \
+             \"ns_per_batch\": {:.1}, \"flows_per_sec\": {:.0}}}{}\n",
+            r.kind,
+            r.batch,
+            r.shards,
+            r.ns_per_batch,
+            r.flows_per_sec,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

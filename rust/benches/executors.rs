@@ -27,6 +27,9 @@ fn main() {
         });
     }
 
+    // Since the batch-engine PR this runs the weight-stationary tiled
+    // kernel (see benches/batch_engine.rs for the full serial/tiled/
+    // sharded comparison grid).
     group("bnnexec_batch (host baseline, real wall clock)");
     let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
     for batch in [32usize, 1024] {
@@ -55,29 +58,34 @@ fn main() {
     // The AOT/PJRT path (L1+L2 through XLA): per-call overhead vs the
     // native core — quantifies why the coordinator keeps the bit-exact
     // Rust path on the per-packet fast path and uses PJRT for batches.
-    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.json").exists() {
-        group("pjrt_artifact (AOT JAX/Pallas via XLA)");
-        let m = n3ic::bnn::BnnModel::load_named(&artifacts, "traffic")
-            .unwrap_or_else(|_| BnnModel::random("traffic", 256, &[32, 16, 2], 1));
-        let mut rt = n3ic::runtime::PjrtRuntime::new(&artifacts).unwrap();
-        let key1 = n3ic::runtime::Manifest::key_for(&m, 1);
-        let x1 = vec![BnnLayer::random(1, 256, 5).words];
-        rt.infer_batch(&key1, &m, &x1).unwrap(); // warm compile
-        bench("pjrt_batch1", || {
-            rt.infer_batch(&key1, &m, std::hint::black_box(&x1)).unwrap()
-        });
-        let key256 = n3ic::runtime::Manifest::key_for(&m, 256);
-        let x256: Vec<Vec<u32>> = (0..256)
-            .map(|i| BnnLayer::random(1, 256, i).words)
-            .collect();
-        rt.infer_batch(&key256, &m, &x256).unwrap();
-        let r = bench("pjrt_batch256", || {
-            rt.infer_batch(&key256, &m, std::hint::black_box(&x256)).unwrap()
-        });
-        println!(
-            "  -> {:.2}M inferences/s through the AOT artifact at batch 256",
-            256.0 * r.per_second() / 1e6
-        );
+    // Needs the off-by-default `pjrt` feature (vendored xla-rs).
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if artifacts.join("manifest.json").exists() {
+            group("pjrt_artifact (AOT JAX/Pallas via XLA)");
+            let m = n3ic::bnn::BnnModel::load_named(&artifacts, "traffic")
+                .unwrap_or_else(|_| BnnModel::random("traffic", 256, &[32, 16, 2], 1));
+            let mut rt = n3ic::runtime::PjrtRuntime::new(&artifacts).unwrap();
+            let key1 = n3ic::runtime::Manifest::key_for(&m, 1);
+            let x1 = vec![BnnLayer::random(1, 256, 5).words];
+            rt.infer_batch(&key1, &m, &x1).unwrap(); // warm compile
+            bench("pjrt_batch1", || {
+                rt.infer_batch(&key1, &m, std::hint::black_box(&x1)).unwrap()
+            });
+            let key256 = n3ic::runtime::Manifest::key_for(&m, 256);
+            let x256: Vec<Vec<u32>> = (0..256)
+                .map(|i| BnnLayer::random(1, 256, i).words)
+                .collect();
+            rt.infer_batch(&key256, &m, &x256).unwrap();
+            let r = bench("pjrt_batch256", || {
+                rt.infer_batch(&key256, &m, std::hint::black_box(&x256)).unwrap()
+            });
+            println!(
+                "  -> {:.2}M inferences/s through the AOT artifact at batch 256",
+                256.0 * r.per_second() / 1e6
+            );
+        }
     }
 }

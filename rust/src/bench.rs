@@ -4,8 +4,17 @@
 //! false).  Methodology: warm up, then run timed batches until both a
 //! minimum wall time and a minimum iteration count are reached; report
 //! mean ns/iter, the median of batch means, and throughput.
+//!
+//! Setting `N3IC_BENCH_SMOKE` (any value) cuts every time budget 10× —
+//! a CI-speed smoke run (`scripts/verify.sh`) that still exercises each
+//! bench body; numbers from a smoke run are not publication-grade.
 
 use std::time::Instant;
+
+/// True when the harness should run in short smoke mode.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("N3IC_BENCH_SMOKE").is_some()
+}
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -24,20 +33,25 @@ impl BenchResult {
 
 /// Run a closure under the harness and print a criterion-style line.
 pub fn bench<F: FnMut() -> R, R>(name: &str, mut f: F) -> BenchResult {
-    // Warm-up: ~50 ms.
+    let (warm_ms, batch_target_ns, total_ms) = if smoke_mode() {
+        (5u128, 2e6, 40u128)
+    } else {
+        (50, 20e6, 400)
+    };
+    // Warm-up.
     let w0 = Instant::now();
     let mut warm_iters = 0u64;
-    while w0.elapsed().as_millis() < 50 {
+    while w0.elapsed().as_millis() < warm_ms {
         std::hint::black_box(f());
         warm_iters += 1;
     }
-    // Choose batch size so one batch is ~20 ms.
+    // Choose batch size so one batch hits the per-batch time target.
     let est_ns = w0.elapsed().as_nanos() as f64 / warm_iters as f64;
-    let batch = ((20e6 / est_ns).ceil() as u64).max(1);
+    let batch = ((batch_target_ns / est_ns).ceil() as u64).max(1);
     let mut batch_means: Vec<f64> = Vec::new();
     let mut total_iters = 0u64;
     let t0 = Instant::now();
-    while t0.elapsed().as_millis() < 400 || batch_means.len() < 5 {
+    while t0.elapsed().as_millis() < total_ms || batch_means.len() < 5 {
         let b0 = Instant::now();
         for _ in 0..batch {
             std::hint::black_box(f());

@@ -1,0 +1,236 @@
+//! Weight-stationary batched kernel (the throughput half of §6).
+//!
+//! The single-input executor streams every weight row through the cache
+//! once *per input*; at batch B that reads the weights B times.  This
+//! kernel inverts the loop nest: inputs are packed into tiles of
+//! [`TILE`] lanes, and the inner loop loads each weight qword **once**
+//! and XNOR/popcnts it against all lanes of the tile, which are held in
+//! a register-resident accumulator array.  Weights stay stationary; the
+//! per-qword loop work (load, not, loop bookkeeping) is amortized over
+//! the tile, and the `TILE` independent accumulator chains give the CPU
+//! the instruction-level parallelism a single popcount chain cannot.
+//!
+//! Activation layout between layers is lane-interleaved — qword `q` of
+//! lane `t` lives at `act[q * TILE + t]` — so the inner loop reads one
+//! contiguous `TILE`-wide stripe per weight qword.
+//!
+//! Bit-exact with [`BnnExecutor::infer`](super::BnnExecutor): asserted
+//! by `tests/batch_exact.rs` across odd word counts, ragged final tiles,
+//! and every batch size the tests sweep.
+
+use std::sync::Arc;
+
+use super::exec::{argmax, pack_layers, qword, Layer64};
+use super::BnnModel;
+
+/// Inputs scored per weight-row pass.  8 lanes is a design estimate,
+/// not yet a measurement (see EXPERIMENTS.md §Perf — this PR's build
+/// container has no Rust toolchain): 8 u32 accumulators should fit the
+/// x86-64 integer register file while giving LLVM a full vector-width
+/// ctpop reduction; re-tune against `cargo bench --bench batch_engine`
+/// on a real host before trusting the value.
+pub const TILE: usize = 8;
+
+/// Reusable weight-stationary batch executor.  All scratch (activation
+/// tiles, score tile) is preallocated; `run_batch` does no allocation
+/// beyond growing the caller's output vector.
+pub struct BatchKernel {
+    layers: Arc<Vec<Layer64>>,
+    in_words: usize,
+    out_neurons: usize,
+    /// Activation double buffer, lane-interleaved (`[qword][lane]`).
+    act_a: Vec<u64>,
+    act_b: Vec<u64>,
+    /// Final-layer scores of the current tile, `[lane][neuron]`.
+    scores: Vec<i32>,
+}
+
+impl BatchKernel {
+    pub fn new(model: &BnnModel) -> Self {
+        Self::with_packed(model, pack_layers(model))
+    }
+
+    /// Build on an existing packed-weight handle (shared with a
+    /// [`BnnExecutor`](super::BnnExecutor) or sibling shard workers).
+    pub(crate) fn with_packed(model: &BnnModel, layers: Arc<Vec<Layer64>>) -> Self {
+        let max_q = layers
+            .iter()
+            .map(|l| l.qwords.max(l.out_qwords()))
+            .max()
+            .unwrap_or(1);
+        let out_neurons = model.out_neurons();
+        Self {
+            layers,
+            in_words: model.in_words(),
+            out_neurons,
+            act_a: vec![0; max_q * TILE],
+            act_b: vec![0; max_q * TILE],
+            scores: vec![0; TILE * out_neurons],
+        }
+    }
+
+    pub fn in_words(&self) -> usize {
+        self.in_words
+    }
+
+    pub fn out_neurons(&self) -> usize {
+        self.out_neurons
+    }
+
+    /// Classify a whole batch; `classes` is cleared and refilled with one
+    /// verdict per input, in input order.
+    pub fn run_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        classes.clear();
+        classes.reserve(inputs.len());
+        let out_n = self.out_neurons;
+        for tile in inputs.chunks(TILE) {
+            self.run_tile(tile);
+            for t in 0..tile.len() {
+                classes.push(argmax(&self.scores[t * out_n..(t + 1) * out_n]));
+            }
+        }
+    }
+
+    /// Raw final-layer scores for a whole batch, row-major
+    /// (`inputs.len() × out_neurons`), bit-exact with per-input `infer`.
+    pub fn infer_batch_scores(&mut self, inputs: &[Vec<u32>], scores_out: &mut Vec<i32>) {
+        let out_n = self.out_neurons;
+        scores_out.clear();
+        scores_out.resize(inputs.len() * out_n, 0);
+        for (i, tile) in inputs.chunks(TILE).enumerate() {
+            self.run_tile(tile);
+            let dst = &mut scores_out[i * TILE * out_n..][..tile.len() * out_n];
+            dst.copy_from_slice(&self.scores[..tile.len() * out_n]);
+        }
+    }
+
+    /// Run one tile of `≤ TILE` inputs; leaves the tile's final-layer
+    /// scores in `self.scores` (`[lane][neuron]`).
+    fn run_tile(&mut self, tile: &[Vec<u32>]) {
+        debug_assert!(!tile.is_empty() && tile.len() <= TILE);
+        let lanes = tile.len();
+        self.pack_tile(tile);
+        let n_layers = self.layers.len();
+        let mut cur_in_a = true;
+        for k in 0..n_layers - 1 {
+            let layer = &self.layers[k];
+            let (src, dst) = if cur_in_a {
+                (&self.act_a, &mut self.act_b)
+            } else {
+                (&self.act_b, &mut self.act_a)
+            };
+            Self::layer_forward_tile(layer, lanes, &src[..layer.qwords * TILE], dst);
+            cur_in_a = !cur_in_a;
+        }
+        let last = &self.layers[n_layers - 1];
+        let src = if cur_in_a { &self.act_a } else { &self.act_b };
+        Self::layer_scores_tile(
+            last,
+            lanes,
+            &src[..last.qwords * TILE],
+            self.out_neurons,
+            &mut self.scores,
+        );
+    }
+
+    /// Pack a tile of u32-word inputs into the lane-interleaved qword
+    /// layout; unused lanes of a ragged final tile are zeroed.
+    fn pack_tile(&mut self, tile: &[Vec<u32>]) {
+        let q0 = self.layers[0].qwords;
+        self.act_a[..q0 * TILE].fill(0);
+        for (t, x) in tile.iter().enumerate() {
+            assert_eq!(x.len(), self.in_words, "input width != model in_words");
+            for (q, chunk) in x.chunks(2).enumerate() {
+                self.act_a[q * TILE + t] = qword(chunk);
+            }
+        }
+    }
+
+    /// One hidden layer over a tile.  The weight-stationary inner loop:
+    /// each weight qword is loaded once and scored against every lane.
+    fn layer_forward_tile(layer: &Layer64, lanes: usize, x: &[u64], out: &mut [u64]) {
+        let out_q = layer.out_qwords();
+        out[..out_q * TILE].fill(0);
+        for n in 0..layer.neurons {
+            let acc = Self::score_tile(layer.row(n), x);
+            let base = (n / 64) * TILE;
+            let bit = 1u64 << (n % 64);
+            for (t, &a) in acc.iter().enumerate().take(lanes) {
+                if a as i32 - layer.pad_bias >= layer.threshold {
+                    out[base + t] |= bit;
+                }
+            }
+        }
+    }
+
+    /// Final layer over a tile: raw scores per lane, `[lane][neuron]`.
+    fn layer_scores_tile(
+        layer: &Layer64,
+        lanes: usize,
+        x: &[u64],
+        out_neurons: usize,
+        scores: &mut [i32],
+    ) {
+        debug_assert_eq!(layer.neurons, out_neurons);
+        for n in 0..layer.neurons {
+            let acc = Self::score_tile(layer.row(n), x);
+            for (t, &a) in acc.iter().enumerate().take(lanes) {
+                scores[t * out_neurons + n] = a as i32 - layer.pad_bias;
+            }
+        }
+    }
+
+    /// The hot loop: one neuron's weight row against all TILE lanes.
+    /// `TILE` independent accumulators — LLVM turns the fixed-width inner
+    /// loop into a vector XNOR + vector popcount.
+    #[inline]
+    fn score_tile(row: &[u64], x: &[u64]) -> [u32; TILE] {
+        let mut acc = [0u32; TILE];
+        for (q, &w) in row.iter().enumerate() {
+            let stripe = &x[q * TILE..q * TILE + TILE];
+            for t in 0..TILE {
+                acc[t] += (!(w ^ stripe[t])).count_ones();
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_scores, BnnLayer};
+
+    #[test]
+    fn tile_matches_single_executor() {
+        let model = BnnModel::random("m", 256, &[32, 16, 2], 4);
+        let inputs: Vec<Vec<u32>> = (0..TILE + 3)
+            .map(|i| BnnLayer::random(1, 256, 60 + i as u64).words)
+            .collect();
+        let mut k = BatchKernel::new(&model);
+        let mut scores = Vec::new();
+        k.infer_batch_scores(&inputs, &mut scores);
+        for (i, x) in inputs.iter().enumerate() {
+            assert_eq!(scores[i * 2..(i + 1) * 2], infer_scores(&model, x)[..]);
+        }
+    }
+
+    #[test]
+    fn ragged_and_single_lane_tiles() {
+        // 152-bit input → 5 words → odd qword pairing; 1-layer model too.
+        for arch in [vec![33usize, 7, 3], vec![8usize]] {
+            let model = BnnModel::random("m", 152, &arch, 9);
+            let mut k = BatchKernel::new(&model);
+            for batch in [1usize, TILE - 1, TILE, TILE + 1] {
+                let inputs: Vec<Vec<u32>> = (0..batch)
+                    .map(|i| BnnLayer::random(1, 152, 400 + i as u64).words)
+                    .collect();
+                let mut classes = Vec::new();
+                k.run_batch(&inputs, &mut classes);
+                for (x, &c) in inputs.iter().zip(&classes) {
+                    assert_eq!(c, crate::bnn::infer_packed(&model, x), "batch {batch}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Sharded multi-core inference engine: one [`BatchKernel`] worker per
+//! shard, fed over mpsc channels — the "one core = 1.18M flows/s, so use
+//! N cores" scaling axis of §6 made real.
+//!
+//! Workers are spawned once and live for the engine's lifetime, so the
+//! steady state is allocation-light: each worker owns its kernel (and
+//! therefore its preallocated activation tiles) and all workers share
+//! one `Arc` of the packed weights.  `run_batch` splits the batch into
+//! contiguous shards, scatters them, and reassembles verdicts in input
+//! order regardless of worker completion order.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use super::batch::BatchKernel;
+use super::exec::{pack_layers, Layer64};
+use super::BnnModel;
+
+struct Job {
+    start: usize,
+    len: usize,
+    inputs: Arc<Vec<Vec<u32>>>,
+}
+
+struct ShardResult {
+    start: usize,
+    classes: Vec<usize>,
+    /// The worker's kernel panicked on this shard (bad input width,
+    /// bug); reported instead of silently dropping the result, which
+    /// would leave the gather loop blocked forever.
+    panicked: bool,
+}
+
+/// Aggregate throughput counters of an engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub batches: u64,
+    pub items: u64,
+    /// Wall-clock spent inside `run_batch` (scatter → gather), ns.
+    pub busy_ns: u64,
+}
+
+impl EngineStats {
+    /// Sustained classification rate over every batch run so far.
+    pub fn flows_per_sec(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.items as f64 * 1e9 / self.busy_ns as f64
+        }
+    }
+}
+
+/// A pool of shard workers behind a batch API.
+pub struct ShardedEngine {
+    txs: Vec<mpsc::Sender<Job>>,
+    rx: mpsc::Receiver<ShardResult>,
+    handles: Vec<thread::JoinHandle<()>>,
+    n_shards: usize,
+    stats: EngineStats,
+}
+
+impl ShardedEngine {
+    /// Spawn `n_shards` workers (clamped to ≥ 1) over one shared copy of
+    /// the packed weights.
+    pub fn new(model: &BnnModel, n_shards: usize) -> Self {
+        Self::with_packed(model, pack_layers(model), n_shards)
+    }
+
+    /// Same, reusing an existing packed-weight handle (e.g. from a
+    /// sibling `BnnExecutor`) instead of repacking.
+    pub(crate) fn with_packed(
+        model: &BnnModel,
+        layers: Arc<Vec<Layer64>>,
+        n_shards: usize,
+    ) -> Self {
+        let n_shards = n_shards.max(1);
+        let (res_tx, rx) = mpsc::channel::<ShardResult>();
+        let mut txs = Vec::with_capacity(n_shards);
+        let mut handles = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let (tx, job_rx) = mpsc::channel::<Job>();
+            let res_tx = res_tx.clone();
+            let mut kernel = BatchKernel::with_packed(model, Arc::clone(&layers));
+            handles.push(thread::spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    // A panicking kernel must still answer, or the
+                    // engine's gather loop would wait forever on the
+                    // missing shard (the other workers keep the result
+                    // channel open, so recv() never errors).
+                    let scored = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut classes = Vec::with_capacity(job.len);
+                        kernel.run_batch(
+                            &job.inputs[job.start..job.start + job.len],
+                            &mut classes,
+                        );
+                        classes
+                    }));
+                    match scored {
+                        Ok(classes) => {
+                            let done = ShardResult {
+                                start: job.start,
+                                classes,
+                                panicked: false,
+                            };
+                            if res_tx.send(done).is_err() {
+                                break;
+                            }
+                        }
+                        Err(_) => {
+                            // Kernel scratch may be inconsistent: report
+                            // and retire this worker.
+                            let _ = res_tx.send(ShardResult {
+                                start: job.start,
+                                classes: Vec::new(),
+                                panicked: true,
+                            });
+                            break;
+                        }
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        Self {
+            txs,
+            rx,
+            handles,
+            n_shards,
+            stats: EngineStats::default(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Classify a batch across the shards; `classes[i]` is the verdict
+    /// for `inputs[i]`.  Copies the inputs once to share them with the
+    /// workers — use [`run_batch_owned`](Self::run_batch_owned) or
+    /// [`run_batch_shared`](Self::run_batch_shared) when the caller can
+    /// hand the batch over or already holds it in an `Arc`.
+    pub fn run_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        self.run_batch_shared(&Arc::new(inputs.to_vec()), classes)
+    }
+
+    /// Zero-copy variant of [`run_batch`](Self::run_batch).
+    pub fn run_batch_owned(&mut self, inputs: Vec<Vec<u32>>, classes: &mut Vec<usize>) {
+        self.run_batch_shared(&Arc::new(inputs), classes)
+    }
+
+    /// Cheapest entry point: per-shard cost is one `Arc` clone, no data
+    /// copy at all (also what repeat callers like benches should use).
+    pub fn run_batch_shared(&mut self, inputs: &Arc<Vec<Vec<u32>>>, classes: &mut Vec<usize>) {
+        classes.clear();
+        let n = inputs.len();
+        if n == 0 {
+            return;
+        }
+        let t0 = Instant::now();
+        // Contiguous shards of ceil(n / n_shards); with more shards than
+        // inputs the tail workers simply receive nothing this round.
+        let chunk = n.div_ceil(self.n_shards);
+        let mut sent = 0usize;
+        for (w, start) in (0..n).step_by(chunk).enumerate() {
+            let len = chunk.min(n - start);
+            self.txs[w]
+                .send(Job {
+                    start,
+                    len,
+                    inputs: Arc::clone(inputs),
+                })
+                .expect("shard worker died");
+            sent += 1;
+        }
+        classes.resize(n, 0);
+        for _ in 0..sent {
+            let r = self.rx.recv().expect("shard worker died");
+            assert!(
+                !r.panicked,
+                "shard worker panicked scoring inputs [{}..] — check input widths",
+                r.start
+            );
+            classes[r.start..r.start + r.classes.len()].copy_from_slice(&r.classes);
+        }
+        self.stats.batches += 1;
+        self.stats.items += n as u64;
+        self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+    }
+}
+
+impl Drop for ShardedEngine {
+    fn drop(&mut self) {
+        // Closing the job channels ends each worker's recv loop.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_packed, BnnLayer};
+
+    #[test]
+    fn ordered_results_across_shards() {
+        let model = BnnModel::random("m", 256, &[32, 16, 2], 2);
+        let inputs: Vec<Vec<u32>> = (0..37)
+            .map(|i| BnnLayer::random(1, 256, 300 + i as u64).words)
+            .collect();
+        let mut eng = ShardedEngine::new(&model, 4);
+        let mut classes = Vec::new();
+        eng.run_batch(&inputs, &mut classes);
+        assert_eq!(classes.len(), 37);
+        for (x, &c) in inputs.iter().zip(&classes) {
+            assert_eq!(c, infer_packed(&model, x));
+        }
+        let st = eng.stats();
+        assert_eq!((st.batches, st.items), (1, 37));
+        assert!(st.busy_ns > 0);
+        assert!(st.flows_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn empty_batch_and_oversharding() {
+        let model = BnnModel::random("m", 64, &[8, 2], 3);
+        let mut eng = ShardedEngine::new(&model, 16);
+        let mut classes = vec![99usize];
+        eng.run_batch(&[], &mut classes);
+        assert!(classes.is_empty());
+        let inputs: Vec<Vec<u32>> = (0..2)
+            .map(|i| BnnLayer::random(1, 64, i).words)
+            .collect();
+        eng.run_batch(&inputs, &mut classes);
+        assert_eq!(classes.len(), 2);
+        for (x, &c) in inputs.iter().zip(&classes) {
+            assert_eq!(c, infer_packed(&model, x));
+        }
+    }
+}

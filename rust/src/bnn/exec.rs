@@ -6,6 +6,8 @@
 //! its cost model accounts for that separately; the *numbers* are
 //! identical either way).
 
+use std::sync::Arc;
+
 use super::{BnnLayer, BnnModel};
 
 /// Popcount-sum score of one neuron: `Σ popcount(XNOR(w, x))`.
@@ -81,25 +83,27 @@ pub fn argmax(scores: &[i32]) -> usize {
 /// XNOR over a zero pad adds a constant `32` per pad qword to every
 /// neuron's score, which cancels in the sign comparison only if counted,
 /// so the pad contribution is subtracted via `pad_bias`).
-struct Layer64 {
-    neurons: usize,
-    qwords: usize,
-    threshold: i32,
+///
+/// Shared crate-wide (behind an `Arc`) between the single-input executor,
+/// the weight-stationary batch kernel, and the sharded engine's workers,
+/// so N executors over one model hold one copy of the packed weights.
+pub(crate) struct Layer64 {
+    pub(crate) neurons: usize,
+    pub(crate) qwords: usize,
+    pub(crate) threshold: i32,
     /// Score bias from padded qwords: popcount(XNOR(0,0)) per pad word.
-    pad_bias: i32,
-    rows: Vec<u64>,
+    pub(crate) pad_bias: i32,
+    pub(crate) rows: Vec<u64>,
 }
 
 impl Layer64 {
-    fn new(layer: &BnnLayer) -> Self {
+    pub(crate) fn new(layer: &BnnLayer) -> Self {
         let qwords = layer.in_words.div_ceil(2);
         let mut rows = vec![0u64; layer.neurons * qwords];
         for n in 0..layer.neurons {
             let src = layer.row(n);
             for (q, chunk) in src.chunks(2).enumerate() {
-                let lo = chunk[0] as u64;
-                let hi = if chunk.len() == 2 { chunk[1] as u64 } else { 0 };
-                rows[n * qwords + q] = lo | (hi << 32);
+                rows[n * qwords + q] = qword(chunk);
             }
         }
         // A pad half-qword holds 0 in both x and w → XNOR = all ones in
@@ -115,16 +119,37 @@ impl Layer64 {
     }
 
     #[inline]
-    fn row(&self, n: usize) -> &[u64] {
+    pub(crate) fn row(&self, n: usize) -> &[u64] {
         &self.rows[n * self.qwords..(n + 1) * self.qwords]
     }
+
+    /// Packed activation qwords this layer produces (64 sign bits each).
+    #[inline]
+    pub(crate) fn out_qwords(&self) -> usize {
+        self.neurons.div_ceil(64)
+    }
+}
+
+/// Pack a whole model into the shared qword form.
+pub(crate) fn pack_layers(model: &BnnModel) -> Arc<Vec<Layer64>> {
+    Arc::new(model.layers.iter().map(Layer64::new).collect())
+}
+
+/// Pair two u32 words (or one word + zero pad) into one u64 qword — the
+/// single definition of the crate's word-pairing convention (lo word in
+/// the low half).  `chunk` comes from `chunks(2)`: one or two words.
+#[inline]
+pub(crate) fn qword(chunk: &[u32]) -> u64 {
+    let lo = chunk[0] as u64;
+    let hi = if chunk.len() == 2 { chunk[1] as u64 } else { 0 };
+    lo | (hi << 32)
 }
 
 /// Hot-loop score over prepacked qwords.  (§Perf iter 2 tried 4-way
 /// manual unrolling for popcnt ILP; it measured *slower* on this host —
 /// LLVM already vectorizes the simple form — so the simple loop stays.)
 #[inline]
-fn score_u64(w: &[u64], x: &[u64]) -> i32 {
+pub(crate) fn score_u64(w: &[u64], x: &[u64]) -> i32 {
     let mut acc = 0u32;
     for (a, b) in w.iter().zip(x) {
         acc += (!(a ^ b)).count_ones();
@@ -136,7 +161,7 @@ fn score_u64(w: &[u64], x: &[u64]) -> i32 {
 /// weights (hot-path form; `infer` does zero allocation).
 pub struct BnnExecutor {
     model: BnnModel,
-    layers64: Vec<Layer64>,
+    layers64: Arc<Vec<Layer64>>,
     /// Double buffer large enough for any layer's packed activations.
     buf_a: Vec<u64>,
     buf_b: Vec<u64>,
@@ -144,10 +169,10 @@ pub struct BnnExecutor {
 
 impl BnnExecutor {
     pub fn new(model: BnnModel) -> Self {
-        let layers64: Vec<Layer64> = model.layers.iter().map(Layer64::new).collect();
+        let layers64 = pack_layers(&model);
         let max_q = layers64
             .iter()
-            .map(|l| l.qwords.max(l.neurons.div_ceil(64)))
+            .map(|l| l.qwords.max(l.out_qwords()))
             .max()
             .unwrap_or(1);
         Self {
@@ -162,13 +187,17 @@ impl BnnExecutor {
         &self.model
     }
 
+    /// Handle to the shared packed weights (for batch kernels that want
+    /// to reuse them instead of repacking).
+    pub(crate) fn packed_layers(&self) -> Arc<Vec<Layer64>> {
+        Arc::clone(&self.layers64)
+    }
+
     /// Pack a u32-word input into the executor's qword buffer.
     #[inline]
     fn pack_input(x: &[u32], out: &mut [u64]) {
         for (q, chunk) in x.chunks(2).enumerate() {
-            let lo = chunk[0] as u64;
-            let hi = if chunk.len() == 2 { chunk[1] as u64 } else { 0 };
-            out[q] = lo | (hi << 32);
+            out[q] = qword(chunk);
         }
     }
 

@@ -5,15 +5,25 @@
 //! this function; integration tests assert cross-executor equality and
 //! equality with golden vectors produced by the Python/Pallas layer.
 //!
+//! Three execution forms share one packed-weight representation:
+//! [`BnnExecutor`] (one input at a time, the per-packet inline path),
+//! [`BatchKernel`] (weight-stationary tiles of [`TILE`] inputs per
+//! weight pass), and [`ShardedEngine`] (a batch partitioned across
+//! worker threads, one core each).
+//!
 //! Bit conventions match `python/compile/kernels/ref.py`: bit `i` of a
 //! logical vector lives in word `i / 32`, position `i % 32`; widths are
 //! padded to multiples of 32 with 0-bits (−1 in the ±1 algebra); hidden
 //! layers threshold at `in_bits / 2`; the final layer returns raw integer
 //! popcount scores (argmax = class).
 
+pub mod batch;
+pub mod engine;
 pub mod exec;
 mod model;
 
+pub use batch::{BatchKernel, TILE};
+pub use engine::{EngineStats, ShardedEngine};
 pub use exec::{argmax, infer_packed, infer_scores, layer_forward, BnnExecutor};
 pub use model::{BnnLayer, BnnModel, ModelMetrics, load_golden, Golden};
 

@@ -16,23 +16,25 @@
 //! ~8 ms at 10k; 10s of µs at batch 1; ~40 µs for one tomography probe
 //! set; ~100 µs for a 4096×2048 FC (a quarter of N3IC-NFP's 400 µs).
 
-use crate::bnn::{BnnExecutor, BnnModel};
+use crate::bnn::{BatchKernel, BnnExecutor, BnnModel};
 use crate::pcie::PcieModel;
 
 /// Real batched executor (one worker = one CPU core).
+///
+/// Single inferences go through [`BnnExecutor`]; batches go through the
+/// weight-stationary [`BatchKernel`] (B inputs per weight-row pass)
+/// instead of the old serial per-input loop.  Both share one copy of
+/// the packed weights.
 pub struct HostExecutor {
     exec: BnnExecutor,
-    /// Scores scratch, reused across batch items.
-    scores: Vec<i32>,
+    kernel: BatchKernel,
 }
 
 impl HostExecutor {
     pub fn new(model: BnnModel) -> Self {
-        let n = model.out_neurons();
-        Self {
-            exec: BnnExecutor::new(model),
-            scores: vec![0; n],
-        }
+        let exec = BnnExecutor::new(model);
+        let kernel = BatchKernel::with_packed(exec.model(), exec.packed_layers());
+        Self { exec, kernel }
     }
 
     pub fn model(&self) -> &BnnModel {
@@ -41,11 +43,7 @@ impl HostExecutor {
 
     /// Run a batch of packed inputs; writes one class per input.
     pub fn run_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
-        classes.clear();
-        for x in inputs {
-            self.exec.infer(x, &mut self.scores);
-            classes.push(crate::bnn::exec::argmax(&self.scores));
-        }
+        self.kernel.run_batch(inputs, classes)
     }
 
     /// Single inference returning final scores (hot-path form).

@@ -15,7 +15,7 @@ pub mod trigger;
 
 pub use batcher::Batcher;
 pub use selector::{InputSelector, OutputSelector};
-pub use service::{CoordinatorService, PacketEvent, ServiceStats};
+pub use service::{CoordinatorService, PacketEvent, PendingFlow, ServiceStats};
 pub use shunt::{ShuntDecision, ShuntRouter};
 pub use trigger::TriggerCondition;
 
@@ -32,11 +32,43 @@ pub trait NnExecutor: Send {
     fn latency_ns(&self) -> f64;
     /// Backend name for logs/metrics.
     fn name(&self) -> &'static str;
+    /// Output classes of the deployed model (verdict histogram width).
+    fn n_classes(&self) -> usize;
+}
+
+/// Batch extension of [`NnExecutor`]: the serve loop hands
+/// `Batcher`-accumulated flows to `classify_batch`.  The default is the
+/// per-item loop, so any executor works behind the batch API; backends
+/// with a real batch fast path (weight-stationary kernel, sharded
+/// engine, PJRT artifacts) override it.
+pub trait NnBatchExecutor: NnExecutor {
+    /// Classify a whole batch; `classes` is cleared and refilled with
+    /// one verdict per input, in input order.
+    fn classify_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        classes.clear();
+        classes.reserve(inputs.len());
+        for x in inputs {
+            let c = self.classify(x);
+            classes.push(c);
+        }
+    }
+
+    /// Modeled time for this backend to complete a batch of `b` — every
+    /// item in the batch observes the whole batch's completion.  Default
+    /// is a serial device (`b ×` per-inference latency); backends with a
+    /// calibrated batch model override it.
+    fn batch_latency_ns(&self, b: usize) -> f64 {
+        self.latency_ns() * b as f64
+    }
 }
 
 /// Host / device adapters for the trait.
 pub struct CoreExecutor {
     exec: crate::bnn::BnnExecutor,
+    /// Weight-stationary batch path, sharing `exec`'s packed weights.
+    batch: crate::bnn::BatchKernel,
+    /// Multi-core batch path (enabled by [`sharded`](Self::sharded)).
+    engine: Option<crate::bnn::ShardedEngine>,
     latency_ns: f64,
     name: &'static str,
 }
@@ -44,11 +76,29 @@ pub struct CoreExecutor {
 impl CoreExecutor {
     /// Wrap the bit-exact core with a backend-specific latency model.
     pub fn new(model: BnnModel, latency_ns: f64, name: &'static str) -> Self {
+        let exec = crate::bnn::BnnExecutor::new(model);
+        let batch = crate::bnn::BatchKernel::with_packed(exec.model(), exec.packed_layers());
         Self {
-            exec: crate::bnn::BnnExecutor::new(model),
+            exec,
+            batch,
+            engine: None,
             latency_ns,
             name,
         }
+    }
+
+    /// Route batches through a [`ShardedEngine`](crate::bnn::ShardedEngine)
+    /// of `n_shards` worker cores (sharing this executor's packed
+    /// weights).  `n_shards <= 1` keeps the single-core kernel.
+    pub fn sharded(mut self, n_shards: usize) -> Self {
+        if n_shards > 1 {
+            self.engine = Some(crate::bnn::ShardedEngine::with_packed(
+                self.exec.model(),
+                self.exec.packed_layers(),
+                n_shards,
+            ));
+        }
+        self
     }
 
     /// N3IC-FPGA executor adapter.
@@ -94,12 +144,39 @@ impl NnExecutor for CoreExecutor {
     fn name(&self) -> &'static str {
         self.name
     }
+
+    fn n_classes(&self) -> usize {
+        self.exec.model().out_neurons()
+    }
+}
+
+impl NnBatchExecutor for CoreExecutor {
+    fn classify_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        match self.engine.as_mut() {
+            Some(engine) => engine.run_batch(inputs, classes),
+            None => self.batch.run_batch(inputs, classes),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bnn::{infer_packed, BnnLayer, BnnModel};
+
+    #[test]
+    fn sharded_adapter_matches_single_core_batch_path() {
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 8);
+        let inputs: Vec<Vec<u32>> = (0..23)
+            .map(|i| BnnLayer::random(1, 256, 700 + i).words)
+            .collect();
+        let mut single = CoreExecutor::fpga(model.clone());
+        let mut sharded = CoreExecutor::fpga(model).sharded(3);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        single.classify_batch(&inputs, &mut a);
+        sharded.classify_batch(&inputs, &mut b);
+        assert_eq!(a, b);
+    }
 
     #[test]
     fn adapters_bit_exact_and_latency_ordered() {

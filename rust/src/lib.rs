@@ -25,7 +25,8 @@
 //! * [`bnnexec`] — the host-CPU comparison system (§6 "comparison term").
 //! * [`coordinator`] — triggers, input/output selectors, flow shunting,
 //!   batching: the NIC-side orchestration of §3.2.
-//! * [`runtime`] — PJRT loader/executor for the AOT artifacts.
+//! * `runtime` — PJRT loader/executor for the AOT artifacts (behind the
+//!   off-by-default `pjrt` feature: needs a vendored xla-rs).
 //! * [`experiments`] — one reproduction driver per paper table/figure.
 
 pub mod arith;
@@ -43,6 +44,7 @@ pub mod net;
 pub mod nfp;
 pub mod pcie;
 pub mod pisa;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tomography;
 

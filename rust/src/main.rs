@@ -28,6 +28,8 @@ USAGE:
 COMMANDS:
   serve        --model NAME --backend nfp|pisa|fpga|host|pjrt
                --packets N --flows N --trigger-pkts N
+               --batch N (0 = classify inline; N>0 = batch fast path)
+               --shards N (with --batch: spread batches over N cores)
   experiment   <fig03|...|tab02|abl-crossover|abl-cam|all>
   models
   compile-p4   --model NAME [--format p4|bmv2]
@@ -156,6 +158,29 @@ fn main() -> n3ic::Result<()> {
     }
 }
 
+/// Verify the AOT artifact end to end, then serve through the bit-exact
+/// core with the runtime's measured latency.
+#[cfg(feature = "pjrt")]
+fn pjrt_executor(m: BnnModel, artifacts: &std::path::Path) -> n3ic::Result<CoreExecutor> {
+    let mut rt = n3ic::runtime::PjrtRuntime::new(artifacts)?;
+    let key = n3ic::runtime::Manifest::key_for(&m, 1);
+    let x = vec![0u32; m.in_words()];
+    let t0 = std::time::Instant::now();
+    let _ = rt.infer_batch(&key, &m, std::slice::from_ref(&x))?;
+    let lat = t0.elapsed().as_nanos() as f64;
+    println!("pjrt backend verified on {}", rt.platform());
+    Ok(CoreExecutor::new(m, lat, "pjrt"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_executor(_m: BnnModel, _artifacts: &std::path::Path) -> n3ic::Result<CoreExecutor> {
+    anyhow::bail!(
+        "the pjrt backend is compiled out: add a vendored `xla` path \
+         dependency to rust/Cargo.toml (see the [features] comment there), \
+         then build with `--features pjrt`"
+    )
+}
+
 fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
     let model_name = args.get("model", "traffic");
     let backend: Backend = args.get("backend", "fpga").parse()?;
@@ -164,6 +189,7 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
     let trigger_pkts = args.get_u64("trigger-pkts", 10) as u32;
 
     let m = load_model(artifacts, &model_name);
+    let shards = args.get_u64("shards", 1) as usize;
     let exec = match backend {
         Backend::Fpga => CoreExecutor::fpga(m),
         Backend::Nfp => CoreExecutor::nfp(m),
@@ -171,24 +197,19 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
         Backend::Pisa => {
             CoreExecutor::pisa(m).map_err(|e| anyhow::anyhow!("{e}"))?
         }
-        Backend::Pjrt => {
-            // Verify the AOT artifact end to end, then serve through the
-            // bit-exact core with the runtime's measured latency.
-            let mut rt = n3ic::runtime::PjrtRuntime::new(artifacts)?;
-            let key = n3ic::runtime::Manifest::key_for(&m, 1);
-            let x = vec![0u32; m.in_words()];
-            let t0 = std::time::Instant::now();
-            let _ = rt.infer_batch(&key, &m, std::slice::from_ref(&x))?;
-            let lat = t0.elapsed().as_nanos() as f64;
-            println!("pjrt backend verified on {}", rt.platform());
-            CoreExecutor::new(m, lat, "pjrt")
-        }
-    };
+        Backend::Pjrt => pjrt_executor(m, artifacts)?,
+    }
+    .sharded(shards);
     let mut svc = CoordinatorService::new(
         exec,
         TriggerCondition::EveryNPackets(trigger_pkts),
         OutputSelector::Memory,
     );
+    let batch = args.get_u64("batch", 0) as usize;
+    if batch > 0 {
+        // 1 ms packet-clock cap bounds queueing latency (Fig. 6's knee).
+        svc = svc.with_batching(batch, 1e6);
+    }
     let mut gen = TrafficGen::new(
         CbrSpec {
             gbps: 40.0,
@@ -205,6 +226,7 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
             payload_words: None,
         });
     }
+    svc.flush();
     let wall = t0.elapsed();
     let st = &svc.stats;
     println!("== serve report ==");
@@ -212,7 +234,7 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
     println!("packets          : {}", st.packets);
     println!("flows tracked    : {}", svc.flows.len());
     println!("nn inferences    : {}", st.inferences);
-    println!("class histogram  : {:?}", &st.classes[..2]);
+    println!("class histogram  : {:?}", st.classes);
     println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
     println!(
         "host wall        : {:.2} s ({:.2} Mpkt/s through the pipeline)",

@@ -1,0 +1,153 @@
+//! Bit-exactness of the batched inference subsystem (ISSUE 1 acceptance:
+//! asserted, not eyeballed): [`BatchKernel`] and [`ShardedEngine`] must
+//! agree with `BnnExecutor::infer` on every score and verdict, across
+//! odd `in_words`, odd batch sizes (1, 7, 33, 1024), ragged final tiles,
+//! and shard counts exceeding the batch size.
+//!
+//! Property-style over the crate's deterministic RNG (offline build: no
+//! proptest), same convention as `tests/integration.rs`.
+
+use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnLayer, BnnModel, ShardedEngine, TILE};
+
+fn batch_inputs(in_bits: usize, n: usize, seed: u64) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| BnnLayer::random(1, in_bits, seed + i as u64).words)
+        .collect()
+}
+
+/// Reference scores + classes via the single-input executor.
+fn reference(model: &BnnModel, inputs: &[Vec<u32>]) -> (Vec<i32>, Vec<usize>) {
+    let mut exec = BnnExecutor::new(model.clone());
+    let mut scores = vec![0i32; model.out_neurons()];
+    let mut flat = Vec::with_capacity(inputs.len() * scores.len());
+    let mut classes = Vec::with_capacity(inputs.len());
+    for x in inputs {
+        exec.infer(x, &mut scores);
+        flat.extend_from_slice(&scores);
+        classes.push(argmax(&scores));
+    }
+    (flat, classes)
+}
+
+/// Shapes chosen to hit the corner cases: odd in_words (152 b → 5 words),
+/// non-multiple-of-32 hidden widths, a single-layer model, and >2 output
+/// classes.
+fn shapes() -> Vec<(usize, Vec<usize>)> {
+    vec![
+        (256, vec![32, 16, 2]),  // the paper's traffic model
+        (152, vec![128, 64, 2]), // tomography: odd word count
+        (152, vec![33, 7, 3]),   // ragged widths everywhere
+        (64, vec![8]),           // single (output-only) layer
+        (96, vec![17, 5]),       // 5-class verdicts
+    ]
+}
+
+#[test]
+fn batch_kernel_bit_exact_across_shapes_and_batch_sizes() {
+    for (si, (in_bits, arch)) in shapes().into_iter().enumerate() {
+        let model = BnnModel::random(&format!("m{si}"), in_bits, &arch, 11 + si as u64);
+        let mut kernel = BatchKernel::new(&model);
+        for batch in [1usize, 7, 33, 1024] {
+            let inputs = batch_inputs(in_bits, batch, 1000 * (si as u64 + 1));
+            let (want_scores, want_classes) = reference(&model, &inputs);
+            let mut classes = Vec::new();
+            kernel.run_batch(&inputs, &mut classes);
+            assert_eq!(classes, want_classes, "shape {si} batch {batch} classes");
+            let mut scores = Vec::new();
+            kernel.infer_batch_scores(&inputs, &mut scores);
+            assert_eq!(scores, want_scores, "shape {si} batch {batch} scores");
+        }
+    }
+}
+
+#[test]
+fn ragged_final_tile_every_remainder() {
+    // Sweep every batch % TILE remainder around one and two tiles.
+    let (in_bits, arch) = (152usize, vec![33usize, 7, 3]);
+    let model = BnnModel::random("ragged", in_bits, &arch, 99);
+    let mut kernel = BatchKernel::new(&model);
+    for batch in 1..=2 * TILE + 1 {
+        let inputs = batch_inputs(in_bits, batch, 7000 + batch as u64);
+        let (_, want) = reference(&model, &inputs);
+        let mut got = Vec::new();
+        kernel.run_batch(&inputs, &mut got);
+        assert_eq!(got, want, "batch {batch}");
+    }
+}
+
+#[test]
+fn sharded_engine_bit_exact_and_ordered() {
+    for (si, (in_bits, arch)) in shapes().into_iter().enumerate() {
+        let model = BnnModel::random(&format!("s{si}"), in_bits, &arch, 21 + si as u64);
+        for shards in [1usize, 2, 3] {
+            let mut engine = ShardedEngine::new(&model, shards);
+            for batch in [1usize, 7, 33] {
+                let inputs = batch_inputs(in_bits, batch, 500 * (si as u64 + 1));
+                let (_, want) = reference(&model, &inputs);
+                let mut got = Vec::new();
+                engine.run_batch(&inputs, &mut got);
+                assert_eq!(got, want, "shape {si} shards {shards} batch {batch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_engine_large_batch() {
+    let model = BnnModel::random("big", 256, &[32, 16, 2], 31);
+    let inputs = batch_inputs(256, 1024, 42);
+    let (_, want) = reference(&model, &inputs);
+    let mut engine = ShardedEngine::new(&model, 4);
+    let mut got = Vec::new();
+    engine.run_batch(&inputs, &mut got);
+    assert_eq!(got, want);
+    let st = engine.stats();
+    assert_eq!((st.batches, st.items), (1, 1024));
+}
+
+#[test]
+fn shard_count_exceeding_batch_size() {
+    let model = BnnModel::random("tiny", 64, &[8, 2], 9);
+    let mut engine = ShardedEngine::new(&model, 8);
+    for batch in [1usize, 3, 7] {
+        let inputs = batch_inputs(64, batch, 80 + batch as u64);
+        let (_, want) = reference(&model, &inputs);
+        let mut got = Vec::new();
+        engine.run_batch(&inputs, &mut got);
+        assert_eq!(got, want, "batch {batch} across 8 shards");
+    }
+    // Empty batches are a no-op, not a hang.
+    let mut got = vec![7usize];
+    engine.run_batch(&[], &mut got);
+    assert!(got.is_empty());
+}
+
+#[test]
+#[should_panic(expected = "input width != model in_words")]
+fn kernel_rejects_wrong_input_width() {
+    let model = BnnModel::random("w", 64, &[8, 2], 1);
+    let mut kernel = BatchKernel::new(&model);
+    let mut classes = Vec::new();
+    // Model wants 2 words; feed 3.
+    kernel.run_batch(&[vec![0u32; 3]], &mut classes);
+}
+
+#[test]
+#[should_panic(expected = "shard worker panicked")]
+fn engine_surfaces_worker_panic_instead_of_hanging() {
+    let model = BnnModel::random("w", 64, &[8, 2], 1);
+    let mut engine = ShardedEngine::new(&model, 2);
+    let mut classes = Vec::new();
+    engine.run_batch(&[vec![0u32; 3]], &mut classes);
+}
+
+#[test]
+fn owned_batch_path_matches_borrowed() {
+    let model = BnnModel::random("own", 152, &[33, 7, 3], 55);
+    let inputs = batch_inputs(152, 37, 321);
+    let (_, want) = reference(&model, &inputs);
+    let mut engine = ShardedEngine::new(&model, 2);
+    let mut got = Vec::new();
+    engine.run_batch_owned(inputs, &mut got);
+    assert_eq!(got, want);
+}

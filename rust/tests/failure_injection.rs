@@ -6,6 +6,7 @@ use std::path::PathBuf;
 
 use n3ic::bnn::BnnModel;
 use n3ic::json::Json;
+#[cfg(feature = "pjrt")]
 use n3ic::runtime::PjrtRuntime;
 
 fn tmpdir(name: &str) -> PathBuf {
@@ -74,6 +75,7 @@ fn corrupted_threshold_rejected() {
     std::fs::remove_dir_all(&d).ok();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_without_manifest_fails() {
     let d = tmpdir("noman");
@@ -81,6 +83,7 @@ fn runtime_without_manifest_fails() {
     std::fs::remove_dir_all(&d).ok();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn runtime_rejects_unknown_artifact_and_bad_batch() {
     let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -14,6 +14,7 @@ use n3ic::coordinator::{
 };
 use n3ic::net::traffic::{CbrSpec, Rng, TrafficGen};
 use n3ic::pisa::compile_bnn;
+#[cfg(feature = "pjrt")]
 use n3ic::runtime::{Manifest, PjrtRuntime};
 
 fn artifacts() -> PathBuf {
@@ -59,6 +60,7 @@ fn pisa_pipeline_agrees_with_goldens() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_agrees_with_goldens_all_models() {
     if !artifacts().join("manifest.json").exists() {

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# One-command gate for every PR: tier-1 build + tests, then the perf
+# benches in smoke mode (10x-shortened budgets; exercises every bench
+# body and regenerates BENCH.json without publication-grade numbers).
+#
+#   ./scripts/verify.sh
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== perf smoke: executors bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench executors
+
+echo "== perf smoke: batch_engine bench (writes BENCH.smoke.json) =="
+# Smoke runs write BENCH.smoke.json (gitignored) so they never clobber
+# the tracked BENCH.json.  For a gating full-length run use:
+#   N3IC_BENCH_ENFORCE=1 cargo bench --bench batch_engine
+# (smoke numbers are too noisy to gate on, so enforcement is off here).
+N3IC_BENCH_SMOKE=1 cargo bench --bench batch_engine
+
+echo "verify.sh: all gates passed"
