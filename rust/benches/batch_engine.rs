@@ -4,9 +4,9 @@
 //! [`BatchKernel`] vs the [`ShardedEngine`], on the paper's
 //! `traffic_32_16_2` model at batch 1/32/1024 × 1/2/4 shards.
 //!
-//! Besides the human-readable table it writes `BENCH.json` at the repo
-//! root so the perf trajectory is machine-trackable PR over PR.
-//! Regenerate with:
+//! Besides the human-readable table it merges its grid into the
+//! `benches.batch_engine` entry of `BENCH.json` at the repo root so the
+//! perf trajectory is machine-trackable PR over PR.  Regenerate with:
 //!
 //! ```text
 //! cd rust && cargo bench --bench batch_engine
@@ -17,8 +17,9 @@
 //! `N3IC_BENCH_ENFORCE=1` turns missed acceptance floors into a nonzero
 //! exit code.
 
-use n3ic::bench::{bench, group, smoke_mode, BenchResult};
+use n3ic::bench::{bench, group, smoke_mode, write_bench_json, BenchResult};
 use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnLayer, BnnModel, ShardedEngine};
+use n3ic::json::{obj, Json};
 
 const MODEL_NAME: &str = "traffic_32_16_2";
 const BATCHES: [usize; 3] = [1, 32, 1024];
@@ -137,47 +138,39 @@ fn main() {
         );
     }
 
-    let json = render_json(&rows);
-    // Smoke numbers are noise: keep them out of the tracked perf record.
-    let fname = if smoke_mode() { "BENCH.smoke.json" } else { "BENCH.json" };
-    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join(fname);
-    match std::fs::write(&path, json) {
-        Ok(()) => println!("\nwrote {}", path.display()),
-        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    // Smoke numbers are noise: write_bench_json routes them to the
+    // gitignored BENCH.smoke.json instead of the tracked perf record.
+    let fragment = obj(vec![
+        ("model", Json::Str(MODEL_NAME.into())),
+        ("smoke", Json::Bool(smoke_mode())),
+        (
+            "threads_available",
+            Json::Num(std::thread::available_parallelism().map_or(1, |n| n.get()) as f64),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("kind", Json::Str(r.kind.into())),
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("shards", Json::Num(r.shards as f64)),
+                            ("ns_per_batch", Json::Num((r.ns_per_batch * 10.0).round() / 10.0)),
+                            ("flows_per_sec", Json::Num(r.flows_per_sec.round())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_json("batch_engine", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
     }
 
     if enforce && floors_missed {
         eprintln!("batch_engine: acceptance floor missed (see summary above)");
         std::process::exit(1);
     }
-}
-
-/// Hand-rolled JSON (the crate's json module is parse-only by design).
-fn render_json(rows: &[Row]) -> String {
-    let mut s = String::new();
-    s.push_str("{\n");
-    s.push_str("  \"bench\": \"batch_engine\",\n");
-    s.push_str(&format!("  \"model\": \"{MODEL_NAME}\",\n"));
-    s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
-    s.push_str(&format!(
-        "  \"threads_available\": {},\n",
-        std::thread::available_parallelism().map_or(1, |n| n.get())
-    ));
-    s.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        s.push_str(&format!(
-            "    {{\"kind\": \"{}\", \"batch\": {}, \"shards\": {}, \
-             \"ns_per_batch\": {:.1}, \"flows_per_sec\": {:.0}}}{}\n",
-            r.kind,
-            r.batch,
-            r.shards,
-            r.ns_per_batch,
-            r.flows_per_sec,
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
-    }
-    s.push_str("  ]\n}\n");
-    s
 }

@@ -1,0 +1,202 @@
+//! `pipeline` — end-to-end throughput grid for the staged serving
+//! runtime: the serial `CoordinatorService` loop vs `PipelineService`
+//! at 1/2/4 parse workers × inline/batched inference, on the paper's
+//! `traffic_32_16_2` model over seeded 40Gb/s CBR traffic.
+//!
+//! Before timing anything it **asserts the determinism contract** —
+//! every pipelined configuration must reproduce the serial loop's
+//! verdict histogram and trigger/inference counts bit for bit — so a
+//! `N3IC_BENCH_SMOKE=1` run (scripts/verify.sh) doubles as the CI
+//! pipeline-equivalence gate.
+//!
+//! Results merge into the `benches.pipeline` entry of `BENCH.json`
+//! (`BENCH.smoke.json` for smoke runs):
+//!
+//! ```text
+//! cd rust && cargo bench --bench pipeline
+//! ```
+
+use n3ic::bench::{bench, group, smoke_mode, write_bench_json};
+use n3ic::bnn::BnnModel;
+use n3ic::coordinator::{
+    CoordinatorService, CoreExecutor, OutputSelector, PacketEvent, PipelineConfig,
+    PipelineService, TriggerCondition, STAGE_LINKS,
+};
+use n3ic::json::{obj, Json};
+use n3ic::net::traffic::CbrSpec;
+
+const MODEL_NAME: &str = "traffic_32_16_2";
+const WORKERS: [usize; 3] = [1, 2, 4];
+const BATCHES: [usize; 2] = [0, 32];
+const TRIGGER: TriggerCondition = TriggerCondition::EveryNPackets(10);
+
+struct Row {
+    mode: &'static str,
+    workers: usize,
+    batch: usize,
+    ns_per_pkt: f64,
+    mpkts_per_sec: f64,
+    blocked: Vec<u64>,
+}
+
+fn model() -> BnnModel {
+    BnnModel::random(MODEL_NAME, 256, &[32, 16, 2], 1)
+}
+
+fn events(packets: usize) -> Vec<PacketEvent> {
+    PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, 2000, 7, packets)
+}
+
+fn serial_run(model: &BnnModel, events: &[PacketEvent]) -> (u64, u64, Vec<u64>) {
+    let mut svc = CoordinatorService::new(exec_for(model), TRIGGER, OutputSelector::Memory);
+    for ev in events {
+        svc.handle(ev);
+    }
+    svc.flush();
+    (svc.stats.triggers, svc.stats.inferences, svc.stats.classes)
+}
+
+/// Weight generation/packing stays outside the timed loops: iterations
+/// pay one clone of the prebuilt model, not a regeneration.
+fn exec_for(model: &BnnModel) -> CoreExecutor {
+    CoreExecutor::fpga(model.clone())
+}
+
+fn cfg(workers: usize, batch: usize) -> PipelineConfig {
+    PipelineConfig { workers, batch, ..Default::default() }
+}
+
+fn main() {
+    let n_packets = if smoke_mode() { 20_000 } else { 200_000 };
+    let evs = events(n_packets);
+    let nn = model();
+
+    // -- Equivalence gate (the reason verify.sh runs this in smoke mode).
+    group("pipeline / serial-vs-pipelined equivalence (determinism contract)");
+    let want = serial_run(&nn, &evs);
+    for workers in WORKERS {
+        for batch in BATCHES {
+            let rep = PipelineService::new(
+                exec_for(&nn),
+                TRIGGER,
+                OutputSelector::Memory,
+                cfg(workers, batch),
+            )
+            .run(evs.iter().cloned())
+            .expect("pipeline run");
+            let got = (rep.stats.triggers, rep.stats.inferences, rep.stats.classes);
+            assert_eq!(
+                got, want,
+                "pipelined verdicts diverged from serial at workers={workers} batch={batch}"
+            );
+        }
+    }
+    println!(
+        "equivalence ok: {} configs reproduce the serial verdict histogram {:?} \
+         ({} triggers) on {} packets",
+        WORKERS.len() * BATCHES.len(),
+        want.2,
+        want.0,
+        n_packets
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    group("pipeline / serial loop (the pre-pipeline baseline)");
+    {
+        let r = bench("serial", || {
+            let mut svc = CoordinatorService::new(exec_for(&nn), TRIGGER, OutputSelector::Memory);
+            for ev in &evs {
+                svc.handle(ev);
+            }
+            svc.flush();
+            svc.stats.packets
+        });
+        rows.push(Row {
+            mode: "serial",
+            workers: 0,
+            batch: 0,
+            ns_per_pkt: r.ns_per_iter / n_packets as f64,
+            mpkts_per_sec: n_packets as f64 * r.per_second() / 1e6,
+            blocked: Vec::new(),
+        });
+    }
+
+    group("pipeline / staged runtime (workers × batch)");
+    for workers in WORKERS {
+        for batch in BATCHES {
+            let mut blocked: Vec<u64> = Vec::new();
+            let r = bench(&format!("pipeline_w{workers}_b{batch}"), || {
+                let rep = PipelineService::new(
+                    exec_for(&nn),
+                    TRIGGER,
+                    OutputSelector::Memory,
+                    cfg(workers, batch),
+                )
+                .run(evs.iter().cloned())
+                .expect("pipeline run");
+                blocked = rep.stats.stage_blocked.clone();
+                rep.stats.packets
+            });
+            rows.push(Row {
+                mode: "pipeline",
+                workers,
+                batch,
+                ns_per_pkt: r.ns_per_iter / n_packets as f64,
+                mpkts_per_sec: n_packets as f64 * r.per_second() / 1e6,
+                blocked,
+            });
+        }
+    }
+
+    println!("\n== pipeline summary ==");
+    for r in &rows {
+        let bp: String = STAGE_LINKS
+            .iter()
+            .zip(&r.blocked)
+            .map(|(l, n)| format!("{l}:{n}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "{:8} w{} b{:<3} {:>7.2} Mpkt/s  ({:>6.1} ns/pkt)  {}",
+            r.mode, r.workers, r.batch, r.mpkts_per_sec, r.ns_per_pkt, bp
+        );
+    }
+
+    let fragment = obj(vec![
+        ("model", Json::Str(MODEL_NAME.into())),
+        ("smoke", Json::Bool(smoke_mode())),
+        ("packets", Json::Num(n_packets as f64)),
+        (
+            "threads_available",
+            Json::Num(std::thread::available_parallelism().map_or(1, |n| n.get()) as f64),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("mode", Json::Str(r.mode.into())),
+                            ("workers", Json::Num(r.workers as f64)),
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("ns_per_pkt", Json::Num((r.ns_per_pkt * 10.0).round() / 10.0)),
+                            (
+                                "mpkts_per_sec",
+                                Json::Num((r.mpkts_per_sec * 100.0).round() / 100.0),
+                            ),
+                            (
+                                "stage_blocked",
+                                Json::Arr(r.blocked.iter().map(|&b| Json::Num(b as f64)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_json("pipeline", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+}

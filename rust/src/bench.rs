@@ -11,9 +11,55 @@
 
 use std::time::Instant;
 
+use crate::json::{obj, Json};
+
 /// True when the harness should run in short smoke mode.
 pub fn smoke_mode() -> bool {
     std::env::var_os("N3IC_BENCH_SMOKE").is_some()
+}
+
+/// Merge one bench's result `fragment` into the repo-root `BENCH.json`
+/// (`BENCH.smoke.json` in smoke mode, which is gitignored) under
+/// `{"benches": {<name>: <fragment>}}`, preserving every other bench's
+/// entry — so `batch_engine`, `pipeline`, and future grids share one
+/// machine-trackable perf record instead of clobbering each other.
+pub fn write_bench_json(name: &str, fragment: Json) -> std::io::Result<std::path::PathBuf> {
+    let fname = if smoke_mode() { "BENCH.smoke.json" } else { "BENCH.json" };
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(fname);
+    let existing = std::fs::read_to_string(&path).ok();
+    let doc = merge_bench_entry(existing.as_deref(), name, fragment);
+    std::fs::write(&path, doc)?;
+    Ok(path)
+}
+
+/// Pure merge step behind [`write_bench_json`].  Unparseable documents
+/// are replaced; legacy single-bench documents (top-level `"bench"`
+/// key, the pre-pipeline format) are migrated under `"benches"` first.
+pub fn merge_bench_entry(existing: Option<&str>, name: &str, fragment: Json) -> String {
+    let mut benches = std::collections::BTreeMap::new();
+    if let Some(text) = existing {
+        if let Ok(v) = Json::parse(text) {
+            if let Some(Json::Obj(m)) = v.get("benches") {
+                benches = m.clone();
+            } else if let Some(old) = v.get("bench").and_then(Json::as_str) {
+                let old = old.to_string();
+                let mut body = v.clone();
+                if let Json::Obj(m) = &mut body {
+                    // The name now lives in the key; a stale copy inside
+                    // the entry would make migrated and fresh entries
+                    // shape-different forever.
+                    m.remove("bench");
+                }
+                benches.insert(old, body);
+            }
+        }
+    }
+    benches.insert(name.to_string(), fragment);
+    let mut s = obj(vec![("benches", Json::Obj(benches))]).dump();
+    s.push('\n');
+    s
 }
 
 /// One benchmark result.
@@ -98,5 +144,36 @@ mod tests {
         assert!(r.ns_per_iter > 0.0);
         assert!(r.ns_per_iter < 1_000.0); // an add is not a microsecond
         assert!(r.iters > 1000);
+    }
+
+    #[test]
+    fn merge_keeps_other_benches_and_migrates_legacy() {
+        let frag = |v: f64| obj(vec![("x", Json::Num(v))]);
+        // Fresh file.
+        let a = merge_bench_entry(None, "alpha", frag(1.0));
+        let va = Json::parse(&a).unwrap();
+        assert_eq!(va.get("benches").unwrap().get("alpha").unwrap(), &frag(1.0));
+        // Second bench does not clobber the first.
+        let b = merge_bench_entry(Some(&a), "beta", frag(2.0));
+        let vb = Json::parse(&b).unwrap();
+        assert_eq!(vb.get("benches").unwrap().get("alpha").unwrap(), &frag(1.0));
+        assert_eq!(vb.get("benches").unwrap().get("beta").unwrap(), &frag(2.0));
+        // Re-running a bench replaces only its own entry.
+        let c = merge_bench_entry(Some(&b), "alpha", frag(3.0));
+        let vc = Json::parse(&c).unwrap();
+        assert_eq!(vc.get("benches").unwrap().get("alpha").unwrap(), &frag(3.0));
+        assert_eq!(vc.get("benches").unwrap().get("beta").unwrap(), &frag(2.0));
+        // Legacy single-bench document migrates under its own name.
+        let legacy = r#"{"bench":"batch_engine","rows":[]}"#;
+        let d = merge_bench_entry(Some(legacy), "pipeline", frag(4.0));
+        let vd = Json::parse(&d).unwrap();
+        let m = vd.get("benches").unwrap();
+        assert!(m.get("batch_engine").unwrap().get("rows").is_some());
+        // The legacy name key is stripped: it lives in the map key now.
+        assert!(m.get("batch_engine").unwrap().get("bench").is_none());
+        assert_eq!(m.get("pipeline").unwrap(), &frag(4.0));
+        // Garbage is replaced, not crashed on.
+        let e = merge_bench_entry(Some("{not json"), "alpha", frag(5.0));
+        assert!(Json::parse(&e).is_ok());
     }
 }

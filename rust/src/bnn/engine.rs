@@ -157,11 +157,31 @@ impl ShardedEngine {
 
     /// Cheapest entry point: per-shard cost is one `Arc` clone, no data
     /// copy at all (also what repeat callers like benches should use).
+    /// Panics if a worker died or panicked; services that must stay up
+    /// through a poisoned shard use [`try_run_batch_shared`]
+    /// (Self::try_run_batch_shared) instead.
     pub fn run_batch_shared(&mut self, inputs: &Arc<Vec<Vec<u32>>>, classes: &mut Vec<usize>) {
+        if let Err(e) = self.try_run_batch_shared(inputs, classes) {
+            panic!("{e}");
+        }
+    }
+
+    /// Fallible batch run: a dead or panicking shard worker surfaces as
+    /// `Err` instead of a panic (or, worse, a hang on the missing
+    /// shard's result).  Every result of the failed batch is drained
+    /// before returning, so a later call can never observe another
+    /// batch's stale verdicts; still, one or more workers may have
+    /// retired, so rebuilding the engine after an `Err` is the safe
+    /// move.  `classes` contents are unspecified on error.
+    pub fn try_run_batch_shared(
+        &mut self,
+        inputs: &Arc<Vec<Vec<u32>>>,
+        classes: &mut Vec<usize>,
+    ) -> Result<(), EngineError> {
         classes.clear();
         let n = inputs.len();
         if n == 0 {
-            return;
+            return Ok(());
         }
         let t0 = Instant::now();
         // Contiguous shards of ceil(n / n_shards); with more shards than
@@ -169,31 +189,72 @@ impl ShardedEngine {
         let chunk = n.div_ceil(self.n_shards);
         let mut sent = 0usize;
         for (w, start) in (0..n).step_by(chunk).enumerate() {
-            let len = chunk.min(n - start);
-            self.txs[w]
-                .send(Job {
-                    start,
-                    len,
-                    inputs: Arc::clone(inputs),
-                })
-                .expect("shard worker died");
+            let job = Job {
+                start,
+                len: chunk.min(n - start),
+                inputs: Arc::clone(inputs),
+            };
+            if self.txs[w].send(job).is_err() {
+                // Drain what was already scattered (those workers are
+                // alive and will answer) so the result queue holds
+                // nothing stale for a future batch.
+                for _ in 0..sent {
+                    let _ = self.rx.recv();
+                }
+                return Err(EngineError::WorkerDied);
+            }
             sent += 1;
         }
         classes.resize(n, 0);
+        // Gather every outstanding shard even after a failure — leaving
+        // results queued would corrupt the next batch's gather.
+        let mut first_err = None;
         for _ in 0..sent {
-            let r = self.rx.recv().expect("shard worker died");
-            assert!(
-                !r.panicked,
-                "shard worker panicked scoring inputs [{}..] — check input widths",
-                r.start
-            );
-            classes[r.start..r.start + r.classes.len()].copy_from_slice(&r.classes);
+            match self.rx.recv() {
+                Ok(r) if r.panicked => {
+                    first_err.get_or_insert(EngineError::WorkerPanicked { start: r.start });
+                }
+                Ok(r) => {
+                    classes[r.start..r.start + r.classes.len()].copy_from_slice(&r.classes);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(EngineError::WorkerDied);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
         self.stats.batches += 1;
         self.stats.items += n as u64;
         self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+        Ok(())
     }
 }
+
+/// Failure modes of a [`ShardedEngine`] batch run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineError {
+    /// A worker's channel disconnected (thread gone).
+    WorkerDied,
+    /// A worker's kernel panicked mid-shard (e.g. bad input widths).
+    WorkerPanicked { start: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::WorkerDied => write!(f, "shard worker died"),
+            EngineError::WorkerPanicked { start } => write!(
+                f,
+                "shard worker panicked scoring inputs [{start}..] — check input widths"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 impl Drop for ShardedEngine {
     fn drop(&mut self) {
@@ -227,6 +288,35 @@ mod tests {
         assert_eq!((st.batches, st.items), (1, 37));
         assert!(st.busy_ns > 0);
         assert!(st.flows_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn try_path_reports_worker_panic_without_hanging() {
+        let model = BnnModel::random("w", 64, &[8, 2], 1);
+        let mut engine = ShardedEngine::new(&model, 2);
+        let mut classes = Vec::new();
+        // Model wants 2 words; feed 3 → the worker's kernel panics.
+        let err = engine
+            .try_run_batch_shared(&Arc::new(vec![vec![0u32; 3]]), &mut classes)
+            .unwrap_err();
+        assert!(matches!(err, EngineError::WorkerPanicked { start: 0 }), "{err}");
+    }
+
+    #[test]
+    fn failed_batch_drains_results_so_later_calls_never_see_stale_data() {
+        let model = BnnModel::random("w", 64, &[8, 2], 1);
+        let mut engine = ShardedEngine::new(&model, 2);
+        let mut classes = Vec::new();
+        // Shard 0's input is malformed (worker panics); shard 1's is
+        // fine (worker answers).  The gather must consume *both*.
+        let mixed = Arc::new(vec![vec![0u32; 3], BnnLayer::random(1, 64, 5).words]);
+        let err = engine.try_run_batch_shared(&mixed, &mut classes).unwrap_err();
+        assert_eq!(err, EngineError::WorkerPanicked { start: 0 });
+        // Worker 0 retired and nothing is left queued: the next batch
+        // fails cleanly instead of gathering the old batch's verdicts.
+        let good = Arc::new(vec![BnnLayer::random(1, 64, 6).words]);
+        let err = engine.try_run_batch_shared(&good, &mut classes).unwrap_err();
+        assert_eq!(err, EngineError::WorkerDied);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod exec;
 mod model;
 
 pub use batch::{BatchKernel, TILE};
-pub use engine::{EngineStats, ShardedEngine};
+pub use engine::{EngineError, EngineStats, ShardedEngine};
 pub use exec::{argmax, infer_packed, infer_scores, layer_forward, BnnExecutor};
 pub use model::{BnnLayer, BnnModel, ModelMetrics, load_golden, Golden};
 

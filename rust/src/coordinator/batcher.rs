@@ -74,4 +74,82 @@ mod tests {
         let mut b: Batcher<u32> = Batcher::new(4, 10.0);
         assert!(b.poll(1e12).is_none());
     }
+
+    #[test]
+    fn partial_flush_preserves_arrival_order() {
+        let mut b = Batcher::new(100, 50.0);
+        for i in 0..7u32 {
+            assert!(b.push(i as f64, i).is_none());
+        }
+        let batch = b.poll(60.0).expect("timeout flush");
+        let items: Vec<u32> = batch.iter().map(|&(_, v)| v).collect();
+        assert_eq!(items, vec![0, 1, 2, 3, 4, 5, 6]);
+        // Enqueue timestamps ride along, also in order.
+        let ts: Vec<f64> = batch.iter().map(|&(t, _)| t).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn size_flush_preserves_arrival_order() {
+        let mut b = Batcher::new(5, 1e12);
+        let mut full = None;
+        for i in 0..5u32 {
+            full = b.push(i as f64, i);
+        }
+        let items: Vec<u32> = full.unwrap().into_iter().map(|(_, v)| v).collect();
+        assert_eq!(items, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_timeout_flushes_on_first_poll() {
+        // max_wait_ns = 0: any pending item is already too old, so the
+        // batcher degrades to "flush at every clock tick" — never to
+        // "drop" or "hang".
+        let mut b = Batcher::new(1 << 20, 0.0);
+        b.push(100.0, "x");
+        let batch = b.poll(100.0).expect("zero timeout must flush at now == enqueue");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.pending(), 0);
+        // And again for the next item — state fully reset.
+        b.push(200.0, "y");
+        assert_eq!(b.poll(200.0).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn batch_of_one_emits_immediately() {
+        let mut b = Batcher::new(1, 1e12);
+        for i in 0..4u32 {
+            let batch = b.push(i as f64, i).expect("size-1 batch fills on every push");
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].1, i);
+            assert_eq!(b.pending(), 0);
+        }
+        // Batcher::new clamps 0 to 1, so the degenerate config behaves
+        // the same way instead of never emitting.
+        let mut z = Batcher::new(0, 1e12);
+        assert!(z.push(0.0, 9u32).is_some());
+    }
+
+    #[test]
+    fn no_item_is_ever_dropped_across_mixed_flushes() {
+        // Interleave size flushes, timeout flushes, and a final drain;
+        // every pushed item must come out exactly once, in order.
+        let mut b = Batcher::new(3, 10.0);
+        let mut out: Vec<u32> = Vec::new();
+        let mut drain = |batch: Option<Vec<(f64, u32)>>, out: &mut Vec<u32>| {
+            if let Some(batch) = batch {
+                out.extend(batch.into_iter().map(|(_, v)| v));
+            }
+        };
+        for i in 0..100u32 {
+            let now = i as f64 * 4.0; // every ~3rd poll crosses the 10ns wait
+            let timed = b.poll(now);
+            drain(timed, &mut out);
+            let full = b.push(now, i);
+            drain(full, &mut out);
+        }
+        drain(b.poll(f64::INFINITY), &mut out);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(out, (0..100).collect::<Vec<u32>>());
+    }
 }

@@ -8,12 +8,14 @@
 
 pub mod batcher;
 pub mod multinn;
+pub mod pipeline;
 pub mod selector;
 pub mod service;
 pub mod shunt;
 pub mod trigger;
 
 pub use batcher::Batcher;
+pub use pipeline::{PipelineConfig, PipelineError, PipelineReport, PipelineService, STAGE_LINKS};
 pub use selector::{InputSelector, OutputSelector};
 pub use service::{CoordinatorService, PacketEvent, PendingFlow, ServiceStats};
 pub use shunt::{ShuntDecision, ShuntRouter};
@@ -59,6 +61,13 @@ pub trait NnBatchExecutor: NnExecutor {
     /// calibrated batch model override it.
     fn batch_latency_ns(&self, b: usize) -> f64 {
         self.latency_ns() * b as f64
+    }
+
+    /// Throughput counters of an underlying multi-core engine, if this
+    /// backend routes batches through one — serve-report material that
+    /// survives the executor being moved into a pipeline stage.
+    fn engine_stats(&self) -> Option<crate::bnn::EngineStats> {
+        None
     }
 }
 
@@ -156,6 +165,10 @@ impl NnBatchExecutor for CoreExecutor {
             Some(engine) => engine.run_batch(inputs, classes),
             None => self.batch.run_batch(inputs, classes),
         }
+    }
+
+    fn engine_stats(&self) -> Option<crate::bnn::EngineStats> {
+        self.engine.as_ref().map(|e| e.stats())
     }
 }
 

@@ -1,0 +1,552 @@
+//! Pipelined multi-stage serving runtime — the serial `CoordinatorService`
+//! loop decomposed into the staged co-processor shape the NIC actually
+//! has (parse/flow-update engines feeding an inference engine feeding a
+//! verdict sink), so the parse work for packet *n+1* overlaps the
+//! inference for packet *n* instead of serializing behind it:
+//!
+//! ```text
+//!  ingress ─┬─▶ parse/flow/trigger worker 0 ─┐
+//!  (shard   ├─▶ parse/flow/trigger worker 1 ─┼─▶ batcher ─▶ ordered
+//!  by flow  ┆            …                   ┆    + NN      sink +
+//!  hash)    └─▶ parse/flow/trigger worker N ─┘   executor   metrics
+//!     stage 0          stage 1+2                 stage 3    stage 4
+//! ```
+//!
+//! Stages are connected by **bounded** `sync_channel`s: a full queue
+//! blocks the producer (lossless backpressure — no verdict is ever
+//! dropped) and each blocked send is counted in
+//! [`ServiceStats::stage_blocked`], indexed by [`STAGE_LINKS`].
+//!
+//! ## Determinism contract (the tier-1 equivalence property)
+//!
+//! Given the same seeded traffic, the pipelined runtime produces
+//! **bit-identical** verdict histograms, trigger counts, inference
+//! counts, and per-flow verdicts to the serial loop, for any worker
+//! count, queue depth, or batch size.  This holds by construction:
+//!
+//! * packets are sharded by canonical flow hash
+//!   ([`ShardedFlowTable::shard_of`]), so every packet of a flow — both
+//!   directions — visits one stage-1 worker, in arrival order
+//!   (`sync_channel` is FIFO);
+//! * [`TriggerCondition`] and the flow statistics a trigger snapshots
+//!   are functions of that flow's packets only, so cross-flow
+//!   interleaving cannot change what fires or what gets packed;
+//! * every executor classifies each packed input bit-exactly regardless
+//!   of the batch it rides in, so batch composition (which *does* vary
+//!   with timing) is invisible in the verdicts.
+//!
+//! Latency *histograms* are exempt from the contract — queueing delay is
+//! real time, not packet time.  The contract is asserted end-to-end in
+//! `tests/pipeline_equiv.rs`.
+//!
+//! ## Failure semantics
+//!
+//! A stage that dies (executor panic, poisoned channel) must not hang
+//! the service: its channel endpoints drop, upstream sends and
+//! downstream receives error out, every surviving stage exits its loop
+//! and reports, and [`run`](PipelineService::run) returns a
+//! [`PipelineError`] carrying both the failure descriptions and the
+//! stats accumulated up to the fault (`tests/failure_injection.rs`).
+
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::thread;
+
+use crate::bnn::EngineStats;
+use crate::net::flow::{FlowTable, ShardedFlowTable};
+
+use super::batcher::Batcher;
+use super::selector::{OutputSelector, OutputSink};
+use super::service::{
+    batch_item_latency_ns, flow_id, select_packed_input, PacketEvent, PendingFlow, ServiceStats,
+};
+use super::trigger::TriggerCondition;
+use super::NnBatchExecutor;
+
+/// Inter-stage links, in `ServiceStats::stage_blocked` index order.
+pub const STAGE_LINKS: [&str; 3] = ["ingress→parse", "parse→inference", "inference→sink"];
+
+/// Tuning knobs of the pipelined runtime.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Stage-1 parse/flow-table workers (flow-hash shards), ≥ 1.
+    pub workers: usize,
+    /// Capacity of each bounded inter-stage channel, ≥ 1.
+    pub queue_depth: usize,
+    /// 0 = classify inline in stage 3; N ≥ 1 = accumulate batches of N
+    /// and take the executor's batch fast path.
+    pub batch: usize,
+    /// Packet-clock cap on batch queueing (same knob as the serial
+    /// loop's `with_batching`).
+    pub max_wait_ns: f64,
+    /// Flow-table capacity *per worker* (each owns one shard).
+    pub flow_capacity: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 1024,
+            batch: 0,
+            max_wait_ns: 1e6,
+            flow_capacity: 1 << 16,
+        }
+    }
+}
+
+/// What a completed (or faulted) pipeline run leaves behind.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub stats: ServiceStats,
+    /// The single stage-4 sink — verdicts in inference-completion order.
+    pub sink: OutputSink,
+    /// Live flows summed over every worker's shard.
+    pub flows_tracked: usize,
+    /// Stage 3's sharded-engine counters, if its executor ran one.
+    pub engine: Option<EngineStats>,
+}
+
+/// One or more stages died; partial statistics survive in `report`.
+#[derive(Debug)]
+pub struct PipelineError {
+    pub failures: Vec<String>,
+    pub report: PipelineReport,
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pipeline stage failure: {}", self.failures.join("; "))
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// Stage 1+2 → stage 3 messages.
+enum InferenceMsg {
+    /// A triggered flow: routing id, packed NN input, and the trigger
+    /// packet's clock (drives batch timeouts).
+    Flow { id: u64, packed: Vec<u32>, ts_ns: f64 },
+    /// Periodic packet-clock forwarding (every [`CLOCK_TICK_PKTS`]
+    /// packets per worker) so batch timeouts advance through stretches
+    /// of non-triggering traffic — the pipelined stand-in for the
+    /// serial loop's poll-per-packet.  Ticks from different workers may
+    /// arrive out of order; a stale tick is harmless (the poll
+    /// condition is simply false), and ticks never change verdicts —
+    /// only when a partial batch flushes.
+    Clock(f64),
+}
+
+/// How often each parse worker forwards its packet clock to stage 3:
+/// bounds batch-timeout staleness to this many packets per worker at
+/// ~0.4% extra message traffic.
+const CLOCK_TICK_PKTS: u64 = 256;
+
+/// Stage 3 → stage 4 message: one accounted verdict.
+struct Verdict {
+    id: u64,
+    class: usize,
+    latency_ns: f64,
+}
+
+/// What each stage thread returns at exit.
+struct StageReport {
+    stats: ServiceStats,
+    failure: Option<String>,
+    flows: usize,
+    /// Populated by the inference stage only.
+    engine: Option<EngineStats>,
+}
+
+/// Lossless counted send on a bounded channel: a full queue counts one
+/// backpressure event then blocks; a disconnected peer is the caller's
+/// cue to shut down.
+fn send_counted<T>(tx: &SyncSender<T>, item: T, blocked: &mut u64) -> Result<(), ()> {
+    match tx.try_send(item) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(it)) => {
+            *blocked += 1;
+            tx.send(it).map_err(|_| ())
+        }
+        Err(TrySendError::Disconnected(_)) => Err(()),
+    }
+}
+
+fn blank_stats() -> ServiceStats {
+    ServiceStats {
+        stage_blocked: vec![0; STAGE_LINKS.len()],
+        ..Default::default()
+    }
+}
+
+/// Stage 1+2: flow update, trigger, feature packing — one worker per
+/// flow shard, so this owns its `FlowTable` outright.
+fn parse_stage(
+    rx: Receiver<PacketEvent>,
+    tx: SyncSender<InferenceMsg>,
+    trigger: TriggerCondition,
+    mut flows: FlowTable,
+) -> StageReport {
+    let mut stats = blank_stats();
+    let mut failure = None;
+    while let Ok(ev) = rx.recv() {
+        stats.packets += 1;
+        // The canonical key is hashed once more inside `update` after
+        // ingress already hashed it for sharding — 4 multiplies per
+        // packet, accepted so the channel messages stay plain
+        // `PacketEvent`s instead of carrying (key, hash) everywhere.
+        let (fstats, is_new, pkts) = flows.update(&ev.packet);
+        if trigger.fires(&ev.packet, is_new, pkts) {
+            stats.triggers += 1;
+            // Shared with the serial loop — the determinism contract
+            // says these two paths may never diverge.
+            let msg = InferenceMsg::Flow {
+                id: flow_id(&ev.packet),
+                packed: select_packed_input(&ev, fstats),
+                ts_ns: ev.packet.ts_ns,
+            };
+            if send_counted(&tx, msg, &mut stats.stage_blocked[1]).is_err() {
+                failure = Some("parse stage: inference channel disconnected".into());
+                break;
+            }
+        }
+        // Forward the packet clock periodically so stage 3's batch
+        // timeout advances even when nothing triggers (the serial loop
+        // polls its batcher on *every* packet).
+        if stats.packets % CLOCK_TICK_PKTS == 0 {
+            let tick = InferenceMsg::Clock(ev.packet.ts_ns);
+            if send_counted(&tx, tick, &mut stats.stage_blocked[1]).is_err() {
+                failure = Some("parse stage: inference channel disconnected".into());
+                break;
+            }
+        }
+    }
+    let flows_len = flows.len();
+    StageReport { stats, failure, flows: flows_len, engine: None }
+}
+
+/// Stage 3: the single inference engine — batcher + executor.  Being
+/// the sole producer into stage 4, its emission order *is* the sink
+/// order.  Every `Err(())` below means one thing: the sink hung up.
+struct InferenceStage<E: NnBatchExecutor> {
+    exec: E,
+    tx: SyncSender<Verdict>,
+    batcher: Option<Batcher<PendingFlow>>,
+    stats: ServiceStats,
+    /// Scratch reused across batch flushes.
+    inputs: Vec<Vec<u32>>,
+    meta: Vec<(u64, f64)>,
+    classes: Vec<usize>,
+}
+
+impl<E: NnBatchExecutor> InferenceStage<E> {
+    fn new(exec: E, tx: SyncSender<Verdict>, batcher: Option<Batcher<PendingFlow>>) -> Self {
+        Self {
+            exec,
+            tx,
+            batcher,
+            stats: blank_stats(),
+            inputs: Vec::new(),
+            meta: Vec::new(),
+            classes: Vec::new(),
+        }
+    }
+
+    /// Classify one accumulated batch and emit its verdicts.  Latency
+    /// semantics match `CoordinatorService::flush_batch`: packet-clock
+    /// queueing wait plus the whole batch's modeled completion time.
+    fn flush(&mut self, batch: Vec<(f64, PendingFlow)>, now_ns: f64) -> Result<(), ()> {
+        self.meta.clear();
+        self.inputs.clear();
+        for (enq_ns, flow) in batch {
+            self.meta.push((flow.id, enq_ns));
+            self.inputs.push(flow.packed);
+        }
+        self.exec.classify_batch(&self.inputs, &mut self.classes);
+        let exec_ns = self.exec.batch_latency_ns(self.classes.len());
+        for i in 0..self.classes.len() {
+            let (id, enq_ns) = self.meta[i];
+            let v = Verdict {
+                id,
+                class: self.classes[i],
+                latency_ns: batch_item_latency_ns(now_ns, enq_ns, exec_ns),
+            };
+            send_counted(&self.tx, v, &mut self.stats.stage_blocked[2])?;
+        }
+        Ok(())
+    }
+
+    /// Advance the packet clock: flush the partial batch if it timed out.
+    fn on_clock(&mut self, now_ns: f64) -> Result<(), ()> {
+        match self.batcher.as_mut().and_then(|b| b.poll(now_ns)) {
+            Some(batch) => self.flush(batch, now_ns),
+            None => Ok(()),
+        }
+    }
+
+    /// Handle one triggered flow: timed flush, then enqueue-or-classify.
+    fn on_flow(&mut self, id: u64, packed: Vec<u32>, ts_ns: f64) -> Result<(), ()> {
+        self.on_clock(ts_ns)?;
+        if self.batcher.is_none() {
+            let class = self.exec.classify(&packed);
+            let v = Verdict { id, class, latency_ns: self.exec.latency_ns() };
+            return send_counted(&self.tx, v, &mut self.stats.stage_blocked[2]);
+        }
+        let full = self
+            .batcher
+            .as_mut()
+            .unwrap()
+            .push(ts_ns, PendingFlow { id, packed });
+        match full {
+            Some(batch) => self.flush(batch, ts_ns),
+            None => Ok(()),
+        }
+    }
+
+    /// End-of-stream drain: flush the partial batch with the newest
+    /// enqueue time as "now" (the serial loop's shutdown semantics).
+    fn drain(&mut self) -> Result<(), ()> {
+        match self.batcher.as_mut().and_then(|b| b.poll(f64::INFINITY)) {
+            Some(batch) => {
+                let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
+                self.flush(batch, now_ns)
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Event loop until every parse worker hangs up, then drain.
+    fn run(mut self, rx: Receiver<InferenceMsg>) -> StageReport {
+        const SINK_GONE: &str = "inference stage: sink channel disconnected";
+        let mut failure = None;
+        while let Ok(msg) = rx.recv() {
+            let step = match msg {
+                InferenceMsg::Flow { id, packed, ts_ns } => self.on_flow(id, packed, ts_ns),
+                InferenceMsg::Clock(ts_ns) => self.on_clock(ts_ns),
+            };
+            if step.is_err() {
+                failure = Some(SINK_GONE.into());
+                break;
+            }
+        }
+        if failure.is_none() && self.drain().is_err() {
+            failure = Some(SINK_GONE.into());
+        }
+        let engine = self.exec.engine_stats();
+        StageReport { stats: self.stats, failure, flows: 0, engine }
+    }
+}
+
+/// Stage 4: the single ordered selector/metrics sink.
+fn sink_stage(
+    rx: Receiver<Verdict>,
+    output: OutputSelector,
+    n_classes: usize,
+) -> (ServiceStats, OutputSink) {
+    let mut stats = blank_stats();
+    stats.classes = vec![0; n_classes];
+    let mut sink = OutputSink::default();
+    while let Ok(v) = rx.recv() {
+        stats.inferences += 1;
+        if v.class >= stats.classes.len() {
+            stats.classes.resize(v.class + 1, 0);
+        }
+        stats.classes[v.class] += 1;
+        stats.latency.record(v.latency_ns);
+        sink.write(output, v.id, v.class);
+    }
+    (stats, sink)
+}
+
+/// The pipelined counterpart of `CoordinatorService`: same executor,
+/// trigger, and selector vocabulary, staged across threads.
+pub struct PipelineService<E: NnBatchExecutor> {
+    exec: E,
+    trigger: TriggerCondition,
+    output: OutputSelector,
+    cfg: PipelineConfig,
+}
+
+impl<E: NnBatchExecutor + 'static> PipelineService<E> {
+    pub fn new(
+        exec: E,
+        trigger: TriggerCondition,
+        output: OutputSelector,
+        cfg: PipelineConfig,
+    ) -> Self {
+        Self { exec, trigger, output, cfg }
+    }
+
+    /// Drive `events` through the pipeline (the calling thread is the
+    /// ingress sharder) and join every stage.  Returns the merged stats
+    /// and the ordered sink, or — if any stage died — a
+    /// [`PipelineError`] with everything accumulated before the fault.
+    pub fn run(
+        self,
+        events: impl IntoIterator<Item = PacketEvent>,
+    ) -> Result<PipelineReport, PipelineError> {
+        let workers = self.cfg.workers.max(1);
+        let depth = self.cfg.queue_depth.max(1);
+        let n_classes = self.exec.n_classes();
+
+        let (tx_inf, rx_inf) = mpsc::sync_channel::<InferenceMsg>(depth);
+        let (tx_sink, rx_sink) = mpsc::sync_channel::<Verdict>(depth);
+
+        let mut parse_txs = Vec::with_capacity(workers);
+        let mut parse_handles = Vec::with_capacity(workers);
+        for table in ShardedFlowTable::new(workers, self.cfg.flow_capacity).into_shards() {
+            let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
+            let tx_inf = tx_inf.clone();
+            let trigger = self.trigger;
+            parse_handles.push(thread::spawn(move || parse_stage(rx, tx_inf, trigger, table)));
+            parse_txs.push(tx);
+        }
+        drop(tx_inf); // stage 3's recv loop ends when all workers finish
+
+        let exec = self.exec;
+        let batcher = if self.cfg.batch > 0 {
+            Some(Batcher::new(self.cfg.batch, self.cfg.max_wait_ns))
+        } else {
+            None
+        };
+        let inf_handle =
+            thread::spawn(move || InferenceStage::new(exec, tx_sink, batcher).run(rx_inf));
+        let output = self.output;
+        let sink_handle = thread::spawn(move || sink_stage(rx_sink, output, n_classes));
+
+        // Stage 0: shard by flow hash and feed.  A dead worker (its rx
+        // dropped) surfaces here as a failed send, not a hang.
+        let mut ingress_blocked = 0u64;
+        let mut failures: Vec<String> = Vec::new();
+        for ev in events {
+            let w = ShardedFlowTable::shard_of(&ev.packet, workers);
+            if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
+                failures.push(format!("ingress: parse worker {w} unreachable"));
+                break;
+            }
+        }
+        drop(parse_txs);
+
+        // Join in dataflow order, merging stats and collecting faults.
+        let mut stats = blank_stats();
+        stats.classes = vec![0; n_classes];
+        stats.stage_blocked[0] = ingress_blocked;
+        let mut flows_tracked = 0usize;
+        for (w, h) in parse_handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(rep) => {
+                    stats.merge(&rep.stats);
+                    flows_tracked += rep.flows;
+                    if let Some(f) = rep.failure {
+                        failures.push(format!("worker {w}: {f}"));
+                    }
+                }
+                Err(p) => failures.push(format!("parse worker {w} panicked: {}", panic_msg(&p))),
+            }
+        }
+        let mut engine = None;
+        match inf_handle.join() {
+            Ok(rep) => {
+                stats.merge(&rep.stats);
+                engine = rep.engine;
+                if let Some(f) = rep.failure {
+                    failures.push(f);
+                }
+            }
+            Err(p) => failures.push(format!("inference stage panicked: {}", panic_msg(&p))),
+        }
+        let sink = match sink_handle.join() {
+            Ok((sink_stats, sink)) => {
+                stats.merge(&sink_stats);
+                sink
+            }
+            Err(p) => {
+                failures.push(format!("sink stage panicked: {}", panic_msg(&p)));
+                OutputSink::default()
+            }
+        };
+
+        let report = PipelineReport { stats, sink, flows_tracked, engine };
+        if failures.is_empty() {
+            Ok(report)
+        } else {
+            Err(PipelineError { failures, report })
+        }
+    }
+}
+
+/// Best-effort text of a cross-thread panic payload.
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::coordinator::CoreExecutor;
+    use crate::net::traffic::CbrSpec;
+
+    fn events(n: usize, flows: u64, seed: u64) -> Vec<PacketEvent> {
+        PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, flows, seed, n)
+    }
+
+    fn pipeline(cfg: PipelineConfig) -> PipelineService<CoreExecutor> {
+        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+        PipelineService::new(
+            CoreExecutor::fpga(model),
+            TriggerCondition::EveryNPackets(10),
+            OutputSelector::Memory,
+            cfg,
+        )
+    }
+
+    #[test]
+    fn healthy_run_accounts_every_trigger() {
+        let evs = events(5000, 50, 3);
+        let cfg = PipelineConfig { workers: 3, ..Default::default() };
+        let rep = pipeline(cfg).run(evs).unwrap();
+        assert_eq!(rep.stats.packets, 5000);
+        assert!(rep.stats.triggers > 0);
+        assert_eq!(rep.stats.triggers, rep.stats.inferences);
+        assert_eq!(rep.sink.memory.len() as u64, rep.stats.inferences);
+        assert_eq!(rep.stats.classes.iter().sum::<u64>(), rep.stats.inferences);
+        assert_eq!(rep.stats.stage_blocked.len(), STAGE_LINKS.len());
+        assert!(rep.flows_tracked > 0 && rep.flows_tracked <= 50);
+    }
+
+    #[test]
+    fn batched_pipeline_drains_at_shutdown() {
+        let evs = events(4000, 40, 6);
+        let rep = pipeline(PipelineConfig {
+            workers: 2,
+            batch: 7,
+            max_wait_ns: 1e12,
+            ..Default::default()
+        })
+        .run(evs)
+        .unwrap();
+        assert_eq!(rep.stats.triggers, rep.stats.inferences);
+    }
+
+    #[test]
+    fn tiny_queues_only_add_backpressure_never_loss() {
+        let evs = events(3000, 30, 9);
+        let want = pipeline(PipelineConfig::default()).run(evs.clone()).unwrap();
+        let got = pipeline(PipelineConfig {
+            workers: 2,
+            queue_depth: 1,
+            ..Default::default()
+        })
+        .run(evs)
+        .unwrap();
+        assert_eq!(got.stats.triggers, want.stats.triggers);
+        assert_eq!(got.stats.inferences, want.stats.inferences);
+        assert_eq!(got.stats.classes, want.stats.classes);
+    }
+}

@@ -17,8 +17,9 @@ use std::sync::mpsc;
 
 use crate::metrics::LatencyHistogram;
 use crate::net::features::FeatureVector;
-use crate::net::flow::FlowTable;
+use crate::net::flow::{FlowStats, FlowTable};
 use crate::net::packet::Packet;
+use crate::net::traffic::{CbrSpec, TrafficGen};
 
 use super::batcher::Batcher;
 use super::selector::{OutputSelector, OutputSink};
@@ -33,11 +34,48 @@ pub struct PacketEvent {
     pub payload_words: Option<Vec<u32>>,
 }
 
+impl PacketEvent {
+    /// `n` payload-less events from a seeded CBR generator — the
+    /// traffic shape every serving test and bench drives with.
+    pub fn cbr_burst(spec: CbrSpec, flows: u64, seed: u64, n: usize) -> Vec<PacketEvent> {
+        let mut gen = TrafficGen::new(spec, flows, seed);
+        (0..n)
+            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
+            .collect()
+    }
+}
+
 /// A triggered flow waiting in the batcher: its routing id + packed input.
 #[derive(Debug, Clone)]
 pub struct PendingFlow {
     pub id: u64,
     pub packed: Vec<u32>,
+}
+
+/// Routing id of a flow event — the verdict's key in the sink.  One
+/// definition shared by the serial loop and the pipelined runtime: the
+/// two must stay bit-identical (the determinism contract), so neither
+/// may grow its own copy.
+#[inline]
+pub(crate) fn flow_id(p: &Packet) -> u64 {
+    ((p.src_ip as u64) << 32) | p.dst_ip as u64
+}
+
+/// Input selection shared by both runtimes: inline payload words if the
+/// event carries them, else the packed flow features.
+pub(crate) fn select_packed_input(ev: &PacketEvent, stats: &FlowStats) -> Vec<u32> {
+    match &ev.payload_words {
+        Some(w) => w.clone(),
+        None => FeatureVector::from_stats(stats).pack().to_vec(),
+    }
+}
+
+/// Latency of one batched item: packet-clock queueing wait plus the
+/// whole batch's modeled completion time (every item waits for the
+/// batch to finish) — shared by both runtimes' flush paths.
+#[inline]
+pub(crate) fn batch_item_latency_ns(now_ns: f64, enq_ns: f64, exec_ns: f64) -> f64 {
+    (now_ns - enq_ns).max(0.0) + exec_ns
 }
 
 /// Aggregate statistics of a service run.
@@ -50,6 +88,35 @@ pub struct ServiceStats {
     /// demand if a verdict ever exceeds it.
     pub classes: Vec<u64>,
     pub latency: LatencyHistogram,
+    /// Bounded-channel backpressure in the pipelined runtime: how many
+    /// sends found the downstream queue full and had to wait, indexed by
+    /// inter-stage link (see `coordinator::pipeline::STAGE_LINKS`).
+    /// Empty in the serial loop, which has no queues.
+    pub stage_blocked: Vec<u64>,
+}
+
+impl ServiceStats {
+    /// Fold another stage's (or shard's) counters into this one — the
+    /// pipeline's join step.  Histograms merge bucket-wise; the verdict
+    /// histogram grows to the wider of the two.
+    pub fn merge(&mut self, other: &ServiceStats) {
+        self.packets += other.packets;
+        self.triggers += other.triggers;
+        self.inferences += other.inferences;
+        if other.classes.len() > self.classes.len() {
+            self.classes.resize(other.classes.len(), 0);
+        }
+        for (a, b) in self.classes.iter_mut().zip(&other.classes) {
+            *a += b;
+        }
+        self.latency.merge(&other.latency);
+        if other.stage_blocked.len() > self.stage_blocked.len() {
+            self.stage_blocked.resize(other.stage_blocked.len(), 0);
+        }
+        for (a, b) in self.stage_blocked.iter_mut().zip(&other.stage_blocked) {
+            *a += b;
+        }
+    }
 }
 
 /// The coordinator service: single-consumer event loop.
@@ -118,12 +185,8 @@ impl<E: NnBatchExecutor> CoordinatorService<E> {
             return;
         }
         self.stats.triggers += 1;
-        // Input selection: inline payload if present, else flow features.
-        let packed: Vec<u32> = match &ev.payload_words {
-            Some(w) => w.clone(),
-            None => FeatureVector::from_stats(stats).pack().to_vec(),
-        };
-        let id = ((ev.packet.src_ip as u64) << 32) | ev.packet.dst_ip as u64;
+        let packed = select_packed_input(ev, stats);
+        let id = flow_id(&ev.packet);
         if self.batcher.is_some() {
             let full = self
                 .batcher
@@ -169,7 +232,7 @@ impl<E: NnBatchExecutor> CoordinatorService<E> {
         let exec_ns = self.exec.batch_latency_ns(classes.len());
         for i in 0..classes.len() {
             let (id, enq_ns) = self.batch_meta[i];
-            let latency_ns = (now_ns - enq_ns).max(0.0) + exec_ns;
+            let latency_ns = batch_item_latency_ns(now_ns, enq_ns, exec_ns);
             self.finish_inference(id, classes[i], latency_ns);
         }
         self.batch_inputs = inputs;
@@ -283,6 +346,35 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stats_merge_accumulates_and_grows() {
+        let mut a = ServiceStats {
+            packets: 10,
+            triggers: 2,
+            inferences: 2,
+            classes: vec![1, 1],
+            stage_blocked: vec![3],
+            ..Default::default()
+        };
+        a.latency.record(100.0);
+        let mut b = ServiceStats {
+            packets: 5,
+            triggers: 1,
+            inferences: 1,
+            classes: vec![0, 0, 7],
+            stage_blocked: vec![1, 4],
+            ..Default::default()
+        };
+        b.latency.record(900.0);
+        a.merge(&b);
+        assert_eq!(a.packets, 15);
+        assert_eq!(a.triggers, 3);
+        assert_eq!(a.inferences, 3);
+        assert_eq!(a.classes, vec![1, 1, 7]);
+        assert_eq!(a.stage_blocked, vec![4, 4]);
+        assert_eq!(a.latency.count(), 2);
     }
 
     #[test]

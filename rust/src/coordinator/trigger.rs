@@ -20,6 +20,13 @@ pub enum TriggerCondition {
 
 impl TriggerCondition {
     /// Decide for a packet given flow state after the statistics update.
+    ///
+    /// Shard-safety invariant (load-bearing for the pipelined runtime's
+    /// determinism contract): the decision is a pure function of the
+    /// packet and *that flow's* state — no clock, no cross-flow state,
+    /// no interior mutability.  Any future variant that breaks this
+    /// (e.g. a global rate limiter) must either live outside the
+    /// sharded stage or carry its own cross-shard ordering.
     pub fn fires(&self, pkt: &Packet, is_new_flow: bool, flow_pkts: u32) -> bool {
         match *self {
             TriggerCondition::NewFlow => is_new_flow,
@@ -58,5 +65,32 @@ mod tests {
         assert!(TriggerCondition::DstPort(443).fires(&p, false, 3));
         assert!(!TriggerCondition::DstPort(80).fires(&p, false, 3));
         assert!(TriggerCondition::EveryPacket.fires(&p, false, 7));
+    }
+
+    #[test]
+    fn decision_is_pure_per_flow_function() {
+        // Repeating the same (packet, flow-state) query must repeat the
+        // same answer regardless of what other flows were asked in
+        // between — the property that lets stage-1 workers evaluate
+        // triggers independently per shard.
+        let conds = [
+            TriggerCondition::NewFlow,
+            TriggerCondition::EveryNPackets(10),
+            TriggerCondition::DstPort(443),
+            TriggerCondition::EveryPacket,
+        ];
+        for c in conds {
+            let first: Vec<bool> = (0..40)
+                .map(|i| c.fires(&pkt(400 + i), i % 7 == 0, i as u32))
+                .collect();
+            // Interleave unrelated queries, then replay.
+            for i in 0..100 {
+                c.fires(&pkt(i), i % 2 == 0, (i % 13) as u32);
+            }
+            let replay: Vec<bool> = (0..40)
+                .map(|i| c.fires(&pkt(400 + i), i % 7 == 0, i as u32))
+                .collect();
+            assert_eq!(first, replay, "{c:?}");
+        }
     }
 }

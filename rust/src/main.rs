@@ -14,8 +14,8 @@ use std::path::PathBuf;
 use n3ic::bnn::BnnModel;
 use n3ic::config::Backend;
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, NnExecutor, OutputSelector, PacketEvent,
-    TriggerCondition,
+    CoordinatorService, CoreExecutor, NnBatchExecutor, NnExecutor, OutputSelector,
+    PacketEvent, PipelineConfig, PipelineService, TriggerCondition, STAGE_LINKS,
 };
 use n3ic::net::traffic::{CbrSpec, TrafficGen};
 
@@ -30,6 +30,10 @@ COMMANDS:
                --packets N --flows N --trigger-pkts N
                --batch N (0 = classify inline; N>0 = batch fast path)
                --shards N (with --batch: spread batches over N cores)
+               --pipeline N (N>=1: staged runtime with N parse workers;
+                             verdicts are bit-identical to the serial
+                             loop on the same seeded traffic)
+               --queue-depth N (with --pipeline: bounded stage queues)
   experiment   <fig03|...|tab02|abl-crossover|abl-cam|all>
   models
   compile-p4   --model NAME [--format p4|bmv2]
@@ -200,16 +204,9 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
         Backend::Pjrt => pjrt_executor(m, artifacts)?,
     }
     .sharded(shards);
-    let mut svc = CoordinatorService::new(
-        exec,
-        TriggerCondition::EveryNPackets(trigger_pkts),
-        OutputSelector::Memory,
-    );
     let batch = args.get_u64("batch", 0) as usize;
-    if batch > 0 {
-        // 1 ms packet-clock cap bounds queueing latency (Fig. 6's knee).
-        svc = svc.with_batching(batch, 1e6);
-    }
+    let trigger = TriggerCondition::EveryNPackets(trigger_pkts);
+    let backend_name = exec.name();
     let mut gen = TrafficGen::new(
         CbrSpec {
             gbps: 40.0,
@@ -218,24 +215,66 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
         flows,
         7,
     );
+    let pipeline = args.get_u64("pipeline", 0) as usize;
     let t0 = std::time::Instant::now();
-    for _ in 0..packets {
-        let p = gen.next_packet();
-        svc.handle(&PacketEvent {
-            packet: p,
+    let (st, flows_tracked, blocked, engine) = if pipeline > 0 {
+        // Staged runtime: the ingress sharder runs on this thread; the
+        // determinism contract guarantees the verdict histogram below
+        // matches the serial branch bit for bit on this same traffic.
+        let cfg = PipelineConfig {
+            workers: pipeline,
+            queue_depth: args.get_u64("queue-depth", 1024) as usize,
+            batch,
+            max_wait_ns: 1e6,
+            ..Default::default()
+        };
+        let svc = PipelineService::new(exec, trigger, OutputSelector::Memory, cfg);
+        let events = (0..packets).map(|_| PacketEvent {
+            packet: gen.next_packet(),
             payload_words: None,
         });
-    }
-    svc.flush();
+        let report = svc.run(events).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let blocked = Some(report.stats.stage_blocked.clone());
+        (report.stats, report.flows_tracked, blocked, report.engine)
+    } else {
+        let mut svc = CoordinatorService::new(exec, trigger, OutputSelector::Memory);
+        if batch > 0 {
+            // 1 ms packet-clock cap bounds queueing latency (Fig. 6's
+            // knee).
+            svc = svc.with_batching(batch, 1e6);
+        }
+        for _ in 0..packets {
+            let p = gen.next_packet();
+            svc.handle(&PacketEvent {
+                packet: p,
+                payload_words: None,
+            });
+        }
+        svc.flush();
+        let flows_tracked = svc.flows.len();
+        let engine = svc.exec.engine_stats();
+        (svc.stats, flows_tracked, None, engine)
+    };
     let wall = t0.elapsed();
-    let st = &svc.stats;
     println!("== serve report ==");
-    println!("backend          : {}", svc.exec.name());
+    println!("backend          : {backend_name}");
     println!("packets          : {}", st.packets);
-    println!("flows tracked    : {}", svc.flows.len());
+    println!("flows tracked    : {flows_tracked}");
     println!("nn inferences    : {}", st.inferences);
     println!("class histogram  : {:?}", st.classes);
     println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
+    if let Some(blocked) = blocked {
+        for (link, n) in STAGE_LINKS.iter().zip(&blocked) {
+            println!("backpressure     : {link:18} {n} blocked sends");
+        }
+    }
+    if let Some(es) = engine {
+        println!(
+            "sharded engine   : {} batches, {:.2}M flows/s inside run_batch",
+            es.batches,
+            es.flows_per_sec() / 1e6
+        );
+    }
     println!(
         "host wall        : {:.2} s ({:.2} Mpkt/s through the pipeline)",
         wall.as_secs_f64(),

@@ -19,6 +19,25 @@ pub struct FlowKey {
 }
 
 impl FlowKey {
+    /// FxHash-style multiply-xor over the 13 key bytes.  One definition
+    /// serves both consumers: [`FlowTable`] indexes with the *low* bits
+    /// and [`ShardedFlowTable`] shards with the *high* bits, so the two
+    /// uses stay decorrelated.
+    #[inline]
+    pub fn hash64(&self) -> u64 {
+        let mut h: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        for v in [
+            self.ip_a as u64,
+            self.ip_b as u64,
+            ((self.port_a as u64) << 16) | self.port_b as u64,
+            self.proto as u64,
+        ] {
+            h = (h ^ v).wrapping_mul(0x2127_599b_f432_5c37);
+            h ^= h >> 29;
+        }
+        h
+    }
+
     /// Canonical key: (ip, port) pairs ordered so A ≤ B.
     pub fn from_packet(p: &Packet) -> (Self, bool) {
         let fwd = (p.src_ip, p.src_port) <= (p.dst_ip, p.dst_port);
@@ -144,18 +163,7 @@ impl FlowTable {
 
     #[inline]
     fn hash(key: &FlowKey) -> usize {
-        // FxHash-style multiply-xor over the 13 key bytes.
-        let mut h: u64 = 0x51_7c_c1_b7_27_22_0a_95;
-        for v in [
-            key.ip_a as u64,
-            key.ip_b as u64,
-            ((key.port_a as u64) << 16) | key.port_b as u64,
-            key.proto as u64,
-        ] {
-            h = (h ^ v).wrapping_mul(0x2127_599b_f432_5c37);
-            h ^= h >> 29;
-        }
-        h as usize
+        key.hash64() as usize
     }
 
     /// Update stats for a packet; returns (stats snapshot ref, is_new_flow,
@@ -216,6 +224,80 @@ impl FlowTable {
     }
 }
 
+/// Flow state partitioned by flow hash: shard `i` owns every flow whose
+/// canonical key hashes to it, so the pipeline's stage-1 workers can each
+/// own one partition with no cross-shard locking while the two directions
+/// of a flow still land on the same worker.
+///
+/// The shard index comes from the *high* bits of [`FlowKey::hash64`];
+/// [`FlowTable`] probes with the low bits, keeping shard choice and
+/// in-table placement decorrelated.
+pub struct ShardedFlowTable {
+    shards: Vec<FlowTable>,
+}
+
+impl ShardedFlowTable {
+    /// `n_shards` tables (clamped to ≥ 1) of `capacity_per_shard` each.
+    pub fn new(n_shards: usize, capacity_per_shard: usize) -> Self {
+        let n = n_shards.max(1);
+        Self {
+            shards: (0..n).map(|_| FlowTable::new(capacity_per_shard)).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard owning a canonical flow key — the single definition of the
+    /// routing formula; `shard_of`, `update`, and `get` must all agree
+    /// or lookups silently probe the wrong partition.
+    #[inline]
+    pub fn shard_of_key(key: &FlowKey, n_shards: usize) -> usize {
+        ((key.hash64() >> 32) % n_shards.max(1) as u64) as usize
+    }
+
+    /// Shard owning this packet's flow — a pure function of the canonical
+    /// key, so every packet of a flow (either direction) maps to the same
+    /// shard in every process that agrees on `n_shards`.
+    #[inline]
+    pub fn shard_of(p: &Packet, n_shards: usize) -> usize {
+        let (key, _) = FlowKey::from_packet(p);
+        Self::shard_of_key(&key, n_shards)
+    }
+
+    /// Route a packet to its shard and update that shard's statistics;
+    /// same contract as [`FlowTable::update`].
+    pub fn update(&mut self, p: &Packet) -> (&FlowStats, bool, u32) {
+        let s = Self::shard_of(p, self.shards.len());
+        self.shards[s].update(p)
+    }
+
+    pub fn get(&self, key: &FlowKey) -> Option<&FlowStats> {
+        self.shards[Self::shard_of_key(key, self.shards.len())].get(key)
+    }
+
+    /// Live flows across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(FlowTable::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hand the partitions to per-shard owners (the pipeline's stage-1
+    /// workers take one table each).
+    pub fn into_shards(self) -> Vec<FlowTable> {
+        self.shards
+    }
+
+    /// Iterate all live flows across every shard.
+    pub fn iter(&self) -> impl Iterator<Item = (&FlowKey, &FlowStats)> {
+        self.shards.iter().flat_map(FlowTable::iter)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,5 +353,55 @@ mod tests {
         }
         assert_eq!(t.len(), 3000);
         assert_eq!(t.iter().count(), 3000);
+    }
+
+    #[test]
+    fn both_directions_hit_one_shard() {
+        for n_shards in [1usize, 2, 3, 8] {
+            for i in 0..200u32 {
+                let a = pkt(i, 1000 + i as u16, 0.0, 64);
+                let mut b = a;
+                std::mem::swap(&mut b.src_ip, &mut b.dst_ip);
+                std::mem::swap(&mut b.src_port, &mut b.dst_port);
+                assert_eq!(
+                    ShardedFlowTable::shard_of(&a, n_shards),
+                    ShardedFlowTable::shard_of(&b, n_shards),
+                );
+                assert!(ShardedFlowTable::shard_of(&a, n_shards) < n_shards);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_table_matches_flat_table() {
+        let mut flat = FlowTable::new(4096);
+        let mut sharded = ShardedFlowTable::new(4, 1024);
+        for i in 0..2000u32 {
+            let p = pkt(i % 300, (i % 300) as u16, i as f64, 64);
+            let (_, flat_new, flat_pkts) = flat.update(&p);
+            let (_, sh_new, sh_pkts) = sharded.update(&p);
+            assert_eq!(flat_new, sh_new, "pkt {i}");
+            assert_eq!(flat_pkts, sh_pkts, "pkt {i}");
+        }
+        assert_eq!(flat.len(), sharded.len());
+        assert_eq!(sharded.iter().count(), flat.len());
+        // Per-flow stats agree through either access path.
+        let (key, _) = FlowKey::from_packet(&pkt(7, 7, 0.0, 0));
+        assert_eq!(flat.get(&key).unwrap().pkts, sharded.get(&key).unwrap().pkts);
+    }
+
+    #[test]
+    fn shards_partition_without_loss() {
+        let mut sharded = ShardedFlowTable::new(3, 1024);
+        for i in 0..500u32 {
+            sharded.update(&pkt(i, 9, i as f64, 64));
+        }
+        assert_eq!(sharded.len(), 500);
+        let shards = sharded.into_shards();
+        assert_eq!(shards.len(), 3);
+        let total: usize = shards.iter().map(FlowTable::len).sum();
+        assert_eq!(total, 500);
+        // The hash actually spreads flows over the partitions.
+        assert!(shards.iter().filter(|s| !s.is_empty()).count() >= 2);
     }
 }

@@ -14,6 +14,6 @@ pub mod packet;
 pub mod traffic;
 
 pub use features::FeatureVector;
-pub use flow::{FlowKey, FlowStats, FlowTable};
+pub use flow::{FlowKey, FlowStats, FlowTable, ShardedFlowTable};
 pub use packet::{Packet, ParsedHeaders, Proto};
 pub use traffic::{CbrSpec, FlowArrivals, TrafficGen};

@@ -37,9 +37,18 @@ impl Rng {
         -mean * (1.0 - self.next_f64()).ln()
     }
 
+    /// Uniform draw in `[0, n)` via Lemire's 128-bit multiply-shift.
+    /// The previous `next_u64() % n` overweighted the low residues
+    /// whenever `n` did not divide 2^64; the multiply maps the full
+    /// 64-bit stream onto `[0, n)` with bias below `n / 2^64` — of no
+    /// statistical consequence for any `n` this crate draws — without
+    /// the data-dependent retry loop of rejection sampling.
     #[inline]
     pub fn below(&mut self, n: u64) -> u64 {
-        self.next_u64() % n
+        // Hard assert: the old `% n` panicked on 0 in every build; a
+        // silent always-0 stream would hide a degenerate config.
+        assert!(n > 0, "Rng::below(0) is meaningless");
+        (((self.next_u64() as u128) * (n as u128)) >> 64) as u64
     }
 }
 
@@ -195,5 +204,37 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn below_is_in_range_and_uniform() {
+        let mut rng = Rng::new(1234);
+        // Bounds: always < n; n = 1 is the degenerate always-0 draw.
+        for _ in 0..1000 {
+            assert_eq!(rng.below(1), 0);
+            assert!(rng.below(7) < 7);
+        }
+        // Distribution sanity: 6 bins × 120k draws.  Each bin expects
+        // 20000 ± ~129 (1σ binomial); ±5% is >7σ of slack, so a uniform
+        // generator passes while the old `% n` bias pattern (which at
+        // this n is invisible, but a broken mapper is not) still trips.
+        let n = 6u64;
+        let draws = 120_000u64;
+        let mut bins = [0u64; 6];
+        for _ in 0..draws {
+            bins[rng.below(n) as usize] += 1;
+        }
+        let expect = (draws / n) as f64;
+        for (i, &c) in bins.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "bin {i}: {c} (dev {dev:.3})");
+        }
+        // Large-n mean check: below(2^62) should average ~2^61 — the
+        // multiply-shift uses the *high* bits, so a low-bit artifact
+        // (the classic modulo failure mode) would show here.
+        let big = 1u64 << 62;
+        let mean = (0..50_000).map(|_| rng.below(big) as f64).sum::<f64>() / 50_000.0;
+        let half = (1u64 << 61) as f64;
+        assert!((mean / half - 1.0).abs() < 0.02, "mean={mean:e}");
     }
 }

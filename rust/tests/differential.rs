@@ -1,0 +1,148 @@
+//! Cross-executor differential fuzz (ISSUE 2): every execution path in
+//! the crate computes Algorithm 1, so on ~50 random models and random
+//! inputs the host single-input executor, the weight-stationary
+//! [`BatchKernel`], the multi-core [`ShardedEngine`], the PISA pipeline
+//! interpreter, and the FPGA device model must agree **bit for bit** —
+//! scores where the path exposes them, argmax verdicts everywhere.
+//!
+//! Property-style over the crate's deterministic `Rng` (offline build:
+//! no proptest), extending `batch_exact.rs` from the batch subsystem to
+//! every backend.
+
+use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnModel, ShardedEngine};
+use n3ic::fpga::FpgaExecutor;
+use n3ic::net::traffic::Rng;
+use n3ic::pisa::compile_bnn;
+
+const MODELS: u64 = 50;
+const INPUTS_PER_MODEL: usize = 8;
+
+/// Random architecture constrained to what *every* backend accepts —
+/// PISA is the binding constraint: each layer's parallel lane bits
+/// (`neurons × in_words × 32`) must fit the 16384-bit PHV budget.
+fn random_shape(rng: &mut Rng) -> (usize, Vec<usize>) {
+    let in_bits = 32 + rng.below(225) as usize; // 32..=256, often unpadded
+    let in_words = in_bits.div_ceil(32);
+    let depth = 1 + rng.below(3) as usize; // 1..=3 layers
+    let mut arch = Vec::with_capacity(depth);
+    let mut prev_words = in_words;
+    for d in 0..depth {
+        let lane_cap = 16_384 / (prev_words * 32); // PISA PHV ceiling
+        let cap = lane_cap.min(if d + 1 == depth { 9 } else { 48 });
+        let n = 1 + rng.below(cap as u64) as usize;
+        arch.push(n);
+        prev_words = n.div_ceil(32);
+    }
+    (in_bits, arch)
+}
+
+fn random_input(rng: &mut Rng, in_words: usize) -> Vec<u32> {
+    (0..in_words).map(|_| rng.next_u64() as u32).collect()
+}
+
+#[test]
+fn all_five_executor_paths_agree_bit_for_bit() {
+    let mut rng = Rng::new(0xD1FF);
+    for m in 0..MODELS {
+        let (in_bits, arch) = random_shape(&mut rng);
+        let model = BnnModel::random(&format!("diff{m}"), in_bits, &arch, 0xBEEF + m);
+
+        // Path 1 (reference): host single-input executor.
+        let mut host = BnnExecutor::new(model.clone());
+        // Path 2: weight-stationary batch kernel.
+        let mut kernel = BatchKernel::new(&model);
+        // Path 3: sharded multi-core engine.
+        let mut engine = ShardedEngine::new(&model, 3);
+        // Path 4: PISA pipeline interpreter (shape chosen to compile).
+        let prog = compile_bnn(&model).unwrap_or_else(|e| {
+            panic!("diff{m} {in_bits}b {arch:?} must fit PISA: {e}")
+        });
+        prog.check_stage_hazards().unwrap();
+        // Path 5: FPGA device model (functional half).
+        let mut fpga = FpgaExecutor::new(model.clone(), 1);
+
+        let inputs: Vec<Vec<u32>> = (0..INPUTS_PER_MODEL)
+            .map(|_| random_input(&mut rng, model.in_words()))
+            .collect();
+
+        // Reference scores + classes from the host path.
+        let mut want_scores = vec![0i32; model.out_neurons()];
+        let mut want_classes = Vec::with_capacity(inputs.len());
+        let mut flat_scores = Vec::new();
+        for x in &inputs {
+            host.infer(x, &mut want_scores);
+            flat_scores.extend_from_slice(&want_scores);
+            want_classes.push(argmax(&want_scores));
+        }
+
+        // Batch kernel: classes and raw scores, whole batch at once.
+        let (mut k_classes, mut k_scores) = (Vec::new(), Vec::new());
+        kernel.run_batch(&inputs, &mut k_classes);
+        kernel.infer_batch_scores(&inputs, &mut k_scores);
+        assert_eq!(k_classes, want_classes, "diff{m} kernel classes");
+        assert_eq!(k_scores, flat_scores, "diff{m} kernel scores");
+
+        // Sharded engine: classes, reassembled in input order.
+        let mut e_classes = Vec::new();
+        engine.run_batch(&inputs, &mut e_classes);
+        assert_eq!(e_classes, want_classes, "diff{m} engine classes");
+
+        // PISA interpreter and FPGA model, input by input.
+        let mut f_scores = vec![0i32; model.out_neurons()];
+        for (i, x) in inputs.iter().enumerate() {
+            let p_scores = prog.run(x);
+            assert_eq!(
+                p_scores,
+                flat_scores[i * model.out_neurons()..(i + 1) * model.out_neurons()],
+                "diff{m} input {i} pisa scores"
+            );
+            assert_eq!(argmax(&p_scores), want_classes[i], "diff{m} input {i} pisa class");
+            fpga.infer(x, &mut f_scores);
+            assert_eq!(
+                f_scores,
+                &flat_scores[i * model.out_neurons()..(i + 1) * model.out_neurons()],
+                "diff{m} input {i} fpga scores"
+            );
+            assert_eq!(fpga.classify(x), want_classes[i], "diff{m} input {i} fpga class");
+        }
+    }
+}
+
+#[test]
+fn shape_generator_covers_the_corner_cases() {
+    // The fuzz above is only as good as its generator: over the 50
+    // shapes it must hit odd word counts, single-layer models, depth-3
+    // models, and multi-class (>2) outputs.
+    let mut rng = Rng::new(0xD1FF);
+    let (mut odd_bits, mut single, mut deep, mut multiclass) = (0, 0, 0, 0);
+    for _ in 0..MODELS {
+        let (in_bits, arch) = random_shape(&mut rng);
+        if in_bits % 32 != 0 {
+            odd_bits += 1;
+        }
+        if arch.len() == 1 {
+            single += 1;
+        }
+        if arch.len() == 3 {
+            deep += 1;
+        }
+        if *arch.last().unwrap() > 2 {
+            multiclass += 1;
+        }
+        // Keep the generator honest about the PISA budget.
+        let mut prev_words = in_bits.div_ceil(32);
+        for &n in &arch {
+            assert!(n * prev_words * 32 <= 16_384, "{in_bits}b {arch:?}");
+            prev_words = n.div_ceil(32);
+        }
+        // Burn the same draws the fuzz test burns so both walks see the
+        // same shape sequence.
+        for _ in 0..INPUTS_PER_MODEL {
+            random_input(&mut rng, in_bits.div_ceil(32));
+        }
+    }
+    assert!(odd_bits > 5, "odd in_bits: {odd_bits}");
+    assert!(single > 0, "single-layer models: {single}");
+    assert!(deep > 0, "depth-3 models: {deep}");
+    assert!(multiclass > 5, "multi-class models: {multiclass}");
+}

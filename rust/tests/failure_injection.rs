@@ -1,11 +1,17 @@
-//! Failure-injection tests: malformed artifacts, missing files, and
-//! boundary conditions must fail loudly and precisely (a deployed NIC
-//! service cannot limp along with a half-loaded model).
+//! Failure-injection tests: malformed artifacts, missing files, dead
+//! pipeline stages, and boundary conditions must fail loudly and
+//! precisely (a deployed NIC service cannot limp along with a
+//! half-loaded model — or hang on a poisoned stage channel).
 
 use std::path::PathBuf;
 
 use n3ic::bnn::BnnModel;
+use n3ic::coordinator::{
+    NnBatchExecutor, NnExecutor, OutputSelector, PacketEvent, PipelineConfig,
+    PipelineService, TriggerCondition,
+};
 use n3ic::json::Json;
+use n3ic::net::traffic::CbrSpec;
 #[cfg(feature = "pjrt")]
 use n3ic::runtime::PjrtRuntime;
 
@@ -15,7 +21,7 @@ fn tmpdir(name: &str) -> PathBuf {
     d
 }
 
-fn write_model(dir: &PathBuf, name: &str, body: &str) {
+fn write_model(dir: &std::path::Path, name: &str, body: &str) {
     std::fs::write(dir.join("models").join(format!("{name}.json")), body).unwrap();
 }
 
@@ -114,6 +120,108 @@ fn runtime_rejects_unknown_artifact_and_bad_batch() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("mismatch"), "{err}");
+}
+
+/// Executor that serves `fuse` inferences and then panics — the
+/// injected stage-3 fault for the pipeline tests below.
+struct DoomedExecutor {
+    fuse: usize,
+}
+
+impl NnExecutor for DoomedExecutor {
+    fn classify(&mut self, _x: &[u32]) -> usize {
+        if self.fuse == 0 {
+            panic!("injected inference fault");
+        }
+        self.fuse -= 1;
+        0
+    }
+
+    fn scores(&mut self, _x: &[u32], out: &mut [i32]) {
+        out.fill(0);
+    }
+
+    fn latency_ns(&self) -> f64 {
+        100.0
+    }
+
+    fn name(&self) -> &'static str {
+        "doomed"
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+}
+
+impl NnBatchExecutor for DoomedExecutor {}
+
+fn traffic_events(packets: usize, flows: u64, seed: u64) -> Vec<PacketEvent> {
+    PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, flows, seed, packets)
+}
+
+#[test]
+fn pipeline_stage_death_surfaces_error_with_stats_intact() {
+    // Stage 3's executor dies after 5 verdicts.  The poisoned channels
+    // must cascade into a clean shutdown — an Err carrying everything
+    // accumulated so far — not a hung service.  (This test completing
+    // at all *is* the no-hang assertion.)
+    let events = traffic_events(20_000, 200, 17);
+    let svc = PipelineService::new(
+        DoomedExecutor { fuse: 5 },
+        TriggerCondition::EveryNPackets(2),
+        OutputSelector::Memory,
+        // queue_depth 4: with ~200 triggers against a fuse of 5, the
+        // parse workers are guaranteed to be in (or attempt) a send on
+        // the poisoned link after the fault, whatever the scheduler
+        // does — the disconnect observation below is deterministic.
+        PipelineConfig { workers: 2, queue_depth: 4, ..Default::default() },
+    );
+    let err = svc.run(events).expect_err("a dead stage must not look healthy");
+    // The fault itself is named...
+    assert!(
+        err.failures.iter().any(|f| f.contains("panicked")),
+        "{:?}",
+        err.failures
+    );
+    assert!(err.to_string().contains("injected inference fault"), "{err}");
+    // ...and the upstream stages report the disconnect rather than
+    // dying silently (plenty of triggers remain after the 6th).
+    assert!(
+        err.failures.iter().any(|f| f.contains("disconnected")),
+        "{:?}",
+        err.failures
+    );
+    // Stats survive the fault: the packets and triggers the parse
+    // workers processed, and exactly the verdicts that reached the
+    // sink before the fuse blew.
+    let st = &err.report.stats;
+    assert!(st.packets > 0);
+    assert!(st.triggers >= 6);
+    assert_eq!(st.inferences, 5);
+    assert_eq!(st.classes.iter().sum::<u64>(), 5);
+    assert_eq!(err.report.sink.memory.len(), 5);
+}
+
+#[test]
+fn pipeline_stage_death_on_the_batched_route_also_surfaces() {
+    let events = traffic_events(20_000, 200, 23);
+    let svc = PipelineService::new(
+        DoomedExecutor { fuse: 5 },
+        TriggerCondition::EveryNPackets(2),
+        OutputSelector::Memory,
+        PipelineConfig { workers: 3, batch: 8, ..Default::default() },
+    );
+    let err = svc.run(events).expect_err("batched route must surface the fault too");
+    assert!(
+        err.failures.iter().any(|f| f.contains("panicked")),
+        "{:?}",
+        err.failures
+    );
+    // The fuse blew mid-batch: fewer verdicts than served inferences
+    // ever reached the sink, and nothing hung.
+    assert!(err.report.stats.inferences <= 5);
+    assert!(err.report.stats.packets > 0);
 }
 
 #[test]

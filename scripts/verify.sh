@@ -1,12 +1,30 @@
 #!/usr/bin/env bash
-# One-command gate for every PR: tier-1 build + tests, then the perf
-# benches in smoke mode (10x-shortened budgets; exercises every bench
-# body and regenerates BENCH.json without publication-grade numbers).
+# One-command gate for every PR: lint + tier-1 build + tests, then the
+# perf benches in smoke mode (10x-shortened budgets; exercises every
+# bench body and regenerates BENCH.smoke.json without publication-grade
+# numbers).  The smoke run of the `pipeline` bench doubles as the
+# serial-vs-pipelined determinism gate (it asserts bit-identical verdict
+# histograms before timing anything).
 #
 #   ./scripts/verify.sh
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
+
+# Lint gates (hard failures where the toolchain components exist; hosts
+# without rustfmt/clippy skip them loudly rather than silently passing).
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== lint: cargo fmt --check =="
+  cargo fmt --check
+else
+  echo "== lint: cargo fmt not installed — SKIPPED (install rustfmt) =="
+fi
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== lint: cargo clippy -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== lint: cargo clippy not installed — SKIPPED (install clippy) =="
+fi
 
 echo "== tier-1: cargo build --release =="
 cargo build --release
@@ -17,11 +35,15 @@ cargo test -q
 echo "== perf smoke: executors bench =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench executors
 
-echo "== perf smoke: batch_engine bench (writes BENCH.smoke.json) =="
 # Smoke runs write BENCH.smoke.json (gitignored) so they never clobber
 # the tracked BENCH.json.  For a gating full-length run use:
 #   N3IC_BENCH_ENFORCE=1 cargo bench --bench batch_engine
 # (smoke numbers are too noisy to gate on, so enforcement is off here).
+echo "== perf smoke: batch_engine bench (merges into BENCH.smoke.json) =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench batch_engine
+
+# Asserts serial-vs-pipelined verdict equivalence, then times the grid.
+echo "== perf smoke + equivalence: pipeline bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench pipeline
 
 echo "verify.sh: all gates passed"
