@@ -1,0 +1,110 @@
+//! `registry` — cost of the multi-model registry on the serving path:
+//!
+//! 1. **Pin overhead**: single-input classify through a versioned
+//!    [`MultiModelExecutor`] (one atomic load + `Arc` clone per pin) vs
+//!    a raw [`BatchKernel`] — the price of hot-swappability at steady
+//!    state.
+//! 2. **Publish cost**: one hot swap end-to-end (pack + install), i.e.
+//!    how fast a control plane can push retrained weights.
+//! 3. **Swap storm**: batch classify while a writer thread republishes
+//!    continuously — throughput under active hot-swapping, the
+//!    zero-downtime claim measured rather than asserted.
+//!
+//! Results merge into the `benches.registry` entry of `BENCH.json`
+//! (`BENCH.smoke.json` under `N3IC_BENCH_SMOKE=1`, as in verify.sh):
+//!
+//! ```text
+//! cd rust && cargo bench --bench registry
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use n3ic::bench::{bench, group, smoke_mode, write_bench_json};
+use n3ic::bnn::{BatchKernel, BnnLayer, BnnModel, MultiModelExecutor, RegistryHandle};
+use n3ic::json::{obj, Json};
+
+const MODEL_NAME: &str = "traffic_32_16_2";
+
+fn model(seed: u64) -> BnnModel {
+    BnnModel::random(MODEL_NAME, 256, &[32, 16, 2], seed)
+}
+
+fn main() {
+    let registry = RegistryHandle::new();
+    registry.publish("anomaly", &model(1)).unwrap();
+    let names = vec!["anomaly".to_string()];
+    let inputs: Vec<Vec<u32>> = (0..64)
+        .map(|i| BnnLayer::random(1, 256, 7_000 + i).words)
+        .collect();
+
+    group("registry / steady-state pin overhead (single input)");
+    let mut kernel = BatchKernel::new(&model(1));
+    let raw = bench("raw_kernel_classify_one", || kernel.classify_one(&inputs[0]));
+    let mut exec = MultiModelExecutor::new(&registry, &names, 100.0).unwrap();
+    let pinned = bench("registry_classify_one", || exec.classify(0, &inputs[0]).0);
+    let pin_overhead_ns = pinned.ns_per_iter - raw.ns_per_iter;
+    println!(
+        "pin overhead ≈ {pin_overhead_ns:.1} ns/inference \
+         (version check + tag clone on top of the kernel)"
+    );
+
+    group("registry / publish (hot swap) cost");
+    let swap_model = model(2);
+    let publish = bench("publish_hot_swap", || {
+        registry.publish("anomaly", &swap_model).unwrap().version()
+    });
+
+    group("registry / batch classify under a publish storm");
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let registry = registry.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let (a, b) = (model(3), model(4));
+            let mut flip = false;
+            let mut published = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                flip = !flip;
+                registry
+                    .publish("anomaly", if flip { &a } else { &b })
+                    .unwrap();
+                published += 1;
+                // ~2k swaps/s: an aggressive control plane, not a busy
+                // loop that would just benchmark lock contention.
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+            published
+        })
+    };
+    let mut classes = Vec::new();
+    let storm = bench("classify_batch64_under_swap_storm", || {
+        exec.classify_batch(0, &inputs, &mut classes);
+        classes.len()
+    });
+    stop.store(true, Ordering::Relaxed);
+    let swaps_during_storm = writer.join().unwrap();
+    println!("writer landed {swaps_during_storm} hot swaps during the storm bench");
+
+    let fragment = obj(vec![
+        ("model", Json::Str(MODEL_NAME.into())),
+        ("smoke", Json::Bool(smoke_mode())),
+        ("raw_kernel_ns", Json::Num((raw.ns_per_iter * 10.0).round() / 10.0)),
+        ("registry_classify_ns", Json::Num((pinned.ns_per_iter * 10.0).round() / 10.0)),
+        ("pin_overhead_ns", Json::Num((pin_overhead_ns * 10.0).round() / 10.0)),
+        ("publish_ns", Json::Num(publish.ns_per_iter.round())),
+        (
+            "storm_batch64_ns",
+            Json::Num(storm.ns_per_iter.round()),
+        ),
+        (
+            "storm_mflows_per_sec",
+            Json::Num((64.0 * storm.per_second() / 1e6 * 100.0).round() / 100.0),
+        ),
+        ("storm_swaps", Json::Num(swaps_during_storm as f64)),
+    ]);
+    match write_bench_json("registry", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+}

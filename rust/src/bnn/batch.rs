@@ -20,7 +20,7 @@
 
 use std::sync::Arc;
 
-use super::exec::{argmax, pack_layers, qword, Layer64};
+use super::exec::{argmax, qword, Layer64, PackedModel};
 use super::BnnModel;
 
 /// Inputs scored per weight-row pass.  8 lanes is a design estimate,
@@ -34,10 +34,14 @@ pub const TILE: usize = 8;
 /// Reusable weight-stationary batch executor.  All scratch (activation
 /// tiles, score tile) is preallocated; `run_batch` does no allocation
 /// beyond growing the caller's output vector.
+///
+/// The kernel can be **retargeted** at a different packed model between
+/// batches ([`retarget`](Self::retarget)) — the registry's hot-swap path
+/// and the sharded engine's per-batch weight shipping both rely on this.
+/// Scratch buffers grow monotonically, so steady-state swapping between
+/// a fixed set of models allocates nothing.
 pub struct BatchKernel {
-    layers: Arc<Vec<Layer64>>,
-    in_words: usize,
-    out_neurons: usize,
+    packed: Arc<PackedModel>,
     /// Activation double buffer, lane-interleaved (`[qword][lane]`).
     act_a: Vec<u64>,
     act_b: Vec<u64>,
@@ -47,42 +51,62 @@ pub struct BatchKernel {
 
 impl BatchKernel {
     pub fn new(model: &BnnModel) -> Self {
-        Self::with_packed(model, pack_layers(model))
+        Self::with_packed(PackedModel::arc(model))
     }
 
     /// Build on an existing packed-weight handle (shared with a
     /// [`BnnExecutor`](super::BnnExecutor) or sibling shard workers).
-    pub(crate) fn with_packed(model: &BnnModel, layers: Arc<Vec<Layer64>>) -> Self {
-        let max_q = layers
-            .iter()
-            .map(|l| l.qwords.max(l.out_qwords()))
-            .max()
-            .unwrap_or(1);
-        let out_neurons = model.out_neurons();
-        Self {
-            layers,
-            in_words: model.in_words(),
-            out_neurons,
-            act_a: vec![0; max_q * TILE],
-            act_b: vec![0; max_q * TILE],
-            scores: vec![0; TILE * out_neurons],
+    pub(crate) fn with_packed(packed: Arc<PackedModel>) -> Self {
+        let mut k = Self {
+            packed,
+            act_a: Vec::new(),
+            act_b: Vec::new(),
+            scores: Vec::new(),
+        };
+        k.grow_scratch();
+        k
+    }
+
+    /// Point this kernel at a different packed model (a registry epoch's
+    /// weights, or a shard job's).  Pointer-equal handles are a no-op,
+    /// so the un-swapped steady state costs one pointer compare.
+    pub(crate) fn retarget(&mut self, packed: &Arc<PackedModel>) {
+        if Arc::ptr_eq(&self.packed, packed) {
+            return;
+        }
+        self.packed = Arc::clone(packed);
+        self.grow_scratch();
+    }
+
+    /// Size scratch for the current model, never shrinking — a kernel
+    /// bouncing between models of different widths reaches a fixed point
+    /// after one pass over the set.
+    fn grow_scratch(&mut self) {
+        let need_act = self.packed.max_qwords() * TILE;
+        if self.act_a.len() < need_act {
+            self.act_a.resize(need_act, 0);
+            self.act_b.resize(need_act, 0);
+        }
+        let need_scores = TILE * self.packed.out_neurons;
+        if self.scores.len() < need_scores {
+            self.scores.resize(need_scores, 0);
         }
     }
 
     pub fn in_words(&self) -> usize {
-        self.in_words
+        self.packed.in_words
     }
 
     pub fn out_neurons(&self) -> usize {
-        self.out_neurons
+        self.packed.out_neurons
     }
 
     /// Classify a whole batch; `classes` is cleared and refilled with one
     /// verdict per input, in input order.
-    pub fn run_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+    pub fn run_batch<T: AsRef<[u32]>>(&mut self, inputs: &[T], classes: &mut Vec<usize>) {
         classes.clear();
         classes.reserve(inputs.len());
-        let out_n = self.out_neurons;
+        let out_n = self.packed.out_neurons;
         for tile in inputs.chunks(TILE) {
             self.run_tile(tile);
             for t in 0..tile.len() {
@@ -91,10 +115,21 @@ impl BatchKernel {
         }
     }
 
+    /// Classify one input — a 1-lane tile (the inline serving route when
+    /// the caller is already kernel-shaped, e.g. the registry executor).
+    pub fn classify_one(&mut self, x: &[u32]) -> usize {
+        self.run_tile(std::slice::from_ref(&x));
+        argmax(&self.scores[..self.packed.out_neurons])
+    }
+
     /// Raw final-layer scores for a whole batch, row-major
     /// (`inputs.len() × out_neurons`), bit-exact with per-input `infer`.
-    pub fn infer_batch_scores(&mut self, inputs: &[Vec<u32>], scores_out: &mut Vec<i32>) {
-        let out_n = self.out_neurons;
+    pub fn infer_batch_scores<T: AsRef<[u32]>>(
+        &mut self,
+        inputs: &[T],
+        scores_out: &mut Vec<i32>,
+    ) {
+        let out_n = self.packed.out_neurons;
         scores_out.clear();
         scores_out.resize(inputs.len() * out_n, 0);
         for (i, tile) in inputs.chunks(TILE).enumerate() {
@@ -106,14 +141,14 @@ impl BatchKernel {
 
     /// Run one tile of `≤ TILE` inputs; leaves the tile's final-layer
     /// scores in `self.scores` (`[lane][neuron]`).
-    fn run_tile(&mut self, tile: &[Vec<u32>]) {
+    fn run_tile<T: AsRef<[u32]>>(&mut self, tile: &[T]) {
         debug_assert!(!tile.is_empty() && tile.len() <= TILE);
         let lanes = tile.len();
         self.pack_tile(tile);
-        let n_layers = self.layers.len();
+        let n_layers = self.packed.layers.len();
         let mut cur_in_a = true;
         for k in 0..n_layers - 1 {
-            let layer = &self.layers[k];
+            let layer = &self.packed.layers[k];
             let (src, dst) = if cur_in_a {
                 (&self.act_a, &mut self.act_b)
             } else {
@@ -122,24 +157,25 @@ impl BatchKernel {
             Self::layer_forward_tile(layer, lanes, &src[..layer.qwords * TILE], dst);
             cur_in_a = !cur_in_a;
         }
-        let last = &self.layers[n_layers - 1];
+        let last = &self.packed.layers[n_layers - 1];
         let src = if cur_in_a { &self.act_a } else { &self.act_b };
         Self::layer_scores_tile(
             last,
             lanes,
             &src[..last.qwords * TILE],
-            self.out_neurons,
+            self.packed.out_neurons,
             &mut self.scores,
         );
     }
 
     /// Pack a tile of u32-word inputs into the lane-interleaved qword
     /// layout; unused lanes of a ragged final tile are zeroed.
-    fn pack_tile(&mut self, tile: &[Vec<u32>]) {
-        let q0 = self.layers[0].qwords;
+    fn pack_tile<T: AsRef<[u32]>>(&mut self, tile: &[T]) {
+        let q0 = self.packed.layers[0].qwords;
         self.act_a[..q0 * TILE].fill(0);
         for (t, x) in tile.iter().enumerate() {
-            assert_eq!(x.len(), self.in_words, "input width != model in_words");
+            let x = x.as_ref();
+            assert_eq!(x.len(), self.packed.in_words, "input width != model in_words");
             for (q, chunk) in x.chunks(2).enumerate() {
                 self.act_a[q * TILE + t] = qword(chunk);
             }

@@ -15,13 +15,20 @@ use std::thread;
 use std::time::Instant;
 
 use super::batch::BatchKernel;
-use super::exec::{pack_layers, Layer64};
+use super::exec::PackedModel;
+use super::registry::ModelEpoch;
 use super::BnnModel;
 
 struct Job {
     start: usize,
     len: usize,
     inputs: Arc<Vec<Vec<u32>>>,
+    /// Weights this shard must score under.  `run_batch` clones **one**
+    /// `Arc` into every shard's job, so all shards of a batch see the
+    /// same immutable weight snapshot by construction — a concurrent
+    /// registry publish can only affect the *next* batch, never tear
+    /// this one (asserted end-to-end in `tests/registry_swap.rs`).
+    packed: Arc<PackedModel>,
 }
 
 struct ShardResult {
@@ -59,6 +66,8 @@ pub struct ShardedEngine {
     rx: mpsc::Receiver<ShardResult>,
     handles: Vec<thread::JoinHandle<()>>,
     n_shards: usize,
+    /// Weights used by the plain (non-epoch) batch entry points.
+    default_packed: Arc<PackedModel>,
     stats: EngineStats,
 }
 
@@ -66,16 +75,12 @@ impl ShardedEngine {
     /// Spawn `n_shards` workers (clamped to ≥ 1) over one shared copy of
     /// the packed weights.
     pub fn new(model: &BnnModel, n_shards: usize) -> Self {
-        Self::with_packed(model, pack_layers(model), n_shards)
+        Self::with_packed(PackedModel::arc(model), n_shards)
     }
 
     /// Same, reusing an existing packed-weight handle (e.g. from a
-    /// sibling `BnnExecutor`) instead of repacking.
-    pub(crate) fn with_packed(
-        model: &BnnModel,
-        layers: Arc<Vec<Layer64>>,
-        n_shards: usize,
-    ) -> Self {
+    /// sibling `BnnExecutor` or a registry epoch) instead of repacking.
+    pub(crate) fn with_packed(packed: Arc<PackedModel>, n_shards: usize) -> Self {
         let n_shards = n_shards.max(1);
         let (res_tx, rx) = mpsc::channel::<ShardResult>();
         let mut txs = Vec::with_capacity(n_shards);
@@ -83,7 +88,7 @@ impl ShardedEngine {
         for _ in 0..n_shards {
             let (tx, job_rx) = mpsc::channel::<Job>();
             let res_tx = res_tx.clone();
-            let mut kernel = BatchKernel::with_packed(model, Arc::clone(&layers));
+            let mut kernel = BatchKernel::with_packed(Arc::clone(&packed));
             handles.push(thread::spawn(move || {
                 while let Ok(job) = job_rx.recv() {
                     // A panicking kernel must still answer, or the
@@ -92,6 +97,10 @@ impl ShardedEngine {
                     // channel open, so recv() never errors).
                     let scored = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         let mut classes = Vec::with_capacity(job.len);
+                        // Usually a pointer-equal no-op; a real retarget
+                        // (hot swap) costs one scratch-grow, amortized
+                        // to zero across a fixed model set.
+                        kernel.retarget(&job.packed);
                         kernel.run_batch(
                             &job.inputs[job.start..job.start + job.len],
                             &mut classes,
@@ -129,6 +138,7 @@ impl ShardedEngine {
             rx,
             handles,
             n_shards,
+            default_packed: packed,
             stats: EngineStats::default(),
         }
     }
@@ -178,6 +188,46 @@ impl ShardedEngine {
         inputs: &Arc<Vec<Vec<u32>>>,
         classes: &mut Vec<usize>,
     ) -> Result<(), EngineError> {
+        self.try_run_batch_with(Arc::clone(&self.default_packed), inputs, classes)
+    }
+
+    /// Run a batch under a pinned registry epoch's weights: the epoch's
+    /// packed handle is cloned into **every** shard's job before any
+    /// shard starts, so all verdicts of this batch — regardless of which
+    /// worker scores them — come from exactly this epoch.  A concurrent
+    /// `publish` can only influence the epoch the *caller* pins next
+    /// time, never the jobs already scattered (`tests/registry_swap.rs`
+    /// hammers this).  Panics on a dead/panicked worker, like
+    /// [`run_batch_shared`](Self::run_batch_shared).
+    pub fn run_batch_epoch(
+        &mut self,
+        epoch: &ModelEpoch,
+        inputs: &Arc<Vec<Vec<u32>>>,
+        classes: &mut Vec<usize>,
+    ) {
+        if let Err(e) = self.try_run_batch_epoch(epoch, inputs, classes) {
+            panic!("{e}");
+        }
+    }
+
+    /// Fallible variant of [`run_batch_epoch`](Self::run_batch_epoch).
+    pub fn try_run_batch_epoch(
+        &mut self,
+        epoch: &ModelEpoch,
+        inputs: &Arc<Vec<Vec<u32>>>,
+        classes: &mut Vec<usize>,
+    ) -> Result<(), EngineError> {
+        self.try_run_batch_with(Arc::clone(&epoch.packed), inputs, classes)
+    }
+
+    /// The one scatter/gather implementation: every entry point funnels
+    /// here with the weight snapshot its whole batch must score under.
+    fn try_run_batch_with(
+        &mut self,
+        packed: Arc<PackedModel>,
+        inputs: &Arc<Vec<Vec<u32>>>,
+        classes: &mut Vec<usize>,
+    ) -> Result<(), EngineError> {
         classes.clear();
         let n = inputs.len();
         if n == 0 {
@@ -193,6 +243,7 @@ impl ShardedEngine {
                 start,
                 len: chunk.min(n - start),
                 inputs: Arc::clone(inputs),
+                packed: Arc::clone(&packed),
             };
             if self.txs[w].send(job).is_err() {
                 // Drain what was already scattered (those workers are
@@ -317,6 +368,38 @@ mod tests {
         let good = Arc::new(vec![BnnLayer::random(1, 64, 6).words]);
         let err = engine.try_run_batch_shared(&good, &mut classes).unwrap_err();
         assert_eq!(err, EngineError::WorkerDied);
+    }
+
+    #[test]
+    fn epoch_batches_score_under_their_pinned_weights() {
+        use crate::bnn::RegistryHandle;
+        let m1 = BnnModel::random("m", 256, &[32, 16, 2], 1);
+        let m2 = BnnModel::random("m", 256, &[32, 16, 2], 2);
+        let h = RegistryHandle::new();
+        h.publish("m", &m1).unwrap();
+        let e1 = h.current("m").unwrap();
+        h.publish("m", &m2).unwrap();
+        let e2 = h.current("m").unwrap();
+        let inputs: Arc<Vec<Vec<u32>>> = Arc::new(
+            (0..21).map(|i| BnnLayer::random(1, 256, 40 + i).words).collect(),
+        );
+        let mut eng = ShardedEngine::new(&m1, 3);
+        let mut classes = Vec::new();
+        // A batch on a previously pinned epoch still scores under m1
+        // even though the registry has moved on to v2.
+        eng.run_batch_epoch(&e1, &inputs, &mut classes);
+        for (x, &c) in inputs.iter().zip(&classes) {
+            assert_eq!(c, infer_packed(&m1, x));
+        }
+        eng.run_batch_epoch(&e2, &inputs, &mut classes);
+        for (x, &c) in inputs.iter().zip(&classes) {
+            assert_eq!(c, infer_packed(&m2, x));
+        }
+        // The plain entry points keep the construction-time weights.
+        eng.run_batch_shared(&inputs, &mut classes);
+        for (x, &c) in inputs.iter().zip(&classes) {
+            assert_eq!(c, infer_packed(&m1, x));
+        }
     }
 
     #[test]

@@ -130,9 +130,39 @@ impl Layer64 {
     }
 }
 
-/// Pack a whole model into the shared qword form.
-pub(crate) fn pack_layers(model: &BnnModel) -> Arc<Vec<Layer64>> {
-    Arc::new(model.layers.iter().map(Layer64::new).collect())
+/// One model's weights in the shared qword form, plus the two dimensions
+/// every batch consumer needs (input width for packing, output width for
+/// the score/verdict buffers).  This is the crate's unit of *immutable
+/// deployed weights*: the single-input executor, the batch kernel, the
+/// sharded engine's workers, and the registry's published epochs all
+/// hold `Arc<PackedModel>` handles to one copy.  Because a `PackedModel`
+/// is never mutated after construction, "which weights did this batch
+/// run under" is always answerable by pointer identity — the property
+/// the hot-swap registry builds on.
+pub(crate) struct PackedModel {
+    pub(crate) in_words: usize,
+    pub(crate) out_neurons: usize,
+    pub(crate) layers: Vec<Layer64>,
+}
+
+impl PackedModel {
+    pub(crate) fn arc(model: &BnnModel) -> Arc<Self> {
+        Arc::new(Self {
+            in_words: model.in_words(),
+            out_neurons: model.out_neurons(),
+            layers: model.layers.iter().map(Layer64::new).collect(),
+        })
+    }
+
+    /// Largest qword buffer any layer of this model needs (activation
+    /// double-buffer sizing, shared by the executor and batch kernel).
+    pub(crate) fn max_qwords(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.qwords.max(l.out_qwords()))
+            .max()
+            .unwrap_or(1)
+    }
 }
 
 /// Pair two u32 words (or one word + zero pad) into one u64 qword — the
@@ -161,7 +191,7 @@ pub(crate) fn score_u64(w: &[u64], x: &[u64]) -> i32 {
 /// weights (hot-path form; `infer` does zero allocation).
 pub struct BnnExecutor {
     model: BnnModel,
-    layers64: Arc<Vec<Layer64>>,
+    packed: Arc<PackedModel>,
     /// Double buffer large enough for any layer's packed activations.
     buf_a: Vec<u64>,
     buf_b: Vec<u64>,
@@ -169,15 +199,11 @@ pub struct BnnExecutor {
 
 impl BnnExecutor {
     pub fn new(model: BnnModel) -> Self {
-        let layers64 = pack_layers(&model);
-        let max_q = layers64
-            .iter()
-            .map(|l| l.qwords.max(l.out_qwords()))
-            .max()
-            .unwrap_or(1);
+        let packed = PackedModel::arc(&model);
+        let max_q = packed.max_qwords();
         Self {
             model,
-            layers64,
+            packed,
             buf_a: vec![0; max_q],
             buf_b: vec![0; max_q],
         }
@@ -189,8 +215,8 @@ impl BnnExecutor {
 
     /// Handle to the shared packed weights (for batch kernels that want
     /// to reuse them instead of repacking).
-    pub(crate) fn packed_layers(&self) -> Arc<Vec<Layer64>> {
-        Arc::clone(&self.layers64)
+    pub(crate) fn packed_model(&self) -> Arc<PackedModel> {
+        Arc::clone(&self.packed)
     }
 
     /// Pack a u32-word input into the executor's qword buffer.
@@ -216,9 +242,9 @@ impl BnnExecutor {
 
     /// Run one inference; writes final-layer scores into `scores`.
     pub fn infer(&mut self, x: &[u32], scores: &mut [i32]) {
-        let n_layers = self.layers64.len();
+        let n_layers = self.packed.layers.len();
         debug_assert_eq!(scores.len(), self.model.out_neurons());
-        let l0 = &self.layers64[0];
+        let l0 = &self.packed.layers[0];
         debug_assert_eq!(x.len(), self.model.layers[0].in_words);
         Self::pack_input(x, &mut self.buf_a[..l0.qwords]);
         if n_layers == 1 {
@@ -230,7 +256,7 @@ impl BnnExecutor {
         Self::layer64_forward(l0, &self.buf_a[..l0.qwords], &mut self.buf_b);
         let mut cur_in_b = true;
         for k in 1..n_layers - 1 {
-            let layer = &self.layers64[k];
+            let layer = &self.packed.layers[k];
             let (src, dst) = if cur_in_b {
                 (&self.buf_b, &mut self.buf_a)
             } else {
@@ -239,7 +265,7 @@ impl BnnExecutor {
             Self::layer64_forward(layer, &src[..layer.qwords], dst);
             cur_in_b = !cur_in_b;
         }
-        let last = &self.layers64[n_layers - 1];
+        let last = &self.packed.layers[n_layers - 1];
         let src = if cur_in_b { &self.buf_b } else { &self.buf_a };
         for (n, s) in scores.iter_mut().enumerate() {
             *s = score_u64(last.row(n), &src[..last.qwords]) - last.pad_bias;

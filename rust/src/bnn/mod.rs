@@ -9,7 +9,11 @@
 //! [`BnnExecutor`] (one input at a time, the per-packet inline path),
 //! [`BatchKernel`] (weight-stationary tiles of [`TILE`] inputs per
 //! weight pass), and [`ShardedEngine`] (a batch partitioned across
-//! worker threads, one core each).
+//! worker threads, one core each).  Deployment-time versioning lives in
+//! [`registry`]: named model slots with atomic zero-downtime hot swap
+//! ([`ModelRegistry`]) and a versioned multi-model executor
+//! ([`MultiModelExecutor`]) that tags every verdict with the
+//! `(name, version)` it ran under.
 //!
 //! Bit conventions match `python/compile/kernels/ref.py`: bit `i` of a
 //! logical vector lives in word `i / 32`, position `i % 32`; widths are
@@ -21,11 +25,16 @@ pub mod batch;
 pub mod engine;
 pub mod exec;
 mod model;
+pub mod registry;
 
 pub use batch::{BatchKernel, TILE};
 pub use engine::{EngineError, EngineStats, ShardedEngine};
 pub use exec::{argmax, infer_packed, infer_scores, layer_forward, BnnExecutor};
 pub use model::{BnnLayer, BnnModel, ModelMetrics, load_golden, Golden};
+pub use registry::{
+    ModelEpoch, ModelRegistry, MultiModelExecutor, RegistryError, RegistryHandle, SlotReader,
+    VersionTag,
+};
 
 /// Word width of the packed representation (the paper's `block_size`).
 pub const BLOCK_SIZE: usize = 32;

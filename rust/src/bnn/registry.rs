@@ -1,0 +1,681 @@
+//! Multi-model registry with zero-downtime weight hot-swap (PAPER §4:
+//! the control plane updates NN weights at runtime while the data plane
+//! keeps forwarding).
+//!
+//! The registry holds **named model slots** (`anomaly`, `traffic-class`,
+//! `tomography`, … — tab01's use cases coexisting in one process), each
+//! an append-only sequence of versioned [`ModelEpoch`]s.  A `publish`
+//! replaces a slot's current epoch atomically; nothing in the serving
+//! path ever blocks on it, drains, or restarts.
+//!
+//! ## Consistency model
+//!
+//! * **Epochs are immutable.**  An epoch wraps an
+//!   [`Arc<PackedModel>`](super::exec::PackedModel) built once at publish
+//!   time; weights are never mutated in place, so "which weights did this
+//!   inference run under" is always answerable by the epoch handle — the
+//!   [`VersionTag`] every verdict carries.
+//! * **Reads are lock-free on the hot path.**  A [`SlotReader`] caches
+//!   the epoch `Arc` it last saw and polls one atomic version counter per
+//!   [`pin`](SlotReader::pin); the un-swapped steady state costs a single
+//!   `Acquire` load and a pointer clone.  Only the pin that first
+//!   observes a new version touches the slot's lock to refresh its cache.
+//! * **Pins are freshness-monotonic.**  `publish` installs the new epoch
+//!   *before* releasing the version counter, so once `publish(name, m)`
+//!   returns, every subsequent `pin` on that slot observes version ≥ the
+//!   published one — the property the deterministic replay test in
+//!   `tests/registry_swap.rs` leans on.
+//! * **One batch, one version.**  A batch pins exactly one epoch and
+//!   ships that epoch's `Arc<PackedModel>` to every consumer — including
+//!   all shards of a [`ShardedEngine`] batch, which receive clones of the
+//!   *same* handle in their jobs — so a concurrent publish can only
+//!   affect the next batch, never tear an in-flight one.
+//! * **Shapes are publish-stable.**  Republishing a slot with a different
+//!   input width or class count is rejected ([`RegistryError`]): in-flight
+//!   routing and feature packing are keyed to the slot's shape, and a
+//!   shape change mid-stream would poison every reader's scratch.
+//!
+//! `tests/registry_swap.rs` hammers all of this from writer threads while
+//! single-input, sharded-engine, and pipeline readers classify.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::batch::BatchKernel;
+use super::engine::{EngineStats, ShardedEngine};
+use super::exec::PackedModel;
+use super::BnnModel;
+
+/// The `(name, version)` a verdict ran under.  Cheap to clone (the name
+/// is a shared `Arc<str>`); equality and hashing are by value.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct VersionTag {
+    name: Arc<str>,
+    version: u64,
+}
+
+impl VersionTag {
+    /// Slot name this tag belongs to.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Version within the slot (first publish = 1, monotonically +1).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+impl std::fmt::Display for VersionTag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@v{}", self.name, self.version)
+    }
+}
+
+/// One published, immutable deployment of a model: the packed weights
+/// plus the tag identifying them.  Everything that scores against this
+/// epoch observes exactly these weights — there is no way to mutate them
+/// short of publishing a successor epoch.
+pub struct ModelEpoch {
+    tag: VersionTag,
+    pub(crate) packed: Arc<PackedModel>,
+}
+
+impl ModelEpoch {
+    pub fn tag(&self) -> &VersionTag {
+        &self.tag
+    }
+
+    pub fn name(&self) -> &str {
+        self.tag.name()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.tag.version()
+    }
+
+    /// Packed input words the deployed model expects.
+    pub fn in_words(&self) -> usize {
+        self.packed.in_words
+    }
+
+    /// Output classes of the deployed model.
+    pub fn out_neurons(&self) -> usize {
+        self.packed.out_neurons
+    }
+}
+
+impl std::fmt::Debug for ModelEpoch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelEpoch")
+            .field("tag", &self.tag)
+            .field("in_words", &self.packed.in_words)
+            .field("out_neurons", &self.packed.out_neurons)
+            .finish()
+    }
+}
+
+/// One named slot: the current epoch behind a lock, plus the lock-free
+/// version counter readers poll before touching the lock.
+struct Slot {
+    /// Latest published version.  Stored with `Release` *after* the epoch
+    /// is installed, loaded with `Acquire` by readers — a reader that
+    /// sees version `v` here will read an epoch ≥ `v` from the lock.
+    version: AtomicU64,
+    /// Hot-swap count: publishes that *replaced* a live epoch (i.e. all
+    /// but the first).
+    swaps: AtomicU64,
+    epoch: RwLock<Arc<ModelEpoch>>,
+}
+
+/// Failure modes of registry operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// No slot with this name has ever been published.
+    UnknownModel(String),
+    /// Republish attempted with a different input width or class count
+    /// than the slot's live epoch — rejected to protect in-flight
+    /// readers, whose scratch and routing are keyed to the shape.
+    ShapeMismatch {
+        name: String,
+        expected_in_words: usize,
+        expected_classes: usize,
+        got_in_words: usize,
+        got_classes: usize,
+    },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownModel(name) => {
+                write!(f, "no model published under {name:?}")
+            }
+            RegistryError::ShapeMismatch {
+                name,
+                expected_in_words,
+                expected_classes,
+                got_in_words,
+                got_classes,
+            } => write!(
+                f,
+                "hot-swap of {name:?} changes shape: slot serves \
+                 {expected_in_words}w→{expected_classes} classes, \
+                 publish offered {got_in_words}w→{got_classes}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// Versioned, named model slots with atomic publish and lock-free reads.
+/// Shared across threads behind an `Arc` — see [`RegistryHandle`].
+#[derive(Default)]
+pub struct ModelRegistry {
+    slots: RwLock<BTreeMap<String, Arc<Slot>>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `model` under `name`: version 1 creates the slot, later
+    /// publishes hot-swap it without draining any reader.  The new epoch
+    /// is visible to every subsequent [`SlotReader::pin`] as soon as
+    /// this returns; in-flight batches finish on the epoch they pinned.
+    pub fn publish(&self, name: &str, model: &BnnModel) -> Result<VersionTag, RegistryError> {
+        // Packing is the expensive part — do it outside every lock.
+        let packed = PackedModel::arc(model);
+        let existing = self.slots.read().unwrap().get(name).cloned();
+        let slot = match existing {
+            Some(slot) => slot,
+            None => {
+                let mut slots = self.slots.write().unwrap();
+                // Re-check: another publisher may have created the slot
+                // between the read and write locks.
+                match slots.get(name) {
+                    Some(slot) => Arc::clone(slot),
+                    None => {
+                        let tag = VersionTag { name: Arc::from(name), version: 1 };
+                        let epoch = Arc::new(ModelEpoch { tag: tag.clone(), packed });
+                        slots.insert(
+                            name.to_string(),
+                            Arc::new(Slot {
+                                version: AtomicU64::new(1),
+                                swaps: AtomicU64::new(0),
+                                epoch: RwLock::new(epoch),
+                            }),
+                        );
+                        return Ok(tag);
+                    }
+                }
+            }
+        };
+        // Swap path: writers serialize on the slot's epoch lock; readers
+        // only take it on a version change, so the swap never contends
+        // with steady-state pins.
+        let mut epoch = slot.epoch.write().unwrap();
+        if epoch.packed.in_words != packed.in_words
+            || epoch.packed.out_neurons != packed.out_neurons
+        {
+            return Err(RegistryError::ShapeMismatch {
+                name: name.to_string(),
+                expected_in_words: epoch.packed.in_words,
+                expected_classes: epoch.packed.out_neurons,
+                got_in_words: packed.in_words,
+                got_classes: packed.out_neurons,
+            });
+        }
+        let version = epoch.version() + 1;
+        let tag = VersionTag { name: Arc::clone(&epoch.tag.name), version };
+        *epoch = Arc::new(ModelEpoch { tag: tag.clone(), packed });
+        // Epoch first, counter second — and the counter store happens
+        // *while still holding the write guard*: writers serialize on
+        // the guard, so the counter stays monotone with the installed
+        // epoch.  (Storing after dropping the guard would let a slower
+        // writer's older store land on top of a faster writer's newer
+        // one, stranding readers on a stale cached epoch.)  A reader
+        // that observes the new version refreshes under the read lock
+        // and therefore finds an epoch at least that new.
+        slot.version.store(version, Ordering::Release);
+        slot.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(tag)
+    }
+
+    /// A hot-path reader bound to one slot.
+    pub fn reader(&self, name: &str) -> Result<SlotReader, RegistryError> {
+        let slot = self
+            .slots
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        let cached = slot.epoch.read().unwrap().clone();
+        Ok(SlotReader { slot, cached })
+    }
+
+    /// Control-plane read of a slot's current epoch (takes the lock —
+    /// fine off the hot path).
+    pub fn current(&self, name: &str) -> Option<Arc<ModelEpoch>> {
+        let slot = self.slots.read().unwrap().get(name).cloned()?;
+        let epoch = slot.epoch.read().unwrap().clone();
+        Some(epoch)
+    }
+
+    /// Latest version per slot.
+    pub fn versions(&self) -> BTreeMap<String, u64> {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(n, s)| (n.clone(), s.version.load(Ordering::Acquire)))
+            .collect()
+    }
+
+    /// Hot swaps (publishes beyond the first) a slot has absorbed.
+    pub fn swap_count(&self, name: &str) -> u64 {
+        self.slots
+            .read()
+            .unwrap()
+            .get(name)
+            .map_or(0, |s| s.swaps.load(Ordering::Relaxed))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.slots.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Cloneable control-channel handle to a shared [`ModelRegistry`]: the
+/// serving loop holds one, and so can any control thread that wants to
+/// publish retrained weights while traffic flows (`serve --swap-every`
+/// demonstrates exactly that).
+#[derive(Clone, Default)]
+pub struct RegistryHandle(Arc<ModelRegistry>);
+
+impl RegistryHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn publish(&self, name: &str, model: &BnnModel) -> Result<VersionTag, RegistryError> {
+        self.0.publish(name, model)
+    }
+
+    pub fn reader(&self, name: &str) -> Result<SlotReader, RegistryError> {
+        self.0.reader(name)
+    }
+
+    pub fn current(&self, name: &str) -> Option<Arc<ModelEpoch>> {
+        self.0.current(name)
+    }
+
+    pub fn versions(&self) -> BTreeMap<String, u64> {
+        self.0.versions()
+    }
+
+    pub fn swap_count(&self, name: &str) -> u64 {
+        self.0.swap_count(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.0.names()
+    }
+}
+
+/// Hot-path reader of one slot: caches the last epoch `Arc` it saw and
+/// revalidates with a single atomic load per [`pin`](Self::pin) — the
+/// lock-free read the registry promises.  Each consumer (kernel owner,
+/// shard feeder, pipeline stage) holds its own reader; readers never
+/// coordinate with each other.
+pub struct SlotReader {
+    slot: Arc<Slot>,
+    cached: Arc<ModelEpoch>,
+}
+
+impl SlotReader {
+    /// Slot name this reader is bound to.
+    pub fn name(&self) -> &str {
+        self.cached.name()
+    }
+
+    /// The epoch as of the last `pin` — no synchronization, may be one
+    /// publish behind.  Shape queries are safe here (shapes are
+    /// publish-stable); version queries are not.
+    pub fn snapshot(&self) -> &ModelEpoch {
+        &self.cached
+    }
+
+    /// Pin the slot's current epoch for a unit of work (one inference or
+    /// one whole batch).  Everything scored against the returned epoch —
+    /// across every shard it is shipped to — sees exactly its weights;
+    /// a publish that lands after this pin affects only later pins.
+    ///
+    /// Steady state (no publish since the last pin): one `Acquire` load
+    /// plus an `Arc` clone; no lock.
+    pub fn pin(&mut self) -> Arc<ModelEpoch> {
+        if self.slot.version.load(Ordering::Acquire) != self.cached.version() {
+            self.cached = self.slot.epoch.read().unwrap().clone();
+        }
+        Arc::clone(&self.cached)
+    }
+}
+
+/// Versioned multi-model executor: one [`SlotReader`] per routed model,
+/// one retargetable [`BatchKernel`] (and optionally a [`ShardedEngine`])
+/// shared across them.  Every classification pins an epoch first and
+/// returns the [`VersionTag`] it ran under — the serving layers thread
+/// that tag through to the verdict sinks.
+pub struct MultiModelExecutor {
+    readers: Vec<SlotReader>,
+    kernel: BatchKernel,
+    engine: Option<ShardedEngine>,
+    latency_ns: f64,
+}
+
+impl MultiModelExecutor {
+    /// Bind to `names` (route index = position in `names`); every name
+    /// must already be published.  `latency_ns` is the modeled per-
+    /// inference device latency reported to the serving metrics.
+    pub fn new(
+        handle: &RegistryHandle,
+        names: &[String],
+        latency_ns: f64,
+    ) -> Result<Self, RegistryError> {
+        assert!(!names.is_empty(), "MultiModelExecutor needs at least one model");
+        let mut readers = Vec::with_capacity(names.len());
+        for name in names {
+            readers.push(handle.reader(name)?);
+        }
+        let first = readers[0].pin();
+        Ok(Self {
+            kernel: BatchKernel::with_packed(Arc::clone(&first.packed)),
+            readers,
+            engine: None,
+            latency_ns,
+        })
+    }
+
+    /// Route batches through a [`ShardedEngine`] of `n_shards` workers.
+    /// Each batch still pins one epoch; its packed handle is shipped in
+    /// every shard's job, so shards cannot diverge within a batch.
+    pub fn sharded(mut self, n_shards: usize) -> Self {
+        if n_shards > 1 {
+            let epoch = self.readers[0].pin();
+            self.engine = Some(ShardedEngine::with_packed(
+                Arc::clone(&epoch.packed),
+                n_shards,
+            ));
+        }
+        self
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.readers.len()
+    }
+
+    pub fn model_name(&self, route: usize) -> &str {
+        self.readers[route].name()
+    }
+
+    /// Widest class count across the bound models (verdict-histogram
+    /// sizing; shapes are publish-stable so the snapshot is authoritative).
+    pub fn max_out_neurons(&self) -> usize {
+        self.readers
+            .iter()
+            .map(|r| r.snapshot().out_neurons())
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Pin and return route's current epoch (test/inspection hook).
+    pub fn epoch(&mut self, route: usize) -> Arc<ModelEpoch> {
+        self.readers[route].pin()
+    }
+
+    /// Classify one input under route's current epoch.
+    pub fn classify(&mut self, route: usize, x: &[u32]) -> (usize, VersionTag) {
+        let epoch = self.readers[route].pin();
+        // Pointer-equal in the un-swapped steady state — a no-op.
+        self.kernel.retarget(&epoch.packed);
+        (self.kernel.classify_one(x), epoch.tag().clone())
+    }
+
+    /// Classify a whole batch under **one** pinned epoch of `route`;
+    /// `classes` is cleared and refilled in input order.  The returned
+    /// tag is the single version every verdict of this batch ran under —
+    /// including across engine shards.
+    pub fn classify_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> VersionTag {
+        let epoch = self.readers[route].pin();
+        match self.engine.as_mut() {
+            Some(engine) => {
+                // The engine's job fan-out needs the batch behind an
+                // `Arc`, and workers may still hold their job clones
+                // for an instant after the gather returns, so the
+                // caller's scratch buffer cannot be lent and reclaimed
+                // (`Arc::try_unwrap` would be flaky) — one copy per
+                // sharded batch is the price; the kernel path below
+                // borrows the slices directly.
+                engine.run_batch_epoch(&epoch, &Arc::new(inputs.to_vec()), classes);
+            }
+            None => {
+                self.kernel.retarget(&epoch.packed);
+                self.kernel.run_batch(inputs, classes);
+            }
+        }
+        epoch.tag().clone()
+    }
+
+    /// Modeled per-inference device latency (ns).
+    pub fn latency_ns(&self) -> f64 {
+        self.latency_ns
+    }
+
+    /// Modeled completion time of a batch of `b` (serial-device model,
+    /// matching [`NnBatchExecutor`](crate::coordinator::NnBatchExecutor)'s
+    /// default).
+    pub fn batch_latency_ns(&self, b: usize) -> f64 {
+        self.latency_ns * b as f64
+    }
+
+    /// Underlying sharded-engine counters, when batches route through one.
+    pub fn engine_stats(&self) -> Option<EngineStats> {
+        self.engine.as_ref().map(|e| e.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_packed, BnnLayer};
+
+    fn model(seed: u64) -> BnnModel {
+        BnnModel::random("anomaly", 256, &[32, 16, 2], seed)
+    }
+
+    fn handle_with(name: &str, seed: u64) -> RegistryHandle {
+        let h = RegistryHandle::new();
+        h.publish(name, &model(seed)).unwrap();
+        h
+    }
+
+    #[test]
+    fn publish_versions_are_dense_and_monotonic() {
+        let h = handle_with("anomaly", 1);
+        assert_eq!(h.versions()["anomaly"], 1);
+        assert_eq!(h.swap_count("anomaly"), 0);
+        for v in 2..=5u64 {
+            let tag = h.publish("anomaly", &model(v)).unwrap();
+            assert_eq!((tag.name(), tag.version()), ("anomaly", v));
+        }
+        assert_eq!(h.versions()["anomaly"], 5);
+        assert_eq!(h.swap_count("anomaly"), 4);
+        assert_eq!(h.current("anomaly").unwrap().version(), 5);
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let h = handle_with("anomaly", 1);
+        h.publish("traffic-class", &model(9)).unwrap();
+        h.publish("anomaly", &model(2)).unwrap();
+        assert_eq!(h.versions()["anomaly"], 2);
+        assert_eq!(h.versions()["traffic-class"], 1);
+        assert_eq!(h.names(), vec!["anomaly".to_string(), "traffic-class".to_string()]);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_not_a_panic() {
+        let h = handle_with("anomaly", 1);
+        assert_eq!(
+            h.reader("nope").unwrap_err(),
+            RegistryError::UnknownModel("nope".into())
+        );
+        assert!(h.current("nope").is_none());
+        assert_eq!(h.swap_count("nope"), 0);
+    }
+
+    #[test]
+    fn shape_changing_republish_is_rejected() {
+        let h = handle_with("anomaly", 1);
+        let narrow = BnnModel::random("anomaly", 64, &[8, 2], 3);
+        let err = h.publish("anomaly", &narrow).unwrap_err();
+        assert!(matches!(err, RegistryError::ShapeMismatch { .. }), "{err}");
+        let more_classes = BnnModel::random("anomaly", 256, &[32, 16, 4], 3);
+        assert!(h.publish("anomaly", &more_classes).is_err());
+        // The slot still serves v1.
+        assert_eq!(h.current("anomaly").unwrap().version(), 1);
+    }
+
+    #[test]
+    fn concurrent_publishers_keep_counter_and_epoch_in_lockstep() {
+        // Regression: the version counter is stored while the epoch
+        // write guard is held, so racing writers cannot leave the
+        // counter behind the installed epoch (which would strand
+        // readers on a stale cached epoch forever).
+        let h = handle_with("anomaly", 1);
+        let writers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..25u64 {
+                        h.publish("anomaly", &model(10 + t * 100 + i)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        // 1 initial publish + 4×25 concurrent ones.
+        assert_eq!(h.versions()["anomaly"], 101);
+        assert_eq!(h.current("anomaly").unwrap().version(), 101);
+        assert_eq!(h.swap_count("anomaly"), 100);
+        let mut r = h.reader("anomaly").unwrap();
+        assert_eq!(r.pin().version(), 101);
+    }
+
+    #[test]
+    fn pin_observes_a_publish_immediately() {
+        let h = handle_with("anomaly", 1);
+        let mut r = h.reader("anomaly").unwrap();
+        assert_eq!(r.pin().version(), 1);
+        h.publish("anomaly", &model(2)).unwrap();
+        // Freshness: once publish returned, the next pin must see it.
+        assert_eq!(r.pin().version(), 2);
+        // And the snapshot is whatever the last pin cached.
+        assert_eq!(r.snapshot().version(), 2);
+    }
+
+    #[test]
+    fn executor_classifies_under_the_pinned_version() {
+        let h = handle_with("anomaly", 1);
+        let names = vec!["anomaly".to_string()];
+        let mut exec = MultiModelExecutor::new(&h, &names, 100.0).unwrap();
+        let xs: Vec<Vec<u32>> = (0..11)
+            .map(|i| BnnLayer::random(1, 256, 500 + i).words)
+            .collect();
+        for (i, x) in xs.iter().enumerate() {
+            let (class, tag) = exec.classify(0, x);
+            assert_eq!(tag.version(), 1);
+            assert_eq!(class, infer_packed(&model(1), x), "input {i}");
+        }
+        h.publish("anomaly", &model(2)).unwrap();
+        let mut classes = Vec::new();
+        let tag = exec.classify_batch(0, &xs, &mut classes);
+        assert_eq!(tag.version(), 2);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(classes[i], infer_packed(&model(2), x), "input {i}");
+        }
+    }
+
+    #[test]
+    fn sharded_batches_carry_one_version_across_shards() {
+        let h = handle_with("anomaly", 1);
+        let names = vec!["anomaly".to_string()];
+        let mut exec = MultiModelExecutor::new(&h, &names, 100.0).unwrap().sharded(4);
+        let xs: Vec<Vec<u32>> = (0..37)
+            .map(|i| BnnLayer::random(1, 256, 900 + i).words)
+            .collect();
+        for seed in 2..=4u64 {
+            h.publish("anomaly", &model(seed)).unwrap();
+            let mut classes = Vec::new();
+            let tag = exec.classify_batch(0, &xs, &mut classes);
+            assert_eq!(tag.version(), seed);
+            // Every shard's verdicts must match the tagged version's
+            // model — a shard on an older epoch would mismatch here.
+            for (i, x) in xs.iter().enumerate() {
+                assert_eq!(classes[i], infer_packed(&model(seed), x), "input {i}");
+            }
+        }
+        assert_eq!(exec.engine_stats().unwrap().batches, 3);
+    }
+
+    #[test]
+    fn two_routes_share_one_kernel_without_crosstalk() {
+        let h = handle_with("anomaly", 1);
+        // Different shape in the second slot: scratch must grow, verdicts
+        // must stay per-model exact while alternating routes.
+        h.publish("tomography", &BnnModel::random("tomography", 152, &[64, 32, 2], 7))
+            .unwrap();
+        let names = vec!["anomaly".to_string(), "tomography".to_string()];
+        let mut exec = MultiModelExecutor::new(&h, &names, 100.0).unwrap();
+        assert_eq!(exec.n_models(), 2);
+        assert_eq!(exec.model_name(1), "tomography");
+        let tomo = BnnModel::random("tomography", 152, &[64, 32, 2], 7);
+        for i in 0..6u64 {
+            let xa = BnnLayer::random(1, 256, 40 + i).words;
+            let xt = BnnLayer::random(1, 152, 80 + i).words;
+            let (ca, ta) = exec.classify(0, &xa);
+            let (ct, tt) = exec.classify(1, &xt);
+            assert_eq!(ca, infer_packed(&model(1), &xa));
+            assert_eq!(ct, infer_packed(&tomo, &xt));
+            assert_eq!((ta.name(), tt.name()), ("anomaly", "tomography"));
+        }
+    }
+
+    #[test]
+    fn tag_display_and_identity() {
+        let h = handle_with("anomaly", 1);
+        let tag = h.publish("anomaly", &model(2)).unwrap();
+        assert_eq!(tag.to_string(), "anomaly@v2");
+        let again = h.current("anomaly").unwrap().tag().clone();
+        assert_eq!(tag, again);
+    }
+}

@@ -33,7 +33,7 @@ pub struct HostExecutor {
 impl HostExecutor {
     pub fn new(model: BnnModel) -> Self {
         let exec = BnnExecutor::new(model);
-        let kernel = BatchKernel::with_packed(exec.model(), exec.packed_layers());
+        let kernel = BatchKernel::with_packed(exec.packed_model());
         Self { exec, kernel }
     }
 

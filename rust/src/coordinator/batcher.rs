@@ -45,6 +45,60 @@ impl<T> Batcher<T> {
     }
 }
 
+/// One emitted batch: `(enqueue time, item)` pairs in arrival order.
+pub type TimedBatch<T> = Vec<(f64, T)>;
+
+/// A bank of [`Batcher`]s, one **lane per routed model**, sharing one
+/// size/timeout policy — the multi-model registry's per-model batching:
+/// a batch never mixes flows routed to different models, so each batch
+/// can pin exactly one model epoch.
+#[derive(Debug)]
+pub struct BatchSet<T> {
+    lanes: Vec<Batcher<T>>,
+}
+
+impl<T> BatchSet<T> {
+    pub fn new(n_lanes: usize, max_size: usize, max_wait_ns: f64) -> Self {
+        Self {
+            lanes: (0..n_lanes.max(1))
+                .map(|_| Batcher::new(max_size, max_wait_ns))
+                .collect(),
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Push onto one lane; returns that lane's batch if it filled.
+    pub fn push(&mut self, lane: usize, now_ns: f64, item: T) -> Option<TimedBatch<T>> {
+        self.lanes[lane].push(now_ns, item)
+    }
+
+    /// Time-based flush across every lane: each lane whose oldest item
+    /// has waited past the deadline emits, tagged with its lane index.
+    /// Returns an empty `Vec` (no allocation) in the common nothing-due
+    /// case.
+    pub fn poll(&mut self, now_ns: f64) -> Vec<(usize, TimedBatch<T>)> {
+        let mut due = Vec::new();
+        for (lane, b) in self.lanes.iter_mut().enumerate() {
+            if let Some(batch) = b.poll(now_ns) {
+                due.push((lane, batch));
+            }
+        }
+        due
+    }
+
+    /// Items waiting across all lanes.
+    pub fn pending(&self) -> usize {
+        self.lanes.iter().map(Batcher::pending).sum()
+    }
+
+    pub fn pending_lane(&self, lane: usize) -> usize {
+        self.lanes[lane].pending()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +182,40 @@ mod tests {
         // the same way instead of never emitting.
         let mut z = Batcher::new(0, 1e12);
         assert!(z.push(0.0, 9u32).is_some());
+    }
+
+    #[test]
+    fn batch_set_lanes_fill_independently() {
+        let mut s: BatchSet<u32> = BatchSet::new(2, 3, 1e9);
+        assert_eq!(s.n_lanes(), 2);
+        assert!(s.push(0, 0.0, 1).is_none());
+        assert!(s.push(1, 1.0, 100).is_none());
+        assert!(s.push(0, 2.0, 2).is_none());
+        assert_eq!(s.pending(), 3);
+        assert_eq!(s.pending_lane(0), 2);
+        // Lane 0 fills without disturbing lane 1.
+        let full = s.push(0, 3.0, 3).expect("lane 0 full");
+        assert_eq!(full.iter().map(|&(_, v)| v).collect::<Vec<_>>(), [1, 2, 3]);
+        assert_eq!(s.pending_lane(0), 0);
+        assert_eq!(s.pending_lane(1), 1);
+    }
+
+    #[test]
+    fn batch_set_poll_emits_only_due_lanes_tagged_with_their_index() {
+        let mut s: BatchSet<&str> = BatchSet::new(3, 100, 50.0);
+        s.push(0, 0.0, "old");
+        s.push(2, 40.0, "young");
+        // At t=55 only lane 0's oldest item crossed the 50ns wait.
+        let due = s.poll(55.0);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].0, 0);
+        assert_eq!(due[0].1[0].1, "old");
+        // Final drain picks up the rest, lane-tagged.
+        let rest = s.poll(f64::INFINITY);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].0, 2);
+        assert_eq!(s.pending(), 0);
+        assert!(s.poll(f64::INFINITY).is_empty());
     }
 
     #[test]

@@ -14,12 +14,18 @@ pub mod service;
 pub mod shunt;
 pub mod trigger;
 
-pub use batcher::Batcher;
-pub use pipeline::{PipelineConfig, PipelineError, PipelineReport, PipelineService, STAGE_LINKS};
+pub use batcher::{BatchSet, Batcher, TimedBatch};
+pub use pipeline::{
+    PipelineConfig, PipelineError, PipelineReport, PipelineService, RoutedPipelineError,
+    RoutedPipelineReport, RoutedPipelineService, STAGE_LINKS,
+};
 pub use selector::{InputSelector, OutputSelector};
-pub use service::{CoordinatorService, PacketEvent, PendingFlow, ServiceStats};
+pub use service::{
+    CoordinatorService, ModelServiceStats, MultiModelService, PacketEvent, PendingFlow,
+    ServiceStats, TaggedVerdict,
+};
 pub use shunt::{ShuntDecision, ShuntRouter};
-pub use trigger::TriggerCondition;
+pub use trigger::{ModelRouter, TriggerCondition};
 
 use crate::bnn::BnnModel;
 
@@ -86,7 +92,7 @@ impl CoreExecutor {
     /// Wrap the bit-exact core with a backend-specific latency model.
     pub fn new(model: BnnModel, latency_ns: f64, name: &'static str) -> Self {
         let exec = crate::bnn::BnnExecutor::new(model);
-        let batch = crate::bnn::BatchKernel::with_packed(exec.model(), exec.packed_layers());
+        let batch = crate::bnn::BatchKernel::with_packed(exec.packed_model());
         Self {
             exec,
             batch,
@@ -102,8 +108,7 @@ impl CoreExecutor {
     pub fn sharded(mut self, n_shards: usize) -> Self {
         if n_shards > 1 {
             self.engine = Some(crate::bnn::ShardedEngine::with_packed(
-                self.exec.model(),
-                self.exec.packed_layers(),
+                self.exec.packed_model(),
                 n_shards,
             ));
         }

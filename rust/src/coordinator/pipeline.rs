@@ -51,15 +51,16 @@
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::thread;
 
-use crate::bnn::EngineStats;
+use crate::bnn::{EngineStats, MultiModelExecutor, RegistryError, RegistryHandle, VersionTag};
 use crate::net::flow::{FlowTable, ShardedFlowTable};
 
-use super::batcher::Batcher;
+use super::batcher::{BatchSet, Batcher, TimedBatch};
 use super::selector::{OutputSelector, OutputSink};
 use super::service::{
-    batch_item_latency_ns, flow_id, select_packed_input, PacketEvent, PendingFlow, ServiceStats,
+    batch_item_latency_ns, flow_id, select_packed_input, ModelServiceStats, PacketEvent,
+    PendingFlow, ServiceStats, TaggedVerdict,
 };
-use super::trigger::TriggerCondition;
+use super::trigger::{ModelRouter, TriggerCondition};
 use super::NnBatchExecutor;
 
 /// Inter-stage links, in `ServiceStats::stage_blocked` index order.
@@ -474,6 +475,426 @@ impl<E: NnBatchExecutor + 'static> PipelineService<E> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Registry-routed pipeline: the same staged shape, serving *named,
+// versioned* models with zero-downtime hot swap.
+//
+// Deliberately a parallel implementation rather than a generalization
+// of the single-model stages over a route/tag parameter: the
+// single-model pipeline is the tier-1 determinism baseline and stays
+// untouched.  The cost is that clock-tick, drain, and fault-handling
+// fixes must land in both copies — when touching one, check the other.
+// ---------------------------------------------------------------------------
+
+/// Stage 1+2 → stage 3 messages on the routed pipeline: like
+/// [`InferenceMsg`] plus the route (model index) the flow resolved to.
+enum RoutedMsg {
+    Flow { route: usize, id: u64, packed: Vec<u32>, ts_ns: f64 },
+    Clock(f64),
+}
+
+/// Stage 3 → stage 4 message: one verdict with its version tag and the
+/// route it ran on (route-indexed accounting keeps the sink's hot loop
+/// free of per-verdict key allocations).
+struct TaggedOut {
+    route: usize,
+    id: u64,
+    class: usize,
+    latency_ns: f64,
+    tag: VersionTag,
+}
+
+/// Stage 1+2 of the routed pipeline: flow update + **model routing** +
+/// feature packing.  Routing is a pure per-flow function
+/// ([`ModelRouter`] invariant), so flow-hash sharding keeps it
+/// deterministic exactly as in the single-model pipeline.
+fn routed_parse_stage(
+    rx: Receiver<PacketEvent>,
+    tx: SyncSender<RoutedMsg>,
+    router: ModelRouter,
+    mut flows: FlowTable,
+) -> StageReport {
+    let mut stats = blank_stats();
+    let mut failure = None;
+    while let Ok(ev) = rx.recv() {
+        stats.packets += 1;
+        let (fstats, is_new, pkts) = flows.update(&ev.packet);
+        if let Some(route) = router.route(&ev.packet, is_new, pkts) {
+            stats.triggers += 1;
+            let msg = RoutedMsg::Flow {
+                route,
+                id: flow_id(&ev.packet),
+                packed: select_packed_input(&ev, fstats),
+                ts_ns: ev.packet.ts_ns,
+            };
+            if send_counted(&tx, msg, &mut stats.stage_blocked[1]).is_err() {
+                failure = Some("parse stage: inference channel disconnected".into());
+                break;
+            }
+        }
+        if stats.packets % CLOCK_TICK_PKTS == 0 {
+            let tick = RoutedMsg::Clock(ev.packet.ts_ns);
+            if send_counted(&tx, tick, &mut stats.stage_blocked[1]).is_err() {
+                failure = Some("parse stage: inference channel disconnected".into());
+                break;
+            }
+        }
+    }
+    let flows_len = flows.len();
+    StageReport { stats, failure, flows: flows_len, engine: None }
+}
+
+/// Stage 3 of the routed pipeline: per-model batch lanes feeding a
+/// versioned [`MultiModelExecutor`].  Each lane's batch pins exactly one
+/// registry epoch — the zero-downtime swap contract — and every emitted
+/// verdict carries the pinned tag.
+struct RoutedInferenceStage {
+    exec: MultiModelExecutor,
+    tx: SyncSender<TaggedOut>,
+    batchers: Option<BatchSet<PendingFlow>>,
+    stats: ServiceStats,
+    inputs: Vec<Vec<u32>>,
+    meta: Vec<(u64, f64)>,
+    classes: Vec<usize>,
+}
+
+impl RoutedInferenceStage {
+    fn new(
+        exec: MultiModelExecutor,
+        tx: SyncSender<TaggedOut>,
+        batchers: Option<BatchSet<PendingFlow>>,
+    ) -> Self {
+        Self {
+            exec,
+            tx,
+            batchers,
+            stats: blank_stats(),
+            inputs: Vec::new(),
+            meta: Vec::new(),
+            classes: Vec::new(),
+        }
+    }
+
+    /// One lane's batch under one pinned epoch; latency semantics match
+    /// the serial loop's `flush_batch`.
+    fn flush(
+        &mut self,
+        lane: usize,
+        batch: TimedBatch<PendingFlow>,
+        now_ns: f64,
+    ) -> Result<(), ()> {
+        self.meta.clear();
+        self.inputs.clear();
+        for (enq_ns, flow) in batch {
+            self.meta.push((flow.id, enq_ns));
+            self.inputs.push(flow.packed);
+        }
+        let tag = self.exec.classify_batch(lane, &self.inputs, &mut self.classes);
+        let exec_ns = self.exec.batch_latency_ns(self.classes.len());
+        for i in 0..self.classes.len() {
+            let (id, enq_ns) = self.meta[i];
+            let out = TaggedOut {
+                route: lane,
+                id,
+                class: self.classes[i],
+                latency_ns: batch_item_latency_ns(now_ns, enq_ns, exec_ns),
+                tag: tag.clone(),
+            };
+            send_counted(&self.tx, out, &mut self.stats.stage_blocked[2])?;
+        }
+        Ok(())
+    }
+
+    fn on_clock(&mut self, now_ns: f64) -> Result<(), ()> {
+        let due = match self.batchers.as_mut() {
+            Some(b) => b.poll(now_ns),
+            None => Vec::new(),
+        };
+        for (lane, batch) in due {
+            self.flush(lane, batch, now_ns)?;
+        }
+        Ok(())
+    }
+
+    fn on_flow(&mut self, route: usize, id: u64, packed: Vec<u32>, ts_ns: f64) -> Result<(), ()> {
+        self.on_clock(ts_ns)?;
+        if self.batchers.is_none() {
+            let (class, tag) = self.exec.classify(route, &packed);
+            let out = TaggedOut { route, id, class, latency_ns: self.exec.latency_ns(), tag };
+            return send_counted(&self.tx, out, &mut self.stats.stage_blocked[2]);
+        }
+        let full = self
+            .batchers
+            .as_mut()
+            .unwrap()
+            .push(route, ts_ns, PendingFlow { id, packed });
+        match full {
+            Some(batch) => self.flush(route, batch, ts_ns),
+            None => Ok(()),
+        }
+    }
+
+    /// End-of-stream drain of every lane (newest enqueue time as "now").
+    fn drain(&mut self) -> Result<(), ()> {
+        let due = match self.batchers.as_mut() {
+            Some(b) => b.poll(f64::INFINITY),
+            None => Vec::new(),
+        };
+        for (lane, batch) in due {
+            let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
+            self.flush(lane, batch, now_ns)?;
+        }
+        Ok(())
+    }
+
+    fn run(mut self, rx: Receiver<RoutedMsg>) -> StageReport {
+        const SINK_GONE: &str = "inference stage: sink channel disconnected";
+        let mut failure = None;
+        while let Ok(msg) = rx.recv() {
+            let step = match msg {
+                RoutedMsg::Flow { route, id, packed, ts_ns } => {
+                    self.on_flow(route, id, packed, ts_ns)
+                }
+                RoutedMsg::Clock(ts_ns) => self.on_clock(ts_ns),
+            };
+            if step.is_err() {
+                failure = Some(SINK_GONE.into());
+                break;
+            }
+        }
+        if failure.is_none() && self.drain().is_err() {
+            failure = Some(SINK_GONE.into());
+        }
+        let engine = self.exec.engine_stats();
+        StageReport { stats: self.stats, failure, flows: 0, engine }
+    }
+}
+
+/// Stage 4 of the routed pipeline: ordered sink + global and per-model
+/// accounting, plus the tagged verdict log.
+fn routed_sink_stage(
+    rx: Receiver<TaggedOut>,
+    output: OutputSelector,
+    n_classes: usize,
+    log_tags: bool,
+    model_names: Vec<String>,
+) -> (ServiceStats, OutputSink, Vec<TaggedVerdict>) {
+    let mut stats = blank_stats();
+    stats.classes = vec![0; n_classes];
+    // Route-indexed during the run (no per-verdict key allocation);
+    // folded into the name-keyed map once at exit.
+    let mut per_route = vec![ModelServiceStats::default(); model_names.len()];
+    let mut sink = OutputSink::default();
+    let mut tagged = Vec::new();
+    while let Ok(v) = rx.recv() {
+        stats.inferences += 1;
+        if v.class >= stats.classes.len() {
+            stats.classes.resize(v.class + 1, 0);
+        }
+        stats.classes[v.class] += 1;
+        per_route[v.route].record(v.class);
+        stats.latency.record(v.latency_ns);
+        sink.write(output, v.id, v.class);
+        if log_tags {
+            tagged.push(TaggedVerdict { id: v.id, class: v.class, tag: v.tag });
+        }
+    }
+    // Accumulate (don't insert) so duplicate route names — legal in a
+    // hash-split router — merge their counts the same way the serial
+    // service's fold does.
+    for (name, m) in model_names.into_iter().zip(per_route) {
+        let entry = stats.per_model.entry(name).or_default();
+        entry.inferences += m.inferences;
+        if m.classes.len() > entry.classes.len() {
+            entry.classes.resize(m.classes.len(), 0);
+        }
+        for (a, b) in entry.classes.iter_mut().zip(&m.classes) {
+            *a += b;
+        }
+    }
+    (stats, sink, tagged)
+}
+
+/// What a completed (or faulted) routed pipeline run leaves behind:
+/// the single-model [`PipelineReport`] fields plus the tagged verdict
+/// log (per-model histograms and swap counts live in
+/// [`ServiceStats::per_model`]).
+#[derive(Debug)]
+pub struct RoutedPipelineReport {
+    pub stats: ServiceStats,
+    pub sink: OutputSink,
+    /// Every verdict with its `(model, version)` tag, in sink order.
+    pub tagged: Vec<TaggedVerdict>,
+    pub flows_tracked: usize,
+    pub engine: Option<EngineStats>,
+}
+
+/// One or more routed stages died; partial statistics survive.
+#[derive(Debug)]
+pub struct RoutedPipelineError {
+    pub failures: Vec<String>,
+    pub report: RoutedPipelineReport,
+}
+
+impl std::fmt::Display for RoutedPipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "routed pipeline stage failure: {}", self.failures.join("; "))
+    }
+}
+
+impl std::error::Error for RoutedPipelineError {}
+
+/// The registry-routed counterpart of [`PipelineService`]: stage-1
+/// workers route flows to named models, stage 3 serves them through a
+/// versioned [`MultiModelExecutor`], and live `publish`es through the
+/// shared [`RegistryHandle`] hot-swap weights mid-run without draining
+/// any queue.  Inherits the single-model pipeline's determinism
+/// contract per model (routing is flow-pure), its backpressure
+/// accounting, and its failure semantics.
+pub struct RoutedPipelineService {
+    registry: RegistryHandle,
+    router: ModelRouter,
+    exec: MultiModelExecutor,
+    output: OutputSelector,
+    cfg: PipelineConfig,
+    log_tags: bool,
+}
+
+impl RoutedPipelineService {
+    /// Bind the router's model names against `registry` (all must be
+    /// published); `latency_ns` as in
+    /// [`MultiModelService::new`](super::MultiModelService::new).
+    pub fn new(
+        registry: RegistryHandle,
+        router: ModelRouter,
+        output: OutputSelector,
+        cfg: PipelineConfig,
+        latency_ns: f64,
+    ) -> Result<Self, RegistryError> {
+        let exec = MultiModelExecutor::new(&registry, router.model_names(), latency_ns)?;
+        Ok(Self { registry, router, exec, output, cfg, log_tags: true })
+    }
+
+    /// Spread stage-3 batches over `n_shards` engine workers; every
+    /// batch still pins exactly one epoch across all shards.
+    pub fn with_shards(mut self, n_shards: usize) -> Self {
+        self.exec = self.exec.sharded(n_shards);
+        self
+    }
+
+    /// Drop the unbounded per-verdict tag log (long-running serves:
+    /// memory stays flat; per-model stats and the sink are unaffected).
+    pub fn without_tag_log(mut self) -> Self {
+        self.log_tags = false;
+        self
+    }
+
+    /// Drive `events` through the routed pipeline; same join/fault
+    /// shape as [`PipelineService::run`].  Per-model swap counts are
+    /// snapshotted from the registry after the stages join.
+    pub fn run(
+        self,
+        events: impl IntoIterator<Item = PacketEvent>,
+    ) -> Result<RoutedPipelineReport, RoutedPipelineError> {
+        let workers = self.cfg.workers.max(1);
+        let depth = self.cfg.queue_depth.max(1);
+        let n_classes = self.exec.max_out_neurons();
+        let model_names: Vec<String> = self.router.model_names().to_vec();
+
+        let (tx_inf, rx_inf) = mpsc::sync_channel::<RoutedMsg>(depth);
+        let (tx_sink, rx_sink) = mpsc::sync_channel::<TaggedOut>(depth);
+
+        let mut parse_txs = Vec::with_capacity(workers);
+        let mut parse_handles = Vec::with_capacity(workers);
+        for table in ShardedFlowTable::new(workers, self.cfg.flow_capacity).into_shards() {
+            let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
+            let tx_inf = tx_inf.clone();
+            let router = self.router.clone();
+            parse_handles
+                .push(thread::spawn(move || routed_parse_stage(rx, tx_inf, router, table)));
+            parse_txs.push(tx);
+        }
+        drop(tx_inf);
+
+        let exec = self.exec;
+        let batchers = if self.cfg.batch > 0 {
+            Some(BatchSet::new(self.router.n_models(), self.cfg.batch, self.cfg.max_wait_ns))
+        } else {
+            None
+        };
+        let inf_handle =
+            thread::spawn(move || RoutedInferenceStage::new(exec, tx_sink, batchers).run(rx_inf));
+        let output = self.output;
+        let log_tags = self.log_tags;
+        let sink_names = model_names.clone();
+        let sink_handle = thread::spawn(move || {
+            routed_sink_stage(rx_sink, output, n_classes, log_tags, sink_names)
+        });
+
+        let mut ingress_blocked = 0u64;
+        let mut failures: Vec<String> = Vec::new();
+        for ev in events {
+            let w = ShardedFlowTable::shard_of(&ev.packet, workers);
+            if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
+                failures.push(format!("ingress: parse worker {w} unreachable"));
+                break;
+            }
+        }
+        drop(parse_txs);
+
+        let mut stats = blank_stats();
+        stats.classes = vec![0; n_classes];
+        stats.stage_blocked[0] = ingress_blocked;
+        let mut flows_tracked = 0usize;
+        for (w, h) in parse_handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(rep) => {
+                    stats.merge(&rep.stats);
+                    flows_tracked += rep.flows;
+                    if let Some(f) = rep.failure {
+                        failures.push(format!("worker {w}: {f}"));
+                    }
+                }
+                Err(p) => failures.push(format!("parse worker {w} panicked: {}", panic_msg(&p))),
+            }
+        }
+        let mut engine = None;
+        match inf_handle.join() {
+            Ok(rep) => {
+                stats.merge(&rep.stats);
+                engine = rep.engine;
+                if let Some(f) = rep.failure {
+                    failures.push(f);
+                }
+            }
+            Err(p) => failures.push(format!("inference stage panicked: {}", panic_msg(&p))),
+        }
+        let (sink, tagged) = match sink_handle.join() {
+            Ok((sink_stats, sink, tagged)) => {
+                stats.merge(&sink_stats);
+                (sink, tagged)
+            }
+            Err(p) => {
+                failures.push(format!("sink stage panicked: {}", panic_msg(&p)));
+                (OutputSink::default(), Vec::new())
+            }
+        };
+        // Swap counts are a registry property, not a stage property:
+        // snapshot once, after every stage has reported.
+        for name in &model_names {
+            let entry = stats.per_model.entry(name.clone()).or_default();
+            entry.swaps = self.registry.swap_count(name);
+        }
+
+        let report = RoutedPipelineReport { stats, sink, tagged, flows_tracked, engine };
+        if failures.is_empty() {
+            Ok(report)
+        } else {
+            Err(RoutedPipelineError { failures, report })
+        }
+    }
+}
+
 /// Best-effort text of a cross-thread panic payload.
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
@@ -532,6 +953,63 @@ mod tests {
         .run(evs)
         .unwrap();
         assert_eq!(rep.stats.triggers, rep.stats.inferences);
+    }
+
+    #[test]
+    fn routed_pipeline_matches_routed_serial_per_model() {
+        use crate::bnn::RegistryHandle;
+        use crate::coordinator::MultiModelService;
+
+        let h = RegistryHandle::new();
+        h.publish("anomaly", &BnnModel::random("anomaly", 256, &[32, 16, 2], 31))
+            .unwrap();
+        h.publish("traffic-class", &BnnModel::random("traffic-class", 256, &[32, 16, 2], 32))
+            .unwrap();
+        let router = ModelRouter::hash_split(
+            TriggerCondition::EveryNPackets(10),
+            vec!["anomaly".into(), "traffic-class".into()],
+        );
+        let evs = events(6000, 50, 11);
+
+        let mut serial =
+            MultiModelService::new(h.clone(), router.clone(), OutputSelector::Memory, 100.0)
+                .unwrap();
+        for ev in &evs {
+            serial.handle(ev);
+        }
+        serial.flush();
+
+        for (workers, batch, shards) in [(1, 0, 1), (3, 0, 1), (2, 8, 1), (2, 8, 3)] {
+            let cfg = PipelineConfig { workers, batch, ..Default::default() };
+            let rep = RoutedPipelineService::new(
+                h.clone(),
+                router.clone(),
+                OutputSelector::Memory,
+                cfg,
+                100.0,
+            )
+            .unwrap()
+            .with_shards(shards)
+            .run(evs.iter().cloned())
+            .unwrap();
+            assert_eq!(rep.stats.packets, 6000, "w{workers} b{batch} s{shards}");
+            assert_eq!(rep.stats.triggers, serial.stats.triggers);
+            assert_eq!(rep.stats.inferences, serial.stats.inferences);
+            assert_eq!(rep.stats.classes, serial.stats.classes);
+            assert_eq!(rep.stats.per_model, serial.stats.per_model);
+            assert_eq!(rep.tagged.len() as u64, rep.stats.inferences);
+            // Same verdicts for the same flows, order aside.
+            let mut a = serial.sink.memory.clone();
+            let mut b = rep.sink.memory.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b);
+            // No publishes happened: everything ran at version 1.
+            assert!(rep.tagged.iter().all(|t| t.tag.version() == 1));
+            if shards > 1 && batch > 0 {
+                assert!(rep.engine.is_some());
+            }
+        }
     }
 
     #[test]

@@ -13,17 +13,19 @@
 //!   kernel / sharded engine) when the batch fills or times out — the
 //!   throughput path of §6.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 
+use crate::bnn::{MultiModelExecutor, RegistryError, RegistryHandle, VersionTag};
 use crate::metrics::LatencyHistogram;
 use crate::net::features::FeatureVector;
 use crate::net::flow::{FlowStats, FlowTable};
 use crate::net::packet::Packet;
 use crate::net::traffic::{CbrSpec, TrafficGen};
 
-use super::batcher::Batcher;
+use super::batcher::{BatchSet, Batcher, TimedBatch};
 use super::selector::{OutputSelector, OutputSink};
-use super::trigger::TriggerCondition;
+use super::trigger::{ModelRouter, TriggerCondition};
 use super::NnBatchExecutor;
 
 /// One event entering the coordinator (a received packet).
@@ -93,6 +95,34 @@ pub struct ServiceStats {
     /// inter-stage link (see `coordinator::pipeline::STAGE_LINKS`).
     /// Empty in the serial loop, which has no queues.
     pub stage_blocked: Vec<u64>,
+    /// Per-model accounting on the registry route, keyed by slot name.
+    /// Empty in single-model serving.
+    pub per_model: BTreeMap<String, ModelServiceStats>,
+}
+
+/// One routed model's share of a run: its verdict histogram plus the
+/// hot swaps its registry slot absorbed while the run was live.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ModelServiceStats {
+    pub inferences: u64,
+    /// Verdict histogram for this model, grown on demand.
+    pub classes: Vec<u64>,
+    /// Registry swap count for this slot, snapshotted at report time.
+    /// Merging takes the max: parallel stages snapshot the *same* slot
+    /// counter, so adding would double-count.
+    pub swaps: u64,
+}
+
+impl ModelServiceStats {
+    /// Account one verdict (shared by the serial and pipelined routed
+    /// sinks).
+    pub(crate) fn record(&mut self, class: usize) {
+        self.inferences += 1;
+        if class >= self.classes.len() {
+            self.classes.resize(class + 1, 0);
+        }
+        self.classes[class] += 1;
+    }
 }
 
 impl ServiceStats {
@@ -115,6 +145,18 @@ impl ServiceStats {
         }
         for (a, b) in self.stage_blocked.iter_mut().zip(&other.stage_blocked) {
             *a += b;
+        }
+        for (name, m) in &other.per_model {
+            let mine = self.per_model.entry(name.clone()).or_default();
+            mine.inferences += m.inferences;
+            if m.classes.len() > mine.classes.len() {
+                mine.classes.resize(m.classes.len(), 0);
+            }
+            for (a, b) in mine.classes.iter_mut().zip(&m.classes) {
+                *a += b;
+            }
+            // Snapshots of one shared counter, not partitions of it.
+            mine.swaps = mine.swaps.max(m.swaps);
         }
     }
 }
@@ -263,6 +305,233 @@ impl<E: NnBatchExecutor> CoordinatorService<E> {
     }
 }
 
+/// One verdict from the registry route, with the `(name, version)` it
+/// ran under.
+#[derive(Debug, Clone)]
+pub struct TaggedVerdict {
+    pub id: u64,
+    pub class: usize,
+    pub tag: VersionTag,
+}
+
+/// The registry-routed counterpart of [`CoordinatorService`]: flows are
+/// routed to **named models** by a [`ModelRouter`], classified by a
+/// [`MultiModelExecutor`] that pins one registry epoch per inference (or
+/// per batch — per-model batch lanes never mix models), and every
+/// verdict carries its [`VersionTag`].  Live `publish`es through the
+/// shared [`RegistryHandle`] hot-swap weights between batches without
+/// this loop ever pausing.
+pub struct MultiModelService {
+    pub router: ModelRouter,
+    pub exec: MultiModelExecutor,
+    pub flows: FlowTable,
+    pub sink: OutputSink,
+    pub stats: ServiceStats,
+    /// Every verdict with its version tag, in emission order.  Grows
+    /// for the life of the run — the consistency harness needs the full
+    /// log; long-running serves disable it with
+    /// [`without_tag_log`](Self::without_tag_log) (per-model histograms
+    /// in [`ServiceStats::per_model`] stay complete either way).
+    pub tagged: Vec<TaggedVerdict>,
+    log_tags: bool,
+    registry: RegistryHandle,
+    output: OutputSelector,
+    /// Route-indexed per-model accounting, folded into the name-keyed
+    /// [`ServiceStats::per_model`] map at flush time — the hot path
+    /// indexes a `Vec` instead of allocating a key for a map lookup.
+    per_model_scratch: Vec<ModelServiceStats>,
+    batchers: Option<BatchSet<PendingFlow>>,
+    /// Scratch reused across batch flushes.
+    batch_meta: Vec<(u64, f64)>,
+    batch_inputs: Vec<Vec<u32>>,
+    batch_classes: Vec<usize>,
+}
+
+impl MultiModelService {
+    /// Bind the router's model names against `registry` (each must be
+    /// published).  `latency_ns` is the modeled per-inference device
+    /// latency, as in [`CoreExecutor::new`](super::CoreExecutor::new).
+    pub fn new(
+        registry: RegistryHandle,
+        router: ModelRouter,
+        output: OutputSelector,
+        latency_ns: f64,
+    ) -> Result<Self, RegistryError> {
+        let exec = MultiModelExecutor::new(&registry, router.model_names(), latency_ns)?;
+        let n_classes = exec.max_out_neurons();
+        let n_models = router.n_models();
+        Ok(Self {
+            router,
+            exec,
+            flows: FlowTable::new(1 << 16),
+            sink: OutputSink::default(),
+            stats: ServiceStats {
+                classes: vec![0; n_classes],
+                ..Default::default()
+            },
+            tagged: Vec::new(),
+            log_tags: true,
+            registry,
+            output,
+            per_model_scratch: vec![ModelServiceStats::default(); n_models],
+            batchers: None,
+            batch_meta: Vec::new(),
+            batch_inputs: Vec::new(),
+            batch_classes: Vec::new(),
+        })
+    }
+
+    /// Per-model batch lanes: triggered flows queue in their model's
+    /// lane until `max_size` or `max_wait_ns` (packet-clock), then the
+    /// whole lane-batch scores under one pinned epoch.
+    pub fn with_batching(mut self, max_size: usize, max_wait_ns: f64) -> Self {
+        self.batchers = Some(BatchSet::new(self.router.n_models(), max_size, max_wait_ns));
+        self
+    }
+
+    /// Spread batches over a sharded engine of `n_shards` worker cores
+    /// (each batch still pins exactly one epoch across all shards).
+    pub fn with_shards(mut self, n_shards: usize) -> Self {
+        self.exec = self.exec.sharded(n_shards);
+        self
+    }
+
+    /// Drop the unbounded per-verdict tag log (production-shaped runs:
+    /// memory stays flat; per-model stats and the sink are unaffected).
+    pub fn without_tag_log(mut self) -> Self {
+        self.log_tags = false;
+        self
+    }
+
+    /// Flows currently waiting across all batch lanes.
+    pub fn pending(&self) -> usize {
+        self.batchers.as_ref().map_or(0, BatchSet::pending)
+    }
+
+    /// Synchronous single-event path (same shape as
+    /// [`CoordinatorService::handle`]).
+    pub fn handle(&mut self, ev: &PacketEvent) {
+        self.stats.packets += 1;
+        let due = match self.batchers.as_mut() {
+            Some(b) => b.poll(ev.packet.ts_ns),
+            None => Vec::new(),
+        };
+        for (lane, batch) in due {
+            self.flush_batch(lane, batch, ev.packet.ts_ns);
+        }
+        let (stats, is_new, pkts) = self.flows.update(&ev.packet);
+        let Some(route) = self.router.route(&ev.packet, is_new, pkts) else {
+            return;
+        };
+        self.stats.triggers += 1;
+        let packed = select_packed_input(ev, stats);
+        let id = flow_id(&ev.packet);
+        if self.batchers.is_some() {
+            let full = self
+                .batchers
+                .as_mut()
+                .unwrap()
+                .push(route, ev.packet.ts_ns, PendingFlow { id, packed });
+            if let Some(batch) = full {
+                self.flush_batch(route, batch, ev.packet.ts_ns);
+            }
+        } else {
+            let (class, tag) = self.exec.classify(route, &packed);
+            let latency_ns = self.exec.latency_ns();
+            self.finish_inference(route, id, class, tag, latency_ns);
+        }
+    }
+
+    /// Drain every batch lane (end of stream / shutdown) and snapshot
+    /// per-model swap counts from the registry.
+    pub fn flush(&mut self) {
+        let due = match self.batchers.as_mut() {
+            Some(b) => b.poll(f64::INFINITY),
+            None => Vec::new(),
+        };
+        for (lane, batch) in due {
+            let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
+            self.flush_batch(lane, batch, now_ns);
+        }
+        self.snapshot_swaps();
+    }
+
+    /// Fold the route-indexed scratch into the name-keyed
+    /// [`ServiceStats::per_model`] map and refresh each routed model's
+    /// swap count from the live registry.  Draining the scratch makes
+    /// repeated flushes safe (nothing is double-counted).
+    pub fn snapshot_swaps(&mut self) {
+        for (route, scratch) in self.per_model_scratch.iter_mut().enumerate() {
+            let name = &self.router.model_names()[route];
+            let entry = self.stats.per_model.entry(name.clone()).or_default();
+            entry.inferences += scratch.inferences;
+            if scratch.classes.len() > entry.classes.len() {
+                entry.classes.resize(scratch.classes.len(), 0);
+            }
+            for (a, b) in entry.classes.iter_mut().zip(&scratch.classes) {
+                *a += b;
+            }
+            entry.swaps = self.registry.swap_count(name);
+            *scratch = ModelServiceStats::default();
+        }
+    }
+
+    /// Score one lane's batch under a single pinned epoch and account
+    /// every verdict (latency semantics shared with the single-model
+    /// loop via [`batch_item_latency_ns`]).
+    fn flush_batch(&mut self, lane: usize, batch: TimedBatch<PendingFlow>, now_ns: f64) {
+        self.batch_meta.clear();
+        self.batch_inputs.clear();
+        for (enq_ns, flow) in batch {
+            self.batch_meta.push((flow.id, enq_ns));
+            self.batch_inputs.push(flow.packed);
+        }
+        let inputs = std::mem::take(&mut self.batch_inputs);
+        let mut classes = std::mem::take(&mut self.batch_classes);
+        let tag = self.exec.classify_batch(lane, &inputs, &mut classes);
+        let exec_ns = self.exec.batch_latency_ns(classes.len());
+        for i in 0..classes.len() {
+            let (id, enq_ns) = self.batch_meta[i];
+            let latency_ns = batch_item_latency_ns(now_ns, enq_ns, exec_ns);
+            self.finish_inference(lane, id, classes[i], tag.clone(), latency_ns);
+        }
+        self.batch_inputs = inputs;
+        self.batch_classes = classes;
+    }
+
+    fn finish_inference(
+        &mut self,
+        route: usize,
+        id: u64,
+        class: usize,
+        tag: VersionTag,
+        latency_ns: f64,
+    ) {
+        self.stats.inferences += 1;
+        if class >= self.stats.classes.len() {
+            self.stats.classes.resize(class + 1, 0);
+        }
+        self.stats.classes[class] += 1;
+        // Route-indexed: no key allocation, no map walk per verdict.
+        self.per_model_scratch[route].record(class);
+        self.stats.latency.record(latency_ns);
+        self.sink.write(self.output, id, class);
+        if self.log_tags {
+            self.tagged.push(TaggedVerdict { id, class, tag });
+        }
+    }
+
+    /// Event loop: drain the channel until all senders drop; flushes and
+    /// returns the accumulated statistics plus the tagged verdict log.
+    pub fn run(mut self, rx: mpsc::Receiver<PacketEvent>) -> (ServiceStats, Vec<TaggedVerdict>) {
+        while let Ok(ev) = rx.recv() {
+            self.handle(&ev);
+        }
+        self.flush();
+        (self.stats, self.tagged)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,6 +644,162 @@ mod tests {
         assert_eq!(a.classes, vec![1, 1, 7]);
         assert_eq!(a.stage_blocked, vec![4, 4]);
         assert_eq!(a.latency.count(), 2);
+    }
+
+    #[test]
+    fn per_model_stats_merge_keywise_grow_and_max_swaps() {
+        let mut a = ServiceStats::default();
+        a.per_model.insert(
+            "anomaly".into(),
+            ModelServiceStats { inferences: 3, classes: vec![2, 1], swaps: 4 },
+        );
+        a.per_model.insert(
+            "tomography".into(),
+            ModelServiceStats { inferences: 1, classes: vec![1], swaps: 0 },
+        );
+        let mut b = ServiceStats::default();
+        // Same slot seen by another stage: counts add, histogram grows,
+        // swap snapshots of the shared counter take the max (not the
+        // sum — both stages read the same registry slot).
+        b.per_model.insert(
+            "anomaly".into(),
+            ModelServiceStats { inferences: 2, classes: vec![0, 1, 5], swaps: 2 },
+        );
+        // A slot only the other stage routed.
+        b.per_model.insert(
+            "traffic-class".into(),
+            ModelServiceStats { inferences: 7, classes: vec![7], swaps: 1 },
+        );
+        a.merge(&b);
+        assert_eq!(
+            a.per_model["anomaly"],
+            ModelServiceStats { inferences: 5, classes: vec![2, 2, 5], swaps: 4 }
+        );
+        assert_eq!(
+            a.per_model["tomography"],
+            ModelServiceStats { inferences: 1, classes: vec![1], swaps: 0 }
+        );
+        assert_eq!(
+            a.per_model["traffic-class"],
+            ModelServiceStats { inferences: 7, classes: vec![7], swaps: 1 }
+        );
+        // Merging an empty map changes nothing.
+        let snapshot = a.per_model.clone();
+        a.merge(&ServiceStats::default());
+        assert_eq!(a.per_model, snapshot);
+    }
+
+    fn two_model_registry() -> (RegistryHandle, ModelRouter) {
+        let h = RegistryHandle::new();
+        h.publish("anomaly", &BnnModel::random("anomaly", 256, &[32, 16, 2], 21))
+            .unwrap();
+        h.publish("traffic-class", &BnnModel::random("traffic-class", 256, &[32, 16, 2], 22))
+            .unwrap();
+        let router = ModelRouter::hash_split(
+            TriggerCondition::EveryNPackets(10),
+            vec!["anomaly".into(), "traffic-class".into()],
+        );
+        (h, router)
+    }
+
+    #[test]
+    fn routed_service_tags_every_verdict_and_accounts_per_model() {
+        let (h, router) = two_model_registry();
+        let mut svc =
+            MultiModelService::new(h.clone(), router, OutputSelector::Memory, 100.0).unwrap();
+        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 60, 5);
+        for _ in 0..6000 {
+            let p = gen.next_packet();
+            svc.handle(&PacketEvent { packet: p, payload_words: None });
+        }
+        svc.flush();
+        assert!(svc.stats.triggers > 0);
+        assert_eq!(svc.stats.triggers, svc.stats.inferences);
+        assert_eq!(svc.tagged.len() as u64, svc.stats.inferences);
+        assert_eq!(svc.sink.memory.len() as u64, svc.stats.inferences);
+        // No publishes happened: every tag is version 1, swaps are 0.
+        for t in &svc.tagged {
+            assert_eq!(t.tag.version(), 1);
+        }
+        let pm = &svc.stats.per_model;
+        assert_eq!(pm.len(), 2);
+        assert_eq!(
+            pm.values().map(|m| m.inferences).sum::<u64>(),
+            svc.stats.inferences
+        );
+        for m in pm.values() {
+            assert_eq!(m.swaps, 0);
+        }
+        // Per-model histograms sum to the global one.
+        let mut summed = vec![0u64; svc.stats.classes.len()];
+        for m in pm.values() {
+            for (i, &c) in m.classes.iter().enumerate() {
+                summed[i] += c;
+            }
+        }
+        assert_eq!(summed, svc.stats.classes);
+    }
+
+    #[test]
+    fn routed_batched_route_matches_unbatched_and_survives_hot_swap() {
+        let (h, router) = two_model_registry();
+        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 40, 6);
+        let events: Vec<PacketEvent> = (0..4000)
+            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
+            .collect();
+        let mut plain =
+            MultiModelService::new(h.clone(), router.clone(), OutputSelector::Memory, 100.0)
+                .unwrap();
+        for ev in &events {
+            plain.handle(ev);
+        }
+        plain.flush();
+        let mut batched =
+            MultiModelService::new(h.clone(), router, OutputSelector::Memory, 100.0)
+                .unwrap()
+                .with_batching(7, 1e12)
+                .with_shards(3);
+        for ev in &events {
+            batched.handle(ev);
+        }
+        batched.flush();
+        assert_eq!(batched.pending(), 0);
+        assert_eq!(batched.stats.triggers, plain.stats.triggers);
+        assert_eq!(batched.stats.classes, plain.stats.classes);
+        assert_eq!(batched.stats.per_model, plain.stats.per_model);
+        let mut a = plain.sink.memory.clone();
+        let mut b = batched.sink.memory.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        // Hot-swap both slots with the *same* weights mid-stream: a
+        // fresh run's verdicts are bit-identical, but tags move to v2
+        // and swap counts show up in the per-model stats.
+        let mut swapped =
+            MultiModelService::new(h.clone(), ModelRouter::hash_split(
+                TriggerCondition::EveryNPackets(10),
+                vec!["anomaly".into(), "traffic-class".into()],
+            ), OutputSelector::Memory, 100.0)
+            .unwrap();
+        for (i, ev) in events.iter().enumerate() {
+            if i == events.len() / 2 {
+                h.publish("anomaly", &BnnModel::random("anomaly", 256, &[32, 16, 2], 21))
+                    .unwrap();
+                h.publish(
+                    "traffic-class",
+                    &BnnModel::random("traffic-class", 256, &[32, 16, 2], 22),
+                )
+                .unwrap();
+            }
+            swapped.handle(ev);
+        }
+        swapped.flush();
+        assert_eq!(swapped.stats.classes, plain.stats.classes);
+        assert!(swapped.tagged.iter().any(|t| t.tag.version() == 1));
+        assert!(swapped.tagged.iter().any(|t| t.tag.version() == 2));
+        for m in swapped.stats.per_model.values() {
+            assert_eq!(m.swaps, 1);
+        }
     }
 
     #[test]

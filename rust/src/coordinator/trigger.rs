@@ -3,6 +3,7 @@
 //! a new flow, the reception of a predefined number of packets for a
 //! given flow, the parsing of a given value in a packet header."
 
+use crate::net::flow::ShardedFlowTable;
 use crate::net::packet::Packet;
 
 /// When to fire the NN executor for a packet/flow event.
@@ -37,6 +38,87 @@ impl TriggerCondition {
     }
 }
 
+/// How routed flows pick their model.
+#[derive(Debug, Clone)]
+enum RouteKind {
+    /// First rule whose [`TriggerCondition`] fires wins; its model index
+    /// is the route.  Lets different trigger classes hit different
+    /// models (tab01: new-flow → `anomaly`, port match → `traffic-class`,
+    /// probe packets → `tomography`).
+    Rules(Vec<(TriggerCondition, usize)>),
+    /// One trigger gates all inference; firing flows are split across
+    /// the model set by canonical flow hash (multi-tenant sharding: both
+    /// directions of a flow always land on the same model).
+    HashSplit(TriggerCondition),
+}
+
+/// Maps trigger outcomes to **named models** — the per-flow routing
+/// layer of the multi-model registry.  Route indices returned by
+/// [`route`](Self::route) index [`model_names`](Self::model_names),
+/// which is also the order a
+/// [`MultiModelExecutor`](crate::bnn::MultiModelExecutor) binds them in.
+///
+/// Shard-safety invariant (inherited from [`TriggerCondition::fires`]
+/// and load-bearing for the routed pipeline's determinism): the routing
+/// decision is a pure function of the packet and *that flow's* state —
+/// no clock, no cross-flow state, no registry version.  A publish
+/// changes which *weights* a model name resolves to, never which model
+/// name a flow routes to.
+#[derive(Debug, Clone)]
+pub struct ModelRouter {
+    names: Vec<String>,
+    kind: RouteKind,
+}
+
+impl ModelRouter {
+    /// First-match-wins rule list; duplicate model names collapse onto
+    /// one route index (first occurrence order).
+    pub fn rules(rules: Vec<(TriggerCondition, String)>) -> Self {
+        assert!(!rules.is_empty(), "ModelRouter needs at least one rule");
+        let mut names: Vec<String> = Vec::new();
+        let mut compiled = Vec::with_capacity(rules.len());
+        for (cond, model) in rules {
+            let idx = names.iter().position(|n| n == &model).unwrap_or_else(|| {
+                names.push(model.clone());
+                names.len() - 1
+            });
+            compiled.push((cond, idx));
+        }
+        Self { names, kind: RouteKind::Rules(compiled) }
+    }
+
+    /// Split flows that fire `cond` across `names` by canonical flow
+    /// hash ([`ShardedFlowTable::shard_of`] — the same formula the
+    /// pipeline shards with, so both directions of a flow agree).
+    pub fn hash_split(cond: TriggerCondition, names: Vec<String>) -> Self {
+        assert!(!names.is_empty(), "ModelRouter needs at least one model");
+        Self { names, kind: RouteKind::HashSplit(cond) }
+    }
+
+    /// The routed model names, in route-index order.
+    pub fn model_names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn n_models(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Route a packet event: `Some(model index)` if any trigger fires.
+    /// Same argument contract as [`TriggerCondition::fires`].
+    pub fn route(&self, pkt: &Packet, is_new_flow: bool, flow_pkts: u32) -> Option<usize> {
+        match &self.kind {
+            RouteKind::Rules(rules) => rules
+                .iter()
+                .find(|(c, _)| c.fires(pkt, is_new_flow, flow_pkts))
+                .map(|&(_, idx)| idx),
+            RouteKind::HashSplit(cond) => cond
+                .fires(pkt, is_new_flow, flow_pkts)
+                .then(|| ShardedFlowTable::shard_of(pkt, self.names.len())),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,6 +147,51 @@ mod tests {
         assert!(TriggerCondition::DstPort(443).fires(&p, false, 3));
         assert!(!TriggerCondition::DstPort(80).fires(&p, false, 3));
         assert!(TriggerCondition::EveryPacket.fires(&p, false, 7));
+    }
+
+    #[test]
+    fn router_rules_first_match_wins_and_names_dedupe() {
+        let r = ModelRouter::rules(vec![
+            (TriggerCondition::DstPort(443), "traffic-class".into()),
+            (TriggerCondition::NewFlow, "anomaly".into()),
+            (TriggerCondition::EveryNPackets(10), "anomaly".into()),
+        ]);
+        assert_eq!(r.model_names(), ["traffic-class".to_string(), "anomaly".to_string()]);
+        assert_eq!(r.n_models(), 2);
+        // Port rule shadows the new-flow rule when both fire.
+        assert_eq!(r.route(&pkt(443), true, 1), Some(0));
+        // New flow on another port → anomaly.
+        assert_eq!(r.route(&pkt(80), true, 1), Some(1));
+        // 10th packet on another port → anomaly via the duplicate name.
+        assert_eq!(r.route(&pkt(80), false, 10), Some(1));
+        // Nothing fires → no inference.
+        assert_eq!(r.route(&pkt(80), false, 3), None);
+    }
+
+    #[test]
+    fn router_hash_split_is_direction_stable_and_in_range() {
+        let names: Vec<String> = (0..3).map(|i| format!("m{i}")).collect();
+        let r = ModelRouter::hash_split(TriggerCondition::EveryPacket, names);
+        for i in 0..64u32 {
+            let mut fwd = pkt(443);
+            fwd.src_ip = 100 + i;
+            fwd.dst_ip = 7;
+            fwd.src_port = 9000;
+            let mut rev = fwd;
+            std::mem::swap(&mut rev.src_ip, &mut rev.dst_ip);
+            std::mem::swap(&mut rev.src_port, &mut rev.dst_port);
+            let a = r.route(&fwd, false, 1).unwrap();
+            let b = r.route(&rev, false, 1).unwrap();
+            assert_eq!(a, b, "both directions of flow {i} must share a model");
+            assert!(a < 3);
+        }
+        // Non-firing trigger routes nothing.
+        let gated = ModelRouter::hash_split(
+            TriggerCondition::EveryNPackets(10),
+            vec!["only".into()],
+        );
+        assert_eq!(gated.route(&pkt(1), false, 3), None);
+        assert_eq!(gated.route(&pkt(1), false, 10), Some(0));
     }
 
     #[test]

@@ -11,11 +11,12 @@
 
 use std::path::PathBuf;
 
-use n3ic::bnn::BnnModel;
+use n3ic::bnn::{BnnModel, RegistryHandle};
 use n3ic::config::Backend;
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, NnBatchExecutor, NnExecutor, OutputSelector,
-    PacketEvent, PipelineConfig, PipelineService, TriggerCondition, STAGE_LINKS,
+    CoordinatorService, CoreExecutor, ModelRouter, MultiModelService, NnBatchExecutor,
+    NnExecutor, OutputSelector, PacketEvent, PipelineConfig, PipelineService,
+    RoutedPipelineService, TriggerCondition, STAGE_LINKS,
 };
 use n3ic::net::traffic::{CbrSpec, TrafficGen};
 
@@ -34,29 +35,46 @@ COMMANDS:
                              verdicts are bit-identical to the serial
                              loop on the same seeded traffic)
                --queue-depth N (with --pipeline: bounded stage queues)
+
+               Multi-model registry mode (repeat --model with NAME=PATH
+               pairs to serve several named, versioned models at once;
+               flows are split across them by canonical flow hash):
+               --model anomaly=m1.json --model traffic-class=m2.json
+               --swap-every N (hot-republish one model every N packets
+                               — zero-downtime weight swap demo: the
+                               run never pauses, verdict tags move to
+                               the new version, per-model swap counts
+                               land in the report)
+               In-process control plane: hold a clone of the service's
+               RegistryHandle and call publish(name, &model) from any
+               thread; readers observe the new version on their next
+               batch, never a torn one.
   experiment   <fig03|...|tab02|abl-crossover|abl-cam|all>
   models
   compile-p4   --model NAME [--format p4|bmv2]
 ";
 
-/// Tiny flag parser: --key value pairs after the subcommand.
+/// Tiny flag parser: --key value pairs after the subcommand.  Flags are
+/// repeatable; scalar getters take the last occurrence, `get_all` sees
+/// every one (the registry mode's repeated `--model NAME=PATH`).
 struct Args {
-    flags: std::collections::HashMap<String, String>,
+    flags: std::collections::HashMap<String, Vec<String>>,
     positional: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Self {
-        let mut flags = std::collections::HashMap::new();
+        let mut flags: std::collections::HashMap<String, Vec<String>> =
+            std::collections::HashMap::new();
         let mut positional = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
                 if i + 1 < argv.len() {
-                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    flags.entry(key.to_string()).or_default().push(argv[i + 1].clone());
                     i += 2;
                 } else {
-                    flags.insert(key.to_string(), "true".into());
+                    flags.entry(key.to_string()).or_default().push("true".into());
                     i += 1;
                 }
             } else {
@@ -68,14 +86,23 @@ impl Args {
     }
 
     fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .cloned()
+            .unwrap_or_else(|| default.into())
     }
 
     fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.flags
             .get(key)
+            .and_then(|v| v.last())
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
+    }
+
+    fn get_all(&self, key: &str) -> Vec<String> {
+        self.flags.get(key).cloned().unwrap_or_default()
     }
 }
 
@@ -186,6 +213,16 @@ fn pjrt_executor(_m: BnnModel, _artifacts: &std::path::Path) -> n3ic::Result<Cor
 }
 
 fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
+    // `--model NAME=PATH` (repeatable) selects the multi-model registry
+    // mode; a bare `--model NAME` keeps the single-model path.
+    let registry_pairs: Vec<(String, String)> = args
+        .get_all("model")
+        .iter()
+        .filter_map(|v| v.split_once('=').map(|(n, p)| (n.to_string(), p.to_string())))
+        .collect();
+    if !registry_pairs.is_empty() {
+        return serve_registry(args, artifacts, &registry_pairs);
+    }
     let model_name = args.get("model", "traffic");
     let backend: Backend = args.get("backend", "fpga").parse()?;
     let packets = args.get_u64("packets", 1_000_000);
@@ -277,6 +314,165 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
     }
     println!(
         "host wall        : {:.2} s ({:.2} Mpkt/s through the pipeline)",
+        wall.as_secs_f64(),
+        st.packets as f64 / wall.as_secs_f64() / 1e6
+    );
+    Ok(())
+}
+
+/// Resolve one `--model NAME=PATH` pair: a readable model JSON wins;
+/// otherwise fall back to the artifacts dir, then to seeded random
+/// weights (keeps the demo runnable in a bare checkout).
+fn load_registry_model(artifacts: &std::path::Path, name: &str, path: &str) -> BnnModel {
+    if let Ok(mut m) = BnnModel::load(std::path::Path::new(path)) {
+        m.name = name.to_string();
+        return m;
+    }
+    let mut m = load_model(artifacts, path);
+    m.name = name.to_string();
+    m
+}
+
+/// Multi-model registry serving: every named model is published into a
+/// shared registry, flows are hash-split across the slots, and
+/// `--swap-every N` hot-republishes one slot every N packets while the
+/// run keeps serving — the zero-downtime swap the registry exists for.
+fn serve_registry(
+    args: &Args,
+    artifacts: &std::path::Path,
+    pairs: &[(String, String)],
+) -> n3ic::Result<()> {
+    let packets = args.get_u64("packets", 1_000_000);
+    let flows = args.get_u64("flows", 100_000);
+    let trigger_pkts = args.get_u64("trigger-pkts", 10) as u32;
+    let batch = args.get_u64("batch", 0) as usize;
+    let shards = args.get_u64("shards", 1) as usize;
+    let pipeline = args.get_u64("pipeline", 0) as usize;
+    let swap_every = args.get_u64("swap-every", 0);
+
+    let registry = RegistryHandle::new();
+    let mut names = Vec::new();
+    let mut models = Vec::new();
+    let mut latency_ns = 0.0f64;
+    for (name, path) in pairs {
+        let m = load_registry_model(artifacts, name, path);
+        // serve feeds flow-statistics features of a fixed width; a model
+        // with any other input width would panic mid-serve on its first
+        // routed flow — reject it up front with a usable message.
+        let want_words = n3ic::bnn::words_for(n3ic::net::features::INPUT_BITS);
+        if m.in_words() != want_words {
+            anyhow::bail!(
+                "--model {name}={path}: input width {} words does not match the \
+                 flow-feature vector ({want_words} words / {} bits); all registry \
+                 serve models must accept flow features",
+                m.in_words(),
+                n3ic::net::features::INPUT_BITS
+            );
+        }
+        latency_ns = latency_ns.max(n3ic::fpga::FpgaTiming::new(&m).latency_ns());
+        let tag = registry.publish(name, &m).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("published {tag}  ({})", m.describe());
+        names.push(name.clone());
+        models.push(m);
+    }
+    let router = ModelRouter::hash_split(
+        TriggerCondition::EveryNPackets(trigger_pkts),
+        names.clone(),
+    );
+    let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, flows, 7);
+    let t0 = std::time::Instant::now();
+    let (st, blocked, engine) = if pipeline > 0 {
+        let cfg = PipelineConfig {
+            workers: pipeline,
+            queue_depth: args.get_u64("queue-depth", 1024) as usize,
+            batch,
+            max_wait_ns: 1e6,
+            ..Default::default()
+        };
+        let svc = RoutedPipelineService::new(
+            registry.clone(),
+            router,
+            OutputSelector::Memory,
+            cfg,
+            latency_ns,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .with_shards(shards)
+        .without_tag_log();
+        // The ingress sharder evaluates this iterator on the calling
+        // thread while the downstream stages run, so publishing from
+        // inside it is a true live hot-swap — and it lands exactly
+        // every `swap_every` packets, as documented (same weights, new
+        // version: the swap machinery is exercised without changing
+        // verdict semantics).
+        let mut swap_cursor = 0usize;
+        let events = (0..packets).map(|i| {
+            if swap_every > 0 && i > 0 && i % swap_every == 0 {
+                let k = swap_cursor % models.len();
+                swap_cursor += 1;
+                registry
+                    .publish(&names[k], &models[k])
+                    .expect("republish of unchanged shape cannot fail");
+            }
+            PacketEvent { packet: gen.next_packet(), payload_words: None }
+        });
+        let report = svc.run(events).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let blocked = Some(report.stats.stage_blocked.clone());
+        (report.stats, blocked, report.engine)
+    } else {
+        let mut svc =
+            MultiModelService::new(registry.clone(), router, OutputSelector::Memory, latency_ns)
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .with_shards(shards)
+                .without_tag_log();
+        if batch > 0 {
+            svc = svc.with_batching(batch, 1e6);
+        }
+        let mut swap_cursor = 0usize;
+        for i in 0..packets {
+            if swap_every > 0 && i > 0 && i % swap_every == 0 {
+                let k = swap_cursor % models.len();
+                swap_cursor += 1;
+                registry
+                    .publish(&names[k], &models[k])
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            svc.handle(&PacketEvent { packet: gen.next_packet(), payload_words: None });
+        }
+        svc.flush();
+        let engine = svc.exec.engine_stats();
+        (svc.stats, None, engine)
+    };
+    let wall = t0.elapsed();
+    println!("== serve report (multi-model registry) ==");
+    println!("packets          : {}", st.packets);
+    println!("nn inferences    : {}", st.inferences);
+    println!("class histogram  : {:?}", st.classes);
+    let versions = registry.versions();
+    for (name, m) in &st.per_model {
+        println!(
+            "model {name:14}: v{} ({} swaps)  {} inferences  classes {:?}",
+            versions.get(name).copied().unwrap_or(0),
+            m.swaps,
+            m.inferences,
+            m.classes
+        );
+    }
+    println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
+    if let Some(blocked) = blocked {
+        for (link, n) in STAGE_LINKS.iter().zip(&blocked) {
+            println!("backpressure     : {link:18} {n} blocked sends");
+        }
+    }
+    if let Some(es) = engine {
+        println!(
+            "sharded engine   : {} batches, {:.2}M flows/s inside run_batch",
+            es.batches,
+            es.flows_per_sec() / 1e6
+        );
+    }
+    println!(
+        "host wall        : {:.2} s ({:.2} Mpkt/s through the registry route)",
         wall.as_secs_f64(),
         st.packets as f64 / wall.as_secs_f64() / 1e6
     );

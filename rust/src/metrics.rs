@@ -145,6 +145,92 @@ mod tests {
     }
 
     #[test]
+    fn empty_histogram_reports_zeros_everywhere() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.max_ns(), 0.0);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile_ns(p), 0.0, "p{p} of empty");
+        }
+        assert_eq!(h.p50_us(), 0.0);
+        assert_eq!(h.p95_us(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_pins_every_percentile_to_its_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(5_000.0); // 5 µs
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean_ns(), 5_000.0);
+        assert_eq!(h.max_ns(), 5_000.0);
+        // Every percentile — including the degenerate p=0, whose target
+        // is clamped to the first sample — lands on the one occupied
+        // bucket's geometric midpoint, within bucket resolution
+        // (×10^(1/16) ≈ ±15% around the sample).
+        let p50 = h.percentile_ns(50.0);
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert_eq!(h.percentile_ns(p), p50, "p{p} of single sample");
+        }
+        assert!(
+            (p50 - 5_000.0).abs() / 5_000.0 < 0.16,
+            "midpoint {p50} too far from the 5µs sample"
+        );
+    }
+
+    #[test]
+    fn sub_nanosecond_samples_clamp_into_the_first_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(0.5);
+        h.record(1.0);
+        assert_eq!(h.count(), 3);
+        // All three land in bucket 0; the percentile is its midpoint.
+        let p = h.percentile_ns(99.0);
+        assert_eq!(p, h.percentile_ns(1.0));
+        assert!(p >= 1.0 && p < 2.0, "bucket-0 midpoint, got {p}");
+    }
+
+    #[test]
+    fn saturating_sample_clamps_into_the_last_bucket() {
+        let mut h = LatencyHistogram::new();
+        // Far beyond the ~17min top of the 13-decade range.
+        h.record(1e30);
+        // Exact counters are unaffected by the clamp…
+        assert_eq!(h.max_ns(), 1e30);
+        assert_eq!(h.mean_ns(), 1e30);
+        // …while percentiles saturate at the last bucket's midpoint
+        // (10^((BUCKETS-0.5)/8)) instead of overflowing or panicking.
+        let top = 10f64.powf((BUCKETS as f64 - 0.5) / 8.0);
+        assert_eq!(h.percentile_ns(50.0), top);
+        assert_eq!(h.percentile_ns(100.0), top);
+        // A second out-of-range sample shares the bucket (no growth).
+        h.record(1e25);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile_ns(100.0), top);
+    }
+
+    #[test]
+    fn merge_into_empty_and_from_empty_are_identities() {
+        let mut filled = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            filled.record(i as f64 * 50.0);
+        }
+        let p95_before = filled.percentile_ns(95.0);
+        // Merging an empty histogram changes nothing.
+        filled.merge(&LatencyHistogram::new());
+        assert_eq!(filled.count(), 100);
+        assert_eq!(filled.percentile_ns(95.0), p95_before);
+        // Merging into an empty one reproduces the source exactly.
+        let mut empty = LatencyHistogram::new();
+        empty.merge(&filled);
+        assert_eq!(empty.count(), filled.count());
+        assert_eq!(empty.mean_ns(), filled.mean_ns());
+        assert_eq!(empty.max_ns(), filled.max_ns());
+        assert_eq!(empty.percentile_ns(95.0), p95_before);
+    }
+
+    #[test]
     fn merge_accumulates() {
         let mut a = LatencyHistogram::new();
         let mut b = LatencyHistogram::new();

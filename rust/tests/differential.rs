@@ -9,9 +9,14 @@
 //! no proptest), extending `batch_exact.rs` from the batch subsystem to
 //! every backend.
 
-use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnModel, ShardedEngine};
+use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnModel, RegistryHandle, ShardedEngine};
+use n3ic::coordinator::{
+    CoordinatorService, CoreExecutor, ModelRouter, MultiModelService, OutputSelector,
+    PacketEvent, TriggerCondition,
+};
 use n3ic::fpga::FpgaExecutor;
-use n3ic::net::traffic::Rng;
+use n3ic::net::flow::ShardedFlowTable;
+use n3ic::net::traffic::{CbrSpec, Rng};
 use n3ic::pisa::compile_bnn;
 
 const MODELS: u64 = 50;
@@ -106,6 +111,109 @@ fn all_five_executor_paths_agree_bit_for_bit() {
             assert_eq!(fpga.classify(x), want_classes[i], "diff{m} input {i} fpga class");
         }
     }
+}
+
+/// ISSUE 4 satellite: fuzz the registry *route*.  N random models under
+/// random names, traffic hash-split across them — the routed service's
+/// verdicts must be bit-identical to running each model standalone on
+/// exactly its flow subset (the subset `ShardedFlowTable::shard_of`
+/// carves out, which is also how the router splits).
+#[test]
+fn registry_route_matches_standalone_per_flow_subset() {
+    const N_MODELS: usize = 6;
+    const PACKETS: usize = 20_000;
+    let mut rng = Rng::new(0xA11C_E000);
+
+    // Random names (unique by construction: an index plus random hex).
+    let names: Vec<String> = (0..N_MODELS)
+        .map(|i| format!("m{i}-{:04x}", rng.next_u64() & 0xFFFF))
+        .collect();
+    let models: Vec<BnnModel> = names
+        .iter()
+        .map(|n| BnnModel::random(n, 256, &[32, 16, 2], rng.next_u64()))
+        .collect();
+    let registry = RegistryHandle::new();
+    for (n, m) in names.iter().zip(&models) {
+        registry.publish(n, m).unwrap();
+    }
+
+    let trigger = TriggerCondition::EveryNPackets(5);
+    let router = ModelRouter::hash_split(trigger, names.clone());
+    let events: Vec<PacketEvent> = PacketEvent::cbr_burst(
+        CbrSpec { gbps: 40.0, pkt_size: 256 },
+        300,
+        0xBEE5,
+        PACKETS,
+    );
+
+    // Routed run — batched + sharded, the most machinery at once.
+    let mut routed = MultiModelService::new(
+        registry.clone(),
+        router,
+        OutputSelector::Memory,
+        100.0,
+    )
+    .unwrap()
+    .with_batching(8, 1e12)
+    .with_shards(3);
+    for ev in &events {
+        routed.handle(ev);
+    }
+    routed.flush();
+    assert_eq!(routed.stats.triggers, routed.stats.inferences);
+
+    // Standalone reference: model i over only its hash subset.
+    let mut total_standalone = 0u64;
+    for (i, (name, model)) in names.iter().zip(&models).enumerate() {
+        let mut svc = CoordinatorService::new(
+            CoreExecutor::fpga(model.clone()),
+            trigger,
+            OutputSelector::Memory,
+        );
+        for ev in &events {
+            if ShardedFlowTable::shard_of(&ev.packet, N_MODELS) == i {
+                svc.handle(ev);
+            }
+        }
+        svc.flush();
+        total_standalone += svc.stats.inferences;
+
+        // Per-model verdicts: bit-identical multiset of (flow, class).
+        let mut want = svc.sink.memory.clone();
+        want.sort_unstable();
+        let mut got: Vec<(u64, usize)> = routed
+            .tagged
+            .iter()
+            .filter(|t| t.tag.name() == name)
+            .map(|t| (t.id, t.class))
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, want, "model {name} (route {i})");
+
+        // And the per-model histogram matches the standalone one.
+        let pm = &routed.stats.per_model[name];
+        assert_eq!(pm.inferences, svc.stats.inferences, "model {name}");
+        let mut padded = pm.classes.clone();
+        if padded.len() < svc.stats.classes.len() {
+            padded.resize(svc.stats.classes.len(), 0);
+        }
+        assert_eq!(padded, svc.stats.classes, "model {name}");
+        // Nothing was republished: v1 everywhere, zero swaps.
+        assert_eq!(pm.swaps, 0);
+    }
+    assert_eq!(total_standalone, routed.stats.inferences);
+    assert!(
+        routed.tagged.iter().all(|t| t.tag.version() == 1),
+        "no publish happened, every tag must be v1"
+    );
+    // The hash split actually used several models (not all flows on one).
+    let active = routed
+        .stats
+        .per_model
+        .values()
+        .filter(|m| m.inferences > 0)
+        .count();
+    assert!(active >= 3, "only {active} of {N_MODELS} models saw traffic");
 }
 
 #[test]

@@ -46,4 +46,8 @@ N3IC_BENCH_SMOKE=1 cargo bench --bench batch_engine
 echo "== perf smoke + equivalence: pipeline bench =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench pipeline
 
+# Registry pin/publish/swap-storm costs (hot-swap overhead record).
+echo "== perf smoke: registry bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench registry
+
 echo "verify.sh: all gates passed"
