@@ -1,6 +1,6 @@
 //! `batch_engine` — the throughput acceptance grid for the batched
-//! inference subsystem: serial per-item loop (the old
-//! `HostExecutor::run_batch`) vs the weight-stationary tiled
+//! inference subsystem: serial per-item loop (the pre-batch-kernel
+//! host path) vs the weight-stationary tiled
 //! [`BatchKernel`] vs the [`ShardedEngine`], on the paper's
 //! `traffic_32_16_2` model at batch 1/32/1024 × 1/2/4 shards.
 //!

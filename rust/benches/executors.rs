@@ -7,7 +7,7 @@
 
 use n3ic::bench::{bench, group};
 use n3ic::bnn::{BnnExecutor, BnnLayer, BnnModel};
-use n3ic::bnnexec::HostExecutor;
+use n3ic::coordinator::{BackendFactory, InferencePlane};
 use n3ic::pisa::compile_bnn;
 
 fn main() {
@@ -28,18 +28,19 @@ fn main() {
     }
 
     // Since the batch-engine PR this runs the weight-stationary tiled
-    // kernel (see benches/batch_engine.rs for the full serial/tiled/
-    // sharded comparison grid).
-    group("bnnexec_batch (host baseline, real wall clock)");
+    // kernel — now behind the unified `host` backend of the
+    // BackendFactory (see benches/batch_engine.rs for the full
+    // serial/tiled/sharded comparison grid).
+    group("bnnexec_batch (host backend, real wall clock)");
     let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
     for batch in [32usize, 1024] {
         let inputs: Vec<Vec<u32>> = (0..batch)
             .map(|i| BnnLayer::random(1, 256, i as u64).words)
             .collect();
-        let mut host = HostExecutor::new(model.clone());
+        let mut host = BackendFactory::single("host", model.clone()).unwrap();
         let mut classes = Vec::with_capacity(batch);
         let r = bench(&format!("batch{batch}"), || {
-            host.run_batch(std::hint::black_box(&inputs), &mut classes);
+            host.run_batch(0, std::hint::black_box(&inputs), &mut classes);
             classes.len()
         });
         println!(

@@ -1,5 +1,5 @@
 //! `pipeline` — end-to-end throughput grid for the staged serving
-//! runtime: the serial `CoordinatorService` loop vs `PipelineService`
+//! runtime: the unified `Service` in serial mode vs its pipelined mode
 //! at 1/2/4 parse workers × inline/batched inference, on the paper's
 //! `traffic_32_16_2` model over seeded 40Gb/s CBR traffic.
 //!
@@ -19,8 +19,8 @@
 use n3ic::bench::{bench, group, smoke_mode, write_bench_json};
 use n3ic::bnn::BnnModel;
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, OutputSelector, PacketEvent, PipelineConfig,
-    PipelineService, TriggerCondition, STAGE_LINKS,
+    BackendFactory, OutputSelector, PacketEvent, ServeBuilder, ServiceReport, TriggerCondition,
+    STAGE_LINKS,
 };
 use n3ic::json::{obj, Json};
 use n3ic::net::traffic::CbrSpec;
@@ -47,23 +47,27 @@ fn events(packets: usize) -> Vec<PacketEvent> {
     PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, 2000, 7, packets)
 }
 
-fn serial_run(model: &BnnModel, events: &[PacketEvent]) -> (u64, u64, Vec<u64>) {
-    let mut svc = CoordinatorService::new(exec_for(model), TRIGGER, OutputSelector::Memory);
-    for ev in events {
-        svc.handle(ev);
+/// One unified-service run (serial when `workers == 0`).  Weight
+/// generation/packing stays outside the timed loops: iterations pay one
+/// clone of the prebuilt model, not a regeneration.
+fn service_run(
+    model: &BnnModel,
+    events: &[PacketEvent],
+    workers: usize,
+    batch: usize,
+) -> ServiceReport {
+    let mut b = ServeBuilder::new()
+        .backend(BackendFactory::single("fpga", model.clone()).unwrap())
+        .trigger(TRIGGER)
+        .output(OutputSelector::Memory)
+        .pipeline(workers);
+    if batch > 0 {
+        b = b.batching(batch, 1e6);
     }
-    svc.flush();
-    (svc.stats.triggers, svc.stats.inferences, svc.stats.classes)
-}
-
-/// Weight generation/packing stays outside the timed loops: iterations
-/// pay one clone of the prebuilt model, not a regeneration.
-fn exec_for(model: &BnnModel) -> CoreExecutor {
-    CoreExecutor::fpga(model.clone())
-}
-
-fn cfg(workers: usize, batch: usize) -> PipelineConfig {
-    PipelineConfig { workers, batch, ..Default::default() }
+    b.build()
+        .unwrap()
+        .run(events.iter().cloned())
+        .expect("healthy service run")
 }
 
 fn main() {
@@ -73,17 +77,15 @@ fn main() {
 
     // -- Equivalence gate (the reason verify.sh runs this in smoke mode).
     group("pipeline / serial-vs-pipelined equivalence (determinism contract)");
-    let want = serial_run(&nn, &evs);
+    let serial_rep = service_run(&nn, &evs, 0, 0);
+    let want = (
+        serial_rep.stats.triggers,
+        serial_rep.stats.inferences,
+        serial_rep.stats.classes.clone(),
+    );
     for workers in WORKERS {
         for batch in BATCHES {
-            let rep = PipelineService::new(
-                exec_for(&nn),
-                TRIGGER,
-                OutputSelector::Memory,
-                cfg(workers, batch),
-            )
-            .run(evs.iter().cloned())
-            .expect("pipeline run");
+            let rep = service_run(&nn, &evs, workers, batch);
             let got = (rep.stats.triggers, rep.stats.inferences, rep.stats.classes);
             assert_eq!(
                 got, want,
@@ -102,16 +104,9 @@ fn main() {
 
     let mut rows: Vec<Row> = Vec::new();
 
-    group("pipeline / serial loop (the pre-pipeline baseline)");
+    group("pipeline / serial mode (the single-thread baseline)");
     {
-        let r = bench("serial", || {
-            let mut svc = CoordinatorService::new(exec_for(&nn), TRIGGER, OutputSelector::Memory);
-            for ev in &evs {
-                svc.handle(ev);
-            }
-            svc.flush();
-            svc.stats.packets
-        });
+        let r = bench("serial", || service_run(&nn, &evs, 0, 0).stats.packets);
         rows.push(Row {
             mode: "serial",
             workers: 0,
@@ -127,14 +122,7 @@ fn main() {
         for batch in BATCHES {
             let mut blocked: Vec<u64> = Vec::new();
             let r = bench(&format!("pipeline_w{workers}_b{batch}"), || {
-                let rep = PipelineService::new(
-                    exec_for(&nn),
-                    TRIGGER,
-                    OutputSelector::Memory,
-                    cfg(workers, batch),
-                )
-                .run(evs.iter().cloned())
-                .expect("pipeline run");
+                let rep = service_run(&nn, &evs, workers, batch);
                 blocked = rep.stats.stage_blocked.clone();
                 rep.stats.packets
             });

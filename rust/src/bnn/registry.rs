@@ -43,7 +43,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use super::batch::BatchKernel;
-use super::engine::{EngineStats, ShardedEngine};
+use super::engine::{EngineError, EngineStats, ShardedEngine};
 use super::exec::PackedModel;
 use super::BnnModel;
 
@@ -245,6 +245,31 @@ impl ModelRegistry {
         Ok(tag)
     }
 
+    /// Hot-republish a slot's **current** weights as a new version:
+    /// version +1, swap count +1, the packed weights `Arc` reused.
+    /// Readers observe a fresh epoch with identical verdict semantics —
+    /// the cheapest way to exercise the swap machinery live (the serve
+    /// runtime's `.swap_every(n)` knob is built on this).
+    pub fn touch(&self, name: &str) -> Result<VersionTag, RegistryError> {
+        let slot = self
+            .slots
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        let mut epoch = slot.epoch.write().unwrap();
+        let version = epoch.version() + 1;
+        let tag = VersionTag { name: Arc::clone(&epoch.tag.name), version };
+        let packed = Arc::clone(&epoch.packed);
+        *epoch = Arc::new(ModelEpoch { tag: tag.clone(), packed });
+        // Same ordering discipline as `publish`: epoch first, counter
+        // second, both under the write guard.
+        slot.version.store(version, Ordering::Release);
+        slot.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(tag)
+    }
+
     /// A hot-path reader bound to one slot.
     pub fn reader(&self, name: &str) -> Result<SlotReader, RegistryError> {
         let slot = self
@@ -312,6 +337,10 @@ impl RegistryHandle {
 
     pub fn publish(&self, name: &str, model: &BnnModel) -> Result<VersionTag, RegistryError> {
         self.0.publish(name, model)
+    }
+
+    pub fn touch(&self, name: &str) -> Result<VersionTag, RegistryError> {
+        self.0.touch(name)
     }
 
     pub fn reader(&self, name: &str) -> Result<SlotReader, RegistryError> {
@@ -463,6 +492,21 @@ impl MultiModelExecutor {
         inputs: &[Vec<u32>],
         classes: &mut Vec<usize>,
     ) -> VersionTag {
+        match self.try_classify_batch(route, inputs, classes) {
+            Ok(tag) => tag,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible variant of [`classify_batch`](Self::classify_batch): a
+    /// dead or panicked engine shard surfaces as `Err` instead of a
+    /// panic.  `classes` contents are unspecified on error.
+    pub fn try_classify_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<VersionTag, EngineError> {
         let epoch = self.readers[route].pin();
         match self.engine.as_mut() {
             Some(engine) => {
@@ -473,14 +517,14 @@ impl MultiModelExecutor {
                 // (`Arc::try_unwrap` would be flaky) — one copy per
                 // sharded batch is the price; the kernel path below
                 // borrows the slices directly.
-                engine.run_batch_epoch(&epoch, &Arc::new(inputs.to_vec()), classes);
+                engine.try_run_batch_epoch(&epoch, &Arc::new(inputs.to_vec()), classes)?;
             }
             None => {
                 self.kernel.retarget(&epoch.packed);
                 self.kernel.run_batch(inputs, classes);
             }
         }
-        epoch.tag().clone()
+        Ok(epoch.tag().clone())
     }
 
     /// Modeled per-inference device latency (ns).
@@ -489,7 +533,7 @@ impl MultiModelExecutor {
     }
 
     /// Modeled completion time of a batch of `b` (serial-device model,
-    /// matching [`NnBatchExecutor`](crate::coordinator::NnBatchExecutor)'s
+    /// matching [`InferencePlane`](crate::coordinator::InferencePlane)'s
     /// default).
     pub fn batch_latency_ns(&self, b: usize) -> f64 {
         self.latency_ns * b as f64
@@ -668,6 +712,26 @@ mod tests {
             assert_eq!(ct, infer_packed(&tomo, &xt));
             assert_eq!((ta.name(), tt.name()), ("anomaly", "tomography"));
         }
+    }
+
+    #[test]
+    fn touch_republishes_current_weights_as_a_new_version() {
+        let h = handle_with("anomaly", 1);
+        let x = BnnLayer::random(1, 256, 77).words;
+        let want = infer_packed(&model(1), &x);
+        let tag = h.touch("anomaly").unwrap();
+        assert_eq!((tag.name(), tag.version()), ("anomaly", 2));
+        assert_eq!(h.swap_count("anomaly"), 1);
+        // Same weights serve at the new version: verdicts unchanged.
+        let names = vec!["anomaly".to_string()];
+        let mut exec = MultiModelExecutor::new(&h, &names, 100.0).unwrap();
+        let (class, tag) = exec.classify(0, &x);
+        assert_eq!(tag.version(), 2);
+        assert_eq!(class, want);
+        assert_eq!(
+            h.touch("nope").unwrap_err(),
+            RegistryError::UnknownModel("nope".into())
+        );
     }
 
     #[test]

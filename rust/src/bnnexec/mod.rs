@@ -1,56 +1,23 @@
 //! `bnn-exec` — the host-CPU comparison system (§6 "Comparison term").
 //!
-//! Two faces, used together by the experiment drivers:
-//!
-//! * a **real executor** ([`HostExecutor`]): runs Algorithm 1 on this
-//!   machine with 64-bit popcounts and batching — bit-exact with every
-//!   other executor (this is also the production hot path when N3IC is
-//!   deployed in "host" mode);
-//! * a **cost model** ([`HostCostModel`]): reproduces the paper's Haswell
-//!   E5-1630v3 numbers (batch latency/throughput incl. the PCIe fetch of
-//!   flow statistics from the NIC and the result writeback), so figures
-//!   can be regenerated with the paper's absolute scales.
+//! Since the `InferencePlane` unification this module holds only the
+//! **cost model** ([`HostCostModel`]): it reproduces the paper's Haswell
+//! E5-1630v3 numbers (batch latency/throughput incl. the PCIe fetch of
+//! flow statistics from the NIC and the result writeback), so figures
+//! can be regenerated with the paper's absolute scales.  The *real*
+//! host executor — Algorithm 1 with 64-bit popcounts and the
+//! weight-stationary batch kernel — is the `"host"` backend of
+//! [`BackendFactory`](crate::coordinator::BackendFactory), behind the
+//! same [`InferencePlane`](crate::coordinator::InferencePlane) surface
+//! as every device model (its batch cost hook *is* this model's curve).
 //!
 //! Cost-model calibration anchors (§6.1, Fig. 6/14, App. B.1.2): max
 //! 1.18M flows/s on one core at batch 10k; ~1 ms latency at batch 1k and
 //! ~8 ms at 10k; 10s of µs at batch 1; ~40 µs for one tomography probe
 //! set; ~100 µs for a 4096×2048 FC (a quarter of N3IC-NFP's 400 µs).
 
-use crate::bnn::{BatchKernel, BnnExecutor, BnnModel};
+use crate::bnn::BnnModel;
 use crate::pcie::PcieModel;
-
-/// Real batched executor (one worker = one CPU core).
-///
-/// Single inferences go through [`BnnExecutor`]; batches go through the
-/// weight-stationary [`BatchKernel`] (B inputs per weight-row pass)
-/// instead of the old serial per-input loop.  Both share one copy of
-/// the packed weights.
-pub struct HostExecutor {
-    exec: BnnExecutor,
-    kernel: BatchKernel,
-}
-
-impl HostExecutor {
-    pub fn new(model: BnnModel) -> Self {
-        let exec = BnnExecutor::new(model);
-        let kernel = BatchKernel::with_packed(exec.packed_model());
-        Self { exec, kernel }
-    }
-
-    pub fn model(&self) -> &BnnModel {
-        self.exec.model()
-    }
-
-    /// Run a batch of packed inputs; writes one class per input.
-    pub fn run_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
-        self.kernel.run_batch(inputs, classes)
-    }
-
-    /// Single inference returning final scores (hot-path form).
-    pub fn infer(&mut self, x: &[u32], scores: &mut [i32]) {
-        self.exec.infer(x, scores)
-    }
-}
 
 /// Calibrated Haswell cost model.
 #[derive(Debug, Clone, Copy)]
@@ -129,20 +96,6 @@ mod tests {
 
     fn traffic() -> BnnModel {
         BnnModel::random("traffic", 256, &[32, 16, 2], 1)
-    }
-
-    #[test]
-    fn executor_matches_core_bnn() {
-        let model = traffic();
-        let mut host = HostExecutor::new(model.clone());
-        let inputs: Vec<Vec<u32>> = (0..32)
-            .map(|i| crate::bnn::BnnLayer::random(1, 256, 50 + i).words)
-            .collect();
-        let mut classes = Vec::new();
-        host.run_batch(&inputs, &mut classes);
-        for (x, &c) in inputs.iter().zip(&classes) {
-            assert_eq!(c, crate::bnn::infer_packed(&model, x));
-        }
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Launcher configuration: artifacts location, device selection, service
 //! parameters.  Loaded from JSON (`--config`) with CLI overrides.
+//!
+//! Since the `InferencePlane` unification, backend names are registered
+//! in [`BackendFactory`](crate::coordinator::BackendFactory) — the
+//! [`Backend`] enum here is a deprecated duplicate vocabulary kept one
+//! PR for config-file compatibility.
+#![allow(deprecated)]
 
 use std::path::PathBuf;
 use std::str::FromStr;
@@ -7,6 +13,10 @@ use std::str::FromStr;
 use crate::json::Json;
 
 /// Which executor backend the coordinator drives.
+#[deprecated(
+    note = "backend names live in `coordinator::BackendFactory` now; \
+            build planes with `BackendFactory::single_sharded(name, …)`"
+)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
     /// NFP4000 SoC model, data-parallel mode (N3IC-NFP).

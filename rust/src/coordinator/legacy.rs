@@ -1,0 +1,604 @@
+//! Deprecated serving API — thin shims over the unified
+//! [`Service`](super::Service) runtime, kept for **one PR** as a
+//! migration bridge to [`ServeBuilder`](super::ServeBuilder) +
+//! [`BackendFactory`](super::BackendFactory).
+//!
+//! The shims are *behavior*-preserving, not source-identical: the old
+//! public fields (`stats`, `sink`, `flows`, `exec`) are now accessor
+//! methods, the pipeline runtimes return the unified
+//! [`ServiceReport`]/[`ServiceError`] instead of the deleted
+//! `PipelineReport`/`PipelineError` pair, and backend faults panic at
+//! the next `handle`/`flush` rather than mid-batch.  Out-of-tree
+//! callers doing more than construct-configure-serve should jump
+//! straight to the builder (README §Architecture has the mapping).
+//!
+//! Everything here delegates to the new machinery; nothing in this
+//! module has behavior of its own.  In-repo callers are migrated and
+//! `scripts/verify.sh` denies `deprecated` over tests/benches, so no
+//! new use can land.
+#![allow(deprecated)]
+
+use std::marker::PhantomData;
+use std::sync::mpsc;
+
+use crate::bnn::{BnnModel, EngineStats, RegistryError, RegistryHandle, VersionTag};
+
+use super::backend::registry_plane;
+use super::plane::{Capabilities, InferencePlane};
+use super::selector::{OutputSelector, OutputSink};
+use super::service::{
+    PacketEvent, RouteLogic, SerialCore, ServeBuilder, ServiceError, ServiceReport, ServiceStats,
+    TaggedVerdict,
+};
+use super::trigger::{ModelRouter, TriggerCondition};
+
+/// Uniform executor interface of the pre-`InferencePlane` API.
+#[deprecated(note = "implement `InferencePlane` instead (one trait for every backend)")]
+pub trait NnExecutor: Send {
+    /// Bit-exact classification of one packed input.
+    fn classify(&mut self, x: &[u32]) -> usize;
+    /// Raw final-layer scores.
+    fn scores(&mut self, x: &[u32], out: &mut [i32]);
+    /// Modeled (or measured) per-inference latency in ns.
+    fn latency_ns(&self) -> f64;
+    /// Backend name for logs/metrics.
+    fn name(&self) -> &'static str;
+    /// Output classes of the deployed model (verdict histogram width).
+    fn n_classes(&self) -> usize;
+}
+
+/// Batch extension of [`NnExecutor`] (pre-`InferencePlane` API).
+#[deprecated(note = "implement `InferencePlane` instead (one trait for every backend)")]
+pub trait NnBatchExecutor: NnExecutor {
+    /// Classify a whole batch; `classes` is cleared and refilled with
+    /// one verdict per input, in input order.
+    fn classify_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        classes.clear();
+        classes.reserve(inputs.len());
+        for x in inputs {
+            let c = self.classify(x);
+            classes.push(c);
+        }
+    }
+
+    /// Modeled time for this backend to complete a batch of `b`.
+    fn batch_latency_ns(&self, b: usize) -> f64 {
+        self.latency_ns() * b as f64
+    }
+
+    /// Throughput counters of an underlying multi-core engine, if any.
+    fn engine_stats(&self) -> Option<EngineStats> {
+        None
+    }
+}
+
+/// Adapter: any legacy [`NnBatchExecutor`] serves behind the unified
+/// [`InferencePlane`] API (this is how the shim services reuse the one
+/// runtime).
+#[deprecated(note = "implement `InferencePlane` directly")]
+pub struct LegacyPlane<E> {
+    exec: E,
+}
+
+impl<E: NnBatchExecutor> LegacyPlane<E> {
+    pub fn new(exec: E) -> Self {
+        Self { exec }
+    }
+}
+
+impl<E: NnBatchExecutor> InferencePlane for LegacyPlane<E> {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::single(self.exec.name(), self.exec.latency_ns())
+    }
+
+    fn classify(&mut self, _route: usize, x: &[u32]) -> (usize, Option<VersionTag>) {
+        (self.exec.classify(x), None)
+    }
+
+    fn try_run_batch(
+        &mut self,
+        _route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, crate::bnn::EngineError> {
+        self.exec.classify_batch(inputs, classes);
+        Ok(None)
+    }
+
+    fn batch_latency_ns(&self, b: usize) -> f64 {
+        self.exec.batch_latency_ns(b)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.exec.n_classes()
+    }
+
+    fn engine_stats(&self) -> Option<EngineStats> {
+        self.exec.engine_stats()
+    }
+}
+
+/// Host / device adapter of the pre-factory API.
+#[deprecated(note = "use `BackendFactory::single(\"fpga\"| \"nfp\" | \"host\" | \"pisa\", model)`")]
+pub struct CoreExecutor {
+    exec: crate::bnn::BnnExecutor,
+    /// Weight-stationary batch path, sharing `exec`'s packed weights.
+    batch: crate::bnn::BatchKernel,
+    /// Multi-core batch path (enabled by [`sharded`](Self::sharded)).
+    engine: Option<crate::bnn::ShardedEngine>,
+    latency_ns: f64,
+    name: &'static str,
+}
+
+impl CoreExecutor {
+    /// Wrap the bit-exact core with a backend-specific latency model.
+    pub fn new(model: BnnModel, latency_ns: f64, name: &'static str) -> Self {
+        let exec = crate::bnn::BnnExecutor::new(model);
+        let batch = crate::bnn::BatchKernel::with_packed(exec.packed_model());
+        Self { exec, batch, engine: None, latency_ns, name }
+    }
+
+    /// Route batches through a sharded engine of `n_shards` workers.
+    pub fn sharded(mut self, n_shards: usize) -> Self {
+        if n_shards > 1 {
+            self.engine = Some(crate::bnn::ShardedEngine::with_packed(
+                self.exec.packed_model(),
+                n_shards,
+            ));
+        }
+        self
+    }
+
+    /// N3IC-FPGA executor adapter.
+    pub fn fpga(model: BnnModel) -> Self {
+        let lat = crate::fpga::FpgaTiming::new(&model).latency_ns();
+        Self::new(model, lat, "n3ic-fpga")
+    }
+
+    /// N3IC-NFP (data-parallel, CLS) adapter.
+    pub fn nfp(model: BnnModel) -> Self {
+        let lat = crate::nfp::DataParallelCost::new(&model, crate::nfp::MemKind::Cls).mean_ns();
+        Self::new(model, lat, "n3ic-nfp")
+    }
+
+    /// Host `bnn-exec` adapter (batch-1 latency incl. PCIe).
+    pub fn host(model: BnnModel) -> Self {
+        let lat = crate::bnnexec::HostCostModel::default().batch_latency_ns(&model, 1);
+        Self::new(model, lat, "bnn-exec")
+    }
+
+    /// N3IC-P4 adapter; fails for models the PISA target cannot fit.
+    pub fn pisa(model: BnnModel) -> Result<Self, crate::pisa::CompileError> {
+        let prog = crate::pisa::compile_bnn(&model)?;
+        let lat = prog.latency_ns(64);
+        Ok(Self::new(model, lat, "n3ic-p4"))
+    }
+}
+
+impl NnExecutor for CoreExecutor {
+    fn classify(&mut self, x: &[u32]) -> usize {
+        self.exec.classify(x)
+    }
+
+    fn scores(&mut self, x: &[u32], out: &mut [i32]) {
+        self.exec.infer(x, out)
+    }
+
+    fn latency_ns(&self) -> f64 {
+        self.latency_ns
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_classes(&self) -> usize {
+        self.exec.model().out_neurons()
+    }
+}
+
+impl NnBatchExecutor for CoreExecutor {
+    fn classify_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
+        match self.engine.as_mut() {
+            Some(engine) => engine.run_batch(inputs, classes),
+            None => self.batch.run_batch(inputs, classes),
+        }
+    }
+
+    fn engine_stats(&self) -> Option<EngineStats> {
+        self.engine.as_ref().map(|e| e.stats())
+    }
+}
+
+/// Tuning knobs of the old standalone pipeline runtimes.
+#[deprecated(note = "use `ServeBuilder::pipeline/queue_depth/batching/flow_capacity`")]
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Stage-1 parse/flow-table workers (flow-hash shards), ≥ 1.
+    pub workers: usize,
+    /// Capacity of each bounded inter-stage channel, ≥ 1.
+    pub queue_depth: usize,
+    /// 0 = classify inline in stage 3; N ≥ 1 = accumulate batches of N.
+    pub batch: usize,
+    /// Packet-clock cap on batch queueing.
+    pub max_wait_ns: f64,
+    /// Flow-table capacity *per worker*.
+    pub flow_capacity: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_depth: 1024,
+            batch: 0,
+            max_wait_ns: 1e6,
+            flow_capacity: 1 << 16,
+        }
+    }
+}
+
+/// The old single-model serial loop.
+#[deprecated(note = "use `ServeBuilder` — one `Service` replaces the four legacy runtimes")]
+pub struct CoordinatorService<E: NnBatchExecutor + 'static> {
+    core: SerialCore,
+    _exec: PhantomData<E>,
+}
+
+impl<E: NnBatchExecutor + 'static> CoordinatorService<E> {
+    pub fn new(exec: E, trigger: TriggerCondition, output: OutputSelector) -> Self {
+        Self {
+            core: SerialCore::unbatched(
+                Box::new(LegacyPlane::new(exec)),
+                RouteLogic::Trigger(trigger),
+                output,
+                1 << 16,
+            ),
+            _exec: PhantomData,
+        }
+    }
+
+    pub fn with_batching(mut self, max_size: usize, max_wait_ns: f64) -> Self {
+        self.core.set_batching(max_size, max_wait_ns);
+        self
+    }
+
+    pub fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    pub fn handle(&mut self, ev: &PacketEvent) {
+        self.core.handle(ev);
+        panic_on_fault(&self.core);
+    }
+
+    pub fn flush(&mut self) {
+        self.core.flush();
+        panic_on_fault(&self.core);
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        self.core.stats()
+    }
+
+    pub fn sink(&self) -> &OutputSink {
+        self.core.sink()
+    }
+
+    pub fn flows_tracked(&self) -> usize {
+        self.core.flows_tracked()
+    }
+
+    /// Event loop: drain an mpsc channel until all senders drop.
+    pub fn run(mut self, rx: mpsc::Receiver<PacketEvent>) -> ServiceStats {
+        while let Ok(ev) = rx.recv() {
+            self.handle(&ev);
+        }
+        self.flush();
+        self.core.into_stats()
+    }
+}
+
+/// The pre-unification serial loops panicked on a backend fault; the
+/// unified core records it instead.  The shims keep the old contract.
+fn panic_on_fault(core: &SerialCore) {
+    if let Some(f) = core.failure() {
+        panic!("{f}");
+    }
+}
+
+/// The old registry-routed serial loop.
+///
+/// Shim caveat: `with_batching` / `with_shards` / `without_tag_log`
+/// are builder-style and rebuild the underlying core — configure the
+/// service **before** feeding traffic (as every known caller does);
+/// reconfiguring mid-stream resets accumulated stats and sink state.
+#[deprecated(note = "use `ServeBuilder` with `BackendFactory::registry` and `.router(...)`")]
+pub struct MultiModelService {
+    registry: RegistryHandle,
+    router: ModelRouter,
+    output: OutputSelector,
+    latency_ns: f64,
+    batch: Option<(usize, f64)>,
+    shards: usize,
+    log_tags: bool,
+    core: SerialCore,
+}
+
+impl MultiModelService {
+    pub fn new(
+        registry: RegistryHandle,
+        router: ModelRouter,
+        output: OutputSelector,
+        latency_ns: f64,
+    ) -> Result<Self, RegistryError> {
+        let core = Self::build_core(&registry, &router, output, latency_ns, None, 1, true)?;
+        Ok(Self {
+            registry,
+            router,
+            output,
+            latency_ns,
+            batch: None,
+            shards: 1,
+            log_tags: true,
+            core,
+        })
+    }
+
+    fn build_core(
+        registry: &RegistryHandle,
+        router: &ModelRouter,
+        output: OutputSelector,
+        latency_ns: f64,
+        batch: Option<(usize, f64)>,
+        shards: usize,
+        log_tags: bool,
+    ) -> Result<SerialCore, RegistryError> {
+        let plane = registry_plane(registry, router.model_names(), latency_ns, shards)?;
+        let mut core =
+            SerialCore::unbatched(plane, RouteLogic::Router(router.clone()), output, 1 << 16);
+        if let Some((size, wait)) = batch {
+            core.set_batching(size, wait);
+        }
+        if !log_tags {
+            core.disable_tag_log();
+        }
+        Ok(core)
+    }
+
+    fn rebuild(&mut self) {
+        self.core = Self::build_core(
+            &self.registry,
+            &self.router,
+            self.output,
+            self.latency_ns,
+            self.batch,
+            self.shards,
+            self.log_tags,
+        )
+        .expect("slots were validated at construction");
+    }
+
+    pub fn with_batching(mut self, max_size: usize, max_wait_ns: f64) -> Self {
+        self.batch = Some((max_size, max_wait_ns));
+        self.rebuild();
+        self
+    }
+
+    pub fn with_shards(mut self, n_shards: usize) -> Self {
+        self.shards = n_shards;
+        self.rebuild();
+        self
+    }
+
+    pub fn without_tag_log(mut self) -> Self {
+        self.log_tags = false;
+        self.rebuild();
+        self
+    }
+
+    pub fn pending(&self) -> usize {
+        self.core.pending()
+    }
+
+    pub fn handle(&mut self, ev: &PacketEvent) {
+        self.core.handle(ev);
+        panic_on_fault(&self.core);
+    }
+
+    pub fn flush(&mut self) {
+        self.core.flush();
+        panic_on_fault(&self.core);
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        self.core.stats()
+    }
+
+    pub fn sink(&self) -> &OutputSink {
+        self.core.sink()
+    }
+
+    pub fn tagged(&self) -> &[TaggedVerdict] {
+        self.core.tagged()
+    }
+
+    pub fn engine_stats(&self) -> Option<EngineStats> {
+        self.core.engine_stats()
+    }
+
+    /// Event loop: drain the channel until all senders drop; flushes and
+    /// returns the accumulated statistics plus the tagged verdict log.
+    pub fn run(mut self, rx: mpsc::Receiver<PacketEvent>) -> (ServiceStats, Vec<TaggedVerdict>) {
+        while let Ok(ev) = rx.recv() {
+            self.handle(&ev);
+        }
+        self.flush();
+        self.core.into_stats_and_tags()
+    }
+}
+
+/// The old single-model staged runtime.
+#[deprecated(note = "use `ServeBuilder::pipeline(n)` — the one `Service` runs staged too")]
+pub struct PipelineService<E: NnBatchExecutor + 'static> {
+    exec: E,
+    trigger: TriggerCondition,
+    output: OutputSelector,
+    cfg: PipelineConfig,
+}
+
+impl<E: NnBatchExecutor + 'static> PipelineService<E> {
+    pub fn new(
+        exec: E,
+        trigger: TriggerCondition,
+        output: OutputSelector,
+        cfg: PipelineConfig,
+    ) -> Self {
+        Self { exec, trigger, output, cfg }
+    }
+
+    pub fn run(
+        self,
+        events: impl IntoIterator<Item = PacketEvent>,
+    ) -> Result<ServiceReport, ServiceError> {
+        let mut b = ServeBuilder::new()
+            .backend(Box::new(LegacyPlane::new(self.exec)))
+            .trigger(self.trigger)
+            .output(self.output)
+            .pipeline(self.cfg.workers.max(1))
+            .queue_depth(self.cfg.queue_depth)
+            .flow_capacity(self.cfg.flow_capacity);
+        if self.cfg.batch > 0 {
+            b = b.batching(self.cfg.batch, self.cfg.max_wait_ns);
+        }
+        b.build()?.run(events)
+    }
+}
+
+/// The old registry-routed staged runtime.
+#[deprecated(note = "use `ServeBuilder::pipeline(n)` with `BackendFactory::registry`")]
+pub struct RoutedPipelineService {
+    registry: RegistryHandle,
+    router: ModelRouter,
+    output: OutputSelector,
+    cfg: PipelineConfig,
+    latency_ns: f64,
+    shards: usize,
+    log_tags: bool,
+}
+
+impl RoutedPipelineService {
+    pub fn new(
+        registry: RegistryHandle,
+        router: ModelRouter,
+        output: OutputSelector,
+        cfg: PipelineConfig,
+        latency_ns: f64,
+    ) -> Result<Self, RegistryError> {
+        // Surface unknown-slot errors here, as the old constructor did.
+        for name in router.model_names() {
+            registry.reader(name)?;
+        }
+        Ok(Self {
+            registry,
+            router,
+            output,
+            cfg,
+            latency_ns,
+            shards: 1,
+            log_tags: true,
+        })
+    }
+
+    pub fn with_shards(mut self, n_shards: usize) -> Self {
+        self.shards = n_shards;
+        self
+    }
+
+    pub fn without_tag_log(mut self) -> Self {
+        self.log_tags = false;
+        self
+    }
+
+    pub fn run(
+        self,
+        events: impl IntoIterator<Item = PacketEvent>,
+    ) -> Result<ServiceReport, ServiceError> {
+        let plane =
+            registry_plane(&self.registry, self.router.model_names(), self.latency_ns, self.shards)
+                .map_err(ServiceError::Registry)?;
+        let mut b = ServeBuilder::new()
+            .backend(plane)
+            .router(self.router)
+            .output(self.output)
+            .pipeline(self.cfg.workers.max(1))
+            .queue_depth(self.cfg.queue_depth)
+            .flow_capacity(self.cfg.flow_capacity);
+        if self.cfg.batch > 0 {
+            b = b.batching(self.cfg.batch, self.cfg.max_wait_ns);
+        }
+        if !self.log_tags {
+            b = b.without_tag_log();
+        }
+        b.build()?.run(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{infer_packed, BnnLayer, BnnModel};
+    use crate::coordinator::{BackendFactory, ServeBuilder};
+    use crate::net::traffic::CbrSpec;
+
+    fn model() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    #[test]
+    fn legacy_adapters_stay_bit_exact_and_latency_ordered() {
+        let m = model();
+        let x = BnnLayer::random(1, 256, 99).words;
+        let want = infer_packed(&m, &x);
+        let mut fpga = CoreExecutor::fpga(m.clone());
+        let mut nfp = CoreExecutor::nfp(m.clone());
+        let mut host = CoreExecutor::host(m.clone());
+        let mut pisa = CoreExecutor::pisa(m.clone()).unwrap();
+        for e in [&mut fpga as &mut dyn NnExecutor, &mut nfp, &mut host, &mut pisa] {
+            assert_eq!(e.classify(&x), want, "{}", e.name());
+        }
+        // Fig. 14 ordering: FPGA < P4 < NFP; batch-1 host is 10s of µs.
+        assert!(fpga.latency_ns() < pisa.latency_ns());
+        assert!(pisa.latency_ns() < nfp.latency_ns());
+        assert!(host.latency_ns() > 10_000.0);
+    }
+
+    #[test]
+    fn legacy_coordinator_shim_matches_the_builder_service() {
+        let events =
+            PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, 40, 6, 4000);
+        let mut shim = CoordinatorService::new(
+            CoreExecutor::fpga(model()),
+            TriggerCondition::EveryNPackets(10),
+            OutputSelector::Memory,
+        );
+        for ev in &events {
+            shim.handle(ev);
+        }
+        shim.flush();
+        let rep = ServeBuilder::new()
+            .backend(BackendFactory::single("fpga", model()).unwrap())
+            .trigger(TriggerCondition::EveryNPackets(10))
+            .build()
+            .unwrap()
+            .run(events.iter().cloned())
+            .unwrap();
+        assert_eq!(shim.stats().triggers, rep.stats.triggers);
+        assert_eq!(shim.stats().classes, rep.stats.classes);
+        let mut a = shim.sink().memory.clone();
+        let mut b = rep.sink.memory.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+}

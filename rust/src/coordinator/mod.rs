@@ -1,221 +1,48 @@
 //! The N3IC coordinator (§3.2, Fig. 7): triggers, input/output selectors,
-//! flow shunting, batching, and the serving loop.
+//! flow shunting, batching, routing, and the serving runtime.
 //!
 //! This is the paper's system contribution seen from the NIC: the NN
-//! executor is a data-plane module triggered by packet events or by the
-//! forwarding module (e.g. "enough packets received for a flow"), with
+//! executor is a data-plane module triggered by packet events, with
 //! selectors choosing where inputs come from and where verdicts go.
+//! Since ISSUE 5 the whole serving surface is one API:
+//!
+//! * [`InferencePlane`] — the uniform backend trait (`classify`,
+//!   `run_batch`, `try_run_batch`) plus a [`Capabilities`] descriptor
+//!   the runtime queries instead of being specialized per backend;
+//! * [`BackendFactory`] — every executor in the crate as a named
+//!   backend (`"host" | "batch" | "sharded" | "pisa" | "fpga" |
+//!   "registry"`);
+//! * [`Service`] / [`ServeBuilder`] — the one serving runtime;
+//!   batching, pipelining, multi-model routing, and hot swap are
+//!   builder options, not separate service types.
+//!
+//! The pre-unification API (`NnExecutor`, `CoreExecutor`, the four
+//! service structs) survives one PR as deprecated shims in [`legacy`].
 
+pub mod backend;
 pub mod batcher;
+pub mod legacy;
 pub mod multinn;
 pub mod pipeline;
+pub mod plane;
 pub mod selector;
 pub mod service;
 pub mod shunt;
 pub mod trigger;
 
+pub use backend::BackendFactory;
 pub use batcher::{BatchSet, Batcher, TimedBatch};
-pub use pipeline::{
-    PipelineConfig, PipelineError, PipelineReport, PipelineService, RoutedPipelineError,
-    RoutedPipelineReport, RoutedPipelineService, STAGE_LINKS,
+#[allow(deprecated)]
+pub use legacy::{
+    CoordinatorService, CoreExecutor, LegacyPlane, MultiModelService, NnBatchExecutor,
+    NnExecutor, PipelineConfig, PipelineService, RoutedPipelineService,
 };
+pub use pipeline::STAGE_LINKS;
+pub use plane::{Capabilities, InferencePlane, SwapController};
 pub use selector::{InputSelector, OutputSelector};
 pub use service::{
-    CoordinatorService, ModelServiceStats, MultiModelService, PacketEvent, PendingFlow,
-    ServiceStats, TaggedVerdict,
+    ModelServiceStats, PacketEvent, PendingFlow, ServeBuilder, Service, ServiceError,
+    ServiceReport, ServiceStats, StageFailure, TaggedVerdict,
 };
 pub use shunt::{ShuntDecision, ShuntRouter};
 pub use trigger::{ModelRouter, TriggerCondition};
-
-use crate::bnn::BnnModel;
-
-/// Uniform executor interface implemented by every backend (NFP / PISA /
-/// FPGA device models, host `bnn-exec`, PJRT runtime).
-pub trait NnExecutor: Send {
-    /// Bit-exact classification of one packed input.
-    fn classify(&mut self, x: &[u32]) -> usize;
-    /// Raw final-layer scores.
-    fn scores(&mut self, x: &[u32], out: &mut [i32]);
-    /// Modeled (or measured) per-inference latency in ns.
-    fn latency_ns(&self) -> f64;
-    /// Backend name for logs/metrics.
-    fn name(&self) -> &'static str;
-    /// Output classes of the deployed model (verdict histogram width).
-    fn n_classes(&self) -> usize;
-}
-
-/// Batch extension of [`NnExecutor`]: the serve loop hands
-/// `Batcher`-accumulated flows to `classify_batch`.  The default is the
-/// per-item loop, so any executor works behind the batch API; backends
-/// with a real batch fast path (weight-stationary kernel, sharded
-/// engine, PJRT artifacts) override it.
-pub trait NnBatchExecutor: NnExecutor {
-    /// Classify a whole batch; `classes` is cleared and refilled with
-    /// one verdict per input, in input order.
-    fn classify_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
-        classes.clear();
-        classes.reserve(inputs.len());
-        for x in inputs {
-            let c = self.classify(x);
-            classes.push(c);
-        }
-    }
-
-    /// Modeled time for this backend to complete a batch of `b` — every
-    /// item in the batch observes the whole batch's completion.  Default
-    /// is a serial device (`b ×` per-inference latency); backends with a
-    /// calibrated batch model override it.
-    fn batch_latency_ns(&self, b: usize) -> f64 {
-        self.latency_ns() * b as f64
-    }
-
-    /// Throughput counters of an underlying multi-core engine, if this
-    /// backend routes batches through one — serve-report material that
-    /// survives the executor being moved into a pipeline stage.
-    fn engine_stats(&self) -> Option<crate::bnn::EngineStats> {
-        None
-    }
-}
-
-/// Host / device adapters for the trait.
-pub struct CoreExecutor {
-    exec: crate::bnn::BnnExecutor,
-    /// Weight-stationary batch path, sharing `exec`'s packed weights.
-    batch: crate::bnn::BatchKernel,
-    /// Multi-core batch path (enabled by [`sharded`](Self::sharded)).
-    engine: Option<crate::bnn::ShardedEngine>,
-    latency_ns: f64,
-    name: &'static str,
-}
-
-impl CoreExecutor {
-    /// Wrap the bit-exact core with a backend-specific latency model.
-    pub fn new(model: BnnModel, latency_ns: f64, name: &'static str) -> Self {
-        let exec = crate::bnn::BnnExecutor::new(model);
-        let batch = crate::bnn::BatchKernel::with_packed(exec.packed_model());
-        Self {
-            exec,
-            batch,
-            engine: None,
-            latency_ns,
-            name,
-        }
-    }
-
-    /// Route batches through a [`ShardedEngine`](crate::bnn::ShardedEngine)
-    /// of `n_shards` worker cores (sharing this executor's packed
-    /// weights).  `n_shards <= 1` keeps the single-core kernel.
-    pub fn sharded(mut self, n_shards: usize) -> Self {
-        if n_shards > 1 {
-            self.engine = Some(crate::bnn::ShardedEngine::with_packed(
-                self.exec.packed_model(),
-                n_shards,
-            ));
-        }
-        self
-    }
-
-    /// N3IC-FPGA executor adapter.
-    pub fn fpga(model: BnnModel) -> Self {
-        let lat = crate::fpga::FpgaTiming::new(&model).latency_ns();
-        Self::new(model, lat, "n3ic-fpga")
-    }
-
-    /// N3IC-NFP (data-parallel, CLS) adapter.
-    pub fn nfp(model: BnnModel) -> Self {
-        let lat = crate::nfp::DataParallelCost::new(&model, crate::nfp::MemKind::Cls)
-            .mean_ns();
-        Self::new(model, lat, "n3ic-nfp")
-    }
-
-    /// Host `bnn-exec` adapter (batch-1 latency incl. PCIe).
-    pub fn host(model: BnnModel) -> Self {
-        let lat = crate::bnnexec::HostCostModel::default().batch_latency_ns(&model, 1);
-        Self::new(model, lat, "bnn-exec")
-    }
-
-    /// N3IC-P4 adapter; fails for models the PISA target cannot fit.
-    pub fn pisa(model: BnnModel) -> Result<Self, crate::pisa::CompileError> {
-        let prog = crate::pisa::compile_bnn(&model)?;
-        let lat = prog.latency_ns(64);
-        Ok(Self::new(model, lat, "n3ic-p4"))
-    }
-}
-
-impl NnExecutor for CoreExecutor {
-    fn classify(&mut self, x: &[u32]) -> usize {
-        self.exec.classify(x)
-    }
-
-    fn scores(&mut self, x: &[u32], out: &mut [i32]) {
-        self.exec.infer(x, out)
-    }
-
-    fn latency_ns(&self) -> f64 {
-        self.latency_ns
-    }
-
-    fn name(&self) -> &'static str {
-        self.name
-    }
-
-    fn n_classes(&self) -> usize {
-        self.exec.model().out_neurons()
-    }
-}
-
-impl NnBatchExecutor for CoreExecutor {
-    fn classify_batch(&mut self, inputs: &[Vec<u32>], classes: &mut Vec<usize>) {
-        match self.engine.as_mut() {
-            Some(engine) => engine.run_batch(inputs, classes),
-            None => self.batch.run_batch(inputs, classes),
-        }
-    }
-
-    fn engine_stats(&self) -> Option<crate::bnn::EngineStats> {
-        self.engine.as_ref().map(|e| e.stats())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::bnn::{infer_packed, BnnLayer, BnnModel};
-
-    #[test]
-    fn sharded_adapter_matches_single_core_batch_path() {
-        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 8);
-        let inputs: Vec<Vec<u32>> = (0..23)
-            .map(|i| BnnLayer::random(1, 256, 700 + i).words)
-            .collect();
-        let mut single = CoreExecutor::fpga(model.clone());
-        let mut sharded = CoreExecutor::fpga(model).sharded(3);
-        let (mut a, mut b) = (Vec::new(), Vec::new());
-        single.classify_batch(&inputs, &mut a);
-        sharded.classify_batch(&inputs, &mut b);
-        assert_eq!(a, b);
-    }
-
-    #[test]
-    fn adapters_bit_exact_and_latency_ordered() {
-        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
-        let x = BnnLayer::random(1, 256, 99).words;
-        let want = infer_packed(&model, &x);
-        let mut fpga = CoreExecutor::fpga(model.clone());
-        let mut nfp = CoreExecutor::nfp(model.clone());
-        let mut host = CoreExecutor::host(model.clone());
-        let mut pisa = CoreExecutor::pisa(model.clone()).unwrap();
-        for e in [&mut fpga as &mut dyn NnExecutor, &mut nfp, &mut host, &mut pisa] {
-            assert_eq!(e.classify(&x), want, "{}", e.name());
-        }
-        // Fig. 14 ordering: FPGA < P4 < NFP; batch-1 host is in the NFP's
-        // 10s-of-µs neighbourhood, while any throughput-equivalent batch
-        // puts the host 10-100× above every N3IC variant.
-        assert!(fpga.latency_ns() < pisa.latency_ns());
-        assert!(pisa.latency_ns() < nfp.latency_ns());
-        assert!(host.latency_ns() > 10_000.0); // 10s of µs at batch 1
-        let host_b1k = crate::bnnexec::HostCostModel::default()
-            .batch_latency_ns(&model, 1000);
-        assert!(nfp.latency_ns() * 10.0 < host_b1k);
-    }
-}

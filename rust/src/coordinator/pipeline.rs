@@ -1,16 +1,19 @@
-//! Pipelined multi-stage serving runtime — the serial `CoordinatorService`
-//! loop decomposed into the staged co-processor shape the NIC actually
-//! has (parse/flow-update engines feeding an inference engine feeding a
-//! verdict sink), so the parse work for packet *n+1* overlaps the
+//! The staged (multi-threaded) mode of the unified [`Service`]: the
+//! serial event loop decomposed into the staged co-processor shape the
+//! NIC actually has, so the parse work for packet *n+1* overlaps the
 //! inference for packet *n* instead of serializing behind it:
 //!
 //! ```text
-//!  ingress ─┬─▶ parse/flow/trigger worker 0 ─┐
-//!  (shard   ├─▶ parse/flow/trigger worker 1 ─┼─▶ batcher ─▶ ordered
-//!  by flow  ┆            …                   ┆    + NN      sink +
-//!  hash)    └─▶ parse/flow/trigger worker N ─┘   executor   metrics
-//!     stage 0          stage 1+2                 stage 3    stage 4
+//!  ingress ─┬─▶ parse/route/trigger worker 0 ─┐
+//!  (shard   ├─▶ parse/route/trigger worker 1 ─┼─▶ batch lanes ─▶ ordered
+//!  by flow  ┆            …                    ┆    + backend     sink +
+//!  hash)    └─▶ parse/route/trigger worker N ─┘   (InferencePlane) metrics
+//!     stage 0          stage 1+2                   stage 3       stage 4
 //! ```
+//!
+//! One implementation serves every composition: single-model and routed
+//! multi-model, inline and batched, tagged and untagged — the knobs are
+//! [`ServeBuilder`](super::ServeBuilder) options, not separate runtimes.
 //!
 //! Stages are connected by **bounded** `sync_channel`s: a full queue
 //! blocks the producer (lossless backpressure — no verdict is ever
@@ -19,114 +22,65 @@
 //!
 //! ## Determinism contract (the tier-1 equivalence property)
 //!
-//! Given the same seeded traffic, the pipelined runtime produces
+//! Given the same seeded traffic, this staged mode produces
 //! **bit-identical** verdict histograms, trigger counts, inference
-//! counts, and per-flow verdicts to the serial loop, for any worker
+//! counts, and per-flow verdicts to the serial mode, for any worker
 //! count, queue depth, or batch size.  This holds by construction:
 //!
 //! * packets are sharded by canonical flow hash
 //!   ([`ShardedFlowTable::shard_of`]), so every packet of a flow — both
 //!   directions — visits one stage-1 worker, in arrival order
 //!   (`sync_channel` is FIFO);
-//! * [`TriggerCondition`] and the flow statistics a trigger snapshots
-//!   are functions of that flow's packets only, so cross-flow
-//!   interleaving cannot change what fires or what gets packed;
-//! * every executor classifies each packed input bit-exactly regardless
-//!   of the batch it rides in, so batch composition (which *does* vary
-//!   with timing) is invisible in the verdicts.
+//! * routing ([`RouteLogic`]) and the flow statistics a trigger
+//!   snapshots are functions of that flow's packets only, so cross-flow
+//!   interleaving cannot change what fires, where it routes, or what
+//!   gets packed;
+//! * every [`InferencePlane`] classifies each packed input bit-exactly
+//!   regardless of the batch it rides in, so batch composition (which
+//!   *does* vary with timing) is invisible in the verdicts.
 //!
 //! Latency *histograms* are exempt from the contract — queueing delay is
 //! real time, not packet time.  The contract is asserted end-to-end in
-//! `tests/pipeline_equiv.rs`.
+//! `tests/pipeline_equiv.rs` and over every factory backend in
+//! `tests/plane_conformance.rs`.
 //!
 //! ## Failure semantics
 //!
-//! A stage that dies (executor panic, poisoned channel) must not hang
+//! A stage that dies (backend panic, poisoned channel) must not hang
 //! the service: its channel endpoints drop, upstream sends and
 //! downstream receives error out, every surviving stage exits its loop
-//! and reports, and [`run`](PipelineService::run) returns a
-//! [`PipelineError`] carrying both the failure descriptions and the
+//! and reports, and [`Service::run`](super::Service::run) returns a
+//! [`ServiceError::Stage`] carrying typed [`StageFailure`]s plus the
 //! stats accumulated up to the fault (`tests/failure_injection.rs`).
 
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::thread;
 
-use crate::bnn::{EngineStats, MultiModelExecutor, RegistryError, RegistryHandle, VersionTag};
+use crate::bnn::{EngineStats, VersionTag};
 use crate::net::flow::{FlowTable, ShardedFlowTable};
 
-use super::batcher::{BatchSet, Batcher, TimedBatch};
+use super::batcher::BatchSet;
+use super::plane::InferencePlane;
 use super::selector::{OutputSelector, OutputSink};
 use super::service::{
     batch_item_latency_ns, flow_id, select_packed_input, ModelServiceStats, PacketEvent,
-    PendingFlow, ServiceStats, TaggedVerdict,
+    PendingFlow, RouteLogic, Service, ServiceError, ServiceReport, ServiceStats, StageFailure,
+    TaggedVerdict,
 };
-use super::trigger::{ModelRouter, TriggerCondition};
-use super::NnBatchExecutor;
 
 /// Inter-stage links, in `ServiceStats::stage_blocked` index order.
 pub const STAGE_LINKS: [&str; 3] = ["ingress→parse", "parse→inference", "inference→sink"];
 
-/// Tuning knobs of the pipelined runtime.
-#[derive(Debug, Clone, Copy)]
-pub struct PipelineConfig {
-    /// Stage-1 parse/flow-table workers (flow-hash shards), ≥ 1.
-    pub workers: usize,
-    /// Capacity of each bounded inter-stage channel, ≥ 1.
-    pub queue_depth: usize,
-    /// 0 = classify inline in stage 3; N ≥ 1 = accumulate batches of N
-    /// and take the executor's batch fast path.
-    pub batch: usize,
-    /// Packet-clock cap on batch queueing (same knob as the serial
-    /// loop's `with_batching`).
-    pub max_wait_ns: f64,
-    /// Flow-table capacity *per worker* (each owns one shard).
-    pub flow_capacity: usize,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        Self {
-            workers: 2,
-            queue_depth: 1024,
-            batch: 0,
-            max_wait_ns: 1e6,
-            flow_capacity: 1 << 16,
-        }
-    }
-}
-
-/// What a completed (or faulted) pipeline run leaves behind.
-#[derive(Debug)]
-pub struct PipelineReport {
-    pub stats: ServiceStats,
-    /// The single stage-4 sink — verdicts in inference-completion order.
-    pub sink: OutputSink,
-    /// Live flows summed over every worker's shard.
-    pub flows_tracked: usize,
-    /// Stage 3's sharded-engine counters, if its executor ran one.
-    pub engine: Option<EngineStats>,
-}
-
-/// One or more stages died; partial statistics survive in `report`.
-#[derive(Debug)]
-pub struct PipelineError {
-    pub failures: Vec<String>,
-    pub report: PipelineReport,
-}
-
-impl std::fmt::Display for PipelineError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "pipeline stage failure: {}", self.failures.join("; "))
-    }
-}
-
-impl std::error::Error for PipelineError {}
-
 /// Stage 1+2 → stage 3 messages.
-enum InferenceMsg {
-    /// A triggered flow: routing id, packed NN input, and the trigger
-    /// packet's clock (drives batch timeouts).
-    Flow { id: u64, packed: Vec<u32>, ts_ns: f64 },
+enum InfMsg {
+    /// A triggered flow: its route (model lane), routing id, packed NN
+    /// input, and the trigger packet's clock (drives batch timeouts).
+    Flow {
+        route: usize,
+        id: u64,
+        packed: Vec<u32>,
+        ts_ns: f64,
+    },
     /// Periodic packet-clock forwarding (every [`CLOCK_TICK_PKTS`]
     /// packets per worker) so batch timeouts advance through stretches
     /// of non-triggering traffic — the pipelined stand-in for the
@@ -143,16 +97,18 @@ enum InferenceMsg {
 const CLOCK_TICK_PKTS: u64 = 256;
 
 /// Stage 3 → stage 4 message: one accounted verdict.
-struct Verdict {
+struct VerdictMsg {
+    route: usize,
     id: u64,
     class: usize,
     latency_ns: f64,
+    tag: Option<VersionTag>,
 }
 
 /// What each stage thread returns at exit.
 struct StageReport {
     stats: ServiceStats,
-    failure: Option<String>,
+    failure: Option<StageFailure>,
     flows: usize,
     /// Populated by the inference stage only.
     engine: Option<EngineStats>,
@@ -179,13 +135,14 @@ fn blank_stats() -> ServiceStats {
     }
 }
 
-/// Stage 1+2: flow update, trigger, feature packing — one worker per
-/// flow shard, so this owns its `FlowTable` outright.
+/// Stage 1+2: flow update, routing/trigger, feature packing — one worker
+/// per flow shard, so this owns its `FlowTable` outright.
 fn parse_stage(
     rx: Receiver<PacketEvent>,
-    tx: SyncSender<InferenceMsg>,
-    trigger: TriggerCondition,
+    tx: SyncSender<InfMsg>,
+    route: RouteLogic,
     mut flows: FlowTable,
+    worker: usize,
 ) -> StageReport {
     let mut stats = blank_stats();
     let mut failure = None;
@@ -196,27 +153,28 @@ fn parse_stage(
         // packet, accepted so the channel messages stay plain
         // `PacketEvent`s instead of carrying (key, hash) everywhere.
         let (fstats, is_new, pkts) = flows.update(&ev.packet);
-        if trigger.fires(&ev.packet, is_new, pkts) {
+        if let Some(r) = route.route(&ev.packet, is_new, pkts) {
             stats.triggers += 1;
             // Shared with the serial loop — the determinism contract
-            // says these two paths may never diverge.
-            let msg = InferenceMsg::Flow {
+            // says the two paths may never diverge.
+            let msg = InfMsg::Flow {
+                route: r,
                 id: flow_id(&ev.packet),
                 packed: select_packed_input(&ev, fstats),
                 ts_ns: ev.packet.ts_ns,
             };
             if send_counted(&tx, msg, &mut stats.stage_blocked[1]).is_err() {
-                failure = Some("parse stage: inference channel disconnected".into());
+                failure = Some(StageFailure::ParseDisconnected { worker });
                 break;
             }
         }
         // Forward the packet clock periodically so stage 3's batch
-        // timeout advances even when nothing triggers (the serial loop
-        // polls its batcher on *every* packet).
+        // timeouts advance even when nothing triggers (the serial loop
+        // polls its lanes on *every* packet).
         if stats.packets % CLOCK_TICK_PKTS == 0 {
-            let tick = InferenceMsg::Clock(ev.packet.ts_ns);
+            let tick = InfMsg::Clock(ev.packet.ts_ns);
             if send_counted(&tx, tick, &mut stats.stage_blocked[1]).is_err() {
-                failure = Some("parse stage: inference channel disconnected".into());
+                failure = Some(StageFailure::ParseDisconnected { worker });
                 break;
             }
         }
@@ -225,13 +183,14 @@ fn parse_stage(
     StageReport { stats, failure, flows: flows_len, engine: None }
 }
 
-/// Stage 3: the single inference engine — batcher + executor.  Being
-/// the sole producer into stage 4, its emission order *is* the sink
-/// order.  Every `Err(())` below means one thing: the sink hung up.
-struct InferenceStage<E: NnBatchExecutor> {
-    exec: E,
-    tx: SyncSender<Verdict>,
-    batcher: Option<Batcher<PendingFlow>>,
+/// Stage 3: the single inference engine — per-route batch lanes feeding
+/// one [`InferencePlane`].  Being the sole producer into stage 4, its
+/// emission order *is* the sink order.  Each lane's batch scores under
+/// one weight snapshot (epoch-pinning backends tag every verdict).
+struct InferenceStage {
+    plane: Box<dyn InferencePlane>,
+    tx: SyncSender<VerdictMsg>,
+    batchers: Option<BatchSet<PendingFlow>>,
     stats: ServiceStats,
     /// Scratch reused across batch flushes.
     inputs: Vec<Vec<u32>>,
@@ -239,333 +198,14 @@ struct InferenceStage<E: NnBatchExecutor> {
     classes: Vec<usize>,
 }
 
-impl<E: NnBatchExecutor> InferenceStage<E> {
-    fn new(exec: E, tx: SyncSender<Verdict>, batcher: Option<Batcher<PendingFlow>>) -> Self {
-        Self {
-            exec,
-            tx,
-            batcher,
-            stats: blank_stats(),
-            inputs: Vec::new(),
-            meta: Vec::new(),
-            classes: Vec::new(),
-        }
-    }
-
-    /// Classify one accumulated batch and emit its verdicts.  Latency
-    /// semantics match `CoordinatorService::flush_batch`: packet-clock
-    /// queueing wait plus the whole batch's modeled completion time.
-    fn flush(&mut self, batch: Vec<(f64, PendingFlow)>, now_ns: f64) -> Result<(), ()> {
-        self.meta.clear();
-        self.inputs.clear();
-        for (enq_ns, flow) in batch {
-            self.meta.push((flow.id, enq_ns));
-            self.inputs.push(flow.packed);
-        }
-        self.exec.classify_batch(&self.inputs, &mut self.classes);
-        let exec_ns = self.exec.batch_latency_ns(self.classes.len());
-        for i in 0..self.classes.len() {
-            let (id, enq_ns) = self.meta[i];
-            let v = Verdict {
-                id,
-                class: self.classes[i],
-                latency_ns: batch_item_latency_ns(now_ns, enq_ns, exec_ns),
-            };
-            send_counted(&self.tx, v, &mut self.stats.stage_blocked[2])?;
-        }
-        Ok(())
-    }
-
-    /// Advance the packet clock: flush the partial batch if it timed out.
-    fn on_clock(&mut self, now_ns: f64) -> Result<(), ()> {
-        match self.batcher.as_mut().and_then(|b| b.poll(now_ns)) {
-            Some(batch) => self.flush(batch, now_ns),
-            None => Ok(()),
-        }
-    }
-
-    /// Handle one triggered flow: timed flush, then enqueue-or-classify.
-    fn on_flow(&mut self, id: u64, packed: Vec<u32>, ts_ns: f64) -> Result<(), ()> {
-        self.on_clock(ts_ns)?;
-        if self.batcher.is_none() {
-            let class = self.exec.classify(&packed);
-            let v = Verdict { id, class, latency_ns: self.exec.latency_ns() };
-            return send_counted(&self.tx, v, &mut self.stats.stage_blocked[2]);
-        }
-        let full = self
-            .batcher
-            .as_mut()
-            .unwrap()
-            .push(ts_ns, PendingFlow { id, packed });
-        match full {
-            Some(batch) => self.flush(batch, ts_ns),
-            None => Ok(()),
-        }
-    }
-
-    /// End-of-stream drain: flush the partial batch with the newest
-    /// enqueue time as "now" (the serial loop's shutdown semantics).
-    fn drain(&mut self) -> Result<(), ()> {
-        match self.batcher.as_mut().and_then(|b| b.poll(f64::INFINITY)) {
-            Some(batch) => {
-                let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
-                self.flush(batch, now_ns)
-            }
-            None => Ok(()),
-        }
-    }
-
-    /// Event loop until every parse worker hangs up, then drain.
-    fn run(mut self, rx: Receiver<InferenceMsg>) -> StageReport {
-        const SINK_GONE: &str = "inference stage: sink channel disconnected";
-        let mut failure = None;
-        while let Ok(msg) = rx.recv() {
-            let step = match msg {
-                InferenceMsg::Flow { id, packed, ts_ns } => self.on_flow(id, packed, ts_ns),
-                InferenceMsg::Clock(ts_ns) => self.on_clock(ts_ns),
-            };
-            if step.is_err() {
-                failure = Some(SINK_GONE.into());
-                break;
-            }
-        }
-        if failure.is_none() && self.drain().is_err() {
-            failure = Some(SINK_GONE.into());
-        }
-        let engine = self.exec.engine_stats();
-        StageReport { stats: self.stats, failure, flows: 0, engine }
-    }
-}
-
-/// Stage 4: the single ordered selector/metrics sink.
-fn sink_stage(
-    rx: Receiver<Verdict>,
-    output: OutputSelector,
-    n_classes: usize,
-) -> (ServiceStats, OutputSink) {
-    let mut stats = blank_stats();
-    stats.classes = vec![0; n_classes];
-    let mut sink = OutputSink::default();
-    while let Ok(v) = rx.recv() {
-        stats.inferences += 1;
-        if v.class >= stats.classes.len() {
-            stats.classes.resize(v.class + 1, 0);
-        }
-        stats.classes[v.class] += 1;
-        stats.latency.record(v.latency_ns);
-        sink.write(output, v.id, v.class);
-    }
-    (stats, sink)
-}
-
-/// The pipelined counterpart of `CoordinatorService`: same executor,
-/// trigger, and selector vocabulary, staged across threads.
-pub struct PipelineService<E: NnBatchExecutor> {
-    exec: E,
-    trigger: TriggerCondition,
-    output: OutputSelector,
-    cfg: PipelineConfig,
-}
-
-impl<E: NnBatchExecutor + 'static> PipelineService<E> {
-    pub fn new(
-        exec: E,
-        trigger: TriggerCondition,
-        output: OutputSelector,
-        cfg: PipelineConfig,
-    ) -> Self {
-        Self { exec, trigger, output, cfg }
-    }
-
-    /// Drive `events` through the pipeline (the calling thread is the
-    /// ingress sharder) and join every stage.  Returns the merged stats
-    /// and the ordered sink, or — if any stage died — a
-    /// [`PipelineError`] with everything accumulated before the fault.
-    pub fn run(
-        self,
-        events: impl IntoIterator<Item = PacketEvent>,
-    ) -> Result<PipelineReport, PipelineError> {
-        let workers = self.cfg.workers.max(1);
-        let depth = self.cfg.queue_depth.max(1);
-        let n_classes = self.exec.n_classes();
-
-        let (tx_inf, rx_inf) = mpsc::sync_channel::<InferenceMsg>(depth);
-        let (tx_sink, rx_sink) = mpsc::sync_channel::<Verdict>(depth);
-
-        let mut parse_txs = Vec::with_capacity(workers);
-        let mut parse_handles = Vec::with_capacity(workers);
-        for table in ShardedFlowTable::new(workers, self.cfg.flow_capacity).into_shards() {
-            let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
-            let tx_inf = tx_inf.clone();
-            let trigger = self.trigger;
-            parse_handles.push(thread::spawn(move || parse_stage(rx, tx_inf, trigger, table)));
-            parse_txs.push(tx);
-        }
-        drop(tx_inf); // stage 3's recv loop ends when all workers finish
-
-        let exec = self.exec;
-        let batcher = if self.cfg.batch > 0 {
-            Some(Batcher::new(self.cfg.batch, self.cfg.max_wait_ns))
-        } else {
-            None
-        };
-        let inf_handle =
-            thread::spawn(move || InferenceStage::new(exec, tx_sink, batcher).run(rx_inf));
-        let output = self.output;
-        let sink_handle = thread::spawn(move || sink_stage(rx_sink, output, n_classes));
-
-        // Stage 0: shard by flow hash and feed.  A dead worker (its rx
-        // dropped) surfaces here as a failed send, not a hang.
-        let mut ingress_blocked = 0u64;
-        let mut failures: Vec<String> = Vec::new();
-        for ev in events {
-            let w = ShardedFlowTable::shard_of(&ev.packet, workers);
-            if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
-                failures.push(format!("ingress: parse worker {w} unreachable"));
-                break;
-            }
-        }
-        drop(parse_txs);
-
-        // Join in dataflow order, merging stats and collecting faults.
-        let mut stats = blank_stats();
-        stats.classes = vec![0; n_classes];
-        stats.stage_blocked[0] = ingress_blocked;
-        let mut flows_tracked = 0usize;
-        for (w, h) in parse_handles.into_iter().enumerate() {
-            match h.join() {
-                Ok(rep) => {
-                    stats.merge(&rep.stats);
-                    flows_tracked += rep.flows;
-                    if let Some(f) = rep.failure {
-                        failures.push(format!("worker {w}: {f}"));
-                    }
-                }
-                Err(p) => failures.push(format!("parse worker {w} panicked: {}", panic_msg(&p))),
-            }
-        }
-        let mut engine = None;
-        match inf_handle.join() {
-            Ok(rep) => {
-                stats.merge(&rep.stats);
-                engine = rep.engine;
-                if let Some(f) = rep.failure {
-                    failures.push(f);
-                }
-            }
-            Err(p) => failures.push(format!("inference stage panicked: {}", panic_msg(&p))),
-        }
-        let sink = match sink_handle.join() {
-            Ok((sink_stats, sink)) => {
-                stats.merge(&sink_stats);
-                sink
-            }
-            Err(p) => {
-                failures.push(format!("sink stage panicked: {}", panic_msg(&p)));
-                OutputSink::default()
-            }
-        };
-
-        let report = PipelineReport { stats, sink, flows_tracked, engine };
-        if failures.is_empty() {
-            Ok(report)
-        } else {
-            Err(PipelineError { failures, report })
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Registry-routed pipeline: the same staged shape, serving *named,
-// versioned* models with zero-downtime hot swap.
-//
-// Deliberately a parallel implementation rather than a generalization
-// of the single-model stages over a route/tag parameter: the
-// single-model pipeline is the tier-1 determinism baseline and stays
-// untouched.  The cost is that clock-tick, drain, and fault-handling
-// fixes must land in both copies — when touching one, check the other.
-// ---------------------------------------------------------------------------
-
-/// Stage 1+2 → stage 3 messages on the routed pipeline: like
-/// [`InferenceMsg`] plus the route (model index) the flow resolved to.
-enum RoutedMsg {
-    Flow { route: usize, id: u64, packed: Vec<u32>, ts_ns: f64 },
-    Clock(f64),
-}
-
-/// Stage 3 → stage 4 message: one verdict with its version tag and the
-/// route it ran on (route-indexed accounting keeps the sink's hot loop
-/// free of per-verdict key allocations).
-struct TaggedOut {
-    route: usize,
-    id: u64,
-    class: usize,
-    latency_ns: f64,
-    tag: VersionTag,
-}
-
-/// Stage 1+2 of the routed pipeline: flow update + **model routing** +
-/// feature packing.  Routing is a pure per-flow function
-/// ([`ModelRouter`] invariant), so flow-hash sharding keeps it
-/// deterministic exactly as in the single-model pipeline.
-fn routed_parse_stage(
-    rx: Receiver<PacketEvent>,
-    tx: SyncSender<RoutedMsg>,
-    router: ModelRouter,
-    mut flows: FlowTable,
-) -> StageReport {
-    let mut stats = blank_stats();
-    let mut failure = None;
-    while let Ok(ev) = rx.recv() {
-        stats.packets += 1;
-        let (fstats, is_new, pkts) = flows.update(&ev.packet);
-        if let Some(route) = router.route(&ev.packet, is_new, pkts) {
-            stats.triggers += 1;
-            let msg = RoutedMsg::Flow {
-                route,
-                id: flow_id(&ev.packet),
-                packed: select_packed_input(&ev, fstats),
-                ts_ns: ev.packet.ts_ns,
-            };
-            if send_counted(&tx, msg, &mut stats.stage_blocked[1]).is_err() {
-                failure = Some("parse stage: inference channel disconnected".into());
-                break;
-            }
-        }
-        if stats.packets % CLOCK_TICK_PKTS == 0 {
-            let tick = RoutedMsg::Clock(ev.packet.ts_ns);
-            if send_counted(&tx, tick, &mut stats.stage_blocked[1]).is_err() {
-                failure = Some("parse stage: inference channel disconnected".into());
-                break;
-            }
-        }
-    }
-    let flows_len = flows.len();
-    StageReport { stats, failure, flows: flows_len, engine: None }
-}
-
-/// Stage 3 of the routed pipeline: per-model batch lanes feeding a
-/// versioned [`MultiModelExecutor`].  Each lane's batch pins exactly one
-/// registry epoch — the zero-downtime swap contract — and every emitted
-/// verdict carries the pinned tag.
-struct RoutedInferenceStage {
-    exec: MultiModelExecutor,
-    tx: SyncSender<TaggedOut>,
-    batchers: Option<BatchSet<PendingFlow>>,
-    stats: ServiceStats,
-    inputs: Vec<Vec<u32>>,
-    meta: Vec<(u64, f64)>,
-    classes: Vec<usize>,
-}
-
-impl RoutedInferenceStage {
+impl InferenceStage {
     fn new(
-        exec: MultiModelExecutor,
-        tx: SyncSender<TaggedOut>,
+        plane: Box<dyn InferencePlane>,
+        tx: SyncSender<VerdictMsg>,
         batchers: Option<BatchSet<PendingFlow>>,
     ) -> Self {
         Self {
-            exec,
+            plane,
             tx,
             batchers,
             stats: blank_stats(),
@@ -575,37 +215,44 @@ impl RoutedInferenceStage {
         }
     }
 
-    /// One lane's batch under one pinned epoch; latency semantics match
-    /// the serial loop's `flush_batch`.
+    /// Classify one lane's batch and emit its verdicts.  Latency
+    /// semantics match the serial core's flush: packet-clock queueing
+    /// wait plus the whole batch's modeled completion time.
     fn flush(
         &mut self,
         lane: usize,
-        batch: TimedBatch<PendingFlow>,
+        batch: Vec<(f64, PendingFlow)>,
         now_ns: f64,
-    ) -> Result<(), ()> {
+    ) -> Result<(), StageFailure> {
         self.meta.clear();
         self.inputs.clear();
         for (enq_ns, flow) in batch {
             self.meta.push((flow.id, enq_ns));
             self.inputs.push(flow.packed);
         }
-        let tag = self.exec.classify_batch(lane, &self.inputs, &mut self.classes);
-        let exec_ns = self.exec.batch_latency_ns(self.classes.len());
+        let tag = self
+            .plane
+            .try_run_batch(lane, &self.inputs, &mut self.classes)
+            .map_err(StageFailure::Inference)?;
+        let exec_ns = self.plane.batch_latency_ns(self.classes.len());
         for i in 0..self.classes.len() {
             let (id, enq_ns) = self.meta[i];
-            let out = TaggedOut {
+            let v = VerdictMsg {
                 route: lane,
                 id,
                 class: self.classes[i],
                 latency_ns: batch_item_latency_ns(now_ns, enq_ns, exec_ns),
                 tag: tag.clone(),
             };
-            send_counted(&self.tx, out, &mut self.stats.stage_blocked[2])?;
+            send_counted(&self.tx, v, &mut self.stats.stage_blocked[2])
+                .map_err(|()| StageFailure::SinkDisconnected)?;
         }
         Ok(())
     }
 
-    fn on_clock(&mut self, now_ns: f64) -> Result<(), ()> {
+    /// Advance the packet clock: flush any lane whose partial batch
+    /// timed out.
+    fn on_clock(&mut self, now_ns: f64) -> Result<(), StageFailure> {
         let due = match self.batchers.as_mut() {
             Some(b) => b.poll(now_ns),
             None => Vec::new(),
@@ -616,12 +263,26 @@ impl RoutedInferenceStage {
         Ok(())
     }
 
-    fn on_flow(&mut self, route: usize, id: u64, packed: Vec<u32>, ts_ns: f64) -> Result<(), ()> {
+    /// Handle one triggered flow: timed flush, then enqueue-or-classify.
+    fn on_flow(
+        &mut self,
+        route: usize,
+        id: u64,
+        packed: Vec<u32>,
+        ts_ns: f64,
+    ) -> Result<(), StageFailure> {
         self.on_clock(ts_ns)?;
         if self.batchers.is_none() {
-            let (class, tag) = self.exec.classify(route, &packed);
-            let out = TaggedOut { route, id, class, latency_ns: self.exec.latency_ns(), tag };
-            return send_counted(&self.tx, out, &mut self.stats.stage_blocked[2]);
+            let (class, tag) = self.plane.classify(route, &packed);
+            let v = VerdictMsg {
+                route,
+                id,
+                class,
+                latency_ns: self.plane.latency_ns(),
+                tag,
+            };
+            return send_counted(&self.tx, v, &mut self.stats.stage_blocked[2])
+                .map_err(|()| StageFailure::SinkDisconnected);
         }
         let full = self
             .batchers
@@ -634,8 +295,9 @@ impl RoutedInferenceStage {
         }
     }
 
-    /// End-of-stream drain of every lane (newest enqueue time as "now").
-    fn drain(&mut self) -> Result<(), ()> {
+    /// End-of-stream drain of every lane (newest enqueue time as "now"
+    /// — the serial loop's shutdown semantics).
+    fn drain(&mut self) -> Result<(), StageFailure> {
         let due = match self.batchers.as_mut() {
             Some(b) => b.poll(f64::INFINITY),
             None => Vec::new(),
@@ -647,43 +309,43 @@ impl RoutedInferenceStage {
         Ok(())
     }
 
-    fn run(mut self, rx: Receiver<RoutedMsg>) -> StageReport {
-        const SINK_GONE: &str = "inference stage: sink channel disconnected";
+    /// Event loop until every parse worker hangs up, then drain.
+    fn run(mut self, rx: Receiver<InfMsg>) -> StageReport {
         let mut failure = None;
         while let Ok(msg) = rx.recv() {
             let step = match msg {
-                RoutedMsg::Flow { route, id, packed, ts_ns } => {
-                    self.on_flow(route, id, packed, ts_ns)
-                }
-                RoutedMsg::Clock(ts_ns) => self.on_clock(ts_ns),
+                InfMsg::Flow { route, id, packed, ts_ns } => self.on_flow(route, id, packed, ts_ns),
+                InfMsg::Clock(ts_ns) => self.on_clock(ts_ns),
             };
-            if step.is_err() {
-                failure = Some(SINK_GONE.into());
+            if let Err(f) = step {
+                failure = Some(f);
                 break;
             }
         }
-        if failure.is_none() && self.drain().is_err() {
-            failure = Some(SINK_GONE.into());
+        if failure.is_none() {
+            if let Err(f) = self.drain() {
+                failure = Some(f);
+            }
         }
-        let engine = self.exec.engine_stats();
+        let engine = self.plane.engine_stats();
         StageReport { stats: self.stats, failure, flows: 0, engine }
     }
 }
 
-/// Stage 4 of the routed pipeline: ordered sink + global and per-model
-/// accounting, plus the tagged verdict log.
-fn routed_sink_stage(
-    rx: Receiver<TaggedOut>,
+/// Stage 4: the single ordered selector/metrics sink, with per-model
+/// accounting on routed (named) backends and the tagged verdict log.
+fn sink_stage(
+    rx: Receiver<VerdictMsg>,
     output: OutputSelector,
     n_classes: usize,
     log_tags: bool,
-    model_names: Vec<String>,
+    names: Vec<String>,
 ) -> (ServiceStats, OutputSink, Vec<TaggedVerdict>) {
     let mut stats = blank_stats();
     stats.classes = vec![0; n_classes];
     // Route-indexed during the run (no per-verdict key allocation);
     // folded into the name-keyed map once at exit.
-    let mut per_route = vec![ModelServiceStats::default(); model_names.len()];
+    let mut per_route = vec![ModelServiceStats::default(); names.len()];
     let mut sink = OutputSink::default();
     let mut tagged = Vec::new();
     while let Ok(v) = rx.recv() {
@@ -692,206 +354,165 @@ fn routed_sink_stage(
             stats.classes.resize(v.class + 1, 0);
         }
         stats.classes[v.class] += 1;
-        per_route[v.route].record(v.class);
+        if !names.is_empty() {
+            per_route[v.route].record(v.class);
+        }
         stats.latency.record(v.latency_ns);
         sink.write(output, v.id, v.class);
         if log_tags {
-            tagged.push(TaggedVerdict { id: v.id, class: v.class, tag: v.tag });
+            if let Some(tag) = v.tag {
+                tagged.push(TaggedVerdict { id: v.id, class: v.class, tag });
+            }
         }
     }
     // Accumulate (don't insert) so duplicate route names — legal in a
     // hash-split router — merge their counts the same way the serial
-    // service's fold does.
-    for (name, m) in model_names.into_iter().zip(per_route) {
-        let entry = stats.per_model.entry(name).or_default();
-        entry.inferences += m.inferences;
-        if m.classes.len() > entry.classes.len() {
-            entry.classes.resize(m.classes.len(), 0);
-        }
-        for (a, b) in entry.classes.iter_mut().zip(&m.classes) {
-            *a += b;
-        }
+    // core's fold does.
+    for (name, m) in names.into_iter().zip(per_route) {
+        stats.per_model.entry(name).or_default().absorb(&m);
     }
     (stats, sink, tagged)
 }
 
-/// What a completed (or faulted) routed pipeline run leaves behind:
-/// the single-model [`PipelineReport`] fields plus the tagged verdict
-/// log (per-model histograms and swap counts live in
-/// [`ServiceStats::per_model`]).
-#[derive(Debug)]
-pub struct RoutedPipelineReport {
-    pub stats: ServiceStats,
-    pub sink: OutputSink,
-    /// Every verdict with its `(model, version)` tag, in sink order.
-    pub tagged: Vec<TaggedVerdict>,
-    pub flows_tracked: usize,
-    pub engine: Option<EngineStats>,
-}
+/// Drive `events` through the staged runtime (the calling thread is the
+/// ingress sharder and, with `.swap_every(n)`, the live control plane)
+/// and join every stage.  Returns the merged report, or — if any stage
+/// died — a [`ServiceError::Stage`] with everything accumulated before
+/// the fault.
+pub(crate) fn run_staged(
+    svc: Service,
+    events: impl IntoIterator<Item = PacketEvent>,
+) -> Result<ServiceReport, ServiceError> {
+    let workers = svc.workers.max(1);
+    let depth = svc.queue_depth.max(1);
+    let n_classes = svc.plane.n_classes();
+    let names: Vec<String> = svc.plane.route_names().to_vec();
+    let n_routes = svc.route.n_routes();
+    // Extracted before the plane moves into stage 3, so swap ticks and
+    // the final swap-count snapshot run from this (ingress) thread while
+    // inference proceeds — a true concurrent hot swap.
+    let mut swap = svc.plane.swap_controller();
 
-/// One or more routed stages died; partial statistics survive.
-#[derive(Debug)]
-pub struct RoutedPipelineError {
-    pub failures: Vec<String>,
-    pub report: RoutedPipelineReport,
-}
+    let (tx_inf, rx_inf) = mpsc::sync_channel::<InfMsg>(depth);
+    let (tx_sink, rx_sink) = mpsc::sync_channel::<VerdictMsg>(depth);
 
-impl std::fmt::Display for RoutedPipelineError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "routed pipeline stage failure: {}", self.failures.join("; "))
+    let mut parse_txs = Vec::with_capacity(workers);
+    let mut parse_handles = Vec::with_capacity(workers);
+    for (w, table) in ShardedFlowTable::new(workers, svc.flow_capacity)
+        .into_shards()
+        .into_iter()
+        .enumerate()
+    {
+        let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
+        let tx_inf = tx_inf.clone();
+        let route = svc.route.clone();
+        parse_handles.push(thread::spawn(move || parse_stage(rx, tx_inf, route, table, w)));
+        parse_txs.push(tx);
     }
-}
+    drop(tx_inf); // stage 3's recv loop ends when all workers finish
 
-impl std::error::Error for RoutedPipelineError {}
+    let plane = svc.plane;
+    let batchers = if svc.batch > 0 {
+        Some(BatchSet::new(n_routes, svc.batch, svc.max_wait_ns))
+    } else {
+        None
+    };
+    let inf_handle =
+        thread::spawn(move || InferenceStage::new(plane, tx_sink, batchers).run(rx_inf));
+    let output = svc.output;
+    let log_tags = svc.log_tags;
+    let sink_names = names.clone();
+    let sink_handle =
+        thread::spawn(move || sink_stage(rx_sink, output, n_classes, log_tags, sink_names));
 
-/// The registry-routed counterpart of [`PipelineService`]: stage-1
-/// workers route flows to named models, stage 3 serves them through a
-/// versioned [`MultiModelExecutor`], and live `publish`es through the
-/// shared [`RegistryHandle`] hot-swap weights mid-run without draining
-/// any queue.  Inherits the single-model pipeline's determinism
-/// contract per model (routing is flow-pure), its backpressure
-/// accounting, and its failure semantics.
-pub struct RoutedPipelineService {
-    registry: RegistryHandle,
-    router: ModelRouter,
-    exec: MultiModelExecutor,
-    output: OutputSelector,
-    cfg: PipelineConfig,
-    log_tags: bool,
-}
-
-impl RoutedPipelineService {
-    /// Bind the router's model names against `registry` (all must be
-    /// published); `latency_ns` as in
-    /// [`MultiModelService::new`](super::MultiModelService::new).
-    pub fn new(
-        registry: RegistryHandle,
-        router: ModelRouter,
-        output: OutputSelector,
-        cfg: PipelineConfig,
-        latency_ns: f64,
-    ) -> Result<Self, RegistryError> {
-        let exec = MultiModelExecutor::new(&registry, router.model_names(), latency_ns)?;
-        Ok(Self { registry, router, exec, output, cfg, log_tags: true })
-    }
-
-    /// Spread stage-3 batches over `n_shards` engine workers; every
-    /// batch still pins exactly one epoch across all shards.
-    pub fn with_shards(mut self, n_shards: usize) -> Self {
-        self.exec = self.exec.sharded(n_shards);
-        self
-    }
-
-    /// Drop the unbounded per-verdict tag log (long-running serves:
-    /// memory stays flat; per-model stats and the sink are unaffected).
-    pub fn without_tag_log(mut self) -> Self {
-        self.log_tags = false;
-        self
-    }
-
-    /// Drive `events` through the routed pipeline; same join/fault
-    /// shape as [`PipelineService::run`].  Per-model swap counts are
-    /// snapshotted from the registry after the stages join.
-    pub fn run(
-        self,
-        events: impl IntoIterator<Item = PacketEvent>,
-    ) -> Result<RoutedPipelineReport, RoutedPipelineError> {
-        let workers = self.cfg.workers.max(1);
-        let depth = self.cfg.queue_depth.max(1);
-        let n_classes = self.exec.max_out_neurons();
-        let model_names: Vec<String> = self.router.model_names().to_vec();
-
-        let (tx_inf, rx_inf) = mpsc::sync_channel::<RoutedMsg>(depth);
-        let (tx_sink, rx_sink) = mpsc::sync_channel::<TaggedOut>(depth);
-
-        let mut parse_txs = Vec::with_capacity(workers);
-        let mut parse_handles = Vec::with_capacity(workers);
-        for table in ShardedFlowTable::new(workers, self.cfg.flow_capacity).into_shards() {
-            let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
-            let tx_inf = tx_inf.clone();
-            let router = self.router.clone();
-            parse_handles
-                .push(thread::spawn(move || routed_parse_stage(rx, tx_inf, router, table)));
-            parse_txs.push(tx);
-        }
-        drop(tx_inf);
-
-        let exec = self.exec;
-        let batchers = if self.cfg.batch > 0 {
-            Some(BatchSet::new(self.router.n_models(), self.cfg.batch, self.cfg.max_wait_ns))
-        } else {
-            None
-        };
-        let inf_handle =
-            thread::spawn(move || RoutedInferenceStage::new(exec, tx_sink, batchers).run(rx_inf));
-        let output = self.output;
-        let log_tags = self.log_tags;
-        let sink_names = model_names.clone();
-        let sink_handle = thread::spawn(move || {
-            routed_sink_stage(rx_sink, output, n_classes, log_tags, sink_names)
-        });
-
-        let mut ingress_blocked = 0u64;
-        let mut failures: Vec<String> = Vec::new();
-        for ev in events {
-            let w = ShardedFlowTable::shard_of(&ev.packet, workers);
-            if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
-                failures.push(format!("ingress: parse worker {w} unreachable"));
-                break;
-            }
-        }
-        drop(parse_txs);
-
-        let mut stats = blank_stats();
-        stats.classes = vec![0; n_classes];
-        stats.stage_blocked[0] = ingress_blocked;
-        let mut flows_tracked = 0usize;
-        for (w, h) in parse_handles.into_iter().enumerate() {
-            match h.join() {
-                Ok(rep) => {
-                    stats.merge(&rep.stats);
-                    flows_tracked += rep.flows;
-                    if let Some(f) = rep.failure {
-                        failures.push(format!("worker {w}: {f}"));
-                    }
+    // Stage 0: shard by flow hash and feed.  A dead worker (its rx
+    // dropped) surfaces here as a failed send, not a hang.
+    let mut ingress_blocked = 0u64;
+    let mut failures: Vec<StageFailure> = Vec::new();
+    let mut n = 0u64;
+    // A failed republish is reported once and further ticks are
+    // disabled (matching the serial mode) instead of pushing one
+    // failure per interval for the rest of the run.
+    let mut swap_ok = true;
+    for ev in events {
+        if svc.swap_every > 0 && swap_ok && n > 0 && n % svc.swap_every == 0 {
+            if let Some(s) = swap.as_mut() {
+                if let Err(e) = s.tick() {
+                    failures.push(StageFailure::Swap(e));
+                    swap_ok = false;
                 }
-                Err(p) => failures.push(format!("parse worker {w} panicked: {}", panic_msg(&p))),
             }
         }
-        let mut engine = None;
-        match inf_handle.join() {
+        n += 1;
+        let w = ShardedFlowTable::shard_of(&ev.packet, workers);
+        if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
+            failures.push(StageFailure::IngressUnreachable { worker: w });
+            break;
+        }
+    }
+    drop(parse_txs);
+
+    // Join in dataflow order, merging stats and collecting faults.
+    let mut stats = blank_stats();
+    stats.classes = vec![0; n_classes];
+    stats.stage_blocked[0] = ingress_blocked;
+    let mut flows_tracked = 0usize;
+    for h in parse_handles {
+        match h.join() {
             Ok(rep) => {
                 stats.merge(&rep.stats);
-                engine = rep.engine;
+                flows_tracked += rep.flows;
                 if let Some(f) = rep.failure {
                     failures.push(f);
                 }
             }
-            Err(p) => failures.push(format!("inference stage panicked: {}", panic_msg(&p))),
+            Err(p) => failures.push(StageFailure::Panicked {
+                stage: "parse worker",
+                message: panic_msg(&p),
+            }),
         }
-        let (sink, tagged) = match sink_handle.join() {
-            Ok((sink_stats, sink, tagged)) => {
-                stats.merge(&sink_stats);
-                (sink, tagged)
+    }
+    let mut engine = None;
+    match inf_handle.join() {
+        Ok(rep) => {
+            stats.merge(&rep.stats);
+            engine = rep.engine;
+            if let Some(f) = rep.failure {
+                failures.push(f);
             }
-            Err(p) => {
-                failures.push(format!("sink stage panicked: {}", panic_msg(&p)));
-                (OutputSink::default(), Vec::new())
-            }
-        };
-        // Swap counts are a registry property, not a stage property:
-        // snapshot once, after every stage has reported.
-        for name in &model_names {
+        }
+        Err(p) => failures.push(StageFailure::Panicked {
+            stage: "inference stage",
+            message: panic_msg(&p),
+        }),
+    }
+    let (sink, tagged) = match sink_handle.join() {
+        Ok((sink_stats, sink, tagged)) => {
+            stats.merge(&sink_stats);
+            (sink, tagged)
+        }
+        Err(p) => {
+            failures.push(StageFailure::Panicked {
+                stage: "sink stage",
+                message: panic_msg(&p),
+            });
+            (OutputSink::default(), Vec::new())
+        }
+    };
+    // Swap counts are a registry property, not a stage property:
+    // snapshot once, after every stage has reported.
+    if let Some(s) = swap.as_ref() {
+        for name in &names {
             let entry = stats.per_model.entry(name.clone()).or_default();
-            entry.swaps = self.registry.swap_count(name);
+            entry.swaps = s.registry().swap_count(name);
         }
+    }
 
-        let report = RoutedPipelineReport { stats, sink, tagged, flows_tracked, engine };
-        if failures.is_empty() {
-            Ok(report)
-        } else {
-            Err(RoutedPipelineError { failures, report })
-        }
+    let report = ServiceReport { stats, sink, tagged, flows_tracked, engine };
+    if failures.is_empty() {
+        Ok(report)
+    } else {
+        Err(ServiceError::Stage { failures, report: Box::new(report) })
     }
 }
 
@@ -909,29 +530,32 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bnn::BnnModel;
-    use crate::coordinator::CoreExecutor;
+    use crate::bnn::{BnnModel, RegistryHandle};
+    use crate::coordinator::{BackendFactory, ModelRouter, ServeBuilder, TriggerCondition};
     use crate::net::traffic::CbrSpec;
 
     fn events(n: usize, flows: u64, seed: u64) -> Vec<PacketEvent> {
         PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, flows, seed, n)
     }
 
-    fn pipeline(cfg: PipelineConfig) -> PipelineService<CoreExecutor> {
-        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
-        PipelineService::new(
-            CoreExecutor::fpga(model),
-            TriggerCondition::EveryNPackets(10),
-            OutputSelector::Memory,
-            cfg,
-        )
+    fn model() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    fn pipeline(workers: usize, batch: usize) -> ServeBuilder {
+        let mut b = ServeBuilder::new()
+            .backend(BackendFactory::single("fpga", model()).unwrap())
+            .trigger(TriggerCondition::EveryNPackets(10))
+            .pipeline(workers);
+        if batch > 0 {
+            b = b.batching(batch, 1e6);
+        }
+        b
     }
 
     #[test]
     fn healthy_run_accounts_every_trigger() {
-        let evs = events(5000, 50, 3);
-        let cfg = PipelineConfig { workers: 3, ..Default::default() };
-        let rep = pipeline(cfg).run(evs).unwrap();
+        let rep = pipeline(3, 0).build().unwrap().run(events(5000, 50, 3)).unwrap();
         assert_eq!(rep.stats.packets, 5000);
         assert!(rep.stats.triggers > 0);
         assert_eq!(rep.stats.triggers, rep.stats.inferences);
@@ -943,23 +567,17 @@ mod tests {
 
     #[test]
     fn batched_pipeline_drains_at_shutdown() {
-        let evs = events(4000, 40, 6);
-        let rep = pipeline(PipelineConfig {
-            workers: 2,
-            batch: 7,
-            max_wait_ns: 1e12,
-            ..Default::default()
-        })
-        .run(evs)
-        .unwrap();
+        let rep = pipeline(2, 0)
+            .batching(7, 1e12)
+            .build()
+            .unwrap()
+            .run(events(4000, 40, 6))
+            .unwrap();
         assert_eq!(rep.stats.triggers, rep.stats.inferences);
     }
 
     #[test]
     fn routed_pipeline_matches_routed_serial_per_model() {
-        use crate::bnn::RegistryHandle;
-        use crate::coordinator::MultiModelService;
-
         let h = RegistryHandle::new();
         h.publish("anomaly", &BnnModel::random("anomaly", 256, &[32, 16, 2], 31))
             .unwrap();
@@ -969,29 +587,26 @@ mod tests {
             TriggerCondition::EveryNPackets(10),
             vec!["anomaly".into(), "traffic-class".into()],
         );
+        let names = router.model_names().to_vec();
         let evs = events(6000, 50, 11);
 
-        let mut serial =
-            MultiModelService::new(h.clone(), router.clone(), OutputSelector::Memory, 100.0)
-                .unwrap();
-        for ev in &evs {
-            serial.handle(ev);
-        }
-        serial.flush();
-
-        for (workers, batch, shards) in [(1, 0, 1), (3, 0, 1), (2, 8, 1), (2, 8, 3)] {
-            let cfg = PipelineConfig { workers, batch, ..Default::default() };
-            let rep = RoutedPipelineService::new(
-                h.clone(),
-                router.clone(),
-                OutputSelector::Memory,
-                cfg,
-                100.0,
-            )
+        let serial = ServeBuilder::new()
+            .backend(BackendFactory::registry(&h, &names, 100.0, 1).unwrap())
+            .router(router.clone())
+            .build()
             .unwrap()
-            .with_shards(shards)
             .run(evs.iter().cloned())
             .unwrap();
+
+        for (workers, batch, shards) in [(1, 0, 1), (3, 0, 1), (2, 8, 1), (2, 8, 3)] {
+            let mut b = ServeBuilder::new()
+                .backend(BackendFactory::registry(&h, &names, 100.0, shards).unwrap())
+                .router(router.clone())
+                .pipeline(workers);
+            if batch > 0 {
+                b = b.batching(batch, 1e6);
+            }
+            let rep = b.build().unwrap().run(evs.iter().cloned()).unwrap();
             assert_eq!(rep.stats.packets, 6000, "w{workers} b{batch} s{shards}");
             assert_eq!(rep.stats.triggers, serial.stats.triggers);
             assert_eq!(rep.stats.inferences, serial.stats.inferences);
@@ -999,11 +614,11 @@ mod tests {
             assert_eq!(rep.stats.per_model, serial.stats.per_model);
             assert_eq!(rep.tagged.len() as u64, rep.stats.inferences);
             // Same verdicts for the same flows, order aside.
-            let mut a = serial.sink.memory.clone();
-            let mut b = rep.sink.memory.clone();
-            a.sort_unstable();
-            b.sort_unstable();
-            assert_eq!(a, b);
+            let mut want_mem = serial.sink.memory.clone();
+            let mut got_mem = rep.sink.memory.clone();
+            want_mem.sort_unstable();
+            got_mem.sort_unstable();
+            assert_eq!(want_mem, got_mem);
             // No publishes happened: everything ran at version 1.
             assert!(rep.tagged.iter().all(|t| t.tag.version() == 1));
             if shards > 1 && batch > 0 {
@@ -1015,14 +630,13 @@ mod tests {
     #[test]
     fn tiny_queues_only_add_backpressure_never_loss() {
         let evs = events(3000, 30, 9);
-        let want = pipeline(PipelineConfig::default()).run(evs.clone()).unwrap();
-        let got = pipeline(PipelineConfig {
-            workers: 2,
-            queue_depth: 1,
-            ..Default::default()
-        })
-        .run(evs)
-        .unwrap();
+        let want = pipeline(2, 0).build().unwrap().run(evs.iter().cloned()).unwrap();
+        let got = pipeline(2, 0)
+            .queue_depth(1)
+            .build()
+            .unwrap()
+            .run(evs.iter().cloned())
+            .unwrap();
         assert_eq!(got.stats.triggers, want.stats.triggers);
         assert_eq!(got.stats.inferences, want.stats.inferences);
         assert_eq!(got.stats.classes, want.stats.classes);

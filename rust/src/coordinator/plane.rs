@@ -1,0 +1,274 @@
+//! The unified inference-plane API (ISSUE 5 tentpole).
+//!
+//! N3IC's core claim is that one NN inference primitive can be placed on
+//! whichever data plane is available — NFP SmartNIC, FPGA, PISA switch,
+//! or host CPU.  [`InferencePlane`] is that claim as a trait: every
+//! backend answers the same three calls (`classify`, `run_batch`,
+//! `try_run_batch`) and publishes a [`Capabilities`] descriptor so the
+//! serving runtime can *query* what a backend supports (batching width,
+//! shard count, hot swap, epoch pinning, cost model) instead of being
+//! specialized to it.
+//!
+//! Concrete backends are constructed by name through
+//! [`BackendFactory`](super::BackendFactory); the one serving runtime
+//! ([`Service`](super::Service), built by
+//! [`ServeBuilder`](super::ServeBuilder)) composes against this trait
+//! only.  The previous pair of executor traits (`NnExecutor` /
+//! `NnBatchExecutor`) and the free-standing `bnnexec` run surface are
+//! folded in here; they survive one PR as deprecated shims in
+//! [`legacy`](super::legacy).
+
+use crate::bnn::{EngineError, EngineStats, RegistryError, RegistryHandle, VersionTag};
+
+/// What a backend supports — the serving runtime composes features
+/// (batching, sharded fan-out, hot swap, routed models) by reading this
+/// descriptor rather than by knowing concrete backend types.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Capabilities {
+    /// Backend name as registered in the
+    /// [`BackendFactory`](super::BackendFactory) (or a custom
+    /// implementation's own tag).
+    pub backend: &'static str,
+    /// Largest batch one `run_batch` call accepts.  `usize::MAX` means
+    /// unbounded; `1` means the data plane classifies strictly inline
+    /// (the PISA switch shape) and the builder rejects batched configs.
+    pub max_batch: usize,
+    /// Worker cores behind the batch path (1 = single core).
+    pub shards: usize,
+    /// Routed model lanes this plane serves (1 = single model).  A
+    /// service routing `n` named models requires `routes == n`.
+    pub routes: usize,
+    /// Weights can be republished while serving (registry backends).
+    pub supports_hot_swap: bool,
+    /// Every batch pins one immutable weight epoch and verdicts carry
+    /// `(name, version)` tags.
+    pub supports_epoch_pinning: bool,
+    /// Modeled device latency of one inference, ns — the scalar half of
+    /// the cost model.  The full batch-cost hook is
+    /// [`InferencePlane::batch_latency_ns`].
+    pub inference_ns: f64,
+}
+
+impl Capabilities {
+    /// Descriptor of a plain single-model, single-core backend with an
+    /// unbounded batch path and no swap machinery.
+    pub fn single(backend: &'static str, inference_ns: f64) -> Self {
+        Self {
+            backend,
+            max_batch: usize::MAX,
+            shards: 1,
+            routes: 1,
+            supports_hot_swap: false,
+            supports_epoch_pinning: false,
+            inference_ns,
+        }
+    }
+}
+
+/// Uniform interface over every inference backend: host scalar executor,
+/// weight-stationary batch kernel, sharded multi-core engine, PISA
+/// pipeline interpreter, FPGA device model, and the registry-backed
+/// multi-model executor all serve behind exactly this surface.
+///
+/// `route` selects the model lane on multi-model planes and is `0` on
+/// single-model ones.  All implementations are bit-exact computations of
+/// the paper's Algorithm 1 — the conformance suite
+/// (`tests/plane_conformance.rs`) runs one seeded scenario matrix over
+/// every registered backend and asserts identical verdict histograms.
+pub trait InferencePlane: Send {
+    /// The backend's capability descriptor (stable for the plane's
+    /// lifetime).
+    fn capabilities(&self) -> Capabilities;
+
+    /// Classify one packed input on `route`; returns the verdict class
+    /// and, on epoch-pinning backends, the `(name, version)` tag the
+    /// inference ran under.
+    fn classify(&mut self, route: usize, x: &[u32]) -> (usize, Option<VersionTag>);
+
+    /// Fallible batch path: classify `inputs` under **one** weight
+    /// snapshot; `classes` is cleared and refilled in input order.  A
+    /// backend fault (dead or panicked shard worker) surfaces as
+    /// `Err` instead of a panic or a hang.
+    fn try_run_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError>;
+
+    /// Infallible batch path; panics on a backend fault (callers that
+    /// must stay up through one use [`try_run_batch`](Self::try_run_batch)).
+    fn run_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Option<VersionTag> {
+        match self.try_run_batch(route, inputs, classes) {
+            Ok(tag) => tag,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Modeled per-inference device latency (ns).
+    fn latency_ns(&self) -> f64 {
+        self.capabilities().inference_ns
+    }
+
+    /// Modeled completion time of a batch of `b` — the cost-model hook.
+    /// Every item of a batch observes the whole batch's completion.
+    /// Default is a serial device (`b ×` per-inference latency);
+    /// backends with a calibrated curve (PCIe + per-batch I/O) override.
+    fn batch_latency_ns(&self, b: usize) -> f64 {
+        self.latency_ns() * b as f64
+    }
+
+    /// Output classes of the widest deployed model (verdict-histogram
+    /// sizing).
+    fn n_classes(&self) -> usize;
+
+    /// Route-indexed model names on multi-model planes; empty on
+    /// single-model ones (per-model accounting is keyed by these).
+    fn route_names(&self) -> &[String] {
+        &[]
+    }
+
+    /// Throughput counters of an underlying multi-core engine, if the
+    /// batch path routes through one.
+    fn engine_stats(&self) -> Option<EngineStats> {
+        None
+    }
+
+    /// Control handle for live hot swaps, on backends that support them.
+    /// The runtime extracts this *before* moving the plane into a
+    /// pipeline stage, so `.swap_every(n)` publishes from the ingress
+    /// thread while inference keeps running — a true concurrent swap.
+    fn swap_controller(&self) -> Option<SwapController> {
+        None
+    }
+}
+
+/// Boxed planes are planes: forwarding keeps generic consumers (e.g.
+/// [`ShuntRouter`](super::ShuntRouter)) working directly on what the
+/// [`BackendFactory`](super::BackendFactory) returns.  Every method is
+/// forwarded explicitly so inner overrides (cost curves, route names,
+/// swap controllers) are never shadowed by the trait defaults.
+impl<P: InferencePlane + ?Sized> InferencePlane for Box<P> {
+    fn capabilities(&self) -> Capabilities {
+        (**self).capabilities()
+    }
+
+    fn classify(&mut self, route: usize, x: &[u32]) -> (usize, Option<VersionTag>) {
+        (**self).classify(route, x)
+    }
+
+    fn try_run_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        (**self).try_run_batch(route, inputs, classes)
+    }
+
+    fn run_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Option<VersionTag> {
+        (**self).run_batch(route, inputs, classes)
+    }
+
+    fn latency_ns(&self) -> f64 {
+        (**self).latency_ns()
+    }
+
+    fn batch_latency_ns(&self, b: usize) -> f64 {
+        (**self).batch_latency_ns(b)
+    }
+
+    fn n_classes(&self) -> usize {
+        (**self).n_classes()
+    }
+
+    fn route_names(&self) -> &[String] {
+        (**self).route_names()
+    }
+
+    fn engine_stats(&self) -> Option<EngineStats> {
+        (**self).engine_stats()
+    }
+
+    fn swap_controller(&self) -> Option<SwapController> {
+        (**self).swap_controller()
+    }
+}
+
+/// Control-plane handle a hot-swappable plane hands the serving runtime:
+/// republishes the bound slots round-robin (same weights, new version —
+/// the swap machinery is exercised without changing verdict semantics,
+/// which is exactly what `.swap_every(n)` demonstrates).
+pub struct SwapController {
+    registry: RegistryHandle,
+    names: Vec<String>,
+    cursor: usize,
+}
+
+impl SwapController {
+    /// Bind a controller to `names` (all must be published in
+    /// `registry`).
+    pub fn new(registry: RegistryHandle, names: Vec<String>) -> Self {
+        assert!(!names.is_empty(), "SwapController needs at least one slot");
+        Self { registry, names, cursor: 0 }
+    }
+
+    /// Hot-republish the next slot round-robin with its current weights
+    /// (version +1, swap count +1, verdicts unchanged).
+    pub fn tick(&mut self) -> Result<VersionTag, RegistryError> {
+        let name = self.names[self.cursor % self.names.len()].clone();
+        self.cursor += 1;
+        self.registry.touch(&name)
+    }
+
+    /// The registry this controller publishes through (swap-count
+    /// snapshots for reports).
+    pub fn registry(&self) -> &RegistryHandle {
+        &self.registry
+    }
+
+    /// Slots this controller rotates over.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+
+    #[test]
+    fn single_capability_defaults() {
+        let c = Capabilities::single("x", 42.0);
+        assert_eq!(c.backend, "x");
+        assert_eq!(c.max_batch, usize::MAX);
+        assert_eq!((c.shards, c.routes), (1, 1));
+        assert!(!c.supports_hot_swap && !c.supports_epoch_pinning);
+        assert_eq!(c.inference_ns, 42.0);
+    }
+
+    #[test]
+    fn swap_controller_rotates_round_robin_and_bumps_versions() {
+        let h = RegistryHandle::new();
+        h.publish("a", &BnnModel::random("a", 64, &[8, 2], 1)).unwrap();
+        h.publish("b", &BnnModel::random("b", 64, &[8, 2], 2)).unwrap();
+        let mut ctl = SwapController::new(h.clone(), vec!["a".into(), "b".into()]);
+        assert_eq!(ctl.tick().unwrap().to_string(), "a@v2");
+        assert_eq!(ctl.tick().unwrap().to_string(), "b@v2");
+        assert_eq!(ctl.tick().unwrap().to_string(), "a@v3");
+        assert_eq!(ctl.registry().swap_count("a"), 2);
+        assert_eq!(ctl.registry().swap_count("b"), 1);
+        assert_eq!(ctl.names(), ["a".to_string(), "b".to_string()]);
+    }
+}

@@ -1,32 +1,48 @@
-//! The serving loop: a threaded coordinator that consumes packet / flow
-//! events, applies the trigger + selectors, runs the configured executor,
-//! and routes verdicts.  This is the launcher's `serve` mode — the
-//! end-to-end request path with Python nowhere in sight.
+//! The unified serving runtime: **one** [`Service`], built by a
+//! [`ServeBuilder`], replaces the four legacy runtimes
+//! (`CoordinatorService`, `MultiModelService`, `PipelineService`,
+//! `RoutedPipelineService`).  Pipelining, batching, multi-model routing,
+//! and hot swap are orthogonal options on this one runtime instead of
+//! four products of structs:
 //!
-//! Two inference routes share the loop:
+//! ```text
+//! ServeBuilder::new()
+//!     .backend(BackendFactory::single("fpga", model)?)  // any InferencePlane
+//!     .trigger(TriggerCondition::EveryNPackets(10))     // or .router(rules)
+//!     .batching(32, 1e6)                                // optional
+//!     .pipeline(4)                                      // optional (0 = serial)
+//!     .queue_depth(1024)
+//!     .swap_every(100_000)                              // hot-swap backends only
+//!     .build()?
+//!     .run(events)?
+//! ```
 //!
-//! * **unbatched** (default): every triggered flow is classified inline —
-//!   minimum latency, the NIC-style per-packet path;
-//! * **batched** ([`CoordinatorService::with_batching`]): triggered flows
-//!   accumulate in a [`Batcher`] and go through the executor's
-//!   [`NnBatchExecutor::classify_batch`] fast path (weight-stationary
-//!   kernel / sharded engine) when the batch fills or times out — the
-//!   throughput path of §6.
+//! The builder validates the configuration against the backend's
+//! [`Capabilities`] (batch width, route count, hot-swap support) at
+//! build time, so a misconfiguration is a typed [`ServiceError`] instead
+//! of a mid-serve panic.
+//!
+//! `workers == 0` (the default) runs the single-threaded event loop on
+//! the calling thread; `workers >= 1` runs the staged pipeline of
+//! [`pipeline`](super::pipeline).  Both modes share this module's
+//! routing/batching/accounting primitives, and the determinism contract
+//! (same seeded traffic ⇒ bit-identical verdicts, any worker count or
+//! batch size) is asserted end-to-end in `tests/pipeline_equiv.rs` and
+//! `tests/plane_conformance.rs`.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc;
 
-use crate::bnn::{MultiModelExecutor, RegistryError, RegistryHandle, VersionTag};
+use crate::bnn::{EngineError, RegistryError, VersionTag};
 use crate::metrics::LatencyHistogram;
 use crate::net::features::FeatureVector;
 use crate::net::flow::{FlowStats, FlowTable};
 use crate::net::packet::Packet;
 use crate::net::traffic::{CbrSpec, TrafficGen};
 
-use super::batcher::{BatchSet, Batcher, TimedBatch};
+use super::batcher::{BatchSet, TimedBatch};
+use super::plane::{Capabilities, InferencePlane, SwapController};
 use super::selector::{OutputSelector, OutputSink};
 use super::trigger::{ModelRouter, TriggerCondition};
-use super::NnBatchExecutor;
 
 /// One event entering the coordinator (a received packet).
 #[derive(Debug, Clone)]
@@ -86,7 +102,7 @@ pub struct ServiceStats {
     pub packets: u64,
     pub triggers: u64,
     pub inferences: u64,
-    /// Verdict histogram, sized from the executor's model and grown on
+    /// Verdict histogram, sized from the backend's model and grown on
     /// demand if a verdict ever exceeds it.
     pub classes: Vec<u64>,
     pub latency: LatencyHistogram,
@@ -95,8 +111,8 @@ pub struct ServiceStats {
     /// inter-stage link (see `coordinator::pipeline::STAGE_LINKS`).
     /// Empty in the serial loop, which has no queues.
     pub stage_blocked: Vec<u64>,
-    /// Per-model accounting on the registry route, keyed by slot name.
-    /// Empty in single-model serving.
+    /// Per-model accounting on routed (multi-model) backends, keyed by
+    /// slot name.  Empty in single-model serving.
     pub per_model: BTreeMap<String, ModelServiceStats>,
 }
 
@@ -123,6 +139,21 @@ impl ModelServiceStats {
         }
         self.classes[class] += 1;
     }
+
+    /// Fold another accounting of the same model into this one:
+    /// inference counts add, histograms merge bucket-wise growing to
+    /// the wider of the two.  Swap counts are *not* folded here — they
+    /// are snapshots of one shared registry counter, and each call site
+    /// owns its own snapshot/merge policy.
+    pub(crate) fn absorb(&mut self, other: &ModelServiceStats) {
+        self.inferences += other.inferences;
+        if other.classes.len() > self.classes.len() {
+            self.classes.resize(other.classes.len(), 0);
+        }
+        for (a, b) in self.classes.iter_mut().zip(&other.classes) {
+            *a += b;
+        }
+    }
 }
 
 impl ServiceStats {
@@ -148,165 +179,15 @@ impl ServiceStats {
         }
         for (name, m) in &other.per_model {
             let mine = self.per_model.entry(name.clone()).or_default();
-            mine.inferences += m.inferences;
-            if m.classes.len() > mine.classes.len() {
-                mine.classes.resize(m.classes.len(), 0);
-            }
-            for (a, b) in mine.classes.iter_mut().zip(&m.classes) {
-                *a += b;
-            }
+            mine.absorb(m);
             // Snapshots of one shared counter, not partitions of it.
             mine.swaps = mine.swaps.max(m.swaps);
         }
     }
 }
 
-/// The coordinator service: single-consumer event loop.
-pub struct CoordinatorService<E: NnBatchExecutor> {
-    pub exec: E,
-    pub trigger: TriggerCondition,
-    pub output: OutputSelector,
-    pub flows: FlowTable,
-    pub sink: OutputSink,
-    pub stats: ServiceStats,
-    batcher: Option<Batcher<PendingFlow>>,
-    /// Scratch for batch flushes ((flow id, enqueue ts) per item),
-    /// reused across batches.
-    batch_meta: Vec<(u64, f64)>,
-    batch_inputs: Vec<Vec<u32>>,
-    batch_classes: Vec<usize>,
-}
-
-impl<E: NnBatchExecutor> CoordinatorService<E> {
-    pub fn new(exec: E, trigger: TriggerCondition, output: OutputSelector) -> Self {
-        let n_classes = exec.n_classes();
-        Self {
-            exec,
-            trigger,
-            output,
-            flows: FlowTable::new(1 << 16),
-            sink: OutputSink::default(),
-            stats: ServiceStats {
-                classes: vec![0; n_classes],
-                ..Default::default()
-            },
-            batcher: None,
-            batch_meta: Vec::new(),
-            batch_inputs: Vec::new(),
-            batch_classes: Vec::new(),
-        }
-    }
-
-    /// Enable batch accumulation: triggered flows queue until `max_size`
-    /// or `max_wait_ns` (packet-clock), then take the batch fast path.
-    pub fn with_batching(mut self, max_size: usize, max_wait_ns: f64) -> Self {
-        self.batcher = Some(Batcher::new(max_size, max_wait_ns));
-        self
-    }
-
-    /// Triggered flows currently waiting in the batcher.
-    pub fn pending(&self) -> usize {
-        self.batcher.as_ref().map_or(0, Batcher::pending)
-    }
-
-    /// Synchronous single-event path (also the unit the async loop calls).
-    pub fn handle(&mut self, ev: &PacketEvent) {
-        self.stats.packets += 1;
-        // Time-based flush rides on packet arrival: the data plane has no
-        // timer thread, so the oldest batched flow is checked against the
-        // packet clock (same shape as §3.2's trigger module).
-        let timed_out = self
-            .batcher
-            .as_mut()
-            .and_then(|b| b.poll(ev.packet.ts_ns));
-        if let Some(batch) = timed_out {
-            self.flush_batch(batch, ev.packet.ts_ns);
-        }
-        let (stats, is_new, pkts) = self.flows.update(&ev.packet);
-        if !self.trigger.fires(&ev.packet, is_new, pkts) {
-            return;
-        }
-        self.stats.triggers += 1;
-        let packed = select_packed_input(ev, stats);
-        let id = flow_id(&ev.packet);
-        if self.batcher.is_some() {
-            let full = self
-                .batcher
-                .as_mut()
-                .unwrap()
-                .push(ev.packet.ts_ns, PendingFlow { id, packed });
-            if let Some(batch) = full {
-                self.flush_batch(batch, ev.packet.ts_ns);
-            }
-        } else {
-            let class = self.exec.classify(&packed);
-            let latency_ns = self.exec.latency_ns();
-            self.finish_inference(id, class, latency_ns);
-        }
-    }
-
-    /// Drain any batched-but-unflushed flows (end of stream / shutdown).
-    pub fn flush(&mut self) {
-        let batch = self.batcher.as_mut().and_then(|b| b.poll(f64::INFINITY));
-        if let Some(batch) = batch {
-            // Best "now" available at shutdown: the newest enqueue time.
-            let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
-            self.flush_batch(batch, now_ns);
-        }
-    }
-
-    /// Run one accumulated batch through the executor's batch fast path
-    /// and account every verdict.  Per-flow latency is the queueing wait
-    /// on the packet clock (`now_ns - enqueue`) plus the modeled
-    /// completion time of the *whole* batch (every item waits for the
-    /// batch to finish) — batching's latency price stays visible in the
-    /// histogram (Fig. 6's trade-off) instead of silently vanishing.
-    fn flush_batch(&mut self, batch: Vec<(f64, PendingFlow)>, now_ns: f64) {
-        self.batch_meta.clear();
-        self.batch_inputs.clear();
-        for (enq_ns, flow) in batch {
-            self.batch_meta.push((flow.id, enq_ns));
-            self.batch_inputs.push(flow.packed);
-        }
-        let inputs = std::mem::take(&mut self.batch_inputs);
-        let mut classes = std::mem::take(&mut self.batch_classes);
-        self.exec.classify_batch(&inputs, &mut classes);
-        let exec_ns = self.exec.batch_latency_ns(classes.len());
-        for i in 0..classes.len() {
-            let (id, enq_ns) = self.batch_meta[i];
-            let latency_ns = batch_item_latency_ns(now_ns, enq_ns, exec_ns);
-            self.finish_inference(id, classes[i], latency_ns);
-        }
-        self.batch_inputs = inputs;
-        self.batch_classes = classes;
-    }
-
-    /// Account one verdict: stats, histogram (grown on demand), sink.
-    fn finish_inference(&mut self, id: u64, class: usize, latency_ns: f64) {
-        self.stats.inferences += 1;
-        if class >= self.stats.classes.len() {
-            self.stats.classes.resize(class + 1, 0);
-        }
-        self.stats.classes[class] += 1;
-        self.stats.latency.record(latency_ns);
-        self.sink.write(self.output, id, class);
-    }
-
-    /// Event loop: drain an mpsc channel until all senders drop; returns
-    /// the accumulated statistics.  Run it on a dedicated thread; the
-    /// traffic source(s) feed the channel from other threads (the NIC
-    /// event-queue shape).  Any partial batch is flushed at shutdown.
-    pub fn run(mut self, rx: mpsc::Receiver<PacketEvent>) -> ServiceStats {
-        while let Ok(ev) = rx.recv() {
-            self.handle(&ev);
-        }
-        self.flush();
-        self.stats
-    }
-}
-
-/// One verdict from the registry route, with the `(name, version)` it
-/// ran under.
+/// One verdict from an epoch-pinning backend, with the `(name, version)`
+/// it ran under.
 #[derive(Debug, Clone)]
 pub struct TaggedVerdict {
     pub id: u64,
@@ -314,85 +195,261 @@ pub struct TaggedVerdict {
     pub tag: VersionTag,
 }
 
-/// The registry-routed counterpart of [`CoordinatorService`]: flows are
-/// routed to **named models** by a [`ModelRouter`], classified by a
-/// [`MultiModelExecutor`] that pins one registry epoch per inference (or
-/// per batch — per-model batch lanes never mix models), and every
-/// verdict carries its [`VersionTag`].  Live `publish`es through the
-/// shared [`RegistryHandle`] hot-swap weights between batches without
-/// this loop ever pausing.
-pub struct MultiModelService {
-    pub router: ModelRouter,
-    pub exec: MultiModelExecutor,
-    pub flows: FlowTable,
-    pub sink: OutputSink,
+/// What a completed (or faulted) service run leaves behind.
+#[derive(Debug, Default)]
+pub struct ServiceReport {
     pub stats: ServiceStats,
-    /// Every verdict with its version tag, in emission order.  Grows
-    /// for the life of the run — the consistency harness needs the full
-    /// log; long-running serves disable it with
-    /// [`without_tag_log`](Self::without_tag_log) (per-model histograms
-    /// in [`ServiceStats::per_model`] stay complete either way).
+    /// Verdicts in emission order (inference-completion order in the
+    /// pipelined mode).
+    pub sink: OutputSink,
+    /// Every tagged verdict, in emission order — only populated by
+    /// epoch-pinning backends with the tag log enabled.
     pub tagged: Vec<TaggedVerdict>,
-    log_tags: bool,
-    registry: RegistryHandle,
-    output: OutputSelector,
-    /// Route-indexed per-model accounting, folded into the name-keyed
-    /// [`ServiceStats::per_model`] map at flush time — the hot path
-    /// indexes a `Vec` instead of allocating a key for a map lookup.
-    per_model_scratch: Vec<ModelServiceStats>,
-    batchers: Option<BatchSet<PendingFlow>>,
-    /// Scratch reused across batch flushes.
-    batch_meta: Vec<(u64, f64)>,
-    batch_inputs: Vec<Vec<u32>>,
-    batch_classes: Vec<usize>,
+    /// Live flows tracked at shutdown (summed over worker shards in the
+    /// pipelined mode).
+    pub flows_tracked: usize,
+    /// Sharded-engine counters, if the backend's batch path ran one.
+    pub engine: Option<crate::bnn::EngineStats>,
 }
 
-impl MultiModelService {
-    /// Bind the router's model names against `registry` (each must be
-    /// published).  `latency_ns` is the modeled per-inference device
-    /// latency, as in [`CoreExecutor::new`](super::CoreExecutor::new).
-    pub fn new(
-        registry: RegistryHandle,
-        router: ModelRouter,
-        output: OutputSelector,
-        latency_ns: f64,
-    ) -> Result<Self, RegistryError> {
-        let exec = MultiModelExecutor::new(&registry, router.model_names(), latency_ns)?;
-        let n_classes = exec.max_out_neurons();
-        let n_models = router.n_models();
-        Ok(Self {
-            router,
-            exec,
-            flows: FlowTable::new(1 << 16),
-            sink: OutputSink::default(),
-            stats: ServiceStats {
-                classes: vec![0; n_classes],
-                ..Default::default()
-            },
-            tagged: Vec::new(),
-            log_tags: true,
-            registry,
-            output,
-            per_model_scratch: vec![ModelServiceStats::default(); n_models],
-            batchers: None,
-            batch_meta: Vec::new(),
-            batch_inputs: Vec::new(),
-            batch_classes: Vec::new(),
-        })
+/// One stage-level fault of a pipelined run — the typed replacement of
+/// the old string-only failure lists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StageFailure {
+    /// Ingress could not reach a parse worker (its thread died).
+    IngressUnreachable { worker: usize },
+    /// A parse worker found the inference channel closed.
+    ParseDisconnected { worker: usize },
+    /// The inference stage found the sink channel closed.
+    SinkDisconnected,
+    /// The backend's batch path failed (dead or panicked shard worker).
+    Inference(EngineError),
+    /// A `.swap_every(n)` republish failed mid-run.
+    Swap(RegistryError),
+    /// A stage thread panicked; the payload text is preserved.
+    Panicked { stage: &'static str, message: String },
+}
+
+impl std::fmt::Display for StageFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageFailure::IngressUnreachable { worker } => {
+                write!(f, "ingress: parse worker {worker} unreachable")
+            }
+            StageFailure::ParseDisconnected { worker } => {
+                write!(f, "parse worker {worker}: inference channel disconnected")
+            }
+            StageFailure::SinkDisconnected => {
+                write!(f, "inference stage: sink channel disconnected")
+            }
+            StageFailure::Inference(e) => write!(f, "inference stage: {e}"),
+            StageFailure::Swap(e) => write!(f, "hot-swap republish failed: {e}"),
+            StageFailure::Panicked { stage, message } => {
+                write!(f, "{stage} panicked: {message}")
+            }
+        }
+    }
+}
+
+/// Failure modes along the serve path — one typed enum from builder
+/// validation through backend construction to stage death, replacing
+/// the previous per-runtime string errors.
+#[derive(Debug)]
+pub enum ServiceError {
+    /// One or more pipeline stages died.  Everything accumulated before
+    /// the fault — stats, sink, tagged verdicts — survives in `report`.
+    Stage {
+        failures: Vec<StageFailure>,
+        report: Box<ServiceReport>,
+    },
+    /// Registry binding or publish failed.
+    Registry(RegistryError),
+    /// A backend's batch path failed outside a pipeline stage.
+    Engine(EngineError),
+    /// The `pisa` backend's model does not fit the PISA target.
+    Compile(crate::pisa::CompileError),
+    /// No backend registered under this name.
+    UnknownBackend { name: String },
+    /// The builder configuration contradicts the backend's
+    /// [`Capabilities`] (or is incomplete).
+    Config(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Stage { failures, .. } => {
+                let list: Vec<String> = failures.iter().map(ToString::to_string).collect();
+                write!(f, "pipeline stage failure: {}", list.join("; "))
+            }
+            ServiceError::Registry(e) => write!(f, "registry: {e}"),
+            ServiceError::Engine(e) => write!(f, "engine: {e}"),
+            ServiceError::Compile(e) => write!(f, "pisa compile: {e}"),
+            ServiceError::UnknownBackend { name } => write!(
+                f,
+                "unknown backend {name:?} (known: host|batch|sharded|pisa|fpga|registry; \
+                 aliases: nfp, p4, bnn-exec)"
+            ),
+            ServiceError::Config(msg) => write!(f, "service configuration: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServiceError::Registry(e) => Some(e),
+            ServiceError::Engine(e) => Some(e),
+            ServiceError::Compile(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<RegistryError> for ServiceError {
+    fn from(e: RegistryError) -> Self {
+        ServiceError::Registry(e)
+    }
+}
+
+impl From<EngineError> for ServiceError {
+    fn from(e: EngineError) -> Self {
+        ServiceError::Engine(e)
+    }
+}
+
+impl From<crate::pisa::CompileError> for ServiceError {
+    fn from(e: crate::pisa::CompileError) -> Self {
+        ServiceError::Compile(e)
+    }
+}
+
+/// How triggered flows pick their route: a bare [`TriggerCondition`]
+/// (single-model, route 0) or a [`ModelRouter`] (named multi-model
+/// routes).  Both are pure per-flow functions — the property the
+/// pipelined runtime's determinism rests on.
+#[derive(Debug, Clone)]
+pub(crate) enum RouteLogic {
+    Trigger(TriggerCondition),
+    Router(ModelRouter),
+}
+
+impl RouteLogic {
+    #[inline]
+    pub(crate) fn route(&self, pkt: &Packet, is_new_flow: bool, flow_pkts: u32) -> Option<usize> {
+        match self {
+            RouteLogic::Trigger(t) => t.fires(pkt, is_new_flow, flow_pkts).then_some(0),
+            RouteLogic::Router(r) => r.route(pkt, is_new_flow, flow_pkts),
+        }
     }
 
-    /// Per-model batch lanes: triggered flows queue in their model's
-    /// lane until `max_size` or `max_wait_ns` (packet-clock), then the
-    /// whole lane-batch scores under one pinned epoch.
-    pub fn with_batching(mut self, max_size: usize, max_wait_ns: f64) -> Self {
-        self.batchers = Some(BatchSet::new(self.router.n_models(), max_size, max_wait_ns));
+    pub(crate) fn n_routes(&self) -> usize {
+        match self {
+            RouteLogic::Trigger(_) => 1,
+            RouteLogic::Router(r) => r.n_models(),
+        }
+    }
+
+    /// Route-indexed model names, when this logic routes by name.
+    pub(crate) fn names(&self) -> Option<&[String]> {
+        match self {
+            RouteLogic::Trigger(_) => None,
+            RouteLogic::Router(r) => Some(r.model_names()),
+        }
+    }
+}
+
+/// Builder of the one [`Service`]: pick a backend, then compose routing,
+/// batching, pipelining, and hot swap as independent options.  `build`
+/// cross-checks every knob against the backend's [`Capabilities`].
+pub struct ServeBuilder {
+    plane: Option<Box<dyn InferencePlane>>,
+    route: RouteLogic,
+    output: OutputSelector,
+    batch: usize,
+    max_wait_ns: f64,
+    workers: usize,
+    queue_depth: usize,
+    flow_capacity: usize,
+    log_tags: bool,
+    swap_every: u64,
+}
+
+impl Default for ServeBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeBuilder {
+    pub fn new() -> Self {
+        Self {
+            plane: None,
+            route: RouteLogic::Trigger(TriggerCondition::EveryNPackets(10)),
+            output: OutputSelector::Memory,
+            batch: 0,
+            max_wait_ns: 1e6,
+            workers: 0,
+            queue_depth: 1024,
+            flow_capacity: 1 << 16,
+            log_tags: true,
+            swap_every: 0,
+        }
+    }
+
+    /// The inference backend — anything implementing [`InferencePlane`],
+    /// usually from [`BackendFactory`](super::BackendFactory).
+    pub fn backend(mut self, plane: Box<dyn InferencePlane>) -> Self {
+        self.plane = Some(plane);
         self
     }
 
-    /// Spread batches over a sharded engine of `n_shards` worker cores
-    /// (each batch still pins exactly one epoch across all shards).
-    pub fn with_shards(mut self, n_shards: usize) -> Self {
-        self.exec = self.exec.sharded(n_shards);
+    /// Single-model trigger condition (default: every 10th packet of a
+    /// flow).  Mutually exclusive with [`router`](Self::router).
+    pub fn trigger(mut self, trigger: TriggerCondition) -> Self {
+        self.route = RouteLogic::Trigger(trigger);
+        self
+    }
+
+    /// Multi-model routing rules; the backend must expose exactly as
+    /// many routes as the router names.
+    pub fn router(mut self, router: ModelRouter) -> Self {
+        self.route = RouteLogic::Router(router);
+        self
+    }
+
+    /// Where verdicts go (default: memory).
+    pub fn output(mut self, output: OutputSelector) -> Self {
+        self.output = output;
+        self
+    }
+
+    /// Batch accumulation: triggered flows queue (per route lane) until
+    /// `max_size` or `max_wait_ns` on the packet clock, then take the
+    /// backend's batch fast path.  `0` classifies inline.
+    pub fn batching(mut self, max_size: usize, max_wait_ns: f64) -> Self {
+        self.batch = max_size;
+        self.max_wait_ns = max_wait_ns;
+        self
+    }
+
+    /// Staged multi-threaded runtime with `workers` parse/trigger
+    /// workers (flow-hash shards).  `0` (default) runs the serial loop
+    /// on the calling thread; verdicts are bit-identical either way.
+    pub fn pipeline(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Capacity of each bounded inter-stage channel (pipelined mode).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Flow-table capacity (per worker in the pipelined mode).
+    pub fn flow_capacity(mut self, capacity: usize) -> Self {
+        self.flow_capacity = capacity;
         self
     }
 
@@ -403,14 +460,273 @@ impl MultiModelService {
         self
     }
 
-    /// Flows currently waiting across all batch lanes.
-    pub fn pending(&self) -> usize {
+    /// Hot-republish one bound slot (round-robin, same weights, new
+    /// version) every `packets` packets while serving — the
+    /// zero-downtime swap demo.  Requires a hot-swap-capable backend.
+    pub fn swap_every(mut self, packets: u64) -> Self {
+        self.swap_every = packets;
+        self
+    }
+
+    /// Validate the configuration against the backend's capabilities.
+    pub fn build(self) -> Result<Service, ServiceError> {
+        let plane = self
+            .plane
+            .ok_or_else(|| ServiceError::Config("no backend selected: call .backend(...)".into()))?;
+        let caps = plane.capabilities();
+        let want_routes = self.route.n_routes();
+        if caps.routes != want_routes {
+            return Err(ServiceError::Config(format!(
+                "backend {:?} serves {} route(s) but the routing config names {}",
+                caps.backend, caps.routes, want_routes
+            )));
+        }
+        // Route indices are positional: when both sides carry names,
+        // they must agree exactly — a count-only check would let a
+        // reordered router silently classify every flow with the wrong
+        // model.
+        if let Some(router_names) = self.route.names() {
+            let plane_names = plane.route_names();
+            if !plane_names.is_empty() && plane_names != router_names {
+                return Err(ServiceError::Config(format!(
+                    "router names {router_names:?} do not match the backend's bound \
+                     slots {plane_names:?} (order matters: route index = position)"
+                )));
+            }
+        }
+        if self.batch > caps.max_batch {
+            return Err(ServiceError::Config(format!(
+                "backend {:?} accepts batches of at most {} (asked for {})",
+                caps.backend, caps.max_batch, self.batch
+            )));
+        }
+        if self.swap_every > 0 && !caps.supports_hot_swap {
+            return Err(ServiceError::Config(format!(
+                "backend {:?} does not support hot swap (swap_every needs the registry backend)",
+                caps.backend
+            )));
+        }
+        Ok(Service {
+            plane,
+            route: self.route,
+            output: self.output,
+            batch: self.batch,
+            max_wait_ns: self.max_wait_ns,
+            workers: self.workers,
+            queue_depth: self.queue_depth,
+            flow_capacity: self.flow_capacity,
+            log_tags: self.log_tags,
+            swap_every: self.swap_every,
+        })
+    }
+}
+
+/// The one serving runtime.  Constructed by [`ServeBuilder`]; consumed
+/// by [`run`](Self::run).
+pub struct Service {
+    pub(crate) plane: Box<dyn InferencePlane>,
+    pub(crate) route: RouteLogic,
+    pub(crate) output: OutputSelector,
+    pub(crate) batch: usize,
+    pub(crate) max_wait_ns: f64,
+    pub(crate) workers: usize,
+    pub(crate) queue_depth: usize,
+    pub(crate) flow_capacity: usize,
+    pub(crate) log_tags: bool,
+    pub(crate) swap_every: u64,
+}
+
+impl Service {
+    /// The backend's capability descriptor (report material).
+    pub fn capabilities(&self) -> Capabilities {
+        self.plane.capabilities()
+    }
+
+    /// Drive `events` through the service and return the report.  With
+    /// `pipeline(0)` this is the synchronous event loop on the calling
+    /// thread; with `pipeline(n)` the calling thread becomes the ingress
+    /// sharder of the staged runtime and every stage is joined before
+    /// returning.  On stage death the error carries everything
+    /// accumulated before the fault.
+    pub fn run(
+        self,
+        events: impl IntoIterator<Item = PacketEvent>,
+    ) -> Result<ServiceReport, ServiceError> {
+        if self.workers == 0 {
+            self.run_serial(events)
+        } else {
+            super::pipeline::run_staged(self, events)
+        }
+    }
+
+    fn run_serial(
+        self,
+        events: impl IntoIterator<Item = PacketEvent>,
+    ) -> Result<ServiceReport, ServiceError> {
+        let mut core =
+            SerialCore::unbatched(self.plane, self.route, self.output, self.flow_capacity);
+        if self.batch > 0 {
+            core.set_batching(self.batch, self.max_wait_ns);
+        }
+        if !self.log_tags {
+            core.disable_tag_log();
+        }
+        let mut n = 0u64;
+        // Same failure semantics as the staged mode: a failed republish
+        // is reported once (further ticks are disabled), the run keeps
+        // serving, and the error carries the full report.
+        let mut swap_failures: Vec<StageFailure> = Vec::new();
+        for ev in events {
+            if self.swap_every > 0
+                && swap_failures.is_empty()
+                && n > 0
+                && n % self.swap_every == 0
+            {
+                if let Err(e) = core.hot_swap_tick() {
+                    swap_failures.push(StageFailure::Swap(e));
+                }
+            }
+            n += 1;
+            core.handle(&ev);
+        }
+        core.flush();
+        let mut failures = swap_failures;
+        if let Some(f) = core.take_failure() {
+            failures.push(f);
+        }
+        let report = core.into_report();
+        if failures.is_empty() {
+            Ok(report)
+        } else {
+            Err(ServiceError::Stage { failures, report: Box::new(report) })
+        }
+    }
+}
+
+/// The synchronous single-consumer engine behind both the serial
+/// [`Service`] mode and the deprecated legacy shims: flow update →
+/// route → (batch lanes | inline) → backend → accounting/sink.
+pub(crate) struct SerialCore {
+    plane: Box<dyn InferencePlane>,
+    route: RouteLogic,
+    output: OutputSelector,
+    flows: FlowTable,
+    batchers: Option<BatchSet<PendingFlow>>,
+    stats: ServiceStats,
+    sink: OutputSink,
+    tagged: Vec<TaggedVerdict>,
+    log_tags: bool,
+    /// Route-indexed model names (empty = unnamed single-model serving).
+    names: Vec<String>,
+    /// Route-indexed per-model accounting, folded into the name-keyed
+    /// [`ServiceStats::per_model`] map at flush time — the hot path
+    /// indexes a `Vec` instead of allocating a key for a map lookup.
+    per_route: Vec<ModelServiceStats>,
+    swap: Option<SwapController>,
+    /// First typed backend fault (dead/panicked engine shard).  Once
+    /// set, further inference work is skipped — the same "stage died,
+    /// partial stats survive" semantics as the pipelined mode.
+    failure: Option<StageFailure>,
+    /// Scratch reused across batch flushes.
+    batch_meta: Vec<(u64, f64)>,
+    batch_inputs: Vec<Vec<u32>>,
+    batch_classes: Vec<usize>,
+}
+
+impl SerialCore {
+    pub(crate) fn unbatched(
+        plane: Box<dyn InferencePlane>,
+        route: RouteLogic,
+        output: OutputSelector,
+        flow_capacity: usize,
+    ) -> Self {
+        let n_classes = plane.n_classes();
+        let names = plane.route_names().to_vec();
+        let swap = plane.swap_controller();
+        let n_routes = route.n_routes();
+        Self {
+            plane,
+            route,
+            output,
+            flows: FlowTable::new(flow_capacity),
+            batchers: None,
+            stats: ServiceStats {
+                classes: vec![0; n_classes],
+                ..Default::default()
+            },
+            sink: OutputSink::default(),
+            tagged: Vec::new(),
+            log_tags: true,
+            per_route: vec![ModelServiceStats::default(); n_routes],
+            names,
+            swap,
+            failure: None,
+            batch_meta: Vec::new(),
+            batch_inputs: Vec::new(),
+            batch_classes: Vec::new(),
+        }
+    }
+
+    /// Enable per-route batch lanes (call before any traffic).
+    pub(crate) fn set_batching(&mut self, max_size: usize, max_wait_ns: f64) {
+        self.batchers = Some(BatchSet::new(self.route.n_routes(), max_size, max_wait_ns));
+    }
+
+    pub(crate) fn disable_tag_log(&mut self) {
+        self.log_tags = false;
+    }
+
+    /// Triggered flows currently waiting across all batch lanes.
+    pub(crate) fn pending(&self) -> usize {
         self.batchers.as_ref().map_or(0, BatchSet::pending)
     }
 
-    /// Synchronous single-event path (same shape as
-    /// [`CoordinatorService::handle`]).
-    pub fn handle(&mut self, ev: &PacketEvent) {
+    pub(crate) fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    pub(crate) fn sink(&self) -> &OutputSink {
+        &self.sink
+    }
+
+    pub(crate) fn tagged(&self) -> &[TaggedVerdict] {
+        &self.tagged
+    }
+
+    pub(crate) fn flows_tracked(&self) -> usize {
+        self.flows.len()
+    }
+
+    pub(crate) fn engine_stats(&self) -> Option<crate::bnn::EngineStats> {
+        self.plane.engine_stats()
+    }
+
+    /// The first backend fault this core absorbed, if any.
+    pub(crate) fn take_failure(&mut self) -> Option<StageFailure> {
+        self.failure.take()
+    }
+
+    /// Peek at the absorbed backend fault without clearing it (the
+    /// deprecated shims use this to reproduce the old panic-on-fault
+    /// behavior).
+    pub(crate) fn failure(&self) -> Option<&StageFailure> {
+        self.failure.as_ref()
+    }
+
+    /// Republish the next bound slot round-robin (no-op without a swap
+    /// controller).
+    pub(crate) fn hot_swap_tick(&mut self) -> Result<(), RegistryError> {
+        if let Some(s) = self.swap.as_mut() {
+            s.tick()?;
+        }
+        Ok(())
+    }
+
+    /// Synchronous single-event path.  Time-based batch flushes ride on
+    /// packet arrival: the data plane has no timer thread, so pending
+    /// lanes are checked against the packet clock (§3.2's trigger-module
+    /// shape).
+    pub(crate) fn handle(&mut self, ev: &PacketEvent) {
         self.stats.packets += 1;
         let due = match self.batchers.as_mut() {
             Some(b) => b.poll(ev.packet.ts_ns),
@@ -419,12 +735,17 @@ impl MultiModelService {
         for (lane, batch) in due {
             self.flush_batch(lane, batch, ev.packet.ts_ns);
         }
-        let (stats, is_new, pkts) = self.flows.update(&ev.packet);
-        let Some(route) = self.router.route(&ev.packet, is_new, pkts) else {
+        let (fstats, is_new, pkts) = self.flows.update(&ev.packet);
+        let Some(route) = self.route.route(&ev.packet, is_new, pkts) else {
             return;
         };
         self.stats.triggers += 1;
-        let packed = select_packed_input(ev, stats);
+        if self.failure.is_some() {
+            // Poisoned backend: keep parse/trigger accounting honest but
+            // stop feeding it (mirrors a dead pipelined stage 3).
+            return;
+        }
+        let packed = select_packed_input(ev, fstats);
         let id = flow_id(&ev.packet);
         if self.batchers.is_some() {
             let full = self
@@ -436,50 +757,53 @@ impl MultiModelService {
                 self.flush_batch(route, batch, ev.packet.ts_ns);
             }
         } else {
-            let (class, tag) = self.exec.classify(route, &packed);
-            let latency_ns = self.exec.latency_ns();
+            let (class, tag) = self.plane.classify(route, &packed);
+            let latency_ns = self.plane.latency_ns();
             self.finish_inference(route, id, class, tag, latency_ns);
         }
     }
 
-    /// Drain every batch lane (end of stream / shutdown) and snapshot
-    /// per-model swap counts from the registry.
-    pub fn flush(&mut self) {
+    /// Drain every batch lane (end of stream / shutdown) and fold the
+    /// per-route scratch into the name-keyed per-model map.
+    pub(crate) fn flush(&mut self) {
         let due = match self.batchers.as_mut() {
             Some(b) => b.poll(f64::INFINITY),
             None => Vec::new(),
         };
         for (lane, batch) in due {
+            // Best "now" available at shutdown: the newest enqueue time.
             let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
             self.flush_batch(lane, batch, now_ns);
         }
-        self.snapshot_swaps();
+        self.snapshot_per_model();
     }
 
-    /// Fold the route-indexed scratch into the name-keyed
-    /// [`ServiceStats::per_model`] map and refresh each routed model's
-    /// swap count from the live registry.  Draining the scratch makes
-    /// repeated flushes safe (nothing is double-counted).
-    pub fn snapshot_swaps(&mut self) {
-        for (route, scratch) in self.per_model_scratch.iter_mut().enumerate() {
-            let name = &self.router.model_names()[route];
+    /// Fold route-indexed scratch into [`ServiceStats::per_model`] and
+    /// refresh each named route's swap count from the live registry.
+    /// Draining the scratch makes repeated flushes safe.
+    fn snapshot_per_model(&mut self) {
+        for (route, scratch) in self.per_route.iter_mut().enumerate() {
+            let Some(name) = self.names.get(route) else {
+                continue;
+            };
             let entry = self.stats.per_model.entry(name.clone()).or_default();
-            entry.inferences += scratch.inferences;
-            if scratch.classes.len() > entry.classes.len() {
-                entry.classes.resize(scratch.classes.len(), 0);
+            entry.absorb(scratch);
+            if let Some(swap) = self.swap.as_ref() {
+                entry.swaps = swap.registry().swap_count(name);
             }
-            for (a, b) in entry.classes.iter_mut().zip(&scratch.classes) {
-                *a += b;
-            }
-            entry.swaps = self.registry.swap_count(name);
             *scratch = ModelServiceStats::default();
         }
     }
 
-    /// Score one lane's batch under a single pinned epoch and account
-    /// every verdict (latency semantics shared with the single-model
-    /// loop via [`batch_item_latency_ns`]).
+    /// Score one lane's batch under a single weight snapshot and account
+    /// every verdict.  Per-flow latency is the queueing wait on the
+    /// packet clock plus the modeled completion time of the *whole*
+    /// batch — batching's latency price stays visible in the histogram
+    /// (Fig. 6's trade-off) instead of silently vanishing.
     fn flush_batch(&mut self, lane: usize, batch: TimedBatch<PendingFlow>, now_ns: f64) {
+        if self.failure.is_some() {
+            return;
+        }
         self.batch_meta.clear();
         self.batch_inputs.clear();
         for (enq_ns, flow) in batch {
@@ -488,23 +812,33 @@ impl MultiModelService {
         }
         let inputs = std::mem::take(&mut self.batch_inputs);
         let mut classes = std::mem::take(&mut self.batch_classes);
-        let tag = self.exec.classify_batch(lane, &inputs, &mut classes);
-        let exec_ns = self.exec.batch_latency_ns(classes.len());
-        for i in 0..classes.len() {
-            let (id, enq_ns) = self.batch_meta[i];
-            let latency_ns = batch_item_latency_ns(now_ns, enq_ns, exec_ns);
-            self.finish_inference(lane, id, classes[i], tag.clone(), latency_ns);
+        let outcome = self.plane.try_run_batch(lane, &inputs, &mut classes);
+        match outcome {
+            Ok(tag) => {
+                let exec_ns = self.plane.batch_latency_ns(classes.len());
+                for i in 0..classes.len() {
+                    let (id, enq_ns) = self.batch_meta[i];
+                    let latency_ns = batch_item_latency_ns(now_ns, enq_ns, exec_ns);
+                    self.finish_inference(lane, id, classes[i], tag.clone(), latency_ns);
+                }
+            }
+            // Typed fault: this batch's verdicts are lost (exactly as
+            // they would be in a dead pipelined stage 3); everything
+            // accounted so far survives into the report.
+            Err(e) => self.failure = Some(StageFailure::Inference(e)),
         }
         self.batch_inputs = inputs;
         self.batch_classes = classes;
     }
 
+    /// Account one verdict: stats, histogram (grown on demand), per-route
+    /// scratch, sink, tag log.
     fn finish_inference(
         &mut self,
         route: usize,
         id: u64,
         class: usize,
-        tag: VersionTag,
+        tag: Option<VersionTag>,
         latency_ns: f64,
     ) {
         self.stats.inferences += 1;
@@ -512,100 +846,94 @@ impl MultiModelService {
             self.stats.classes.resize(class + 1, 0);
         }
         self.stats.classes[class] += 1;
-        // Route-indexed: no key allocation, no map walk per verdict.
-        self.per_model_scratch[route].record(class);
+        if !self.names.is_empty() {
+            self.per_route[route].record(class);
+        }
         self.stats.latency.record(latency_ns);
         self.sink.write(self.output, id, class);
         if self.log_tags {
-            self.tagged.push(TaggedVerdict { id, class, tag });
+            if let Some(tag) = tag {
+                self.tagged.push(TaggedVerdict { id, class, tag });
+            }
         }
     }
 
-    /// Event loop: drain the channel until all senders drop; flushes and
-    /// returns the accumulated statistics plus the tagged verdict log.
-    pub fn run(mut self, rx: mpsc::Receiver<PacketEvent>) -> (ServiceStats, Vec<TaggedVerdict>) {
-        while let Ok(ev) = rx.recv() {
-            self.handle(&ev);
+    pub(crate) fn into_report(mut self) -> ServiceReport {
+        let engine = self.plane.engine_stats();
+        let flows_tracked = self.flows.len();
+        ServiceReport {
+            stats: std::mem::take(&mut self.stats),
+            sink: std::mem::take(&mut self.sink),
+            tagged: std::mem::take(&mut self.tagged),
+            flows_tracked,
+            engine,
         }
-        self.flush();
-        (self.stats, self.tagged)
+    }
+
+    pub(crate) fn into_stats(mut self) -> ServiceStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    pub(crate) fn into_stats_and_tags(mut self) -> (ServiceStats, Vec<TaggedVerdict>) {
+        (std::mem::take(&mut self.stats), std::mem::take(&mut self.tagged))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bnn::BnnModel;
-    use crate::coordinator::CoreExecutor;
+    use crate::bnn::{BnnModel, RegistryHandle};
+    use crate::coordinator::BackendFactory;
     use crate::net::traffic::{CbrSpec, TrafficGen};
 
-    fn service() -> CoordinatorService<CoreExecutor> {
-        let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
-        CoordinatorService::new(
-            CoreExecutor::fpga(model),
-            TriggerCondition::EveryNPackets(10),
-            OutputSelector::Memory,
-        )
+    fn model() -> BnnModel {
+        BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+    }
+
+    fn builder() -> ServeBuilder {
+        ServeBuilder::new()
+            .backend(BackendFactory::single("fpga", model()).unwrap())
+            .trigger(TriggerCondition::EveryNPackets(10))
+            .output(OutputSelector::Memory)
+    }
+
+    fn events(n: usize, flows: u64, seed: u64) -> Vec<PacketEvent> {
+        PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, flows, seed, n)
     }
 
     #[test]
     fn trigger_fires_once_per_flow_at_10_packets() {
-        let mut svc = service();
-        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 50, 3);
-        for _ in 0..5000 {
-            let p = gen.next_packet();
-            svc.handle(&PacketEvent { packet: p, payload_words: None });
-        }
-        assert_eq!(svc.stats.packets, 5000);
-        assert!(svc.stats.triggers > 0);
-        assert_eq!(svc.stats.triggers, svc.stats.inferences);
+        let rep = builder().build().unwrap().run(events(5000, 50, 3)).unwrap();
+        assert_eq!(rep.stats.packets, 5000);
+        assert!(rep.stats.triggers > 0);
+        assert_eq!(rep.stats.triggers, rep.stats.inferences);
         // Every verdict was written to memory (the configured selector).
-        assert_eq!(svc.sink.memory.len() as u64, svc.stats.inferences);
-        assert!(svc.sink.inline_tags.is_empty());
+        assert_eq!(rep.sink.memory.len() as u64, rep.stats.inferences);
+        assert!(rep.sink.inline_tags.is_empty());
         // Each flow triggers at most once (exactly at packet #10).
-        assert!(svc.stats.triggers <= 50);
-    }
-
-    #[test]
-    fn event_loop_drains_channel() {
-        let svc = service();
-        let (tx, rx) = mpsc::channel();
-        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 10, 4);
-        let feeder = std::thread::spawn(move || {
-            for _ in 0..500 {
-                let p = gen.next_packet();
-                tx.send(PacketEvent { packet: p, payload_words: None }).unwrap();
-            }
-        });
-        let consumer = std::thread::spawn(move || svc.run(rx));
-        feeder.join().unwrap();
-        let stats = consumer.join().unwrap();
-        assert_eq!(stats.packets, 500);
+        assert!(rep.stats.triggers <= 50);
+        // Single-model serving: no tags, no per-model entries.
+        assert!(rep.tagged.is_empty());
+        assert!(rep.stats.per_model.is_empty());
     }
 
     #[test]
     fn histogram_width_comes_from_model() {
-        let svc = service();
         // traffic model has 2 output neurons → 2 counters, not 8.
-        assert_eq!(svc.stats.classes.len(), 2);
+        let rep = builder().build().unwrap().run(events(100, 5, 1)).unwrap();
+        assert_eq!(rep.stats.classes.len(), 2);
     }
 
     #[test]
     fn batched_route_matches_unbatched() {
-        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 40, 6);
-        let events: Vec<PacketEvent> = (0..4000)
-            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
-            .collect();
-        let mut plain = service();
-        for ev in &events {
-            plain.handle(ev);
-        }
-        let mut batched = service().with_batching(7, 1e12);
-        for ev in &events {
-            batched.handle(ev);
-        }
-        batched.flush();
-        assert_eq!(batched.pending(), 0);
+        let evs = events(4000, 40, 6);
+        let plain = builder().build().unwrap().run(evs.iter().cloned()).unwrap();
+        let batched = builder()
+            .batching(7, 1e12)
+            .build()
+            .unwrap()
+            .run(evs.iter().cloned())
+            .unwrap();
         assert_eq!(batched.stats.triggers, plain.stats.triggers);
         assert_eq!(batched.stats.inferences, plain.stats.inferences);
         assert_eq!(batched.stats.classes, plain.stats.classes);
@@ -615,6 +943,18 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batcher_timeout_flushes_on_packet_clock() {
+        // Huge batch size, tiny timeout: flows must still drain.
+        let rep = builder()
+            .batching(1 << 20, 1.0)
+            .build()
+            .unwrap()
+            .run(events(2000, 5, 8))
+            .unwrap();
+        assert_eq!(rep.stats.inferences, rep.stats.triggers);
     }
 
     #[test]
@@ -702,68 +1042,64 @@ mod tests {
         (h, router)
     }
 
+    fn routed_builder(h: &RegistryHandle, router: ModelRouter, shards: usize) -> ServeBuilder {
+        let names = router.model_names().to_vec();
+        ServeBuilder::new()
+            .backend(BackendFactory::registry(h, &names, 100.0, shards).unwrap())
+            .router(router)
+            .output(OutputSelector::Memory)
+    }
+
     #[test]
     fn routed_service_tags_every_verdict_and_accounts_per_model() {
         let (h, router) = two_model_registry();
-        let mut svc =
-            MultiModelService::new(h.clone(), router, OutputSelector::Memory, 100.0).unwrap();
         let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 60, 5);
-        for _ in 0..6000 {
-            let p = gen.next_packet();
-            svc.handle(&PacketEvent { packet: p, payload_words: None });
-        }
-        svc.flush();
-        assert!(svc.stats.triggers > 0);
-        assert_eq!(svc.stats.triggers, svc.stats.inferences);
-        assert_eq!(svc.tagged.len() as u64, svc.stats.inferences);
-        assert_eq!(svc.sink.memory.len() as u64, svc.stats.inferences);
+        let evs: Vec<PacketEvent> = (0..6000)
+            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
+            .collect();
+        let rep = routed_builder(&h, router, 1).build().unwrap().run(evs).unwrap();
+        assert!(rep.stats.triggers > 0);
+        assert_eq!(rep.stats.triggers, rep.stats.inferences);
+        assert_eq!(rep.tagged.len() as u64, rep.stats.inferences);
+        assert_eq!(rep.sink.memory.len() as u64, rep.stats.inferences);
         // No publishes happened: every tag is version 1, swaps are 0.
-        for t in &svc.tagged {
+        for t in &rep.tagged {
             assert_eq!(t.tag.version(), 1);
         }
-        let pm = &svc.stats.per_model;
+        let pm = &rep.stats.per_model;
         assert_eq!(pm.len(), 2);
         assert_eq!(
             pm.values().map(|m| m.inferences).sum::<u64>(),
-            svc.stats.inferences
+            rep.stats.inferences
         );
         for m in pm.values() {
             assert_eq!(m.swaps, 0);
         }
         // Per-model histograms sum to the global one.
-        let mut summed = vec![0u64; svc.stats.classes.len()];
+        let mut summed = vec![0u64; rep.stats.classes.len()];
         for m in pm.values() {
             for (i, &c) in m.classes.iter().enumerate() {
                 summed[i] += c;
             }
         }
-        assert_eq!(summed, svc.stats.classes);
+        assert_eq!(summed, rep.stats.classes);
     }
 
     #[test]
     fn routed_batched_route_matches_unbatched_and_survives_hot_swap() {
         let (h, router) = two_model_registry();
-        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 40, 6);
-        let events: Vec<PacketEvent> = (0..4000)
-            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
-            .collect();
-        let mut plain =
-            MultiModelService::new(h.clone(), router.clone(), OutputSelector::Memory, 100.0)
-                .unwrap();
-        for ev in &events {
-            plain.handle(ev);
-        }
-        plain.flush();
-        let mut batched =
-            MultiModelService::new(h.clone(), router, OutputSelector::Memory, 100.0)
-                .unwrap()
-                .with_batching(7, 1e12)
-                .with_shards(3);
-        for ev in &events {
-            batched.handle(ev);
-        }
-        batched.flush();
-        assert_eq!(batched.pending(), 0);
+        let evs = events(4000, 40, 6);
+        let plain = routed_builder(&h, router.clone(), 1)
+            .build()
+            .unwrap()
+            .run(evs.iter().cloned())
+            .unwrap();
+        let batched = routed_builder(&h, router.clone(), 3)
+            .batching(7, 1e12)
+            .build()
+            .unwrap()
+            .run(evs.iter().cloned())
+            .unwrap();
         assert_eq!(batched.stats.triggers, plain.stats.triggers);
         assert_eq!(batched.stats.classes, plain.stats.classes);
         assert_eq!(batched.stats.per_model, plain.stats.per_model);
@@ -772,46 +1108,77 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
-        // Hot-swap both slots with the *same* weights mid-stream: a
-        // fresh run's verdicts are bit-identical, but tags move to v2
-        // and swap counts show up in the per-model stats.
-        let mut swapped =
-            MultiModelService::new(h.clone(), ModelRouter::hash_split(
-                TriggerCondition::EveryNPackets(10),
-                vec!["anomaly".into(), "traffic-class".into()],
-            ), OutputSelector::Memory, 100.0)
+        // Hot-swap both slots with the *same* weights mid-stream (the
+        // `.swap_every` machinery): a fresh run's verdicts are
+        // bit-identical, but tags move past v1 and swap counts show up
+        // in the per-model stats.  (Ticks land at packets 300/600/…;
+        // this seed's triggers span packets ~207–631, so both v1 and
+        // post-swap tags are guaranteed to appear.)
+        let swapped = routed_builder(&h, router, 1)
+            .swap_every(300)
+            .build()
+            .unwrap()
+            .run(evs.iter().cloned())
             .unwrap();
-        for (i, ev) in events.iter().enumerate() {
-            if i == events.len() / 2 {
-                h.publish("anomaly", &BnnModel::random("anomaly", 256, &[32, 16, 2], 21))
-                    .unwrap();
-                h.publish(
-                    "traffic-class",
-                    &BnnModel::random("traffic-class", 256, &[32, 16, 2], 22),
-                )
-                .unwrap();
-            }
-            swapped.handle(ev);
-        }
-        swapped.flush();
         assert_eq!(swapped.stats.classes, plain.stats.classes);
         assert!(swapped.tagged.iter().any(|t| t.tag.version() == 1));
-        assert!(swapped.tagged.iter().any(|t| t.tag.version() == 2));
-        for m in swapped.stats.per_model.values() {
-            assert_eq!(m.swaps, 1);
-        }
+        assert!(swapped.tagged.iter().any(|t| t.tag.version() > 1));
+        let total_swaps: u64 = swapped.stats.per_model.values().map(|m| m.swaps).sum();
+        assert!(total_swaps > 0);
     }
 
     #[test]
-    fn batcher_timeout_flushes_on_packet_clock() {
-        // Huge batch size, tiny timeout: flows must still drain.
-        let mut svc = service().with_batching(1 << 20, 1.0);
-        let mut gen = TrafficGen::new(CbrSpec { gbps: 10.0, pkt_size: 256 }, 5, 8);
-        for _ in 0..2000 {
-            let p = gen.next_packet();
-            svc.handle(&PacketEvent { packet: p, payload_words: None });
-        }
-        svc.flush();
-        assert_eq!(svc.stats.inferences, svc.stats.triggers);
+    fn builder_rejects_capability_violations() {
+        // No backend.
+        assert!(matches!(
+            ServeBuilder::new().build().unwrap_err(),
+            ServiceError::Config(_)
+        ));
+        // Route-count mismatch: 2-route registry behind a bare trigger.
+        let (h, router) = two_model_registry();
+        let names = router.model_names().to_vec();
+        let err = ServeBuilder::new()
+            .backend(BackendFactory::registry(&h, &names, 100.0, 1).unwrap())
+            .trigger(TriggerCondition::EveryPacket)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Config(_)), "{err}");
+        // Same route count but reordered names: positional routes would
+        // silently cross-wire models, so the builder refuses.
+        let (h, router) = two_model_registry();
+        let mut reversed = router.model_names().to_vec();
+        reversed.reverse();
+        let err = ServeBuilder::new()
+            .backend(BackendFactory::registry(&h, &reversed, 100.0, 1).unwrap())
+            .router(router)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Config(_)), "{err}");
+        // Hot swap on a backend without it.
+        let err = builder().swap_every(100).build().unwrap_err();
+        assert!(matches!(err, ServiceError::Config(_)), "{err}");
+        // Batch wider than the backend's max (pisa classifies inline).
+        let err = ServeBuilder::new()
+            .backend(BackendFactory::single("pisa", model()).unwrap())
+            .batching(8, 1e6)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn service_error_display_is_actionable() {
+        let err = ServiceError::UnknownBackend { name: "gpu".into() };
+        let msg = err.to_string();
+        assert!(msg.contains("gpu") && msg.contains("registry"), "{msg}");
+        let stage = ServiceError::Stage {
+            failures: vec![
+                StageFailure::ParseDisconnected { worker: 1 },
+                StageFailure::Panicked { stage: "inference stage", message: "boom".into() },
+            ],
+            report: Box::default(),
+        };
+        let msg = stage.to_string();
+        assert!(msg.contains("worker 1") && msg.contains("boom"), "{msg}");
     }
 }

@@ -2,7 +2,7 @@
 //! forwards only the "needs deeper analysis" share to the host
 //! middlebox, splitting the classification task across the PCIe boundary.
 
-use super::NnExecutor;
+use super::plane::InferencePlane;
 
 /// Where a flow goes after NIC pre-classification.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -14,8 +14,9 @@ pub enum ShuntDecision {
 }
 
 /// Router: class `nic_class` is terminal on the NIC; everything else is
-/// shunted to the host.
-pub struct ShuntRouter<E: NnExecutor> {
+/// shunted to the host.  The NIC-side classifier is any
+/// [`InferencePlane`] backend.
+pub struct ShuntRouter<E: InferencePlane> {
     pub nic_exec: E,
     /// Class the NIC handles terminally (paper: P2P = 1).
     pub nic_class: usize,
@@ -41,7 +42,7 @@ impl ShuntStats {
     }
 }
 
-impl<E: NnExecutor> ShuntRouter<E> {
+impl<E: InferencePlane> ShuntRouter<E> {
     pub fn new(nic_exec: E, nic_class: usize) -> Self {
         Self {
             nic_exec,
@@ -53,7 +54,7 @@ impl<E: NnExecutor> ShuntRouter<E> {
     /// Classify on the NIC and decide the flow's path.
     pub fn route(&mut self, x: &[u32]) -> ShuntDecision {
         self.stats.total += 1;
-        let class = self.nic_exec.classify(x);
+        let (class, _tag) = self.nic_exec.classify(0, x);
         if class == self.nic_class {
             self.stats.kept_on_nic += 1;
             ShuntDecision::Nic(class)
@@ -68,12 +69,12 @@ impl<E: NnExecutor> ShuntRouter<E> {
 mod tests {
     use super::*;
     use crate::bnn::{BnnLayer, BnnModel};
-    use crate::coordinator::CoreExecutor;
+    use crate::coordinator::BackendFactory;
 
     #[test]
     fn router_splits_and_counts() {
         let model = BnnModel::random("traffic", 256, &[32, 16, 2], 5);
-        let mut router = ShuntRouter::new(CoreExecutor::fpga(model.clone()), 1);
+        let mut router = ShuntRouter::new(BackendFactory::single("fpga", model).unwrap(), 1);
         let mut nic = 0;
         let mut host = 0;
         for seed in 0..200 {

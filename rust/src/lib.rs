@@ -24,10 +24,14 @@
 //! * [`tomography`] — modified-SIMON probe/inference pipeline (§5 #3).
 //! * [`bnnexec`] — the host-CPU comparison system (§6 "comparison term").
 //! * [`coordinator`] — triggers, input/output selectors, flow shunting,
-//!   batching: the NIC-side orchestration of §3.2.
+//!   batching, and the unified serving runtime: one `InferencePlane`
+//!   trait over every backend, a named `BackendFactory`, and one
+//!   `Service` built by `ServeBuilder` (§3.2's orchestration).
 //! * `runtime` — PJRT loader/executor for the AOT artifacts (behind the
 //!   off-by-default `pjrt` feature: needs a vendored xla-rs).
 //! * [`experiments`] — one reproduction driver per paper table/figure.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod arith;
 pub mod bench;

@@ -1,22 +1,23 @@
 //! `repro` — the N3IC launcher.
 //!
 //! Subcommands:
-//! * `serve`        — run the coordinator service on generated traffic
-//!   (the end-to-end request path; Python never runs here).
+//! * `serve`        — run the unified serving runtime on generated
+//!   traffic (the end-to-end request path; Python never runs here).
 //! * `experiment`   — regenerate a paper table/figure (or `all`).
 //! * `models`       — list trained models in the artifacts directory.
 //! * `compile-p4`   — run NNtoP4 and print the generated P4₁₆ source.
 //!
-//! Flag parsing is hand-rolled (the build is offline; no clap).
+//! Flag parsing is hand-rolled (the build is offline; no clap) but
+//! **strict**: unknown flags, missing values, malformed numbers, and
+//! malformed `--model NAME=PATH` pairs exit nonzero with usage instead
+//! of being silently defaulted.
 
 use std::path::PathBuf;
 
 use n3ic::bnn::{BnnModel, RegistryHandle};
-use n3ic::config::Backend;
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, ModelRouter, MultiModelService, NnBatchExecutor,
-    NnExecutor, OutputSelector, PacketEvent, PipelineConfig, PipelineService,
-    RoutedPipelineService, TriggerCondition, STAGE_LINKS,
+    BackendFactory, InferencePlane, ModelRouter, OutputSelector, PacketEvent, ServeBuilder,
+    ServiceReport, TriggerCondition, STAGE_LINKS,
 };
 use n3ic::net::traffic::{CbrSpec, TrafficGen};
 
@@ -27,18 +28,20 @@ USAGE:
   repro [--artifacts DIR] <command> [options]
 
 COMMANDS:
-  serve        --model NAME --backend nfp|pisa|fpga|host|pjrt
+  serve        --model NAME --backend host|batch|sharded|pisa|fpga|nfp|pjrt
                --packets N --flows N --trigger-pkts N
                --batch N (0 = classify inline; N>0 = batch fast path)
-               --shards N (with --batch: spread batches over N cores)
+               --shards N (spread batches over N cores where the
+                           backend's capabilities allow)
                --pipeline N (N>=1: staged runtime with N parse workers;
                              verdicts are bit-identical to the serial
                              loop on the same seeded traffic)
                --queue-depth N (with --pipeline: bounded stage queues)
 
                Multi-model registry mode (repeat --model with NAME=PATH
-               pairs to serve several named, versioned models at once;
-               flows are split across them by canonical flow hash):
+               pairs to serve several named, versioned models at once
+               through the `registry` backend; flows are split across
+               them by canonical flow hash):
                --model anomaly=m1.json --model traffic-class=m2.json
                --swap-every N (hot-republish one model every N packets
                                — zero-downtime weight swap demo: the
@@ -54,7 +57,13 @@ COMMANDS:
   compile-p4   --model NAME [--format p4|bmv2]
 ";
 
-/// Tiny flag parser: --key value pairs after the subcommand.  Flags are
+/// Print a parse/config error plus usage and exit nonzero.
+fn usage_err(msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{USAGE}");
+    std::process::exit(2);
+}
+
+/// Strict flag parser: `--key value` pairs plus positionals.  Flags are
 /// repeatable; scalar getters take the last occurrence, `get_all` sees
 /// every one (the registry mode's repeated `--model NAME=PATH`).
 struct Args {
@@ -63,26 +72,49 @@ struct Args {
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Self {
+    fn parse(argv: &[String]) -> Result<Self, String> {
         let mut flags: std::collections::HashMap<String, Vec<String>> =
             std::collections::HashMap::new();
         let mut positional = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() {
-                    flags.entry(key.to_string()).or_default().push(argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.entry(key.to_string()).or_default().push("true".into());
-                    i += 1;
+                if key.is_empty() {
+                    return Err("bare `--` is not a flag".into());
                 }
+                let Some(value) = argv.get(i + 1) else {
+                    return Err(format!("--{key} needs a value"));
+                };
+                if value.starts_with("--") {
+                    return Err(format!("--{key} needs a value (got flag {value})"));
+                }
+                flags.entry(key.to_string()).or_default().push(value.clone());
+                i += 2;
             } else {
                 positional.push(argv[i].clone());
                 i += 1;
             }
         }
-        Self { flags, positional }
+        Ok(Self { flags, positional })
+    }
+
+    /// Reject flags outside `allowed` (per-subcommand whitelist).
+    fn check_allowed(&self, cmd: &str, allowed: &[&str]) -> Result<(), String> {
+        let mut keys: Vec<&String> = self.flags.keys().collect();
+        keys.sort();
+        for key in keys {
+            if !allowed.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown flag --{key} for `{cmd}` (allowed: {})",
+                    allowed
+                        .iter()
+                        .map(|a| format!("--{a}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                ));
+            }
+        }
+        Ok(())
     }
 
     fn get(&self, key: &str, default: &str) -> String {
@@ -93,12 +125,13 @@ impl Args {
             .unwrap_or_else(|| default.into())
     }
 
-    fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.flags
-            .get(key)
-            .and_then(|v| v.last())
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(key).and_then(|v| v.last()) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} {v:?} is not a non-negative integer")),
+        }
     }
 
     fn get_all(&self, key: &str) -> Vec<String> {
@@ -120,9 +153,33 @@ fn load_model(artifacts: &std::path::Path, name: &str) -> BnnModel {
 
 fn main() -> n3ic::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv);
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => usage_err(&e),
+    };
     let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    let allowed: &[&str] = match cmd {
+        "serve" => &[
+            "artifacts",
+            "model",
+            "backend",
+            "packets",
+            "flows",
+            "trigger-pkts",
+            "batch",
+            "shards",
+            "pipeline",
+            "queue-depth",
+            "swap-every",
+        ],
+        "experiment" | "models" => &["artifacts"],
+        "compile-p4" => &["artifacts", "model", "format"],
+        _ => &["artifacts"],
+    };
+    if let Err(e) = args.check_allowed(if cmd.is_empty() { "repro" } else { cmd }, allowed) {
+        usage_err(&e);
+    }
     match cmd {
         "serve" => serve(&args, &artifacts),
         "experiment" => {
@@ -178,21 +235,27 @@ fn main() -> n3ic::Result<()> {
                 n3ic::pisa::compile_bnn(&m).map_err(|e| anyhow::anyhow!("{e}"))?;
             match args.get("format", "p4").as_str() {
                 "bmv2" => println!("{}", n3ic::pisa::bmv2::to_bmv2_json(&m, &prog).dump()),
-                _ => println!("{}", n3ic::pisa::p4gen::to_p4(&m, &prog)),
+                "p4" => println!("{}", n3ic::pisa::p4gen::to_p4(&m, &prog)),
+                other => usage_err(&format!("--format {other:?} is not p4|bmv2")),
             }
             Ok(())
         }
-        _ => {
+        "" => {
             print!("{USAGE}");
             Ok(())
         }
+        other => usage_err(&format!("unknown command {other:?}")),
     }
 }
 
 /// Verify the AOT artifact end to end, then serve through the bit-exact
 /// core with the runtime's measured latency.
 #[cfg(feature = "pjrt")]
-fn pjrt_executor(m: BnnModel, artifacts: &std::path::Path) -> n3ic::Result<CoreExecutor> {
+fn pjrt_plane(
+    m: BnnModel,
+    artifacts: &std::path::Path,
+    shards: usize,
+) -> n3ic::Result<Box<dyn InferencePlane>> {
     let mut rt = n3ic::runtime::PjrtRuntime::new(artifacts)?;
     let key = n3ic::runtime::Manifest::key_for(&m, 1);
     let x = vec![0u32; m.in_words()];
@@ -200,11 +263,15 @@ fn pjrt_executor(m: BnnModel, artifacts: &std::path::Path) -> n3ic::Result<CoreE
     let _ = rt.infer_batch(&key, &m, std::slice::from_ref(&x))?;
     let lat = t0.elapsed().as_nanos() as f64;
     println!("pjrt backend verified on {}", rt.platform());
-    Ok(CoreExecutor::new(m, lat, "pjrt"))
+    Ok(BackendFactory::custom("pjrt", m, lat, shards))
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_executor(_m: BnnModel, _artifacts: &std::path::Path) -> n3ic::Result<CoreExecutor> {
+fn pjrt_plane(
+    _m: BnnModel,
+    _artifacts: &std::path::Path,
+    _shards: usize,
+) -> n3ic::Result<Box<dyn InferencePlane>> {
     anyhow::bail!(
         "the pjrt backend is compiled out: add a vendored `xla` path \
          dependency to rust/Cargo.toml (see the [features] comment there), \
@@ -212,112 +279,84 @@ fn pjrt_executor(_m: BnnModel, _artifacts: &std::path::Path) -> n3ic::Result<Cor
     )
 }
 
+/// Common numeric serve knobs, parsed strictly.
+struct ServeKnobs {
+    packets: u64,
+    flows: u64,
+    trigger_pkts: u32,
+    batch: usize,
+    shards: usize,
+    pipeline: usize,
+    queue_depth: usize,
+    swap_every: u64,
+}
+
+impl ServeKnobs {
+    fn parse(args: &Args) -> Result<Self, String> {
+        Ok(Self {
+            packets: args.get_u64("packets", 1_000_000)?,
+            flows: args.get_u64("flows", 100_000)?,
+            trigger_pkts: u32::try_from(args.get_u64("trigger-pkts", 10)?)
+                .map_err(|_| "--trigger-pkts does not fit in 32 bits".to_string())?,
+            batch: args.get_u64("batch", 0)? as usize,
+            shards: args.get_u64("shards", 1)? as usize,
+            pipeline: args.get_u64("pipeline", 0)? as usize,
+            queue_depth: args.get_u64("queue-depth", 1024)? as usize,
+            swap_every: args.get_u64("swap-every", 0)?,
+        })
+    }
+}
+
 fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
+    let knobs = match ServeKnobs::parse(args) {
+        Ok(k) => k,
+        Err(e) => usage_err(&e),
+    };
     // `--model NAME=PATH` (repeatable) selects the multi-model registry
-    // mode; a bare `--model NAME` keeps the single-model path.
-    let registry_pairs: Vec<(String, String)> = args
-        .get_all("model")
-        .iter()
-        .filter_map(|v| v.split_once('=').map(|(n, p)| (n.to_string(), p.to_string())))
-        .collect();
-    if !registry_pairs.is_empty() {
-        return serve_registry(args, artifacts, &registry_pairs);
+    // backend; a bare `--model NAME` keeps the single-model path.
+    let model_vals = args.get_all("model");
+    let with_eq = model_vals.iter().filter(|v| v.contains('=')).count();
+    if with_eq > 0 && with_eq < model_vals.len() {
+        usage_err("mixing bare --model NAME with --model NAME=PATH is ambiguous");
+    }
+    if with_eq == 0 && model_vals.len() > 1 {
+        usage_err("repeat --model only with NAME=PATH pairs (registry mode)");
+    }
+    let backend = args.get("backend", if with_eq > 0 { "registry" } else { "fpga" });
+    if with_eq > 0 {
+        if backend != "registry" {
+            usage_err("--model NAME=PATH pairs serve through --backend registry");
+        }
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        for v in &model_vals {
+            let Some((name, path)) = v.split_once('=') else {
+                unreachable!("with_eq counted an '='");
+            };
+            if name.is_empty() || path.is_empty() {
+                usage_err(&format!("malformed --model {v:?}: need NAME=PATH"));
+            }
+            if pairs.iter().any(|(n, _)| n == name) {
+                usage_err(&format!("duplicate --model name {name:?}"));
+            }
+            pairs.push((name.to_string(), path.to_string()));
+        }
+        return serve_registry(&knobs, artifacts, &pairs);
+    }
+    if backend == "registry" {
+        usage_err("--backend registry needs repeated --model NAME=PATH pairs");
+    }
+    if knobs.swap_every > 0 {
+        usage_err("--swap-every needs the registry backend (--model NAME=PATH pairs)");
     }
     let model_name = args.get("model", "traffic");
-    let backend: Backend = args.get("backend", "fpga").parse()?;
-    let packets = args.get_u64("packets", 1_000_000);
-    let flows = args.get_u64("flows", 100_000);
-    let trigger_pkts = args.get_u64("trigger-pkts", 10) as u32;
-
     let m = load_model(artifacts, &model_name);
-    let shards = args.get_u64("shards", 1) as usize;
-    let exec = match backend {
-        Backend::Fpga => CoreExecutor::fpga(m),
-        Backend::Nfp => CoreExecutor::nfp(m),
-        Backend::Host => CoreExecutor::host(m),
-        Backend::Pisa => {
-            CoreExecutor::pisa(m).map_err(|e| anyhow::anyhow!("{e}"))?
-        }
-        Backend::Pjrt => pjrt_executor(m, artifacts)?,
-    }
-    .sharded(shards);
-    let batch = args.get_u64("batch", 0) as usize;
-    let trigger = TriggerCondition::EveryNPackets(trigger_pkts);
-    let backend_name = exec.name();
-    let mut gen = TrafficGen::new(
-        CbrSpec {
-            gbps: 40.0,
-            pkt_size: 256,
-        },
-        flows,
-        7,
-    );
-    let pipeline = args.get_u64("pipeline", 0) as usize;
-    let t0 = std::time::Instant::now();
-    let (st, flows_tracked, blocked, engine) = if pipeline > 0 {
-        // Staged runtime: the ingress sharder runs on this thread; the
-        // determinism contract guarantees the verdict histogram below
-        // matches the serial branch bit for bit on this same traffic.
-        let cfg = PipelineConfig {
-            workers: pipeline,
-            queue_depth: args.get_u64("queue-depth", 1024) as usize,
-            batch,
-            max_wait_ns: 1e6,
-            ..Default::default()
-        };
-        let svc = PipelineService::new(exec, trigger, OutputSelector::Memory, cfg);
-        let events = (0..packets).map(|_| PacketEvent {
-            packet: gen.next_packet(),
-            payload_words: None,
-        });
-        let report = svc.run(events).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let blocked = Some(report.stats.stage_blocked.clone());
-        (report.stats, report.flows_tracked, blocked, report.engine)
+    let plane = if backend == "pjrt" {
+        pjrt_plane(m, artifacts, knobs.shards)?
     } else {
-        let mut svc = CoordinatorService::new(exec, trigger, OutputSelector::Memory);
-        if batch > 0 {
-            // 1 ms packet-clock cap bounds queueing latency (Fig. 6's
-            // knee).
-            svc = svc.with_batching(batch, 1e6);
-        }
-        for _ in 0..packets {
-            let p = gen.next_packet();
-            svc.handle(&PacketEvent {
-                packet: p,
-                payload_words: None,
-            });
-        }
-        svc.flush();
-        let flows_tracked = svc.flows.len();
-        let engine = svc.exec.engine_stats();
-        (svc.stats, flows_tracked, None, engine)
+        BackendFactory::single_sharded(&backend, m, knobs.shards)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
     };
-    let wall = t0.elapsed();
-    println!("== serve report ==");
-    println!("backend          : {backend_name}");
-    println!("packets          : {}", st.packets);
-    println!("flows tracked    : {flows_tracked}");
-    println!("nn inferences    : {}", st.inferences);
-    println!("class histogram  : {:?}", st.classes);
-    println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
-    if let Some(blocked) = blocked {
-        for (link, n) in STAGE_LINKS.iter().zip(&blocked) {
-            println!("backpressure     : {link:18} {n} blocked sends");
-        }
-    }
-    if let Some(es) = engine {
-        println!(
-            "sharded engine   : {} batches, {:.2}M flows/s inside run_batch",
-            es.batches,
-            es.flows_per_sec() / 1e6
-        );
-    }
-    println!(
-        "host wall        : {:.2} s ({:.2} Mpkt/s through the pipeline)",
-        wall.as_secs_f64(),
-        st.packets as f64 / wall.as_secs_f64() / 1e6
-    );
-    Ok(())
+    run_and_report(&knobs, plane, None)
 }
 
 /// Resolve one `--model NAME=PATH` pair: a readable model JSON wins;
@@ -338,21 +377,12 @@ fn load_registry_model(artifacts: &std::path::Path, name: &str, path: &str) -> B
 /// `--swap-every N` hot-republishes one slot every N packets while the
 /// run keeps serving — the zero-downtime swap the registry exists for.
 fn serve_registry(
-    args: &Args,
+    knobs: &ServeKnobs,
     artifacts: &std::path::Path,
     pairs: &[(String, String)],
 ) -> n3ic::Result<()> {
-    let packets = args.get_u64("packets", 1_000_000);
-    let flows = args.get_u64("flows", 100_000);
-    let trigger_pkts = args.get_u64("trigger-pkts", 10) as u32;
-    let batch = args.get_u64("batch", 0) as usize;
-    let shards = args.get_u64("shards", 1) as usize;
-    let pipeline = args.get_u64("pipeline", 0) as usize;
-    let swap_every = args.get_u64("swap-every", 0);
-
     let registry = RegistryHandle::new();
     let mut names = Vec::new();
-    let mut models = Vec::new();
     let mut latency_ns = 0.0f64;
     for (name, path) in pairs {
         let m = load_registry_model(artifacts, name, path);
@@ -373,98 +403,95 @@ fn serve_registry(
         let tag = registry.publish(name, &m).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("published {tag}  ({})", m.describe());
         names.push(name.clone());
-        models.push(m);
     }
+    let plane = BackendFactory::registry(&registry, &names, latency_ns, knobs.shards)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let router = ModelRouter::hash_split(
-        TriggerCondition::EveryNPackets(trigger_pkts),
-        names.clone(),
+        TriggerCondition::EveryNPackets(knobs.trigger_pkts),
+        names,
     );
-    let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, flows, 7);
-    let t0 = std::time::Instant::now();
-    let (st, blocked, engine) = if pipeline > 0 {
-        let cfg = PipelineConfig {
-            workers: pipeline,
-            queue_depth: args.get_u64("queue-depth", 1024) as usize,
-            batch,
-            max_wait_ns: 1e6,
-            ..Default::default()
-        };
-        let svc = RoutedPipelineService::new(
-            registry.clone(),
-            router,
-            OutputSelector::Memory,
-            cfg,
-            latency_ns,
-        )
-        .map_err(|e| anyhow::anyhow!("{e}"))?
-        .with_shards(shards)
+    run_and_report(knobs, plane, Some((router, registry)))
+}
+
+/// Build the unified service from the parsed knobs, drive it with
+/// seeded CBR traffic, and print the report — one path for every
+/// backend, serial or pipelined, single- or multi-model.
+fn run_and_report(
+    knobs: &ServeKnobs,
+    plane: Box<dyn InferencePlane>,
+    routed: Option<(ModelRouter, RegistryHandle)>,
+) -> n3ic::Result<()> {
+    let caps = plane.capabilities();
+    let mut builder = ServeBuilder::new()
+        .backend(plane)
+        .output(OutputSelector::Memory)
+        .pipeline(knobs.pipeline)
+        .queue_depth(knobs.queue_depth)
         .without_tag_log();
-        // The ingress sharder evaluates this iterator on the calling
-        // thread while the downstream stages run, so publishing from
-        // inside it is a true live hot-swap — and it lands exactly
-        // every `swap_every` packets, as documented (same weights, new
-        // version: the swap machinery is exercised without changing
-        // verdict semantics).
-        let mut swap_cursor = 0usize;
-        let events = (0..packets).map(|i| {
-            if swap_every > 0 && i > 0 && i % swap_every == 0 {
-                let k = swap_cursor % models.len();
-                swap_cursor += 1;
-                registry
-                    .publish(&names[k], &models[k])
-                    .expect("republish of unchanged shape cannot fail");
-            }
-            PacketEvent { packet: gen.next_packet(), payload_words: None }
-        });
-        let report = svc.run(events).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let blocked = Some(report.stats.stage_blocked.clone());
-        (report.stats, blocked, report.engine)
-    } else {
-        let mut svc =
-            MultiModelService::new(registry.clone(), router, OutputSelector::Memory, latency_ns)
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .with_shards(shards)
-                .without_tag_log();
-        if batch > 0 {
-            svc = svc.with_batching(batch, 1e6);
+    let registry = match routed {
+        Some((router, registry)) => {
+            builder = builder.router(router);
+            Some(registry)
         }
-        let mut swap_cursor = 0usize;
-        for i in 0..packets {
-            if swap_every > 0 && i > 0 && i % swap_every == 0 {
-                let k = swap_cursor % models.len();
-                swap_cursor += 1;
-                registry
-                    .publish(&names[k], &models[k])
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-            }
-            svc.handle(&PacketEvent { packet: gen.next_packet(), payload_words: None });
+        None => {
+            builder = builder.trigger(TriggerCondition::EveryNPackets(knobs.trigger_pkts));
+            None
         }
-        svc.flush();
-        let engine = svc.exec.engine_stats();
-        (svc.stats, None, engine)
     };
+    if knobs.batch > 0 {
+        // 1 ms packet-clock cap bounds queueing latency (Fig. 6's knee).
+        builder = builder.batching(knobs.batch, 1e6);
+    }
+    if knobs.swap_every > 0 {
+        builder = builder.swap_every(knobs.swap_every);
+    }
+    let svc = builder.build().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, knobs.flows, 7);
+    let packets = knobs.packets;
+    let t0 = std::time::Instant::now();
+    let report: ServiceReport = svc
+        .run((0..packets).map(|_| PacketEvent {
+            packet: gen.next_packet(),
+            payload_words: None,
+        }))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let wall = t0.elapsed();
-    println!("== serve report (multi-model registry) ==");
+
+    let st = &report.stats;
+    println!("== serve report ==");
+    println!("backend          : {}", caps.backend);
+    println!(
+        "capabilities     : batch<={} shards={} routes={} hot-swap={} epoch-pinning={}",
+        if caps.max_batch == usize::MAX { "inf".into() } else { caps.max_batch.to_string() },
+        caps.shards,
+        caps.routes,
+        caps.supports_hot_swap,
+        caps.supports_epoch_pinning
+    );
     println!("packets          : {}", st.packets);
+    println!("flows tracked    : {}", report.flows_tracked);
     println!("nn inferences    : {}", st.inferences);
     println!("class histogram  : {:?}", st.classes);
-    let versions = registry.versions();
-    for (name, m) in &st.per_model {
-        println!(
-            "model {name:14}: v{} ({} swaps)  {} inferences  classes {:?}",
-            versions.get(name).copied().unwrap_or(0),
-            m.swaps,
-            m.inferences,
-            m.classes
-        );
+    if let Some(registry) = registry {
+        let versions = registry.versions();
+        for (name, m) in &st.per_model {
+            println!(
+                "model {name:14}: v{} ({} swaps)  {} inferences  classes {:?}",
+                versions.get(name).copied().unwrap_or(0),
+                m.swaps,
+                m.inferences,
+                m.classes
+            );
+        }
     }
     println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
-    if let Some(blocked) = blocked {
-        for (link, n) in STAGE_LINKS.iter().zip(&blocked) {
+    if knobs.pipeline > 0 {
+        for (link, n) in STAGE_LINKS.iter().zip(&st.stage_blocked) {
             println!("backpressure     : {link:18} {n} blocked sends");
         }
     }
-    if let Some(es) = engine {
+    if let Some(es) = report.engine {
         println!(
             "sharded engine   : {} batches, {:.2}M flows/s inside run_batch",
             es.batches,
@@ -472,7 +499,7 @@ fn serve_registry(
         );
     }
     println!(
-        "host wall        : {:.2} s ({:.2} Mpkt/s through the registry route)",
+        "host wall        : {:.2} s ({:.2} Mpkt/s through the service)",
         wall.as_secs_f64(),
         st.packets as f64 / wall.as_secs_f64() / 1e6
     );

@@ -11,8 +11,7 @@
 
 use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnModel, RegistryHandle, ShardedEngine};
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, ModelRouter, MultiModelService, OutputSelector,
-    PacketEvent, TriggerCondition,
+    BackendFactory, ModelRouter, OutputSelector, PacketEvent, ServeBuilder, TriggerCondition,
 };
 use n3ic::fpga::FpgaExecutor;
 use n3ic::net::flow::ShardedFlowTable;
@@ -147,39 +146,37 @@ fn registry_route_matches_standalone_per_flow_subset() {
     );
 
     // Routed run — batched + sharded, the most machinery at once.
-    let mut routed = MultiModelService::new(
-        registry.clone(),
-        router,
-        OutputSelector::Memory,
-        100.0,
-    )
-    .unwrap()
-    .with_batching(8, 1e12)
-    .with_shards(3);
-    for ev in &events {
-        routed.handle(ev);
-    }
-    routed.flush();
+    let routed = ServeBuilder::new()
+        .backend(BackendFactory::registry(&registry, &names, 100.0, 3).unwrap())
+        .router(router)
+        .output(OutputSelector::Memory)
+        .batching(8, 1e12)
+        .build()
+        .unwrap()
+        .run(events.iter().cloned())
+        .unwrap();
     assert_eq!(routed.stats.triggers, routed.stats.inferences);
 
     // Standalone reference: model i over only its hash subset.
     let mut total_standalone = 0u64;
     for (i, (name, model)) in names.iter().zip(&models).enumerate() {
-        let mut svc = CoordinatorService::new(
-            CoreExecutor::fpga(model.clone()),
-            trigger,
-            OutputSelector::Memory,
-        );
-        for ev in &events {
-            if ShardedFlowTable::shard_of(&ev.packet, N_MODELS) == i {
-                svc.handle(ev);
-            }
-        }
-        svc.flush();
-        total_standalone += svc.stats.inferences;
+        let rep = ServeBuilder::new()
+            .backend(BackendFactory::single("fpga", model.clone()).unwrap())
+            .trigger(trigger)
+            .output(OutputSelector::Memory)
+            .build()
+            .unwrap()
+            .run(
+                events
+                    .iter()
+                    .filter(|ev| ShardedFlowTable::shard_of(&ev.packet, N_MODELS) == i)
+                    .cloned(),
+            )
+            .unwrap();
+        total_standalone += rep.stats.inferences;
 
         // Per-model verdicts: bit-identical multiset of (flow, class).
-        let mut want = svc.sink.memory.clone();
+        let mut want = rep.sink.memory.clone();
         want.sort_unstable();
         let mut got: Vec<(u64, usize)> = routed
             .tagged
@@ -192,12 +189,12 @@ fn registry_route_matches_standalone_per_flow_subset() {
 
         // And the per-model histogram matches the standalone one.
         let pm = &routed.stats.per_model[name];
-        assert_eq!(pm.inferences, svc.stats.inferences, "model {name}");
+        assert_eq!(pm.inferences, rep.stats.inferences, "model {name}");
         let mut padded = pm.classes.clone();
-        if padded.len() < svc.stats.classes.len() {
-            padded.resize(svc.stats.classes.len(), 0);
+        if padded.len() < rep.stats.classes.len() {
+            padded.resize(rep.stats.classes.len(), 0);
         }
-        assert_eq!(padded, svc.stats.classes, "model {name}");
+        assert_eq!(padded, rep.stats.classes, "model {name}");
         // Nothing was republished: v1 everywhere, zero swaps.
         assert_eq!(pm.swaps, 0);
     }

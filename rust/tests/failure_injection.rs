@@ -5,10 +5,10 @@
 
 use std::path::PathBuf;
 
-use n3ic::bnn::BnnModel;
+use n3ic::bnn::{BnnModel, EngineError, VersionTag};
 use n3ic::coordinator::{
-    NnBatchExecutor, NnExecutor, OutputSelector, PacketEvent, PipelineConfig,
-    PipelineService, TriggerCondition,
+    BackendFactory, Capabilities, InferencePlane, OutputSelector, PacketEvent, ServeBuilder,
+    ServiceError, StageFailure, TriggerCondition,
 };
 use n3ic::json::Json;
 use n3ic::net::traffic::CbrSpec;
@@ -122,31 +122,44 @@ fn runtime_rejects_unknown_artifact_and_bad_batch() {
     assert!(err.contains("mismatch"), "{err}");
 }
 
-/// Executor that serves `fuse` inferences and then panics — the
-/// injected stage-3 fault for the pipeline tests below.
-struct DoomedExecutor {
+/// Backend that serves `fuse` inferences and then panics — the
+/// injected stage-3 fault for the pipeline tests below, implemented
+/// directly against the unified `InferencePlane` trait.
+struct DoomedPlane {
     fuse: usize,
 }
 
-impl NnExecutor for DoomedExecutor {
-    fn classify(&mut self, _x: &[u32]) -> usize {
+impl DoomedPlane {
+    fn classify_one(&mut self) -> usize {
         if self.fuse == 0 {
             panic!("injected inference fault");
         }
         self.fuse -= 1;
         0
     }
+}
 
-    fn scores(&mut self, _x: &[u32], out: &mut [i32]) {
-        out.fill(0);
+impl InferencePlane for DoomedPlane {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::single("doomed", 100.0)
     }
 
-    fn latency_ns(&self) -> f64 {
-        100.0
+    fn classify(&mut self, _route: usize, _x: &[u32]) -> (usize, Option<VersionTag>) {
+        (self.classify_one(), None)
     }
 
-    fn name(&self) -> &'static str {
-        "doomed"
+    fn try_run_batch(
+        &mut self,
+        _route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        classes.clear();
+        for _ in inputs {
+            let c = self.classify_one();
+            classes.push(c);
+        }
+        Ok(None)
     }
 
     fn n_classes(&self) -> usize {
@@ -154,74 +167,131 @@ impl NnExecutor for DoomedExecutor {
     }
 }
 
-impl NnBatchExecutor for DoomedExecutor {}
-
 fn traffic_events(packets: usize, flows: u64, seed: u64) -> Vec<PacketEvent> {
     PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, flows, seed, packets)
 }
 
+fn doomed(workers: usize, queue_depth: usize, batch: usize) -> ServeBuilder {
+    let mut b = ServeBuilder::new()
+        .backend(Box::new(DoomedPlane { fuse: 5 }))
+        .trigger(TriggerCondition::EveryNPackets(2))
+        .output(OutputSelector::Memory)
+        .pipeline(workers)
+        .queue_depth(queue_depth);
+    if batch > 0 {
+        b = b.batching(batch, 1e6);
+    }
+    b
+}
+
 #[test]
 fn pipeline_stage_death_surfaces_error_with_stats_intact() {
-    // Stage 3's executor dies after 5 verdicts.  The poisoned channels
+    // Stage 3's backend dies after 5 verdicts.  The poisoned channels
     // must cascade into a clean shutdown — an Err carrying everything
     // accumulated so far — not a hung service.  (This test completing
     // at all *is* the no-hang assertion.)
+    //
+    // queue_depth 4: with ~200 triggers against a fuse of 5, the parse
+    // workers are guaranteed to be in (or attempt) a send on the
+    // poisoned link after the fault, whatever the scheduler does — the
+    // disconnect observation below is deterministic.
     let events = traffic_events(20_000, 200, 17);
-    let svc = PipelineService::new(
-        DoomedExecutor { fuse: 5 },
-        TriggerCondition::EveryNPackets(2),
-        OutputSelector::Memory,
-        // queue_depth 4: with ~200 triggers against a fuse of 5, the
-        // parse workers are guaranteed to be in (or attempt) a send on
-        // the poisoned link after the fault, whatever the scheduler
-        // does — the disconnect observation below is deterministic.
-        PipelineConfig { workers: 2, queue_depth: 4, ..Default::default() },
-    );
-    let err = svc.run(events).expect_err("a dead stage must not look healthy");
-    // The fault itself is named...
-    assert!(
-        err.failures.iter().any(|f| f.contains("panicked")),
-        "{:?}",
-        err.failures
-    );
+    let err = doomed(2, 4, 0)
+        .build()
+        .unwrap()
+        .run(events)
+        .expect_err("a dead stage must not look healthy");
     assert!(err.to_string().contains("injected inference fault"), "{err}");
+    let ServiceError::Stage { failures, report } = err else {
+        panic!("stage death must surface as ServiceError::Stage");
+    };
+    // The fault itself is named as a typed panic failure...
+    assert!(
+        failures
+            .iter()
+            .any(|f| matches!(f, StageFailure::Panicked { stage: "inference stage", .. })),
+        "{failures:?}"
+    );
     // ...and the upstream stages report the disconnect rather than
     // dying silently (plenty of triggers remain after the 6th).
     assert!(
-        err.failures.iter().any(|f| f.contains("disconnected")),
-        "{:?}",
-        err.failures
+        failures
+            .iter()
+            .any(|f| matches!(f, StageFailure::ParseDisconnected { .. })),
+        "{failures:?}"
     );
     // Stats survive the fault: the packets and triggers the parse
     // workers processed, and exactly the verdicts that reached the
     // sink before the fuse blew.
-    let st = &err.report.stats;
+    let st = &report.stats;
     assert!(st.packets > 0);
     assert!(st.triggers >= 6);
     assert_eq!(st.inferences, 5);
     assert_eq!(st.classes.iter().sum::<u64>(), 5);
-    assert_eq!(err.report.sink.memory.len(), 5);
+    assert_eq!(report.sink.memory.len(), 5);
 }
 
 #[test]
 fn pipeline_stage_death_on_the_batched_route_also_surfaces() {
     let events = traffic_events(20_000, 200, 23);
-    let svc = PipelineService::new(
-        DoomedExecutor { fuse: 5 },
-        TriggerCondition::EveryNPackets(2),
-        OutputSelector::Memory,
-        PipelineConfig { workers: 3, batch: 8, ..Default::default() },
-    );
-    let err = svc.run(events).expect_err("batched route must surface the fault too");
+    let err = doomed(3, 1024, 8)
+        .build()
+        .unwrap()
+        .run(events)
+        .expect_err("batched route must surface the fault too");
+    let ServiceError::Stage { failures, report } = err else {
+        panic!("stage death must surface as ServiceError::Stage");
+    };
     assert!(
-        err.failures.iter().any(|f| f.contains("panicked")),
-        "{:?}",
-        err.failures
+        failures
+            .iter()
+            .any(|f| matches!(f, StageFailure::Panicked { .. })),
+        "{failures:?}"
     );
     // The fuse blew mid-batch: fewer verdicts than served inferences
     // ever reached the sink, and nothing hung.
-    assert!(err.report.stats.inferences <= 5);
-    assert!(err.report.stats.packets > 0);
+    assert!(report.stats.inferences <= 5);
+    assert!(report.stats.packets > 0);
+}
+
+#[test]
+fn serial_engine_fault_is_typed_and_preserves_partial_report() {
+    // A sharded backend fed a malformed payload (wrong input width):
+    // the shard worker panics, the engine reports it, and the *serial*
+    // service absorbs it as a typed `StageFailure::Inference` carrying
+    // the partial report — symmetric with the pipelined mode's
+    // stage-death semantics instead of the old panic.
+    let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+    let mut events = traffic_events(4_000, 40, 29);
+    // Every packet triggers with its payload as the NN input; packet
+    // #100 carries a 3-word payload against a 8-word model.
+    for ev in &mut events {
+        ev.payload_words = Some(vec![0u32; 8]);
+    }
+    events[100].payload_words = Some(vec![0u32; 3]);
+    let err = ServeBuilder::new()
+        .backend(BackendFactory::single_sharded("sharded", model, 2).unwrap())
+        .trigger(TriggerCondition::EveryPacket)
+        .output(OutputSelector::Memory)
+        .batching(4, 1e12)
+        .build()
+        .unwrap()
+        .run(events)
+        .expect_err("a poisoned batch must surface as a typed error");
+    let ServiceError::Stage { failures, report } = err else {
+        panic!("serial engine fault must surface as ServiceError::Stage");
+    };
+    assert!(
+        failures
+            .iter()
+            .any(|f| matches!(f, StageFailure::Inference(EngineError::WorkerPanicked { .. }))),
+        "{failures:?}"
+    );
+    // Everything before the poisoned batch survives in the report.
+    assert_eq!(report.stats.packets, 4_000);
+    assert_eq!(report.stats.triggers, 4_000);
+    assert_eq!(report.stats.inferences, 100);
+    assert_eq!(report.sink.memory.len(), 100);
 }
 
 #[test]

@@ -10,7 +10,7 @@ use std::path::PathBuf;
 
 use n3ic::bnn::{infer_packed, infer_scores, load_golden, BnnLayer, BnnModel};
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, OutputSelector, PacketEvent, TriggerCondition,
+    BackendFactory, OutputSelector, PacketEvent, ServeBuilder, TriggerCondition,
 };
 use n3ic::net::traffic::{CbrSpec, Rng, TrafficGen};
 use n3ic::pisa::compile_bnn;
@@ -125,27 +125,27 @@ fn property_feature_determinism() {
     assert_eq!(run(&pkts), run(&pkts));
 }
 
-/// End to end: the coordinator over generated traffic with a trained
-/// model classifies every triggered flow and the results match direct
-/// inference on the same features.
+/// End to end: the unified service over generated traffic with a
+/// trained model classifies every triggered flow and the results match
+/// direct inference on the same features.
 #[test]
-fn e2e_coordinator_with_trained_model() {
+fn e2e_service_with_trained_model() {
     let model = BnnModel::load_named(&artifacts(), "traffic")
         .unwrap_or_else(|_| BnnModel::random("traffic", 256, &[32, 16, 2], 1));
-    let mut svc = CoordinatorService::new(
-        CoreExecutor::fpga(model.clone()),
-        TriggerCondition::EveryNPackets(10),
-        OutputSelector::Memory,
-    );
-    let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, 300, 5);
-    for _ in 0..20_000 {
-        let p = gen.next_packet();
-        svc.handle(&PacketEvent { packet: p, payload_words: None });
-    }
-    assert!(svc.stats.inferences > 100, "{}", svc.stats.inferences);
-    assert_eq!(svc.stats.inferences as usize, svc.sink.memory.len());
+    let events =
+        PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, 300, 5, 20_000);
+    let rep = ServeBuilder::new()
+        .backend(BackendFactory::single("fpga", model).unwrap())
+        .trigger(TriggerCondition::EveryNPackets(10))
+        .output(OutputSelector::Memory)
+        .build()
+        .unwrap()
+        .run(events)
+        .unwrap();
+    assert!(rep.stats.inferences > 100, "{}", rep.stats.inferences);
+    assert_eq!(rep.stats.inferences as usize, rep.sink.memory.len());
     // Class histogram covers only valid classes.
-    let total: u64 = svc.stats.classes.iter().sum();
-    assert_eq!(total, svc.stats.inferences);
-    assert_eq!(svc.stats.classes[2..].iter().sum::<u64>(), 0);
+    let total: u64 = rep.stats.classes.iter().sum();
+    assert_eq!(total, rep.stats.inferences);
+    assert_eq!(rep.stats.classes[2..].iter().sum::<u64>(), 0);
 }

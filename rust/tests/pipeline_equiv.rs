@@ -1,14 +1,14 @@
-//! ISSUE 2 acceptance: the pipelined serving runtime is a *refactoring*
-//! of the serial loop, not a new behaviour — on the same seeded traffic
-//! it must produce bit-identical verdict histograms, trigger counts,
-//! inference counts, and per-flow verdicts, for every worker count,
-//! queue depth, and batch size.  Latency histograms are exempt
-//! (queueing time differs by construction).
+//! ISSUE 2 acceptance (re-anchored on the unified API): the pipelined
+//! mode of the one `Service` is a *refactoring* of the serial mode, not
+//! a new behaviour — on the same seeded traffic it must produce
+//! bit-identical verdict histograms, trigger counts, inference counts,
+//! and per-flow verdicts, for every worker count, queue depth, and
+//! batch size.  Latency histograms are exempt (queueing time differs by
+//! construction).
 
 use n3ic::bnn::BnnModel;
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, OutputSelector, PacketEvent, PipelineConfig,
-    PipelineService, TriggerCondition, STAGE_LINKS,
+    BackendFactory, OutputSelector, PacketEvent, ServeBuilder, TriggerCondition, STAGE_LINKS,
 };
 use n3ic::net::traffic::CbrSpec;
 
@@ -20,49 +20,34 @@ fn model() -> BnnModel {
     BnnModel::random("traffic", 256, &[32, 16, 2], 1)
 }
 
-/// Serial reference run; returns (stats fields we compare, sorted sink).
-fn serial(
-    events: &[PacketEvent],
-    trigger: TriggerCondition,
-    batch: usize,
-) -> (u64, u64, u64, Vec<u64>, Vec<(u64, usize)>, usize) {
-    let mut svc = CoordinatorService::new(
-        CoreExecutor::fpga(model()),
-        trigger,
-        OutputSelector::Memory,
-    );
-    if batch > 0 {
-        svc = svc.with_batching(batch, 1e6);
-    }
-    for ev in events {
-        svc.handle(ev);
-    }
-    svc.flush();
-    let mut mem = svc.sink.memory.clone();
-    mem.sort_unstable();
-    (
-        svc.stats.packets,
-        svc.stats.triggers,
-        svc.stats.inferences,
-        svc.stats.classes.clone(),
-        mem,
-        svc.flows.len(),
-    )
-}
+type Fingerprint = (u64, u64, u64, Vec<u64>, Vec<(u64, usize)>, usize);
 
-fn pipelined(
+/// One service run (serial when `workers == 0`); returns the fields the
+/// determinism contract covers, with the sink sorted into a multiset.
+fn run(
     events: &[PacketEvent],
     trigger: TriggerCondition,
-    cfg: PipelineConfig,
-) -> (u64, u64, u64, Vec<u64>, Vec<(u64, usize)>, usize) {
-    let svc = PipelineService::new(
-        CoreExecutor::fpga(model()),
-        trigger,
-        OutputSelector::Memory,
-        cfg,
-    );
-    let rep = svc.run(events.iter().cloned()).expect("healthy pipeline run");
-    assert_eq!(rep.stats.stage_blocked.len(), STAGE_LINKS.len());
+    workers: usize,
+    batch: usize,
+    queue_depth: usize,
+) -> Fingerprint {
+    let mut b = ServeBuilder::new()
+        .backend(BackendFactory::single("fpga", model()).unwrap())
+        .trigger(trigger)
+        .output(OutputSelector::Memory)
+        .pipeline(workers)
+        .queue_depth(queue_depth);
+    if batch > 0 {
+        b = b.batching(batch, 1e6);
+    }
+    let rep = b
+        .build()
+        .unwrap()
+        .run(events.iter().cloned())
+        .expect("healthy run");
+    if workers > 0 {
+        assert_eq!(rep.stats.stage_blocked.len(), STAGE_LINKS.len());
+    }
     let mut mem = rep.sink.memory.clone();
     mem.sort_unstable();
     (
@@ -75,6 +60,10 @@ fn pipelined(
     )
 }
 
+fn serial(events: &[PacketEvent], trigger: TriggerCondition, batch: usize) -> Fingerprint {
+    run(events, trigger, 0, batch, 1024)
+}
+
 #[test]
 fn pipeline_matches_serial_across_workers_and_batches() {
     let events = traffic_events(30_000, 300, 42);
@@ -83,11 +72,7 @@ fn pipeline_matches_serial_across_workers_and_batches() {
     assert!(want.1 > 0, "traffic must actually trigger");
     for workers in [1usize, 2, 4] {
         for batch in [0usize, 7, 64] {
-            let got = pipelined(
-                &events,
-                trigger,
-                PipelineConfig { workers, batch, ..Default::default() },
-            );
+            let got = run(&events, trigger, workers, batch, 1024);
             assert_eq!(got, want, "workers={workers} batch={batch}");
         }
     }
@@ -95,7 +80,7 @@ fn pipeline_matches_serial_across_workers_and_batches() {
 
 #[test]
 fn pipeline_matches_serial_with_batched_serial_reference() {
-    // The serial loop's own batched route and the pipelined batched
+    // The serial mode's own batched route and the pipelined batched
     // route agree too — all four corners of the matrix are one verdict
     // multiset.
     let events = traffic_events(20_000, 150, 7);
@@ -103,11 +88,7 @@ fn pipeline_matches_serial_with_batched_serial_reference() {
     let serial_inline = serial(&events, trigger, 0);
     let serial_batched = serial(&events, trigger, 32);
     assert_eq!(serial_inline, serial_batched);
-    let piped = pipelined(
-        &events,
-        trigger,
-        PipelineConfig { workers: 3, batch: 32, ..Default::default() },
-    );
+    let piped = run(&events, trigger, 3, 32, 1024);
     assert_eq!(piped, serial_inline);
 }
 
@@ -120,11 +101,7 @@ fn pipeline_matches_serial_under_every_trigger_kind() {
         TriggerCondition::DstPort(443),
     ] {
         let want = serial(&events, trigger, 0);
-        let got = pipelined(
-            &events,
-            trigger,
-            PipelineConfig { workers: 4, ..Default::default() },
-        );
+        let got = run(&events, trigger, 4, 0, 1024);
         assert_eq!(got, want, "{trigger:?}");
     }
 }
@@ -136,11 +113,7 @@ fn pipeline_matches_serial_under_starved_queues() {
     let events = traffic_events(10_000, 100, 99);
     let trigger = TriggerCondition::EveryNPackets(10);
     let want = serial(&events, trigger, 0);
-    let got = pipelined(
-        &events,
-        trigger,
-        PipelineConfig { workers: 2, queue_depth: 1, ..Default::default() },
-    );
+    let got = run(&events, trigger, 2, 0, 1);
     assert_eq!(got, want);
 }
 
@@ -150,8 +123,7 @@ fn pipeline_replays_are_bit_identical_to_each_other() {
     // observable results may not.
     let events = traffic_events(12_000, 80, 5);
     let trigger = TriggerCondition::EveryNPackets(10);
-    let cfg = PipelineConfig { workers: 4, batch: 16, ..Default::default() };
-    let a = pipelined(&events, trigger, cfg);
-    let b = pipelined(&events, trigger, cfg);
+    let a = run(&events, trigger, 4, 16, 1024);
+    let b = run(&events, trigger, 4, 16, 1024);
     assert_eq!(a, b);
 }

@@ -1,0 +1,233 @@
+//! ISSUE 5 acceptance: the backend conformance suite.
+//!
+//! One shared seeded scenario matrix — single (serial inline), batched,
+//! pipelined, and hot-swap where [`Capabilities`] allow — runs over
+//! **every** backend registered in the [`BackendFactory`], and every
+//! cell must produce a verdict history bit-identical to the host
+//! reference: same trigger count, same inference count, same verdict
+//! histogram, same per-flow verdict multiset.
+//!
+//! This folds the cross-executor differential checks in as one lens:
+//! every backend (the six registered names plus the `nfp` CLI alias)
+//! computes the paper's Algorithm 1, so any divergence anywhere in the
+//! matrix is a real defect (a torn swap, a mis-sharded batch, a broken
+//! interpreter), never an "expected backend quirk".
+
+use n3ic::bnn::{infer_packed, BnnLayer, BnnModel, RegistryHandle};
+use n3ic::coordinator::{
+    BackendFactory, Capabilities, InferencePlane, OutputSelector, PacketEvent, ServeBuilder,
+    TriggerCondition,
+};
+use n3ic::net::traffic::CbrSpec;
+
+/// Shared seeded scenario: 20k packets over 300 flows (seed 42), flows
+/// trigger at their 10th packet — trigger times span packets ~787–6475,
+/// so the hot-swap scenario's republish cadence (every 2000 packets)
+/// interleaves with live triggers.
+const PACKETS: usize = 20_000;
+const FLOWS: u64 = 300;
+const SEED: u64 = 42;
+const SWAP_EVERY: u64 = 2000;
+
+fn model() -> BnnModel {
+    // Fits every backend, including the PISA PHV budget.
+    BnnModel::random("traffic", 256, &[32, 16, 2], 42)
+}
+
+fn events() -> Vec<PacketEvent> {
+    PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, FLOWS, SEED, PACKETS)
+}
+
+fn registry() -> RegistryHandle {
+    let h = RegistryHandle::new();
+    h.publish("traffic", &model()).unwrap();
+    h
+}
+
+/// Every factory name the suite sweeps: the six registered backends
+/// plus the `nfp` CLI alias (a distinct latency model over the shared
+/// kernel — it must conform like everything else).
+fn all_backends() -> Vec<&'static str> {
+    let mut names = BackendFactory::BACKENDS.to_vec();
+    names.push("nfp");
+    names
+}
+
+/// A fresh plane for `name` (planes are consumed by each service run).
+fn plane(name: &str, registry: &RegistryHandle) -> Box<dyn InferencePlane> {
+    match name {
+        "registry" => {
+            BackendFactory::registry(registry, &["traffic".to_string()], 100.0, 2).unwrap()
+        }
+        "sharded" => BackendFactory::single_sharded(name, model(), 3).unwrap(),
+        _ => BackendFactory::single(name, model()).unwrap(),
+    }
+}
+
+/// The fields the conformance contract covers (latency histograms are
+/// modeled per backend and deliberately excluded).
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    triggers: u64,
+    inferences: u64,
+    classes: Vec<u64>,
+    sink: Vec<(u64, usize)>,
+}
+
+fn run_scenario(
+    plane: Box<dyn InferencePlane>,
+    workers: usize,
+    batch: usize,
+    swap_every: u64,
+) -> (Outcome, Vec<u64>) {
+    let mut b = ServeBuilder::new()
+        .backend(plane)
+        .trigger(TriggerCondition::EveryNPackets(10))
+        .output(OutputSelector::Memory)
+        .pipeline(workers);
+    if swap_every > 0 && workers > 0 {
+        // Bound the ingress thread's lookahead so republishes (done at
+        // ingress) deterministically interleave with classification:
+        // early triggers must pin v1, late ones a post-swap version.
+        b = b.queue_depth(4);
+    }
+    if batch > 0 {
+        b = b.batching(batch, 1e6);
+    }
+    if swap_every > 0 {
+        b = b.swap_every(swap_every);
+    }
+    let rep = b.build().unwrap().run(events()).unwrap();
+    let mut sink = rep.sink.memory.clone();
+    sink.sort_unstable();
+    let versions: Vec<u64> = rep.tagged.iter().map(|t| t.tag.version()).collect();
+    (
+        Outcome {
+            triggers: rep.stats.triggers,
+            inferences: rep.stats.inferences,
+            classes: rep.stats.classes,
+            sink,
+        },
+        versions,
+    )
+}
+
+#[test]
+fn every_backend_matches_the_host_reference_across_the_scenario_matrix() {
+    let reg = registry();
+    let (reference, _) = run_scenario(plane("host", &reg), 0, 0, 0);
+    assert!(reference.triggers > 0, "scenario must actually trigger");
+    assert_eq!(reference.triggers, reference.inferences);
+
+    for name in all_backends() {
+        let caps: Capabilities = plane(name, &reg).capabilities();
+        // Scenario 1: serial inline.
+        let (single, _) = run_scenario(plane(name, &reg), 0, 0, 0);
+        assert_eq!(single, reference, "{name} / serial inline");
+        // Scenario 2: serial batched, clamped to the backend's width
+        // (capability-driven: pisa batches at most 1 — i.e. inline
+        // through the batch lanes).
+        let batch = 7.min(caps.max_batch);
+        let (batched, _) = run_scenario(plane(name, &reg), 0, batch, 0);
+        assert_eq!(batched, reference, "{name} / serial batched({batch})");
+        // Scenario 3: staged pipeline.
+        let batch = 8.min(caps.max_batch);
+        let (staged, _) = run_scenario(plane(name, &reg), 3, batch, 0);
+        assert_eq!(staged, reference, "{name} / pipelined batched({batch})");
+    }
+}
+
+#[test]
+fn hot_swap_scenario_keeps_verdicts_identical_while_versions_move() {
+    let reg = registry();
+    let (reference, _) = run_scenario(plane("host", &reg), 0, 0, 0);
+    for name in all_backends() {
+        let caps = plane(name, &reg).capabilities();
+        if !caps.supports_hot_swap {
+            continue;
+        }
+        let (swapped, versions) = run_scenario(plane(name, &reg), 2, 8, SWAP_EVERY);
+        // Same weights republished ⇒ bit-identical verdicts...
+        assert_eq!(swapped, reference, "{name} / hot-swap");
+        // ...with the swap machinery demonstrably live: verdict tags
+        // straddle the republishes.
+        assert_eq!(versions.len() as u64, swapped.inferences);
+        let base = versions.iter().min().copied().unwrap();
+        let top = versions.iter().max().copied().unwrap();
+        assert!(top > base, "{name}: no verdict observed a hot swap");
+    }
+    // The registry slot absorbed the swaps this test drove.
+    assert!(reg.swap_count("traffic") > 0);
+}
+
+#[test]
+fn epoch_pinning_backends_tag_every_verdict_and_others_tag_none() {
+    let reg = registry();
+    for name in all_backends() {
+        let caps = plane(name, &reg).capabilities();
+        let (outcome, versions) = run_scenario(plane(name, &reg), 0, 0, 0);
+        if caps.supports_epoch_pinning {
+            assert_eq!(versions.len() as u64, outcome.inferences, "{name}");
+        } else {
+            assert!(versions.is_empty(), "{name} must not invent tags");
+        }
+    }
+}
+
+/// The differential lens at the plane level: classify and run_batch on
+/// every backend agree with the functional reference, input by input.
+#[test]
+fn plane_calls_agree_with_functional_reference() {
+    let m = model();
+    let xs: Vec<Vec<u32>> = (0..13)
+        .map(|i| BnnLayer::random(1, 256, 9_000 + i).words)
+        .collect();
+    let want: Vec<usize> = xs.iter().map(|x| infer_packed(&m, x)).collect();
+    let reg = registry();
+    for name in all_backends() {
+        let mut p = plane(name, &reg);
+        let caps = p.capabilities();
+        for (x, &w) in xs.iter().zip(&want) {
+            assert_eq!(p.classify(0, x).0, w, "{name}");
+        }
+        let mut classes = Vec::new();
+        if caps.max_batch >= xs.len() {
+            p.run_batch(0, &xs, &mut classes);
+            assert_eq!(classes, want, "{name} batch");
+        } else {
+            // Capability-clamped backends still serve the batch API one
+            // input at a time.
+            for (x, &w) in xs.iter().zip(&want) {
+                p.run_batch(0, std::slice::from_ref(x), &mut classes);
+                assert_eq!(classes, vec![w], "{name} batch-of-1");
+            }
+        }
+    }
+}
+
+/// The capability table the redesign promises (README §Architecture).
+#[test]
+fn capability_table_matches_the_documented_contract() {
+    let reg = registry();
+    let rows: Vec<Capabilities> = BackendFactory::BACKENDS
+        .iter()
+        .map(|n| plane(n, &reg).capabilities())
+        .collect();
+    for (name, caps) in BackendFactory::BACKENDS.iter().zip(&rows) {
+        assert_eq!(&caps.backend, name);
+        assert!(caps.inference_ns > 0.0, "{name}");
+        assert_eq!(caps.routes, 1, "{name}: one bound model in this suite");
+    }
+    let by_name = |n: &str| {
+        let i = BackendFactory::BACKENDS.iter().position(|b| *b == n).unwrap();
+        rows[i].clone()
+    };
+    assert_eq!(by_name("pisa").max_batch, 1);
+    assert!(by_name("sharded").shards >= 2);
+    assert!(by_name("registry").supports_hot_swap);
+    assert!(by_name("registry").supports_epoch_pinning);
+    for n in ["host", "batch", "sharded", "pisa", "fpga"] {
+        assert!(!by_name(n).supports_hot_swap, "{n}");
+        assert!(!by_name(n).supports_epoch_pinning, "{n}");
+    }
+}

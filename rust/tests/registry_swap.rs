@@ -23,8 +23,7 @@ use std::time::Duration;
 
 use n3ic::bnn::{infer_packed, BnnLayer, BnnModel, MultiModelExecutor, RegistryHandle};
 use n3ic::coordinator::{
-    CoordinatorService, CoreExecutor, ModelRouter, OutputSelector, PacketEvent, PipelineConfig,
-    RoutedPipelineService, TriggerCondition,
+    BackendFactory, ModelRouter, OutputSelector, PacketEvent, ServeBuilder, TriggerCondition,
 };
 use n3ic::net::packet::{Packet, Proto};
 use n3ic::net::traffic::{CbrSpec, Rng};
@@ -301,18 +300,17 @@ fn pipeline_readers_survive_concurrent_publishes_with_consistent_tags() {
         })
         .collect();
 
-    let cfg = PipelineConfig { workers: 3, batch: 16, max_wait_ns: 1e5, ..Default::default() };
-    let report = RoutedPipelineService::new(
-        reg.clone(),
-        router,
-        OutputSelector::Memory,
-        cfg,
-        100.0,
-    )
-    .unwrap()
-    .with_shards(3)
-    .run(events)
-    .unwrap();
+    let names = router.model_names().to_vec();
+    let report = ServeBuilder::new()
+        .backend(BackendFactory::registry(&reg, &names, 100.0, 3).unwrap())
+        .router(router)
+        .output(OutputSelector::Memory)
+        .batching(16, 1e5)
+        .pipeline(3)
+        .build()
+        .unwrap()
+        .run(events)
+        .unwrap();
     stop.store(true, Ordering::SeqCst);
     writer.join().unwrap();
 
@@ -368,33 +366,31 @@ fn two_model_pipeline_matches_two_standalone_single_model_runs() {
         (TriggerCondition::DstPort(53), "traffic-class".into()),
     ]);
 
-    let cfg = PipelineConfig { workers: 3, batch: 8, ..Default::default() };
-    let report = RoutedPipelineService::new(
-        reg.clone(),
-        router.clone(),
-        OutputSelector::Memory,
-        cfg,
-        100.0,
-    )
-    .unwrap()
-    .with_shards(2)
-    .run(events.iter().cloned())
-    .unwrap();
+    let names = router.model_names().to_vec();
+    let report = ServeBuilder::new()
+        .backend(BackendFactory::registry(&reg, &names, 100.0, 2).unwrap())
+        .router(router)
+        .output(OutputSelector::Memory)
+        .batching(8, 1e6)
+        .pipeline(3)
+        .build()
+        .unwrap()
+        .run(events.iter().cloned())
+        .unwrap();
 
     // Standalone single-model reference runs over the same events.
     let standalone = |model: &BnnModel, port: u16| {
-        let mut svc = CoordinatorService::new(
-            CoreExecutor::fpga(model.clone()),
-            TriggerCondition::DstPort(port),
-            OutputSelector::Memory,
-        );
-        for ev in &events {
-            svc.handle(ev);
-        }
-        svc.flush();
-        let mut mem = svc.sink.memory;
+        let rep = ServeBuilder::new()
+            .backend(BackendFactory::single("fpga", model.clone()).unwrap())
+            .trigger(TriggerCondition::DstPort(port))
+            .output(OutputSelector::Memory)
+            .build()
+            .unwrap()
+            .run(events.iter().cloned())
+            .unwrap();
+        let mut mem = rep.sink.memory;
         mem.sort_unstable();
-        (svc.stats.classes, svc.stats.inferences, mem)
+        (rep.stats.classes, rep.stats.inferences, mem)
     };
     let (hist_a, inf_a, mem_a) = standalone(&m_a, 443);
     let (hist_t, inf_t, mem_t) = standalone(&m_t, 53);
