@@ -1,0 +1,142 @@
+//! `overload` — cost of the overload control plane on the serving path:
+//!
+//! 1. **Admission hot path**: one leaky-bucket admit decision per
+//!    trigger — the arithmetic every packet pays once shedding is
+//!    configured, whether or not it ever fires.
+//! 2. **Serving under 5x overload**: the same burst served with and
+//!    without shedding + trigger-only degradation.  The shed run
+//!    retires fewer real inferences, which is the point — overload
+//!    control converts queue collapse into saved compute.
+//! 3. **Placement failover**: batch cost through a [`PlacedPlane`]
+//!    whose cheapest member faults every call (breaker tripping +
+//!    failover to the healthy member) vs the healthy member alone.
+//!
+//! Results merge into the `benches.overload` entry of `BENCH.json`
+//! (`BENCH.smoke.json` under `N3IC_BENCH_SMOKE=1`, as in verify.sh):
+//!
+//! ```text
+//! cd rust && cargo bench --bench overload
+//! ```
+
+use n3ic::bench::{bench, group, smoke_mode, write_bench_json};
+use n3ic::bnn::{BnnLayer, BnnModel, EngineError, VersionTag};
+use n3ic::coordinator::{
+    AdmissionController, BackendFactory, BreakerPolicy, Capabilities, DegradeSpec,
+    InferencePlane, OutputSelector, PacketEvent, PlacedPlane, ServeBuilder, ServiceReport,
+    ShedPolicy, TriggerCondition,
+};
+use n3ic::json::{obj, Json};
+use n3ic::net::traffic::CbrSpec;
+
+fn model() -> BnnModel {
+    BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+}
+
+/// Member whose batch path always faults — breaker-bait in front of the
+/// healthy fpga member in the failover bench.
+struct FlakyPlane;
+
+impl InferencePlane for FlakyPlane {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::single("flaky", 10.0)
+    }
+
+    fn classify(&mut self, _route: usize, _x: &[u32]) -> (usize, Option<VersionTag>) {
+        unreachable!("the failover bench only drives the batch path");
+    }
+
+    fn try_run_batch(
+        &mut self,
+        _route: usize,
+        _inputs: &[Vec<u32>],
+        _classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        Err(EngineError::WorkerDied)
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+}
+
+fn main() {
+    group("overload / admission decision hot path");
+    let mut adm = AdmissionController::new(ShedPolicy::new(400_000.0, 100_000.0), 1.0);
+    let mut clock = 0.0f64;
+    let decision = bench("admission_admit_per_trigger", || {
+        // 40 Gb/s 256 B arrivals against 50 µs modeled work: the bucket
+        // sawtooths through both admit and shed branches.
+        clock += 51.2;
+        adm.admit(clock, 50_000.0)
+    });
+
+    group("overload / serial serving under 5x modeled overload");
+    let packets = if smoke_mode() { 8_000 } else { 60_000 };
+    let events = PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, 400, 77, packets);
+    let serve = |shed: bool| -> ServiceReport {
+        let mut b = ServeBuilder::new()
+            .backend(BackendFactory::custom("slownic", model(), 50_000.0, 1))
+            .trigger(TriggerCondition::EveryNPackets(5))
+            .output(OutputSelector::Memory);
+        if shed {
+            b = b
+                .shed(ShedPolicy::new(400_000.0, 100_000.0))
+                .degrade(DegradeSpec::trigger_only());
+        }
+        b.build().unwrap().run(events.iter().cloned()).unwrap()
+    };
+    let shed_run = bench("serve_shed_burst", || serve(true).stats.sheds);
+    let unshed_run = bench("serve_unshed_burst", || serve(false).stats.inferences);
+    let sample = serve(true);
+    println!(
+        "sample shed run: {} sheds, {} inferences, {} ladder steps",
+        sample.stats.sheds,
+        sample.stats.inferences,
+        sample.degradation.len()
+    );
+
+    group("overload / placement failover (batch 8)");
+    let inputs: Vec<Vec<u32>> = (0..8).map(|i| BnnLayer::random(1, 256, 9_100 + i).words).collect();
+    let mut classes = Vec::new();
+    let mut healthy = BackendFactory::single("fpga", model()).unwrap();
+    let fpga_b8 = bench("fpga_batch8", || {
+        healthy.try_run_batch(0, &inputs, &mut classes).unwrap();
+        classes.len()
+    });
+    let mut placed = PlacedPlane::new(
+        vec![Box::new(FlakyPlane), BackendFactory::single("fpga", model()).unwrap()],
+        BreakerPolicy { trip_after: 2, cooldown_calls: 64, ..BreakerPolicy::default() },
+    )
+    .unwrap();
+    let placed_b8 = bench("placed_faulting_member_batch8", || {
+        placed.try_run_batch(0, &inputs, &mut classes).unwrap();
+        classes.len()
+    });
+
+    let round1 = |v: f64| (v * 10.0).round() / 10.0;
+    let fragment = obj(vec![
+        ("smoke", Json::Bool(smoke_mode())),
+        ("admission_decision_ns", Json::Num(round1(decision.ns_per_iter))),
+        ("burst_packets", Json::Num(packets as f64)),
+        (
+            "shed_events_per_sec",
+            Json::Num((packets as f64 * shed_run.per_second()).round()),
+        ),
+        (
+            "unshed_events_per_sec",
+            Json::Num((packets as f64 * unshed_run.per_second()).round()),
+        ),
+        ("sample_sheds", Json::Num(sample.stats.sheds as f64)),
+        ("sample_inferences", Json::Num(sample.stats.inferences as f64)),
+        ("sample_ladder_steps", Json::Num(sample.degradation.len() as f64)),
+        ("fpga_batch8_ns", Json::Num(round1(fpga_b8.ns_per_iter))),
+        (
+            "placed_faulting_batch8_ns",
+            Json::Num(round1(placed_b8.ns_per_iter)),
+        ),
+    ]);
+    match write_bench_json("overload", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+}

@@ -270,6 +270,44 @@ impl ModelRegistry {
         Ok(tag)
     }
 
+    /// Republish a previously snapshotted epoch's weights as a **new**
+    /// version of `name` — the registry stays monotone (versions never
+    /// go backwards), only the weights do.  This is how the overload
+    /// ladder's step-up restores the full model after a fallback
+    /// publish: snapshot [`current`](Self::current) before stepping
+    /// down, `rollback` on recovery.  Same shape check and
+    /// write-ordering discipline as [`publish`](Self::publish); the
+    /// packed weights `Arc` is reused, so no repacking happens on the
+    /// recovery path.
+    pub fn rollback(&self, name: &str, epoch: &ModelEpoch) -> Result<VersionTag, RegistryError> {
+        let packed = Arc::clone(&epoch.packed);
+        let slot = self
+            .slots
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| RegistryError::UnknownModel(name.to_string()))?;
+        let mut cur = slot.epoch.write().unwrap();
+        if cur.packed.in_words != packed.in_words || cur.packed.out_neurons != packed.out_neurons {
+            return Err(RegistryError::ShapeMismatch {
+                name: name.to_string(),
+                expected_in_words: cur.packed.in_words,
+                expected_classes: cur.packed.out_neurons,
+                got_in_words: packed.in_words,
+                got_classes: packed.out_neurons,
+            });
+        }
+        let version = cur.version() + 1;
+        let tag = VersionTag { name: Arc::clone(&cur.tag.name), version };
+        *cur = Arc::new(ModelEpoch { tag: tag.clone(), packed });
+        // Same ordering discipline as `publish`: epoch first, counter
+        // second, both under the write guard.
+        slot.version.store(version, Ordering::Release);
+        slot.swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(tag)
+    }
+
     /// A hot-path reader bound to one slot.
     pub fn reader(&self, name: &str) -> Result<SlotReader, RegistryError> {
         let slot = self
@@ -341,6 +379,10 @@ impl RegistryHandle {
 
     pub fn touch(&self, name: &str) -> Result<VersionTag, RegistryError> {
         self.0.touch(name)
+    }
+
+    pub fn rollback(&self, name: &str, epoch: &ModelEpoch) -> Result<VersionTag, RegistryError> {
+        self.0.rollback(name, epoch)
     }
 
     pub fn reader(&self, name: &str) -> Result<SlotReader, RegistryError> {
@@ -605,6 +647,37 @@ mod tests {
         assert!(h.publish("anomaly", &more_classes).is_err());
         // The slot still serves v1.
         assert_eq!(h.current("anomaly").unwrap().version(), 1);
+    }
+
+    #[test]
+    fn rollback_restores_a_snapshotted_epoch_as_a_new_version() {
+        let h = handle_with("anomaly", 1);
+        let snap = h.current("anomaly").unwrap();
+        h.publish("anomaly", &model(2)).unwrap();
+        let tag = h.rollback("anomaly", &snap).unwrap();
+        // Monotone: the rollback is version 3, not a return to 1...
+        assert_eq!((tag.name(), tag.version()), ("anomaly", 3));
+        assert_eq!(h.swap_count("anomaly"), 2);
+        // ...but it serves the snapshotted weights bit-exactly.
+        let x = BnnLayer::random(1, 256, 77).words;
+        let mut exec =
+            MultiModelExecutor::new(&h, &["anomaly".to_string()], 100.0).unwrap();
+        let (class, served) = exec.classify(0, &x);
+        assert_eq!(served.version(), 3);
+        assert_eq!(class, infer_packed(&model(1), &x));
+        // Shape-checked like any publish, and unknown slots are typed
+        // errors.
+        let other = RegistryHandle::new();
+        other.publish("w", &BnnModel::random("w", 64, &[8, 2], 3)).unwrap();
+        let wrong = other.current("w").unwrap();
+        assert!(matches!(
+            h.rollback("anomaly", &wrong).unwrap_err(),
+            RegistryError::ShapeMismatch { .. }
+        ));
+        assert!(matches!(
+            h.rollback("nope", &snap).unwrap_err(),
+            RegistryError::UnknownModel(_)
+        ));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! | `pisa`     | PISA pipeline **interpreter** (NNtoP4)  | none (`max_batch = 1`, inline) | fails for models over the PHV budget |
 //! | `fpga`     | bit-exact core, FPGA module timing      | weight-stationary kernel | §4.3 device model latency |
 //! | `nfp`      | bit-exact core, NFP data-parallel timing| weight-stationary kernel | alias kept for the `serve` CLI |
+//! | `placed`   | cost-aware [`PlacedPlane`] over fpga/sharded/host (+pisa when it compiles) | cheapest healthy member per batch width | per-member circuit breakers + failover |
 //! | `registry` | versioned [`MultiModelExecutor`]        | per-epoch kernel / engine | hot swap + epoch pinning |
 //!
 //! All of them compute the paper's Algorithm 1 bit-exactly; the
@@ -26,6 +27,7 @@ use crate::bnn::{
 use crate::bnnexec::HostCostModel;
 use crate::pisa::PisaProgram;
 
+use super::overload::{BreakerPolicy, PlacedPlane};
 use super::plane::{Capabilities, InferencePlane, SwapController};
 use super::service::ServiceError;
 
@@ -34,8 +36,8 @@ pub struct BackendFactory;
 
 impl BackendFactory {
     /// Every registered backend name, in capability-table order.
-    pub const BACKENDS: [&'static str; 6] =
-        ["host", "batch", "sharded", "pisa", "fpga", "registry"];
+    pub const BACKENDS: [&'static str; 7] =
+        ["host", "batch", "sharded", "pisa", "fpga", "placed", "registry"];
 
     /// Build a single-model backend by name (single-core batch path
     /// where one applies; see [`single_sharded`](Self::single_sharded)).
@@ -128,6 +130,22 @@ impl BackendFactory {
                     latency_ns,
                 }))
             }
+            // The placement plane: the same model on every data plane the
+            // host has, fronted by per-member breakers.  Mice (inline
+            // classifies) land on the fpga device model, elephants (wide
+            // batches) on the sharded host engine; pisa joins when the
+            // model fits its PHV budget.  All members are bit-exact, so
+            // placement and failover never change verdicts.
+            "placed" => {
+                let mut members: Vec<Box<dyn InferencePlane>> =
+                    vec![Self::single("fpga", model.clone())?];
+                if let Ok(pisa) = Self::single("pisa", model.clone()) {
+                    members.push(pisa);
+                }
+                members.push(Self::single_sharded("sharded", model.clone(), shards.max(2))?);
+                members.push(Self::single("host", model)?);
+                Ok(Box::new(PlacedPlane::new(members, BreakerPolicy::default())?))
+            }
             "registry" => Err(ServiceError::Config(
                 "the registry backend serves named slots: publish models into a \
                  RegistryHandle and use BackendFactory::registry"
@@ -168,8 +186,8 @@ impl BackendFactory {
 }
 
 /// Crate-internal registry-plane constructor that keeps the
-/// [`RegistryError`] type (the deprecated shims' constructors promise
-/// it).
+/// [`RegistryError`] type for callers that need to distinguish registry
+/// faults from config errors.
 pub(crate) fn registry_plane(
     registry: &RegistryHandle,
     names: &[String],
@@ -257,7 +275,14 @@ impl InferencePlane for CorePlane {
 
     fn batch_latency_ns(&self, b: usize) -> f64 {
         match &self.cost {
-            BatchCost::Serial => self.latency_ns * b as f64,
+            // A sharded engine retires a batch in parallel, so the
+            // modeled completion divides by the worker count — without
+            // this the placer would see a 4-core engine as no cheaper
+            // than one core and never route elephants to it.
+            BatchCost::Serial => {
+                let shards = self.engine.as_ref().map_or(1, ShardedEngine::n_shards);
+                self.latency_ns * b as f64 / shards as f64
+            }
             BatchCost::Host(m) => m.batch_latency_ns(self.exec.model(), b),
         }
     }
@@ -454,6 +479,41 @@ mod tests {
         let host = BackendFactory::single("host", m).unwrap();
         assert!(host.latency_ns() > 10_000.0);
         assert!(host.batch_latency_ns(1000) < host.latency_ns() * 1000.0);
+    }
+
+    #[test]
+    fn sharded_batch_cost_divides_by_worker_count() {
+        let m = model();
+        let one = BackendFactory::single("batch", m.clone()).unwrap();
+        let four = BackendFactory::single_sharded("sharded", m.clone(), 4).unwrap();
+        // Same per-inference figure, but four cores retire the batch 4×
+        // faster under the serial cost model.
+        assert!((one.batch_latency_ns(64) / four.batch_latency_ns(64) - 4.0).abs() < 1e-9);
+        // Batch of one still costs one inference on either.
+        assert!((one.batch_latency_ns(1) - one.latency_ns()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn placed_backend_fronts_bit_exact_members() {
+        let m = model();
+        let mut placed = BackendFactory::single("placed", m.clone()).unwrap();
+        let caps = placed.capabilities();
+        assert_eq!(caps.backend, "placed");
+        assert!(!caps.supports_hot_swap && !caps.supports_epoch_pinning);
+        assert_eq!(caps.routes, 1);
+        let xs: Vec<Vec<u32>> = (0..8)
+            .map(|i| BnnLayer::random(1, 256, 700 + i).words)
+            .collect();
+        let want: Vec<usize> = xs.iter().map(|x| infer_packed(&m, x)).collect();
+        for (x, &w) in xs.iter().zip(&want) {
+            assert_eq!(placed.classify(0, x).0, w);
+        }
+        let mut classes = Vec::new();
+        assert!(placed.run_batch(0, &xs, &mut classes).is_none());
+        assert_eq!(classes, want);
+        let health = placed.health_snapshot().expect("placement plane reports health");
+        assert!(health.iter().any(|h| h.calls > 0));
+        assert!(health.iter().all(|h| h.trips == 0 && !h.open));
     }
 
     #[test]

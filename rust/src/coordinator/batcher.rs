@@ -43,6 +43,12 @@ impl<T> Batcher<T> {
     pub fn pending(&self) -> usize {
         self.buf.len()
     }
+
+    /// Enqueue time of the oldest waiting item (`None` when empty) — the
+    /// overload ladder reads this as queueing-pressure evidence.
+    pub fn oldest_enqueue_ns(&self) -> Option<f64> {
+        self.buf.first().map(|&(t, _)| t)
+    }
 }
 
 /// One emitted batch: `(enqueue time, item)` pairs in arrival order.
@@ -96,6 +102,14 @@ impl<T> BatchSet<T> {
 
     pub fn pending_lane(&self, lane: usize) -> usize {
         self.lanes[lane].pending()
+    }
+
+    /// Oldest enqueue time across every lane (`None` when all empty).
+    pub fn oldest_enqueue_ns(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .filter_map(Batcher::oldest_enqueue_ns)
+            .min_by(|a, b| a.partial_cmp(b).expect("enqueue times are never NaN"))
     }
 }
 
@@ -216,6 +230,19 @@ mod tests {
         assert_eq!(rest[0].0, 2);
         assert_eq!(s.pending(), 0);
         assert!(s.poll(f64::INFINITY).is_empty());
+    }
+
+    #[test]
+    fn oldest_enqueue_tracks_the_head_across_lanes() {
+        let mut s: BatchSet<&str> = BatchSet::new(2, 100, 1e9);
+        assert_eq!(s.oldest_enqueue_ns(), None);
+        s.push(1, 50.0, "later");
+        s.push(0, 10.0, "earliest");
+        s.push(0, 70.0, "newest");
+        assert_eq!(s.oldest_enqueue_ns(), Some(10.0));
+        // Draining lane 0 moves the head to lane 1's oldest.
+        let _ = s.poll(f64::INFINITY);
+        assert_eq!(s.oldest_enqueue_ns(), None);
     }
 
     #[test]

@@ -11,18 +11,19 @@
 //!   the runtime queries instead of being specialized per backend;
 //! * [`BackendFactory`] — every executor in the crate as a named
 //!   backend (`"host" | "batch" | "sharded" | "pisa" | "fpga" |
-//!   "registry"`);
+//!   "placed" | "registry"`);
 //! * [`Service`] / [`ServeBuilder`] — the one serving runtime;
-//!   batching, pipelining, multi-model routing, and hot swap are
-//!   builder options, not separate service types.
+//!   batching, pipelining, multi-model routing, hot swap, and overload
+//!   control are builder options, not separate service types.
 //!
-//! The pre-unification API (`NnExecutor`, `CoreExecutor`, the four
-//! service structs) survives one PR as deprecated shims in [`legacy`].
+//! The [`overload`] module is the control plane over that runtime:
+//! admission shedding, the degradation ladder, per-backend circuit
+//! breakers behind [`PlacedPlane`], and stage supervision.
 
 pub mod backend;
 pub mod batcher;
-pub mod legacy;
 pub mod multinn;
+pub mod overload;
 pub mod pipeline;
 pub mod plane;
 pub mod selector;
@@ -32,10 +33,10 @@ pub mod trigger;
 
 pub use backend::BackendFactory;
 pub use batcher::{BatchSet, Batcher, TimedBatch};
-#[allow(deprecated)]
-pub use legacy::{
-    CoordinatorService, CoreExecutor, LegacyPlane, MultiModelService, NnBatchExecutor,
-    NnExecutor, PipelineConfig, PipelineService, RoutedPipelineService,
+pub use overload::{
+    AdmissionController, BreakerPolicy, BreakerState, CircuitBreaker, DegradationEvent,
+    DegradationLadder, DegradeSpec, FaultPlan, LadderPolicy, PlacedPlane, PlaneHealth,
+    ServiceLevel, ShedPolicy, SupervisorPolicy,
 };
 pub use pipeline::STAGE_LINKS;
 pub use plane::{Capabilities, InferencePlane, SwapController};

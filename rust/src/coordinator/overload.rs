@@ -1,0 +1,1346 @@
+//! Overload control plane: admission shedding, the degradation ladder,
+//! per-plane circuit breakers with cost-aware placement, and pipeline
+//! stage supervision.
+//!
+//! The paper's pitch is inference that keeps up with line rate; the
+//! serving loop must therefore *degrade* under overload instead of
+//! collapsing its bounded stage queues.  Four cooperating mechanisms,
+//! all driven by the deterministic packet clock and the modeled
+//! [`Capabilities`] cost hook (never wall time, so replay stays
+//! deterministic):
+//!
+//! 1. **Admission** ([`ShedPolicy`] / [`AdmissionController`]) — a leaky
+//!    bucket of modeled backlog at ingress.  Every admitted trigger adds
+//!    its modeled inference cost; the packet clock drains it.  Past
+//!    `max_backlog_ns` the controller sheds with hysteresis until the
+//!    backlog falls below `resume_backlog_ns`, *before* `sync_channel`
+//!    backpressure can stall the forwarding path.
+//! 2. **Degradation ladder** ([`LadderPolicy`] / [`DegradationLadder`])
+//!    — sustained pressure steps the service down one rung at a time:
+//!    full model → a smaller fallback model hot-swapped into the
+//!    registry → trigger-only mode (count triggers, run no inference),
+//!    and back up on recovery.  Every transition lands in the
+//!    [`ServiceReport::degradation`](super::ServiceReport) timeline.
+//! 3. **Backend health** ([`BreakerPolicy`] / [`CircuitBreaker`] /
+//!    [`PlacedPlane`]) — a placement plane fronting several member
+//!    planes, dispatching each call to the cheapest member whose breaker
+//!    is closed (mice to the constrained pisa/fpga planes, elephants to
+//!    the sharded host engine) and failing over when one opens.
+//! 4. **Supervision** ([`SupervisorPolicy`]) — a parse / inference /
+//!    sink stage that dies mid-run is restarted with bounded
+//!    retry+backoff instead of aborting the run.  With no supervisor
+//!    configured the old die-loudly semantics are untouched, preserving
+//!    the deterministic-replay contract.
+//!
+//! Only wall time measured *around* member calls feeds the breakers
+//! (a health signal); verdicts, admission, and the ladder see the
+//! virtual clock exclusively.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::bnn::{BnnModel, EngineError, ModelEpoch, RegistryError, RegistryHandle, VersionTag};
+
+use super::plane::{Capabilities, InferencePlane, SwapController};
+use super::service::{ServiceError, StageFailure};
+
+// ---------------------------------------------------------------------------
+// Admission control
+// ---------------------------------------------------------------------------
+
+/// When to shed triggered work at ingress, in modeled-backlog
+/// nanoseconds.  Shedding starts once the backlog would exceed
+/// `max_backlog_ns` and continues (hysteresis) until it has drained
+/// below `resume_backlog_ns`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShedPolicy {
+    /// Backlog ceiling: a trigger that would push the modeled backlog
+    /// past this is shed instead of enqueued.
+    pub max_backlog_ns: f64,
+    /// Hysteresis floor: once shedding, admit again only after the
+    /// backlog drains below this.
+    pub resume_backlog_ns: f64,
+}
+
+impl ShedPolicy {
+    /// `resume_backlog_ns` is clamped to at most `max_backlog_ns`.
+    pub fn new(max_backlog_ns: f64, resume_backlog_ns: f64) -> Self {
+        Self { max_backlog_ns, resume_backlog_ns: resume_backlog_ns.min(max_backlog_ns) }
+    }
+
+    /// A policy that never sheds — used when only the degradation
+    /// ladder is enabled and the controller serves purely as the
+    /// backlog estimator.
+    pub(crate) fn never() -> Self {
+        Self { max_backlog_ns: f64::INFINITY, resume_backlog_ns: f64::INFINITY }
+    }
+}
+
+/// Leaky-bucket admission controller on the packet clock.  Admitted
+/// work deposits its modeled cost; elapsed virtual time drains at
+/// `drain_per_ns` (the plane's modeled parallelism, e.g. shard count).
+/// Fully deterministic: same event stream in, same shed decisions out.
+#[derive(Debug)]
+pub struct AdmissionController {
+    policy: ShedPolicy,
+    drain_per_ns: f64,
+    backlog_ns: f64,
+    last_ns: f64,
+    shedding: bool,
+    sheds: u64,
+    admitted: u64,
+}
+
+impl AdmissionController {
+    pub fn new(policy: ShedPolicy, drain_per_ns: f64) -> Self {
+        Self {
+            policy,
+            drain_per_ns: drain_per_ns.max(1e-9),
+            backlog_ns: 0.0,
+            last_ns: 0.0,
+            shedding: false,
+            sheds: 0,
+            admitted: 0,
+        }
+    }
+
+    /// Advance the packet clock: drain backlog for the elapsed virtual
+    /// time and clear the shedding latch once below the resume floor.
+    pub fn observe(&mut self, now_ns: f64) {
+        if now_ns > self.last_ns {
+            self.backlog_ns =
+                (self.backlog_ns - (now_ns - self.last_ns) * self.drain_per_ns).max(0.0);
+            self.last_ns = now_ns;
+        }
+        if self.shedding && self.backlog_ns <= self.policy.resume_backlog_ns {
+            self.shedding = false;
+        }
+    }
+
+    /// Admit one unit of work costing `cost_ns`, or shed it.  The
+    /// shedding latch trips *before* the backlog can exceed the
+    /// ceiling and holds until [`observe`](Self::observe) sees the
+    /// backlog drain below the resume floor.
+    pub fn admit(&mut self, now_ns: f64, cost_ns: f64) -> bool {
+        self.observe(now_ns);
+        if !self.shedding && self.backlog_ns + cost_ns > self.policy.max_backlog_ns {
+            self.shedding = true;
+        }
+        if self.shedding {
+            self.sheds += 1;
+            false
+        } else {
+            self.backlog_ns += cost_ns;
+            self.admitted += 1;
+            true
+        }
+    }
+
+    /// Count a shed that bypassed the admit decision (trigger-only mode
+    /// suppressions).
+    pub fn shed_unconditionally(&mut self) {
+        self.sheds += 1;
+    }
+
+    /// Charge a blocked `sync_channel` send: downstream is visibly
+    /// slower than the model claims, so deposit one extra work unit.
+    pub fn on_blocked_send(&mut self, penalty_ns: f64) {
+        self.backlog_ns += penalty_ns;
+    }
+
+    pub fn backlog_ns(&self) -> f64 {
+        self.backlog_ns
+    }
+
+    pub fn is_shedding(&self) -> bool {
+        self.shedding
+    }
+
+    pub fn sheds(&self) -> u64 {
+        self.sheds
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Degradation ladder
+// ---------------------------------------------------------------------------
+
+/// The rung the service currently runs at.  Ordered: higher = more
+/// degraded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ServiceLevel {
+    /// Normal operation on the configured model(s).
+    Full,
+    /// A smaller fallback model hot-swapped into every registry slot.
+    Fallback,
+    /// Triggers are still evaluated and counted, but no inference runs.
+    TriggerOnly,
+}
+
+impl ServiceLevel {
+    pub(crate) fn as_u8(self) -> u8 {
+        match self {
+            ServiceLevel::Full => 0,
+            ServiceLevel::Fallback => 1,
+            ServiceLevel::TriggerOnly => 2,
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Self {
+        match v {
+            1 => ServiceLevel::Fallback,
+            2 => ServiceLevel::TriggerOnly,
+            _ => ServiceLevel::Full,
+        }
+    }
+}
+
+impl std::fmt::Display for ServiceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ServiceLevel::Full => "full",
+            ServiceLevel::Fallback => "fallback-model",
+            ServiceLevel::TriggerOnly => "trigger-only",
+        })
+    }
+}
+
+/// When the ladder moves.  Pressure (modeled backlog + queued batch
+/// wait) must stay above `step_down_backlog_ns` — or below
+/// `step_up_backlog_ns` — for `dwell_packets` consecutive packets
+/// before a transition fires; the dwell filters the sawtooth the
+/// admission hysteresis produces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LadderPolicy {
+    pub step_down_backlog_ns: f64,
+    pub step_up_backlog_ns: f64,
+    pub dwell_packets: u64,
+}
+
+impl LadderPolicy {
+    pub fn new(step_down_backlog_ns: f64, step_up_backlog_ns: f64, dwell_packets: u64) -> Self {
+        Self {
+            step_down_backlog_ns,
+            step_up_backlog_ns: step_up_backlog_ns.min(step_down_backlog_ns),
+            dwell_packets: dwell_packets.max(1),
+        }
+    }
+
+    /// Derive ladder thresholds from a shed policy.  The admission
+    /// hysteresis makes the backlog sawtooth between `resume` and
+    /// `max`, so the step-down threshold must sit *inside* that band
+    /// (the midpoint) for sustained pressure to register; the step-up
+    /// threshold sits below the resume floor so recovery only fires on
+    /// a genuine drain.
+    pub fn from_shed(shed: &ShedPolicy) -> Self {
+        Self::new(
+            (shed.max_backlog_ns + shed.resume_backlog_ns) / 2.0,
+            shed.resume_backlog_ns / 2.0,
+            64,
+        )
+    }
+}
+
+impl Default for LadderPolicy {
+    /// Step down above 2ms of modeled backlog, back up below 200µs,
+    /// after 64 consecutive packets on the wrong side.
+    fn default() -> Self {
+        Self::new(2e6, 2e5, 64)
+    }
+}
+
+/// One ladder transition, recorded in the
+/// [`ServiceReport::degradation`](super::ServiceReport) timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradationEvent {
+    /// Ingress packet ordinal at which the transition fired.
+    pub at_packet: u64,
+    /// Packet-clock timestamp (ns).
+    pub at_ns: f64,
+    pub from: ServiceLevel,
+    pub to: ServiceLevel,
+    /// The pressure reading that tipped the dwell counter.
+    pub backlog_ns: f64,
+}
+
+impl DegradationEvent {
+    pub fn is_step_down(&self) -> bool {
+        self.to > self.from
+    }
+}
+
+impl std::fmt::Display for DegradationEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} {}\u{2192}{} at pkt {} (pressure {:.1} us)",
+            if self.is_step_down() { "step-down" } else { "step-up" },
+            self.from,
+            self.to,
+            self.at_packet,
+            self.backlog_ns / 1000.0,
+        )
+    }
+}
+
+/// Dwell-filtered ladder state machine: one rung per transition, the
+/// `Fallback` rung skipped when no fallback model is available.
+#[derive(Debug)]
+pub struct DegradationLadder {
+    policy: LadderPolicy,
+    level: ServiceLevel,
+    has_fallback: bool,
+    above: u64,
+    below: u64,
+    timeline: Vec<DegradationEvent>,
+}
+
+impl DegradationLadder {
+    pub fn new(policy: LadderPolicy, has_fallback: bool) -> Self {
+        Self {
+            policy,
+            level: ServiceLevel::Full,
+            has_fallback,
+            above: 0,
+            below: 0,
+            timeline: Vec::new(),
+        }
+    }
+
+    pub fn level(&self) -> ServiceLevel {
+        self.level
+    }
+
+    /// Stop offering the `Fallback` rung (after a failed fallback
+    /// publish, reported separately as a [`StageFailure::Swap`]).
+    pub(crate) fn disable_fallback(&mut self) {
+        self.has_fallback = false;
+    }
+
+    fn next_down(&self) -> Option<ServiceLevel> {
+        match self.level {
+            ServiceLevel::Full => Some(if self.has_fallback {
+                ServiceLevel::Fallback
+            } else {
+                ServiceLevel::TriggerOnly
+            }),
+            ServiceLevel::Fallback => Some(ServiceLevel::TriggerOnly),
+            ServiceLevel::TriggerOnly => None,
+        }
+    }
+
+    fn next_up(&self) -> Option<ServiceLevel> {
+        match self.level {
+            ServiceLevel::Full => None,
+            ServiceLevel::Fallback => Some(ServiceLevel::Full),
+            ServiceLevel::TriggerOnly => Some(if self.has_fallback {
+                ServiceLevel::Fallback
+            } else {
+                ServiceLevel::Full
+            }),
+        }
+    }
+
+    /// Feed one packet's pressure reading; returns the transition it
+    /// fired, if any.
+    pub fn observe(
+        &mut self,
+        packet: u64,
+        now_ns: f64,
+        pressure_ns: f64,
+    ) -> Option<&DegradationEvent> {
+        if pressure_ns > self.policy.step_down_backlog_ns {
+            self.above += 1;
+            self.below = 0;
+        } else if pressure_ns < self.policy.step_up_backlog_ns {
+            self.below += 1;
+            self.above = 0;
+        } else {
+            self.above = 0;
+            self.below = 0;
+        }
+        let to = if self.above >= self.policy.dwell_packets {
+            self.next_down()
+        } else if self.below >= self.policy.dwell_packets {
+            self.next_up()
+        } else {
+            None
+        }?;
+        self.above = 0;
+        self.below = 0;
+        let ev = DegradationEvent {
+            at_packet: packet,
+            at_ns: now_ns,
+            from: self.level,
+            to,
+            backlog_ns: pressure_ns,
+        };
+        self.level = to;
+        self.timeline.push(ev);
+        self.timeline.last()
+    }
+
+    pub fn timeline(&self) -> &[DegradationEvent] {
+        &self.timeline
+    }
+
+    pub(crate) fn into_timeline(self) -> Vec<DegradationEvent> {
+        self.timeline
+    }
+}
+
+/// What the degradation ladder may do, set via `ServeBuilder::degrade`.
+/// Trigger-only degradation works on every backend; a fallback model
+/// additionally requires a hot-swappable (registry) backend whose slot
+/// shapes it matches.
+#[derive(Clone, Default)]
+pub struct DegradeSpec {
+    pub(crate) ladder: Option<LadderPolicy>,
+    pub(crate) fallback: Option<BnnModel>,
+}
+
+impl DegradeSpec {
+    /// Degrade straight to trigger-only mode under pressure (no
+    /// fallback model rung).
+    pub fn trigger_only() -> Self {
+        Self::default()
+    }
+
+    /// Degrade via `model` first: sustained pressure hot-swaps it into
+    /// every registry slot, recovery rolls the original weights back.
+    pub fn with_fallback(model: BnnModel) -> Self {
+        Self { ladder: None, fallback: Some(model) }
+    }
+
+    /// Override the derived [`LadderPolicy`].
+    pub fn ladder(mut self, policy: LadderPolicy) -> Self {
+        self.ladder = Some(policy);
+        self
+    }
+}
+
+/// The registry-side actions a ladder transition performs: step-down
+/// snapshots every slot's current epoch and publishes the fallback;
+/// step-up rolls the snapshots back (as *new* versions — the registry
+/// stays monotone).
+pub(crate) struct DegradeActions {
+    registry: RegistryHandle,
+    names: Vec<String>,
+    fallback: BnnModel,
+    saved: Vec<(String, Arc<ModelEpoch>)>,
+}
+
+impl DegradeActions {
+    pub(crate) fn new(registry: RegistryHandle, names: Vec<String>, fallback: BnnModel) -> Self {
+        let mut unique: Vec<String> = Vec::new();
+        for n in names {
+            if !unique.contains(&n) {
+                unique.push(n);
+            }
+        }
+        Self { registry, names: unique, fallback, saved: Vec::new() }
+    }
+
+    fn step_down(&mut self) -> Result<(), RegistryError> {
+        self.saved.clear();
+        for name in &self.names {
+            if let Some(ep) = self.registry.current(name) {
+                self.saved.push((name.clone(), ep));
+            }
+        }
+        for name in &self.names {
+            self.registry.publish(name, &self.fallback)?;
+        }
+        Ok(())
+    }
+
+    fn step_up(&mut self) -> Result<(), RegistryError> {
+        for (name, ep) in self.saved.drain(..) {
+            self.registry.rollback(&name, &ep)?;
+        }
+        Ok(())
+    }
+
+    /// Apply the registry side of one ladder transition.  Only the
+    /// Full↔Fallback edges touch the registry: Fallback↔TriggerOnly
+    /// keeps the fallback weights published while inference is
+    /// suppressed.
+    pub(crate) fn apply(
+        &mut self,
+        from: ServiceLevel,
+        to: ServiceLevel,
+    ) -> Result<(), RegistryError> {
+        match (from, to) {
+            (ServiceLevel::Full, ServiceLevel::Fallback) => self.step_down(),
+            (ServiceLevel::Fallback, ServiceLevel::Full) => self.step_up(),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Build the ladder + registry actions for a service, shared by the
+/// serial and pipelined runtimes.  The ladder policy is taken from the
+/// spec, derived from the shed policy, or defaulted — in that order.
+pub(crate) fn ladder_for(
+    degrade: Option<&DegradeSpec>,
+    shed: Option<ShedPolicy>,
+    swap: Option<&SwapController>,
+) -> (Option<DegradationLadder>, Option<DegradeActions>) {
+    let Some(spec) = degrade else {
+        return (None, None);
+    };
+    let policy = spec.ladder.unwrap_or_else(|| match shed {
+        Some(s) if s.max_backlog_ns.is_finite() => LadderPolicy::from_shed(&s),
+        _ => LadderPolicy::default(),
+    });
+    let actions = spec.fallback.as_ref().and_then(|fb| {
+        swap.map(|s| DegradeActions::new(s.registry().clone(), s.names().to_vec(), fb.clone()))
+    });
+    let ladder = DegradationLadder::new(policy, actions.is_some());
+    (Some(ladder), actions)
+}
+
+// ---------------------------------------------------------------------------
+// Backend health: circuit breakers + the placement plane
+// ---------------------------------------------------------------------------
+
+/// When a member plane's breaker trips.  A *strike* is either a hard
+/// fault ([`EngineError`]) or a batch observed slower than
+/// `latency_tolerance ×` its modeled cost **and** slower than the
+/// absolute `min_violation_ns` floor (the floor keeps a slow CI box
+/// from tripping breakers on nanosecond-scale models).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakerPolicy {
+    /// Consecutive strikes that open the breaker.
+    pub trip_after: u32,
+    /// Observed/modeled latency ratio counted as a strike.
+    pub latency_tolerance: f64,
+    /// Observed latency below this never counts as a strike.
+    pub min_violation_ns: f64,
+    /// Calls an open breaker skips before letting one probe through.
+    pub cooldown_calls: u32,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> Self {
+        Self { trip_after: 3, latency_tolerance: 8.0, min_violation_ns: 5e7, cooldown_calls: 64 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Per-plane circuit breaker: Closed → (strikes) → Open → (cooldown) →
+/// HalfOpen probe → Closed on success, back to Open on failure.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    policy: BreakerPolicy,
+    state: BreakerState,
+    strikes: u32,
+    cooldown: u32,
+    trips: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(policy: BreakerPolicy) -> Self {
+        Self { policy, state: BreakerState::Closed, strikes: 0, cooldown: 0, trips: 0 }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.trips += 1;
+        self.strikes = 0;
+        self.cooldown = self.policy.cooldown_calls.max(1);
+    }
+
+    /// May this plane take the next call?  Open breakers count the call
+    /// against their cooldown and eventually let a half-open probe
+    /// through.
+    pub fn available(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                self.cooldown = self.cooldown.saturating_sub(1);
+                if self.cooldown == 0 {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful call with its observed wall latency against
+    /// the modeled budget.
+    pub fn record_ok(&mut self, observed_ns: f64, budget_ns: f64) {
+        let slow = observed_ns > budget_ns * self.policy.latency_tolerance
+            && observed_ns > self.policy.min_violation_ns;
+        match self.state {
+            BreakerState::HalfOpen => {
+                if slow {
+                    self.trip();
+                } else {
+                    self.state = BreakerState::Closed;
+                    self.strikes = 0;
+                }
+            }
+            BreakerState::Closed => {
+                if slow {
+                    self.strikes += 1;
+                    if self.strikes >= self.policy.trip_after {
+                        self.trip();
+                    }
+                } else {
+                    self.strikes = 0;
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record a hard fault (an [`EngineError`] from the member).
+    pub fn record_fault(&mut self) {
+        match self.state {
+            BreakerState::HalfOpen => self.trip(),
+            BreakerState::Closed => {
+                self.strikes += 1;
+                if self.strikes >= self.policy.trip_after {
+                    self.trip();
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+}
+
+/// Per-member health counters, surfaced via
+/// [`InferencePlane::health_snapshot`] into `ServiceReport::health`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneHealth {
+    /// Member backend name.
+    pub backend: &'static str,
+    /// Calls dispatched to this member.
+    pub calls: u64,
+    /// Calls this member failed and handed to the next candidate.
+    pub failovers: u64,
+    /// Times its breaker opened.
+    pub trips: u64,
+    /// Breaker open at end of run.
+    pub open: bool,
+}
+
+struct Member {
+    plane: Box<dyn InferencePlane>,
+    caps: Capabilities,
+    breaker: CircuitBreaker,
+    calls: u64,
+    failovers: u64,
+}
+
+/// A placement plane fronting several bit-exact member planes.  Each
+/// call goes to the cheapest member (by the modeled
+/// [`batch_latency_ns`](InferencePlane::batch_latency_ns) cost curve at
+/// the call's batch width) whose breaker is closed: single-input mice
+/// land on the constrained fpga/pisa planes, wide elephant batches on
+/// the sharded host engine.  A member that faults is failed over and
+/// strikes its breaker; verdicts never change because every member
+/// computes the same Algorithm 1.
+pub struct PlacedPlane {
+    members: Vec<Member>,
+    n_classes: usize,
+}
+
+impl PlacedPlane {
+    /// Members must be single-route, non-epoch-pinning planes agreeing
+    /// on the class count — anything else would let a failover change
+    /// observable output.
+    pub fn new(
+        members: Vec<Box<dyn InferencePlane>>,
+        policy: BreakerPolicy,
+    ) -> Result<Self, ServiceError> {
+        if members.is_empty() {
+            return Err(ServiceError::InvalidConfig {
+                option: "placed",
+                reason: "a placement plane needs at least one member".into(),
+            });
+        }
+        let n_classes = members[0].n_classes();
+        let mut built = Vec::with_capacity(members.len());
+        for plane in members {
+            let caps = plane.capabilities();
+            if caps.routes != 1 {
+                return Err(ServiceError::InvalidConfig {
+                    option: "placed",
+                    reason: format!("member {:?} binds {} routes, want 1", caps.backend, caps.routes),
+                });
+            }
+            if caps.supports_epoch_pinning {
+                return Err(ServiceError::InvalidConfig {
+                    option: "placed",
+                    reason: format!(
+                        "member {:?} pins epochs; failover between pinning members \
+                         could tag verdicts inconsistently",
+                        caps.backend
+                    ),
+                });
+            }
+            if plane.n_classes() != n_classes {
+                return Err(ServiceError::InvalidConfig {
+                    option: "placed",
+                    reason: format!(
+                        "member {:?} scores {} classes, other members score {n_classes}",
+                        caps.backend,
+                        plane.n_classes()
+                    ),
+                });
+            }
+            built.push(Member { plane, caps, breaker: CircuitBreaker::new(policy), calls: 0, failovers: 0 });
+        }
+        Ok(Self { members: built, n_classes })
+    }
+
+    /// Member indices able to take a batch of `b`, cheapest modeled
+    /// cost first (stable sort: ties keep construction order, so the
+    /// placement is deterministic).
+    fn order(&self, b: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.members.len())
+            .filter(|&i| self.members[i].caps.max_batch >= b)
+            .collect();
+        if idx.is_empty() {
+            // Nothing fits the width (the builder clamps batch sizes to
+            // our max, so this is belt-and-braces): widest member wins.
+            let widest = (0..self.members.len())
+                .max_by_key(|&i| self.members[i].caps.max_batch)
+                .unwrap();
+            return vec![widest];
+        }
+        idx.sort_by(|&a, &c| {
+            self.members[a]
+                .plane
+                .batch_latency_ns(b)
+                .partial_cmp(&self.members[c].plane.batch_latency_ns(b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx
+    }
+
+    /// Candidates for the next call: the cost-ordered eligible members
+    /// with closed breakers — or, if every breaker is open, the full
+    /// cost order (shedding is the admission controller's job, not
+    /// ours; somebody must take the work).
+    fn candidates(&mut self, b: usize) -> Vec<usize> {
+        let order = self.order(b);
+        let avail: Vec<usize> =
+            order.iter().copied().filter(|&i| self.members[i].breaker.available()).collect();
+        if avail.is_empty() {
+            order
+        } else {
+            avail
+        }
+    }
+}
+
+impl InferencePlane for PlacedPlane {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            backend: "placed",
+            max_batch: self.members.iter().map(|m| m.caps.max_batch).max().unwrap_or(1),
+            shards: self.members.iter().map(|m| m.caps.shards).max().unwrap_or(1),
+            routes: 1,
+            supports_hot_swap: false,
+            supports_epoch_pinning: false,
+            inference_ns: self
+                .members
+                .iter()
+                .map(|m| m.caps.inference_ns)
+                .fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    fn classify(&mut self, route: usize, x: &[u32]) -> (usize, Option<VersionTag>) {
+        let i = self.candidates(1)[0];
+        let m = &mut self.members[i];
+        m.calls += 1;
+        let budget = m.plane.latency_ns().max(1.0);
+        let t0 = Instant::now();
+        let out = m.plane.classify(route, x);
+        m.breaker.record_ok(t0.elapsed().as_nanos() as f64, budget);
+        out
+    }
+
+    fn try_run_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        let b = inputs.len().max(1);
+        let candidates = self.candidates(b);
+        let n = candidates.len();
+        let mut last = EngineError::WorkerDied;
+        for (k, &i) in candidates.iter().enumerate() {
+            let m = &mut self.members[i];
+            m.calls += 1;
+            let budget = m.plane.batch_latency_ns(b).max(1.0);
+            let t0 = Instant::now();
+            match m.plane.try_run_batch(route, inputs, classes) {
+                Ok(tag) => {
+                    m.breaker.record_ok(t0.elapsed().as_nanos() as f64, budget);
+                    return Ok(tag);
+                }
+                Err(e) => {
+                    m.breaker.record_fault();
+                    if k + 1 < n {
+                        m.failovers += 1;
+                    }
+                    last = e;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    fn batch_latency_ns(&self, b: usize) -> f64 {
+        // The placer's own cost curve is its cheapest eligible member's.
+        let eligible = self
+            .members
+            .iter()
+            .filter(|m| m.caps.max_batch >= b)
+            .map(|m| m.plane.batch_latency_ns(b))
+            .fold(f64::INFINITY, f64::min);
+        if eligible.is_finite() {
+            return eligible;
+        }
+        self.members
+            .iter()
+            .map(|m| m.plane.batch_latency_ns(b))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    fn health_snapshot(&self) -> Option<Vec<PlaneHealth>> {
+        Some(
+            self.members
+                .iter()
+                .map(|m| PlaneHealth {
+                    backend: m.caps.backend,
+                    calls: m.calls,
+                    failovers: m.failovers,
+                    trips: m.breaker.trips(),
+                    open: m.breaker.state() == BreakerState::Open,
+                })
+                .collect(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage supervision
+// ---------------------------------------------------------------------------
+
+/// Bounded retry+backoff for a pipeline stage that dies mid-run.  The
+/// budget is per stage instance for the whole run, not per event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SupervisorPolicy {
+    /// Restarts a stage may consume before the run aborts with
+    /// [`StageFailure::RestartsExhausted`].
+    pub max_restarts: u32,
+    /// First backoff; doubles per consecutive restart (capped at
+    /// `base × 2⁶`).
+    pub backoff_base_us: u64,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        Self { max_restarts: 3, backoff_base_us: 100 }
+    }
+}
+
+impl SupervisorPolicy {
+    pub(crate) fn backoff(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(6);
+        Duration::from_micros(self.backoff_base_us.saturating_mul(1 << shift))
+    }
+}
+
+/// Run one supervised unit of stage work.  Without a supervisor this is
+/// a plain call — panics propagate and kill the stage thread exactly as
+/// before, preserving deterministic replay.  With one, panics and
+/// retryable failures ([`StageFailure::Inference`]) are caught and the
+/// unit is re-run after backoff until the restart budget is spent;
+/// non-retryable failures (channel disconnects) pass straight through.
+pub(crate) fn guard<T>(
+    supervisor: Option<&SupervisorPolicy>,
+    stage: &'static str,
+    used: &mut u32,
+    restarts: &mut u64,
+    mut f: impl FnMut() -> Result<T, StageFailure>,
+) -> Result<T, StageFailure> {
+    let Some(policy) = supervisor else {
+        return f();
+    };
+    loop {
+        let last = match catch_unwind(AssertUnwindSafe(&mut f)) {
+            Ok(Ok(v)) => return Ok(v),
+            Ok(Err(fail)) => {
+                if !matches!(fail, StageFailure::Inference(_)) {
+                    return Err(fail);
+                }
+                fail.to_string()
+            }
+            Err(payload) => panic_text(payload.as_ref()),
+        };
+        if *used >= policy.max_restarts {
+            return Err(StageFailure::RestartsExhausted { stage, restarts: *used, last });
+        }
+        *used += 1;
+        *restarts += 1;
+        std::thread::sleep(policy.backoff(*used));
+    }
+}
+
+/// Best-effort panic payload extraction (shared with the pipeline's
+/// join-side handling).
+pub(crate) fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Test-only fault injection: arm a one-shot panic at the Nth unit of
+/// work in a chosen stage.  Shared (`Arc`) across stage threads so a
+/// plan fires exactly once per run whatever the parallelism.
+#[doc(hidden)]
+#[derive(Clone, Default)]
+pub struct FaultPlan {
+    inner: Arc<FaultInner>,
+}
+
+#[derive(Default)]
+struct FaultInner {
+    parse: FaultPoint,
+    inference: FaultPoint,
+    sink: FaultPoint,
+}
+
+#[derive(Default)]
+struct FaultPoint {
+    at: AtomicU64,
+    count: AtomicU64,
+    fired: AtomicBool,
+}
+
+impl FaultPoint {
+    fn arm(&self, at: u64) {
+        self.at.store(at.max(1), Ordering::Relaxed);
+    }
+
+    fn tick(&self, stage: &str) {
+        if self.at.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let n = self.count.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= self.at.load(Ordering::Relaxed) && !self.fired.swap(true, Ordering::Relaxed) {
+            panic!("injected {stage} fault");
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Panic the parse stage at its `n`th event.
+    pub fn kill_parse_at(self, n: u64) -> Self {
+        self.inner.parse.arm(n);
+        self
+    }
+
+    /// Panic the inference stage at its `n`th call (batch or inline).
+    pub fn kill_inference_at(self, n: u64) -> Self {
+        self.inner.inference.arm(n);
+        self
+    }
+
+    /// Panic the sink stage at its `n`th verdict.
+    pub fn kill_sink_at(self, n: u64) -> Self {
+        self.inner.sink.arm(n);
+        self
+    }
+
+    pub(crate) fn tick_parse(&self) {
+        self.inner.parse.tick("parse");
+    }
+
+    pub(crate) fn tick_inference(&self) {
+        self.inner.inference.tick("inference");
+    }
+
+    pub(crate) fn tick_sink(&self) {
+        self.inner.sink.tick("sink");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime glue
+// ---------------------------------------------------------------------------
+
+/// The serial runtime's overload state: one admission controller plus
+/// the ladder and its registry actions.
+pub(crate) struct OverloadControl {
+    admission: AdmissionController,
+    ladder: Option<DegradationLadder>,
+    actions: Option<DegradeActions>,
+    cost_ns: f64,
+    packets: u64,
+    swap_failure: Option<StageFailure>,
+}
+
+impl OverloadControl {
+    pub(crate) fn new(
+        admission: AdmissionController,
+        ladder: Option<DegradationLadder>,
+        actions: Option<DegradeActions>,
+        cost_ns: f64,
+    ) -> Self {
+        Self { admission, ladder, actions, cost_ns, packets: 0, swap_failure: None }
+    }
+
+    /// Per-packet bookkeeping: drain the bucket, feed the ladder the
+    /// combined pressure (modeled backlog + oldest queued batch wait),
+    /// and apply any transition's registry actions.
+    pub(crate) fn on_packet(&mut self, now_ns: f64, queued_wait_ns: f64) {
+        self.packets += 1;
+        self.admission.observe(now_ns);
+        let pressure = self.admission.backlog_ns() + queued_wait_ns.max(0.0);
+        let Some(ladder) = self.ladder.as_mut() else {
+            return;
+        };
+        let Some(ev) = ladder.observe(self.packets, now_ns, pressure) else {
+            return;
+        };
+        let (from, to) = (ev.from, ev.to);
+        let mut failed = false;
+        if let Some(actions) = self.actions.as_mut() {
+            if let Err(e) = actions.apply(from, to) {
+                if self.swap_failure.is_none() {
+                    self.swap_failure = Some(StageFailure::Swap(e));
+                }
+                failed = true;
+            }
+        }
+        if failed {
+            self.actions = None;
+            ladder.disable_fallback();
+        }
+    }
+
+    /// Admit or shed one trigger.  Trigger-only mode sheds everything;
+    /// otherwise the leaky bucket decides.
+    pub(crate) fn admit_trigger(&mut self, now_ns: f64) -> bool {
+        if self.level() == ServiceLevel::TriggerOnly {
+            self.admission.shed_unconditionally();
+            return false;
+        }
+        self.admission.admit(now_ns, self.cost_ns)
+    }
+
+    pub(crate) fn level(&self) -> ServiceLevel {
+        self.ladder.as_ref().map_or(ServiceLevel::Full, DegradationLadder::level)
+    }
+
+    pub(crate) fn sheds(&self) -> u64 {
+        self.admission.sheds()
+    }
+
+    pub(crate) fn take_swap_failure(&mut self) -> Option<StageFailure> {
+        self.swap_failure.take()
+    }
+
+    pub(crate) fn into_timeline(self) -> Vec<DegradationEvent> {
+        self.ladder.map_or(Vec::new(), DegradationLadder::into_timeline)
+    }
+}
+
+/// One parse worker's slice of the pipelined admission control: a local
+/// leaky bucket (drain split evenly across workers) publishing its
+/// backlog to the ingress ladder through an atomic cell, and reading
+/// the ladder's level back the same way.
+pub(crate) struct WorkerAdmission {
+    ctl: AdmissionController,
+    cost_ns: f64,
+    backlog_cell: Arc<AtomicU64>,
+    level: Arc<AtomicU8>,
+}
+
+impl WorkerAdmission {
+    pub(crate) fn new(
+        ctl: AdmissionController,
+        cost_ns: f64,
+        backlog_cell: Arc<AtomicU64>,
+        level: Arc<AtomicU8>,
+    ) -> Self {
+        Self { ctl, cost_ns, backlog_cell, level }
+    }
+
+    pub(crate) fn on_packet(&mut self, now_ns: f64) {
+        self.ctl.observe(now_ns);
+        self.backlog_cell.store(self.ctl.backlog_ns().to_bits(), Ordering::Relaxed);
+    }
+
+    pub(crate) fn admit(&mut self, now_ns: f64) -> bool {
+        if ServiceLevel::from_u8(self.level.load(Ordering::Relaxed)) == ServiceLevel::TriggerOnly {
+            self.ctl.shed_unconditionally();
+            return false;
+        }
+        let ok = self.ctl.admit(now_ns, self.cost_ns);
+        self.backlog_cell.store(self.ctl.backlog_ns().to_bits(), Ordering::Relaxed);
+        ok
+    }
+
+    pub(crate) fn on_blocked(&mut self) {
+        self.ctl.on_blocked_send(self.cost_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::BnnModel;
+    use crate::coordinator::BackendFactory;
+
+    #[test]
+    fn admission_is_a_deterministic_leaky_bucket_with_hysteresis() {
+        let run = || {
+            let mut ctl = AdmissionController::new(ShedPolicy::new(1000.0, 300.0), 1.0);
+            let mut decisions = Vec::new();
+            // 400ns of work arriving every 100ns: 4× overload.
+            for i in 0..50u64 {
+                decisions.push(ctl.admit(i as f64 * 100.0, 400.0));
+            }
+            (decisions, ctl.sheds(), ctl.admitted(), ctl.backlog_ns())
+        };
+        let (decisions, sheds, admitted, backlog) = run();
+        // First admits fill the bucket, then the latch trips...
+        assert!(decisions[0] && decisions[1]);
+        assert!(sheds > 0, "4x overload must shed");
+        assert!(admitted > 2, "hysteresis must re-admit after draining");
+        // ...and the bucket never exceeds the ceiling.
+        assert!(backlog <= 1000.0, "backlog {backlog}");
+        // Same inputs, same decisions: determinism is the whole point.
+        assert_eq!(run(), (decisions, sheds, admitted, backlog));
+
+        // Draining below the resume floor clears the latch.
+        let mut ctl = AdmissionController::new(ShedPolicy::new(1000.0, 300.0), 1.0);
+        assert!(ctl.admit(0.0, 900.0));
+        assert!(!ctl.admit(1.0, 900.0), "second deposit would burst the bucket");
+        assert!(ctl.is_shedding());
+        ctl.observe(700.0); // backlog ~200 < resume 300
+        assert!(!ctl.is_shedding());
+        assert!(ctl.admit(700.0, 100.0));
+    }
+
+    #[test]
+    fn ladder_steps_one_rung_after_dwell_and_skips_fallback_without_one() {
+        let policy = LadderPolicy::new(1000.0, 100.0, 4);
+        let mut ladder = DegradationLadder::new(policy, false);
+        // 3 packets above threshold: dwell not met.
+        for p in 1..=3 {
+            assert!(ladder.observe(p, p as f64, 5000.0).is_none());
+        }
+        // 4th fires — straight to trigger-only (no fallback rung).
+        let ev = ladder.observe(4, 4.0, 5000.0).cloned().unwrap();
+        assert_eq!((ev.from, ev.to), (ServiceLevel::Full, ServiceLevel::TriggerOnly));
+        assert!(ev.is_step_down());
+        assert_eq!(ladder.level(), ServiceLevel::TriggerOnly);
+        // A dip resets the dwell counter.
+        assert!(ladder.observe(5, 5.0, 50.0).is_none());
+        assert!(ladder.observe(6, 6.0, 5000.0).is_none());
+        // Sustained recovery steps back up.
+        for p in 7..=9 {
+            assert!(ladder.observe(p, p as f64, 50.0).is_none());
+        }
+        let ev = ladder.observe(10, 10.0, 50.0).cloned().unwrap();
+        assert_eq!((ev.from, ev.to), (ServiceLevel::TriggerOnly, ServiceLevel::Full));
+        assert!(!ev.is_step_down());
+        assert_eq!(ladder.timeline().len(), 2);
+
+        // With a fallback rung the ladder walks Full→Fallback→TriggerOnly.
+        let mut ladder = DegradationLadder::new(policy, true);
+        for p in 1..=3 {
+            ladder.observe(p, p as f64, 5000.0);
+        }
+        let ev = ladder.observe(4, 4.0, 5000.0).cloned().unwrap();
+        assert_eq!(ev.to, ServiceLevel::Fallback);
+        for p in 5..=7 {
+            ladder.observe(p, p as f64, 5000.0);
+        }
+        let ev = ladder.observe(8, 8.0, 5000.0).cloned().unwrap();
+        assert_eq!((ev.from, ev.to), (ServiceLevel::Fallback, ServiceLevel::TriggerOnly));
+    }
+
+    #[test]
+    fn derived_ladder_thresholds_sit_inside_the_shed_sawtooth() {
+        let shed = ShedPolicy::new(500_000.0, 100_000.0);
+        let ladder = LadderPolicy::from_shed(&shed);
+        assert!(ladder.step_down_backlog_ns < shed.max_backlog_ns);
+        assert!(ladder.step_down_backlog_ns > shed.resume_backlog_ns);
+        assert!(ladder.step_up_backlog_ns < shed.resume_backlog_ns);
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let mut b = CircuitBreaker::new(BreakerPolicy {
+            trip_after: 2,
+            latency_tolerance: 4.0,
+            min_violation_ns: 100.0,
+            cooldown_calls: 3,
+        });
+        assert_eq!(b.state(), BreakerState::Closed);
+        // One fault is a strike, not a trip.
+        b.record_fault();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // A fast call resets the strike count.
+        b.record_ok(10.0, 10.0);
+        b.record_fault();
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_fault();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        // Open: calls are refused through the cooldown, then one probe.
+        assert!(!b.available());
+        assert!(!b.available());
+        assert!(b.available());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // Probe succeeds fast → closed again.
+        b.record_ok(10.0, 10.0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Slow-call strikes need both the ratio and the absolute floor.
+        b.record_ok(90.0, 10.0); // 9× over but under the 100ns floor
+        b.record_ok(90.0, 10.0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_ok(900.0, 10.0);
+        b.record_ok(900.0, 10.0);
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn placed_plane_orders_members_by_modeled_cost_and_respects_width() {
+        let m = BnnModel::random("traffic", 256, &[16, 2], 7);
+        // fpga: cheap serial device; pisa: batch width 1; host: PCIe
+        // cost curve, expensive for mice.
+        let members = vec![
+            BackendFactory::single("host", m.clone()).unwrap(),
+            BackendFactory::single("fpga", m.clone()).unwrap(),
+            BackendFactory::single("pisa", m.clone()).unwrap(),
+        ];
+        let placed = PlacedPlane::new(members, BreakerPolicy::default()).unwrap();
+        let caps = placed.capabilities();
+        assert_eq!(caps.backend, "placed");
+        assert!(!caps.supports_hot_swap && !caps.supports_epoch_pinning);
+        // Mice avoid the host plane (PCIe round-trip dominates)...
+        let first = placed.order(1)[0];
+        assert_ne!(placed.members[first].caps.backend, "host");
+        // ...and pisa (max_batch 1) is excluded from wide batches.
+        for &i in &placed.order(16) {
+            assert_ne!(placed.members[i].caps.backend, "pisa");
+        }
+        // The aggregate cost curve is the cheapest member's.
+        let best = placed
+            .members
+            .iter()
+            .map(|mm| mm.plane.batch_latency_ns(1))
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(placed.batch_latency_ns(1), best);
+    }
+
+    #[test]
+    fn supervisor_backoff_is_bounded_and_monotone() {
+        let p = SupervisorPolicy { max_restarts: 10, backoff_base_us: 100 };
+        assert_eq!(p.backoff(1), Duration::from_micros(100));
+        assert_eq!(p.backoff(2), Duration::from_micros(200));
+        assert_eq!(p.backoff(4), Duration::from_micros(800));
+        // Capped at base × 2⁶ however deep the retry goes.
+        assert_eq!(p.backoff(50), Duration::from_micros(6400));
+    }
+
+    #[test]
+    fn guard_without_supervisor_is_transparent_and_with_one_retries() {
+        // No supervisor: failures pass through untouched.
+        let mut used = 0;
+        let mut restarts = 0;
+        let out: Result<u32, _> = guard(None, "t", &mut used, &mut restarts, || Ok(7));
+        assert_eq!(out.unwrap(), 7);
+        assert_eq!((used, restarts), (0, 0));
+
+        // Supervised: panics are caught and retried until success.
+        let policy = SupervisorPolicy { max_restarts: 3, backoff_base_us: 1 };
+        let mut used = 0;
+        let mut restarts = 0;
+        let mut calls = 0;
+        let out = guard(Some(&policy), "t", &mut used, &mut restarts, || {
+            calls += 1;
+            if calls < 3 {
+                panic!("boom");
+            }
+            Ok(calls)
+        });
+        assert_eq!(out.unwrap(), 3);
+        assert_eq!((used, restarts), (2, 2));
+
+        // Budget exhaustion surfaces the last failure, typed.
+        let mut used = 0;
+        let mut restarts = 0;
+        let out: Result<(), _> = guard(Some(&policy), "t", &mut used, &mut restarts, || {
+            panic!("always")
+        });
+        let Err(StageFailure::RestartsExhausted { stage, restarts: n, last }) = out else {
+            panic!("want RestartsExhausted");
+        };
+        assert_eq!(stage, "t");
+        assert_eq!(n, 3);
+        assert!(last.contains("always"), "{last}");
+    }
+
+    #[test]
+    fn fault_plan_fires_exactly_once() {
+        let plan = FaultPlan::new().kill_inference_at(3);
+        plan.tick_inference();
+        plan.tick_inference();
+        let hit = catch_unwind(AssertUnwindSafe(|| plan.tick_inference()));
+        assert!(hit.is_err(), "third tick must fire");
+        // One-shot: the retried unit of work passes.
+        plan.tick_inference();
+        plan.tick_inference();
+        // Other stages are disarmed entirely.
+        plan.tick_parse();
+        plan.tick_sink();
+    }
+}

@@ -53,13 +53,19 @@
 //! [`ServiceError::Stage`] carrying typed [`StageFailure`]s plus the
 //! stats accumulated up to the fault (`tests/failure_injection.rs`).
 
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread;
 
 use crate::bnn::{EngineStats, VersionTag};
 use crate::net::flow::{FlowTable, ShardedFlowTable};
 
 use super::batcher::BatchSet;
+use super::overload::{
+    guard, ladder_for, panic_text, AdmissionController, DegradationLadder, FaultPlan, PlaneHealth,
+    ServiceLevel, ShedPolicy, SupervisorPolicy, WorkerAdmission,
+};
 use super::plane::InferencePlane;
 use super::selector::{OutputSelector, OutputSink};
 use super::service::{
@@ -112,6 +118,8 @@ struct StageReport {
     flows: usize,
     /// Populated by the inference stage only.
     engine: Option<EngineStats>,
+    /// Populated by the inference stage only, on placement planes.
+    health: Option<Vec<PlaneHealth>>,
 }
 
 /// Lossless counted send on a bounded channel: a full queue counts one
@@ -136,36 +144,85 @@ fn blank_stats() -> ServiceStats {
 }
 
 /// Stage 1+2: flow update, routing/trigger, feature packing — one worker
-/// per flow shard, so this owns its `FlowTable` outright.
+/// per flow shard, so this owns its `FlowTable` outright.  With
+/// `admission`, each worker runs its share of the leaky bucket and sheds
+/// triggers locally (shed decisions ride the packet clock, so they stay
+/// deterministic per shard); with `supervisor`, an injected or real
+/// panic in the per-packet compute is retried instead of killing the
+/// shard.
+#[allow(clippy::too_many_arguments)]
 fn parse_stage(
     rx: Receiver<PacketEvent>,
     tx: SyncSender<InfMsg>,
     route: RouteLogic,
     mut flows: FlowTable,
     worker: usize,
+    mut admission: Option<WorkerAdmission>,
+    supervisor: Option<SupervisorPolicy>,
+    faults: Option<FaultPlan>,
 ) -> StageReport {
     let mut stats = blank_stats();
     let mut failure = None;
+    let mut restarts_used = 0u32;
+    let mut restarts = 0u64;
     while let Ok(ev) = rx.recv() {
         stats.packets += 1;
+        if let Some(a) = admission.as_mut() {
+            a.on_packet(ev.packet.ts_ns);
+        }
         // The canonical key is hashed once more inside `update` after
         // ingress already hashed it for sharding — 4 multiplies per
         // packet, accepted so the channel messages stay plain
         // `PacketEvent`s instead of carrying (key, hash) everywhere.
-        let (fstats, is_new, pkts) = flows.update(&ev.packet);
-        if let Some(r) = route.route(&ev.packet, is_new, pkts) {
-            stats.triggers += 1;
+        // The fault hook ticks *before* the flow update, so a retried
+        // event replays the update exactly once.
+        let step = guard(supervisor.as_ref(), "parse worker", &mut restarts_used, &mut restarts, || {
+            if let Some(fp) = faults.as_ref() {
+                fp.tick_parse();
+            }
+            let (fstats, is_new, pkts) = flows.update(&ev.packet);
             // Shared with the serial loop — the determinism contract
             // says the two paths may never diverge.
-            let msg = InfMsg::Flow {
+            Ok(route.route(&ev.packet, is_new, pkts).map(|r| InfMsg::Flow {
                 route: r,
                 id: flow_id(&ev.packet),
                 packed: select_packed_input(&ev, fstats),
                 ts_ns: ev.packet.ts_ns,
-            };
-            if send_counted(&tx, msg, &mut stats.stage_blocked[1]).is_err() {
-                failure = Some(StageFailure::ParseDisconnected { worker });
+            }))
+        });
+        let msg = match step {
+            Ok(m) => m,
+            Err(f) => {
+                failure = Some(f);
                 break;
+            }
+        };
+        if let Some(msg) = msg {
+            stats.triggers += 1;
+            let admitted = match admission.as_mut() {
+                Some(a) => {
+                    let ok = a.admit(ev.packet.ts_ns);
+                    if !ok {
+                        stats.sheds += 1;
+                    }
+                    ok
+                }
+                None => true,
+            };
+            if admitted {
+                let before = stats.stage_blocked[1];
+                if send_counted(&tx, msg, &mut stats.stage_blocked[1]).is_err() {
+                    failure = Some(StageFailure::ParseDisconnected { worker });
+                    break;
+                }
+                // A blocked send means downstream is already saturated:
+                // charge the bucket so admission reacts before the next
+                // stall instead of discovering it one packet at a time.
+                if stats.stage_blocked[1] > before {
+                    if let Some(a) = admission.as_mut() {
+                        a.on_blocked();
+                    }
+                }
             }
         }
         // Forward the packet clock periodically so stage 3's batch
@@ -179,8 +236,9 @@ fn parse_stage(
             }
         }
     }
+    stats.restarts += restarts;
     let flows_len = flows.len();
-    StageReport { stats, failure, flows: flows_len, engine: None }
+    StageReport { stats, failure, flows: flows_len, engine: None, health: None }
 }
 
 /// Stage 3: the single inference engine — per-route batch lanes feeding
@@ -196,6 +254,9 @@ struct InferenceStage {
     inputs: Vec<Vec<u32>>,
     meta: Vec<(u64, f64)>,
     classes: Vec<usize>,
+    supervisor: Option<SupervisorPolicy>,
+    faults: Option<FaultPlan>,
+    restarts_used: u32,
 }
 
 impl InferenceStage {
@@ -203,6 +264,8 @@ impl InferenceStage {
         plane: Box<dyn InferencePlane>,
         tx: SyncSender<VerdictMsg>,
         batchers: Option<BatchSet<PendingFlow>>,
+        supervisor: Option<SupervisorPolicy>,
+        faults: Option<FaultPlan>,
     ) -> Self {
         Self {
             plane,
@@ -212,6 +275,9 @@ impl InferenceStage {
             inputs: Vec::new(),
             meta: Vec::new(),
             classes: Vec::new(),
+            supervisor,
+            faults,
+            restarts_used: 0,
         }
     }
 
@@ -230,10 +296,23 @@ impl InferenceStage {
             self.meta.push((flow.id, enq_ns));
             self.inputs.push(flow.packed);
         }
-        let tag = self
-            .plane
-            .try_run_batch(lane, &self.inputs, &mut self.classes)
-            .map_err(StageFailure::Inference)?;
+        // Supervised region: the batch call clears and refills `classes`,
+        // so a retry after a panic or a retryable backend fault recomputes
+        // the identical batch (the fault hook ticks first and is
+        // one-shot).
+        let Self { plane, inputs, classes, faults, supervisor, restarts_used, stats, .. } = self;
+        let tag = guard(
+            supervisor.as_ref(),
+            "inference stage",
+            restarts_used,
+            &mut stats.restarts,
+            || {
+                if let Some(fp) = faults.as_ref() {
+                    fp.tick_inference();
+                }
+                plane.try_run_batch(lane, inputs, classes).map_err(StageFailure::Inference)
+            },
+        )?;
         let exec_ns = self.plane.batch_latency_ns(self.classes.len());
         for i in 0..self.classes.len() {
             let (id, enq_ns) = self.meta[i];
@@ -273,7 +352,19 @@ impl InferenceStage {
     ) -> Result<(), StageFailure> {
         self.on_clock(ts_ns)?;
         if self.batchers.is_none() {
-            let (class, tag) = self.plane.classify(route, &packed);
+            let Self { plane, faults, supervisor, restarts_used, stats, .. } = self;
+            let (class, tag) = guard(
+                supervisor.as_ref(),
+                "inference stage",
+                restarts_used,
+                &mut stats.restarts,
+                || {
+                    if let Some(fp) = faults.as_ref() {
+                        fp.tick_inference();
+                    }
+                    Ok(plane.classify(route, &packed))
+                },
+            )?;
             let v = VerdictMsg {
                 route,
                 id,
@@ -328,7 +419,8 @@ impl InferenceStage {
             }
         }
         let engine = self.plane.engine_stats();
-        StageReport { stats: self.stats, failure, flows: 0, engine }
+        let health = self.plane.health_snapshot();
+        StageReport { stats: self.stats, failure, flows: 0, engine, health }
     }
 }
 
@@ -340,7 +432,9 @@ fn sink_stage(
     n_classes: usize,
     log_tags: bool,
     names: Vec<String>,
-) -> (ServiceStats, OutputSink, Vec<TaggedVerdict>) {
+    supervisor: Option<SupervisorPolicy>,
+    faults: Option<FaultPlan>,
+) -> (ServiceStats, OutputSink, Vec<TaggedVerdict>, Option<StageFailure>) {
     let mut stats = blank_stats();
     stats.classes = vec![0; n_classes];
     // Route-indexed during the run (no per-verdict key allocation);
@@ -348,30 +442,46 @@ fn sink_stage(
     let mut per_route = vec![ModelServiceStats::default(); names.len()];
     let mut sink = OutputSink::default();
     let mut tagged = Vec::new();
+    let mut failure = None;
+    let mut restarts_used = 0u32;
+    let mut restarts = 0u64;
     while let Ok(v) = rx.recv() {
-        stats.inferences += 1;
-        if v.class >= stats.classes.len() {
-            stats.classes.resize(v.class + 1, 0);
-        }
-        stats.classes[v.class] += 1;
-        if !names.is_empty() {
-            per_route[v.route].record(v.class);
-        }
-        stats.latency.record(v.latency_ns);
-        sink.write(output, v.id, v.class);
-        if log_tags {
-            if let Some(tag) = v.tag {
-                tagged.push(TaggedVerdict { id: v.id, class: v.class, tag });
+        // Supervised region per verdict; the fault hook ticks before any
+        // accounting, so a retried verdict is accounted exactly once.
+        let step = guard(supervisor.as_ref(), "sink stage", &mut restarts_used, &mut restarts, || {
+            if let Some(fp) = faults.as_ref() {
+                fp.tick_sink();
             }
+            stats.inferences += 1;
+            if v.class >= stats.classes.len() {
+                stats.classes.resize(v.class + 1, 0);
+            }
+            stats.classes[v.class] += 1;
+            if !names.is_empty() {
+                per_route[v.route].record(v.class);
+            }
+            stats.latency.record(v.latency_ns);
+            sink.write(output, v.id, v.class);
+            if log_tags {
+                if let Some(tag) = v.tag.clone() {
+                    tagged.push(TaggedVerdict { id: v.id, class: v.class, tag });
+                }
+            }
+            Ok(())
+        });
+        if let Err(f) = step {
+            failure = Some(f);
+            break;
         }
     }
+    stats.restarts += restarts;
     // Accumulate (don't insert) so duplicate route names — legal in a
     // hash-split router — merge their counts the same way the serial
     // core's fold does.
     for (name, m) in names.into_iter().zip(per_route) {
         stats.per_model.entry(name).or_default().absorb(&m);
     }
-    (stats, sink, tagged)
+    (stats, sink, tagged, failure)
 }
 
 /// Drive `events` through the staged runtime (the calling thread is the
@@ -384,7 +494,7 @@ pub(crate) fn run_staged(
     events: impl IntoIterator<Item = PacketEvent>,
 ) -> Result<ServiceReport, ServiceError> {
     let workers = svc.workers.max(1);
-    let depth = svc.queue_depth.max(1);
+    let depth = svc.queue_depth; // validated ≥ 1 by ServeBuilder::build
     let n_classes = svc.plane.n_classes();
     let names: Vec<String> = svc.plane.route_names().to_vec();
     let n_routes = svc.route.n_routes();
@@ -392,6 +502,28 @@ pub(crate) fn run_staged(
     // the final swap-count snapshot run from this (ingress) thread while
     // inference proceeds — a true concurrent hot swap.
     let mut swap = svc.plane.swap_controller();
+
+    // Overload control: each parse worker runs its share of the leaky
+    // bucket (the drain rate — backend parallelism — splits evenly) and
+    // publishes its backlog through an atomic cell; the ingress thread
+    // runs the degradation ladder over the summed pressure and publishes
+    // the service level back the same way.
+    let overload_on = svc.shed.is_some() || svc.degrade.is_some();
+    let caps = svc.plane.capabilities();
+    let cost_ns = if svc.batch > 0 {
+        svc.plane.batch_latency_ns(svc.batch) / svc.batch as f64
+    } else {
+        svc.plane.latency_ns()
+    };
+    let (mut ladder, mut actions) = if overload_on {
+        ladder_for(svc.degrade.as_ref(), svc.shed, swap.as_ref())
+    } else {
+        (None, None)
+    };
+    let shed_policy = svc.shed.unwrap_or_else(ShedPolicy::never);
+    let drain_per_worker = caps.shards.max(1) as f64 / workers as f64;
+    let level = Arc::new(AtomicU8::new(ServiceLevel::Full.as_u8()));
+    let mut backlog_cells: Vec<Arc<AtomicU64>> = Vec::new();
 
     let (tx_inf, rx_inf) = mpsc::sync_channel::<InfMsg>(depth);
     let (tx_sink, rx_sink) = mpsc::sync_channel::<VerdictMsg>(depth);
@@ -406,7 +538,23 @@ pub(crate) fn run_staged(
         let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
         let tx_inf = tx_inf.clone();
         let route = svc.route.clone();
-        parse_handles.push(thread::spawn(move || parse_stage(rx, tx_inf, route, table, w)));
+        let admission = if overload_on {
+            let cell = Arc::new(AtomicU64::new(0));
+            backlog_cells.push(Arc::clone(&cell));
+            Some(WorkerAdmission::new(
+                AdmissionController::new(shed_policy, drain_per_worker),
+                cost_ns,
+                cell,
+                Arc::clone(&level),
+            ))
+        } else {
+            None
+        };
+        let supervisor = svc.supervisor;
+        let faults = svc.faults.clone();
+        parse_handles.push(thread::spawn(move || {
+            parse_stage(rx, tx_inf, route, table, w, admission, supervisor, faults)
+        }));
         parse_txs.push(tx);
     }
     drop(tx_inf); // stage 3's recv loop ends when all workers finish
@@ -417,13 +565,19 @@ pub(crate) fn run_staged(
     } else {
         None
     };
-    let inf_handle =
-        thread::spawn(move || InferenceStage::new(plane, tx_sink, batchers).run(rx_inf));
+    let inf_supervisor = svc.supervisor;
+    let inf_faults = svc.faults.clone();
+    let inf_handle = thread::spawn(move || {
+        InferenceStage::new(plane, tx_sink, batchers, inf_supervisor, inf_faults).run(rx_inf)
+    });
     let output = svc.output;
     let log_tags = svc.log_tags;
     let sink_names = names.clone();
-    let sink_handle =
-        thread::spawn(move || sink_stage(rx_sink, output, n_classes, log_tags, sink_names));
+    let sink_supervisor = svc.supervisor;
+    let sink_faults = svc.faults.clone();
+    let sink_handle = thread::spawn(move || {
+        sink_stage(rx_sink, output, n_classes, log_tags, sink_names, sink_supervisor, sink_faults)
+    });
 
     // Stage 0: shard by flow hash and feed.  A dead worker (its rx
     // dropped) surfaces here as a failed send, not a hang.
@@ -444,6 +598,31 @@ pub(crate) fn run_staged(
             }
         }
         n += 1;
+        // The ladder runs here — the only thread that sees every packet —
+        // over the *summed* worker backlogs, so a degradation decision is
+        // global even though shedding is per-shard.  The level is
+        // published through the shared cell the workers read.
+        if let Some(l) = ladder.as_mut() {
+            let pressure: f64 = backlog_cells
+                .iter()
+                .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+                .sum();
+            let fired = l.observe(n, ev.packet.ts_ns, pressure).map(|e| (e.from, e.to));
+            if let Some((from, to)) = fired {
+                level.store(to.as_u8(), Ordering::Relaxed);
+                let mut kill_actions = false;
+                if let Some(a) = actions.as_mut() {
+                    if let Err(e) = a.apply(from, to) {
+                        failures.push(StageFailure::Swap(e));
+                        kill_actions = true;
+                    }
+                }
+                if kill_actions {
+                    actions = None;
+                    l.disable_fallback();
+                }
+            }
+        }
         let w = ShardedFlowTable::shard_of(&ev.packet, workers);
         if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
             failures.push(StageFailure::IngressUnreachable { worker: w });
@@ -468,33 +647,38 @@ pub(crate) fn run_staged(
             }
             Err(p) => failures.push(StageFailure::Panicked {
                 stage: "parse worker",
-                message: panic_msg(&p),
+                message: panic_text(&p),
             }),
         }
     }
     let mut engine = None;
+    let mut health = None;
     match inf_handle.join() {
         Ok(rep) => {
             stats.merge(&rep.stats);
             engine = rep.engine;
+            health = rep.health;
             if let Some(f) = rep.failure {
                 failures.push(f);
             }
         }
         Err(p) => failures.push(StageFailure::Panicked {
             stage: "inference stage",
-            message: panic_msg(&p),
+            message: panic_text(&p),
         }),
     }
     let (sink, tagged) = match sink_handle.join() {
-        Ok((sink_stats, sink, tagged)) => {
+        Ok((sink_stats, sink, tagged, sink_failure)) => {
             stats.merge(&sink_stats);
+            if let Some(f) = sink_failure {
+                failures.push(f);
+            }
             (sink, tagged)
         }
         Err(p) => {
             failures.push(StageFailure::Panicked {
                 stage: "sink stage",
-                message: panic_msg(&p),
+                message: panic_text(&p),
             });
             (OutputSink::default(), Vec::new())
         }
@@ -508,22 +692,12 @@ pub(crate) fn run_staged(
         }
     }
 
-    let report = ServiceReport { stats, sink, tagged, flows_tracked, engine };
+    let degradation = ladder.map_or_else(Vec::new, DegradationLadder::into_timeline);
+    let report = ServiceReport { stats, sink, tagged, flows_tracked, engine, degradation, health };
     if failures.is_empty() {
         Ok(report)
     } else {
         Err(ServiceError::Stage { failures, report: Box::new(report) })
-    }
-}
-
-/// Best-effort text of a cross-thread panic payload.
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "unknown panic".into()
     }
 }
 

@@ -14,9 +14,9 @@
 //! ([`Service`](super::Service), built by
 //! [`ServeBuilder`](super::ServeBuilder)) composes against this trait
 //! only.  The previous pair of executor traits (`NnExecutor` /
-//! `NnBatchExecutor`) and the free-standing `bnnexec` run surface are
-//! folded in here; they survive one PR as deprecated shims in
-//! [`legacy`](super::legacy).
+//! `NnBatchExecutor`) and the free-standing `bnnexec` run surface were
+//! folded in here in ISSUE 5; their deprecated shims have since been
+//! deleted.
 
 use crate::bnn::{EngineError, EngineStats, RegistryError, RegistryHandle, VersionTag};
 
@@ -146,6 +146,14 @@ pub trait InferencePlane: Send {
     fn swap_controller(&self) -> Option<SwapController> {
         None
     }
+
+    /// Per-member health counters on placement/failover planes
+    /// ([`PlacedPlane`](super::PlacedPlane)); `None` on planes without
+    /// internal members.  Surfaced into `ServiceReport::health` at the
+    /// end of a run.
+    fn health_snapshot(&self) -> Option<Vec<super::overload::PlaneHealth>> {
+        None
+    }
 }
 
 /// Boxed planes are planes: forwarding keeps generic consumers (e.g.
@@ -202,6 +210,10 @@ impl<P: InferencePlane + ?Sized> InferencePlane for Box<P> {
 
     fn swap_controller(&self) -> Option<SwapController> {
         (**self).swap_controller()
+    }
+
+    fn health_snapshot(&self) -> Option<Vec<super::overload::PlaneHealth>> {
+        (**self).health_snapshot()
     }
 }
 

@@ -1,9 +1,7 @@
 //! The unified serving runtime: **one** [`Service`], built by a
-//! [`ServeBuilder`], replaces the four legacy runtimes
-//! (`CoordinatorService`, `MultiModelService`, `PipelineService`,
-//! `RoutedPipelineService`).  Pipelining, batching, multi-model routing,
-//! and hot swap are orthogonal options on this one runtime instead of
-//! four products of structs:
+//! [`ServeBuilder`].  Pipelining, batching, multi-model routing, hot
+//! swap, and overload control are orthogonal options on this one
+//! runtime instead of a product of structs:
 //!
 //! ```text
 //! ServeBuilder::new()
@@ -40,6 +38,10 @@ use crate::net::packet::Packet;
 use crate::net::traffic::{CbrSpec, TrafficGen};
 
 use super::batcher::{BatchSet, TimedBatch};
+use super::overload::{
+    AdmissionController, DegradationEvent, DegradeSpec, FaultPlan, OverloadControl, PlaneHealth,
+    ShedPolicy, SupervisorPolicy,
+};
 use super::plane::{Capabilities, InferencePlane, SwapController};
 use super::selector::{OutputSelector, OutputSink};
 use super::trigger::{ModelRouter, TriggerCondition};
@@ -111,6 +113,13 @@ pub struct ServiceStats {
     /// inter-stage link (see `coordinator::pipeline::STAGE_LINKS`).
     /// Empty in the serial loop, which has no queues.
     pub stage_blocked: Vec<u64>,
+    /// Triggers shed by the admission controller (or suppressed in
+    /// trigger-only degradation) instead of being inferred.  Always 0
+    /// without a `.shed(...)` / `.degrade(...)` policy.
+    pub sheds: u64,
+    /// Supervised stage restarts consumed across the run.  Always 0
+    /// without a `.supervise(...)` policy.
+    pub restarts: u64,
     /// Per-model accounting on routed (multi-model) backends, keyed by
     /// slot name.  Empty in single-model serving.
     pub per_model: BTreeMap<String, ModelServiceStats>,
@@ -164,6 +173,8 @@ impl ServiceStats {
         self.packets += other.packets;
         self.triggers += other.triggers;
         self.inferences += other.inferences;
+        self.sheds += other.sheds;
+        self.restarts += other.restarts;
         if other.classes.len() > self.classes.len() {
             self.classes.resize(other.classes.len(), 0);
         }
@@ -210,6 +221,12 @@ pub struct ServiceReport {
     pub flows_tracked: usize,
     /// Sharded-engine counters, if the backend's batch path ran one.
     pub engine: Option<crate::bnn::EngineStats>,
+    /// Degradation-ladder timeline: every step-down/step-up the run
+    /// performed, in packet order.  Empty without `.degrade(...)` (and
+    /// in clean runs that never came under pressure).
+    pub degradation: Vec<DegradationEvent>,
+    /// Per-member breaker/failover counters, on placement backends.
+    pub health: Option<Vec<PlaneHealth>>,
 }
 
 /// One stage-level fault of a pipelined run — the typed replacement of
@@ -228,6 +245,13 @@ pub enum StageFailure {
     Swap(RegistryError),
     /// A stage thread panicked; the payload text is preserved.
     Panicked { stage: &'static str, message: String },
+    /// A supervised stage kept dying until its restart budget ran out;
+    /// the last failure's text is preserved.
+    RestartsExhausted {
+        stage: &'static str,
+        restarts: u32,
+        last: String,
+    },
 }
 
 impl std::fmt::Display for StageFailure {
@@ -246,6 +270,9 @@ impl std::fmt::Display for StageFailure {
             StageFailure::Swap(e) => write!(f, "hot-swap republish failed: {e}"),
             StageFailure::Panicked { stage, message } => {
                 write!(f, "{stage} panicked: {message}")
+            }
+            StageFailure::RestartsExhausted { stage, restarts, last } => {
+                write!(f, "{stage}: supervisor gave up after {restarts} restart(s); last: {last}")
             }
         }
     }
@@ -273,6 +300,12 @@ pub enum ServiceError {
     /// The builder configuration contradicts the backend's
     /// [`Capabilities`] (or is incomplete).
     Config(String),
+    /// One specific option carries an invalid value (the strict
+    /// contract: reject at build time, never silently clamp).
+    InvalidConfig {
+        option: &'static str,
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for ServiceError {
@@ -287,10 +320,13 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Compile(e) => write!(f, "pisa compile: {e}"),
             ServiceError::UnknownBackend { name } => write!(
                 f,
-                "unknown backend {name:?} (known: host|batch|sharded|pisa|fpga|registry; \
+                "unknown backend {name:?} (known: host|batch|sharded|pisa|fpga|placed|registry; \
                  aliases: nfp, p4, bnn-exec)"
             ),
             ServiceError::Config(msg) => write!(f, "service configuration: {msg}"),
+            ServiceError::InvalidConfig { option, reason } => {
+                write!(f, "service configuration: {option}: {reason}")
+            }
         }
     }
 }
@@ -373,6 +409,10 @@ pub struct ServeBuilder {
     flow_capacity: usize,
     log_tags: bool,
     swap_every: u64,
+    shed: Option<ShedPolicy>,
+    degrade: Option<DegradeSpec>,
+    supervisor: Option<SupervisorPolicy>,
+    faults: Option<FaultPlan>,
 }
 
 impl Default for ServeBuilder {
@@ -394,6 +434,10 @@ impl ServeBuilder {
             flow_capacity: 1 << 16,
             log_tags: true,
             swap_every: 0,
+            shed: None,
+            degrade: None,
+            supervisor: None,
+            faults: None,
         }
     }
 
@@ -442,8 +486,10 @@ impl ServeBuilder {
     }
 
     /// Capacity of each bounded inter-stage channel (pipelined mode).
+    /// `0` is rejected at [`build`](Self::build) — a zero-slot
+    /// `sync_channel` would deadlock rather than apply backpressure.
     pub fn queue_depth(mut self, depth: usize) -> Self {
-        self.queue_depth = depth.max(1);
+        self.queue_depth = depth;
         self
     }
 
@@ -465,6 +511,39 @@ impl ServeBuilder {
     /// zero-downtime swap demo.  Requires a hot-swap-capable backend.
     pub fn swap_every(mut self, packets: u64) -> Self {
         self.swap_every = packets;
+        self
+    }
+
+    /// Admission control: shed triggered work once the modeled backlog
+    /// (per parse worker in the pipelined mode) passes the policy's
+    /// ceiling, resume below its floor.  Entirely on the packet clock —
+    /// shed decisions are deterministic for a given event stream.
+    pub fn shed(mut self, policy: ShedPolicy) -> Self {
+        self.shed = Some(policy);
+        self
+    }
+
+    /// Degradation ladder: under sustained pressure step down to a
+    /// fallback model (hot-swap backends, when the spec carries one)
+    /// and/or trigger-only mode, stepping back up on recovery.  Every
+    /// transition is recorded in [`ServiceReport::degradation`].
+    pub fn degrade(mut self, spec: DegradeSpec) -> Self {
+        self.degrade = Some(spec);
+        self
+    }
+
+    /// Stage supervision (pipelined mode): a parse/inference/sink stage
+    /// that panics or hits a retryable backend fault is restarted with
+    /// bounded retry+backoff instead of aborting the run.
+    pub fn supervise(mut self, policy: SupervisorPolicy) -> Self {
+        self.supervisor = Some(policy);
+        self
+    }
+
+    /// Test hook: arm deterministic stage faults (see [`FaultPlan`]).
+    #[doc(hidden)]
+    pub fn inject_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -506,6 +585,57 @@ impl ServeBuilder {
                 caps.backend
             )));
         }
+        if self.queue_depth == 0 {
+            return Err(ServiceError::InvalidConfig {
+                option: "queue_depth",
+                reason: "bounded stage queues need at least one slot (0 would deadlock \
+                         the pipeline rather than apply backpressure)"
+                    .into(),
+            });
+        }
+        // A fallback model only makes sense on a hot-swap backend, and it
+        // must fit every bound slot's wire shape — the registry would
+        // reject the publish mid-run otherwise, turning a graceful
+        // step-down into a swap failure under pressure.
+        if let Some(fallback) = self.degrade.as_ref().and_then(|d| d.fallback.as_ref()) {
+            if !caps.supports_hot_swap {
+                return Err(ServiceError::InvalidConfig {
+                    option: "degrade",
+                    reason: format!(
+                        "backend {:?} does not support hot swap; a fallback model needs \
+                         the registry backend (trigger-only degradation works everywhere)",
+                        caps.backend
+                    ),
+                });
+            }
+            let Some(ctl) = plane.swap_controller() else {
+                return Err(ServiceError::InvalidConfig {
+                    option: "degrade",
+                    reason: "backend advertises hot swap but exposes no swap controller"
+                        .into(),
+                });
+            };
+            for name in ctl.names() {
+                let Some(cur) = ctl.registry().current(name) else {
+                    continue;
+                };
+                if fallback.in_words() != cur.in_words
+                    || fallback.out_neurons() != cur.out_neurons
+                {
+                    return Err(ServiceError::InvalidConfig {
+                        option: "degrade",
+                        reason: format!(
+                            "fallback model shape ({} in-words, {} classes) does not \
+                             match slot {name:?} ({} in-words, {} classes)",
+                            fallback.in_words(),
+                            fallback.out_neurons(),
+                            cur.in_words,
+                            cur.out_neurons
+                        ),
+                    });
+                }
+            }
+        }
         Ok(Service {
             plane,
             route: self.route,
@@ -517,6 +647,10 @@ impl ServeBuilder {
             flow_capacity: self.flow_capacity,
             log_tags: self.log_tags,
             swap_every: self.swap_every,
+            shed: self.shed,
+            degrade: self.degrade,
+            supervisor: self.supervisor,
+            faults: self.faults,
         })
     }
 }
@@ -534,6 +668,10 @@ pub struct Service {
     pub(crate) flow_capacity: usize,
     pub(crate) log_tags: bool,
     pub(crate) swap_every: u64,
+    pub(crate) shed: Option<ShedPolicy>,
+    pub(crate) degrade: Option<DegradeSpec>,
+    pub(crate) supervisor: Option<SupervisorPolicy>,
+    pub(crate) faults: Option<FaultPlan>,
 }
 
 impl Service {
@@ -563,6 +701,28 @@ impl Service {
         self,
         events: impl IntoIterator<Item = PacketEvent>,
     ) -> Result<ServiceReport, ServiceError> {
+        let overload = if self.shed.is_some() || self.degrade.is_some() {
+            let caps = self.plane.capabilities();
+            // Modeled cost of one admitted trigger: amortized batch cost
+            // when batching, scalar device latency otherwise.  Drain rate
+            // is the backend's parallelism — `shards` servers each retire
+            // one ns of work per ns.
+            let cost_ns = if self.batch > 0 {
+                self.plane.batch_latency_ns(self.batch) / self.batch as f64
+            } else {
+                self.plane.latency_ns()
+            };
+            let swap = self.plane.swap_controller();
+            let (ladder, actions) =
+                super::overload::ladder_for(self.degrade.as_ref(), self.shed, swap.as_ref());
+            let admission = AdmissionController::new(
+                self.shed.unwrap_or_else(ShedPolicy::never),
+                caps.shards.max(1) as f64,
+            );
+            Some(OverloadControl::new(admission, ladder, actions, cost_ns))
+        } else {
+            None
+        };
         let mut core =
             SerialCore::unbatched(self.plane, self.route, self.output, self.flow_capacity);
         if self.batch > 0 {
@@ -570,6 +730,9 @@ impl Service {
         }
         if !self.log_tags {
             core.disable_tag_log();
+        }
+        if let Some(ctl) = overload {
+            core.set_overload(ctl);
         }
         let mut n = 0u64;
         // Same failure semantics as the staged mode: a failed republish
@@ -591,6 +754,9 @@ impl Service {
         }
         core.flush();
         let mut failures = swap_failures;
+        if let Some(f) = core.take_overload_failure() {
+            failures.push(f);
+        }
         if let Some(f) = core.take_failure() {
             failures.push(f);
         }
@@ -603,9 +769,9 @@ impl Service {
     }
 }
 
-/// The synchronous single-consumer engine behind both the serial
-/// [`Service`] mode and the deprecated legacy shims: flow update →
-/// route → (batch lanes | inline) → backend → accounting/sink.
+/// The synchronous single-consumer engine behind the serial [`Service`]
+/// mode: flow update → route → admission → (batch lanes | inline) →
+/// backend → accounting/sink.
 pub(crate) struct SerialCore {
     plane: Box<dyn InferencePlane>,
     route: RouteLogic,
@@ -631,6 +797,8 @@ pub(crate) struct SerialCore {
     batch_meta: Vec<(u64, f64)>,
     batch_inputs: Vec<Vec<u32>>,
     batch_classes: Vec<usize>,
+    /// Admission + degradation ladder (None = run unconditionally).
+    overload: Option<OverloadControl>,
 }
 
 impl SerialCore {
@@ -664,6 +832,7 @@ impl SerialCore {
             batch_meta: Vec::new(),
             batch_inputs: Vec::new(),
             batch_classes: Vec::new(),
+            overload: None,
         }
     }
 
@@ -676,29 +845,10 @@ impl SerialCore {
         self.log_tags = false;
     }
 
-    /// Triggered flows currently waiting across all batch lanes.
-    pub(crate) fn pending(&self) -> usize {
-        self.batchers.as_ref().map_or(0, BatchSet::pending)
-    }
-
-    pub(crate) fn stats(&self) -> &ServiceStats {
-        &self.stats
-    }
-
-    pub(crate) fn sink(&self) -> &OutputSink {
-        &self.sink
-    }
-
-    pub(crate) fn tagged(&self) -> &[TaggedVerdict] {
-        &self.tagged
-    }
-
-    pub(crate) fn flows_tracked(&self) -> usize {
-        self.flows.len()
-    }
-
-    pub(crate) fn engine_stats(&self) -> Option<crate::bnn::EngineStats> {
-        self.plane.engine_stats()
+    /// Arm admission control + the degradation ladder (call before any
+    /// traffic).
+    pub(crate) fn set_overload(&mut self, ctl: OverloadControl) {
+        self.overload = Some(ctl);
     }
 
     /// The first backend fault this core absorbed, if any.
@@ -706,11 +856,11 @@ impl SerialCore {
         self.failure.take()
     }
 
-    /// Peek at the absorbed backend fault without clearing it (the
-    /// deprecated shims use this to reproduce the old panic-on-fault
-    /// behavior).
-    pub(crate) fn failure(&self) -> Option<&StageFailure> {
-        self.failure.as_ref()
+    /// A failed ladder step (fallback publish/rollback), if one fired.
+    /// The ladder disables its swap actions after the first failure, so
+    /// this reports at most once.
+    pub(crate) fn take_overload_failure(&mut self) -> Option<StageFailure> {
+        self.overload.as_mut().and_then(OverloadControl::take_swap_failure)
     }
 
     /// Republish the next bound slot round-robin (no-op without a swap
@@ -735,6 +885,18 @@ impl SerialCore {
         for (lane, batch) in due {
             self.flush_batch(lane, batch, ev.packet.ts_ns);
         }
+        if let Some(ctl) = self.overload.as_mut() {
+            // Ladder pressure = modeled admission backlog plus the age of
+            // the oldest queued batch item on the packet clock — sustained
+            // queueing steps the service down even when admission alone
+            // would keep absorbing it.
+            let queued_ns = self
+                .batchers
+                .as_ref()
+                .and_then(BatchSet::oldest_enqueue_ns)
+                .map_or(0.0, |t| ev.packet.ts_ns - t);
+            ctl.on_packet(ev.packet.ts_ns, queued_ns);
+        }
         let (fstats, is_new, pkts) = self.flows.update(&ev.packet);
         let Some(route) = self.route.route(&ev.packet, is_new, pkts) else {
             return;
@@ -744,6 +906,12 @@ impl SerialCore {
             // Poisoned backend: keep parse/trigger accounting honest but
             // stop feeding it (mirrors a dead pipelined stage 3).
             return;
+        }
+        if let Some(ctl) = self.overload.as_mut() {
+            if !ctl.admit_trigger(ev.packet.ts_ns) {
+                self.stats.sheds += 1;
+                return;
+            }
         }
         let packed = select_packed_input(ev, fstats);
         let id = flow_id(&ev.packet);
@@ -860,22 +1028,19 @@ impl SerialCore {
 
     pub(crate) fn into_report(mut self) -> ServiceReport {
         let engine = self.plane.engine_stats();
+        let health = self.plane.health_snapshot();
         let flows_tracked = self.flows.len();
+        let degradation =
+            self.overload.take().map_or_else(Vec::new, OverloadControl::into_timeline);
         ServiceReport {
             stats: std::mem::take(&mut self.stats),
             sink: std::mem::take(&mut self.sink),
             tagged: std::mem::take(&mut self.tagged),
             flows_tracked,
             engine,
+            degradation,
+            health,
         }
-    }
-
-    pub(crate) fn into_stats(mut self) -> ServiceStats {
-        std::mem::take(&mut self.stats)
-    }
-
-    pub(crate) fn into_stats_and_tags(mut self) -> (ServiceStats, Vec<TaggedVerdict>) {
-        (std::mem::take(&mut self.stats), std::mem::take(&mut self.tagged))
     }
 }
 
@@ -1164,6 +1329,55 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(matches!(err, ServiceError::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn zero_queue_depth_is_a_typed_build_error_not_a_silent_clamp() {
+        let err = builder().pipeline(2).queue_depth(0).build().unwrap_err();
+        match err {
+            ServiceError::InvalidConfig { option, reason } => {
+                assert_eq!(option, "queue_depth");
+                assert!(reason.contains("deadlock"), "{reason}");
+            }
+            other => panic!("expected InvalidConfig, got {other}"),
+        }
+        // Serial mode rejects it too: the knob is meaningless there, but a
+        // config that would deadlock if pipelined should never validate.
+        assert!(builder().queue_depth(0).build().is_err());
+        // Depth 1 (the old clamp target) is still a valid explicit choice.
+        assert!(builder().pipeline(2).queue_depth(1).build().is_ok());
+    }
+
+    #[test]
+    fn degrade_fallback_is_validated_against_backend_and_shape() {
+        use crate::coordinator::DegradeSpec;
+        // Fallback model on a non-hot-swap backend: typed error.
+        let fallback = BnnModel::random("lite", 256, &[8, 2], 99);
+        let err = builder().degrade(DegradeSpec::with_fallback(fallback)).build().unwrap_err();
+        assert!(
+            matches!(err, ServiceError::InvalidConfig { option: "degrade", .. }),
+            "{err}"
+        );
+        // Wrong-shaped fallback on a registry backend: typed error naming
+        // the offending slot.
+        let (h, router) = two_model_registry();
+        let names = router.model_names().to_vec();
+        let wrong = BnnModel::random("lite", 128, &[8, 2], 99);
+        let err = ServeBuilder::new()
+            .backend(BackendFactory::registry(&h, &names, 100.0, 1).unwrap())
+            .router(router)
+            .degrade(DegradeSpec::with_fallback(wrong))
+            .build()
+            .unwrap_err();
+        match err {
+            ServiceError::InvalidConfig { option, reason } => {
+                assert_eq!(option, "degrade");
+                assert!(reason.contains("shape"), "{reason}");
+            }
+            other => panic!("expected InvalidConfig, got {other}"),
+        }
+        // Trigger-only degradation needs no registry and works anywhere.
+        assert!(builder().degrade(DegradeSpec::trigger_only()).build().is_ok());
     }
 
     #[test]

@@ -28,6 +28,13 @@ impl TriggerCondition {
     /// no interior mutability.  Any future variant that breaks this
     /// (e.g. a global rate limiter) must either live outside the
     /// sharded stage or carry its own cross-shard ordering.
+    ///
+    /// The overload ladder's trigger-only level
+    /// ([`ServiceLevel::TriggerOnly`](super::ServiceLevel)) relies on
+    /// this purity from the other side: triggers keep being evaluated
+    /// and counted at full rate while degraded — only the inference
+    /// behind them is suppressed — so stepping down and back up never
+    /// changes *which* flows fire, only which admitted ones ran.
     pub fn fires(&self, pkt: &Packet, is_new_flow: bool, flow_pkts: u32) -> bool {
         match *self {
             TriggerCondition::NewFlow => is_new_flow,

@@ -16,8 +16,8 @@ use std::path::PathBuf;
 
 use n3ic::bnn::{BnnModel, RegistryHandle};
 use n3ic::coordinator::{
-    BackendFactory, InferencePlane, ModelRouter, OutputSelector, PacketEvent, ServeBuilder,
-    ServiceReport, TriggerCondition, STAGE_LINKS,
+    BackendFactory, DegradeSpec, InferencePlane, ModelRouter, OutputSelector, PacketEvent,
+    ServeBuilder, ServiceReport, ShedPolicy, TriggerCondition, STAGE_LINKS,
 };
 use n3ic::net::traffic::{CbrSpec, TrafficGen};
 
@@ -28,7 +28,7 @@ USAGE:
   repro [--artifacts DIR] <command> [options]
 
 COMMANDS:
-  serve        --model NAME --backend host|batch|sharded|pisa|fpga|nfp|pjrt
+  serve        --model NAME --backend host|batch|sharded|pisa|fpga|nfp|placed|pjrt
                --packets N --flows N --trigger-pkts N
                --batch N (0 = classify inline; N>0 = batch fast path)
                --shards N (spread batches over N cores where the
@@ -36,7 +36,17 @@ COMMANDS:
                --pipeline N (N>=1: staged runtime with N parse workers;
                              verdicts are bit-identical to the serial
                              loop on the same seeded traffic)
-               --queue-depth N (with --pipeline: bounded stage queues)
+               --queue-depth N (with --pipeline: bounded stage queues;
+                                0 is rejected — it would deadlock)
+               --shed-policy MAX_US[:RESUME_US] | off
+                             (admission control: shed triggered work
+                              once the modeled backlog passes MAX_US
+                              microseconds, resume below RESUME_US;
+                              RESUME_US defaults to MAX_US/4)
+               --degrade on|off (degradation ladder: under sustained
+                                 pressure step down to trigger-only
+                                 mode and back up on recovery; every
+                                 transition lands in the report)
 
                Multi-model registry mode (repeat --model with NAME=PATH
                pairs to serve several named, versioned models at once
@@ -172,6 +182,8 @@ fn main() -> n3ic::Result<()> {
             "pipeline",
             "queue-depth",
             "swap-every",
+            "shed-policy",
+            "degrade",
         ],
         "experiment" | "models" => &["artifacts"],
         "compile-p4" => &["artifacts", "model", "format"],
@@ -289,10 +301,44 @@ struct ServeKnobs {
     pipeline: usize,
     queue_depth: usize,
     swap_every: u64,
+    shed: Option<ShedPolicy>,
+    degrade: bool,
+}
+
+/// Parse `--shed-policy MAX_US[:RESUME_US]` (microseconds) or `off`.
+/// Resume defaults to a quarter of the ceiling — enough hysteresis that
+/// the latch doesn't chatter around the threshold.
+fn parse_shed_policy(v: &str) -> Result<Option<ShedPolicy>, String> {
+    if v == "off" {
+        return Ok(None);
+    }
+    let bad = || format!("--shed-policy {v:?} is not MAX_US[:RESUME_US] or off");
+    let (max_s, resume_s) = match v.split_once(':') {
+        Some((m, r)) => (m, Some(r)),
+        None => (v, None),
+    };
+    let max_us: f64 = max_s.parse().map_err(|_| bad())?;
+    let resume_us: f64 = match resume_s {
+        Some(r) => r.parse().map_err(|_| bad())?,
+        None => max_us / 4.0,
+    };
+    if max_us.is_nan() || max_us <= 0.0 || resume_us.is_nan() || resume_us < 0.0 {
+        return Err(bad());
+    }
+    Ok(Some(ShedPolicy::new(max_us * 1e3, resume_us * 1e3)))
 }
 
 impl ServeKnobs {
     fn parse(args: &Args) -> Result<Self, String> {
+        let queue_depth = args.get_u64("queue-depth", 1024)? as usize;
+        if queue_depth == 0 {
+            return Err("--queue-depth 0 would deadlock the pipeline; use 1 or more".into());
+        }
+        let degrade = match args.get("degrade", "off").as_str() {
+            "on" => true,
+            "off" => false,
+            other => return Err(format!("--degrade {other:?} is not on|off")),
+        };
         Ok(Self {
             packets: args.get_u64("packets", 1_000_000)?,
             flows: args.get_u64("flows", 100_000)?,
@@ -301,8 +347,10 @@ impl ServeKnobs {
             batch: args.get_u64("batch", 0)? as usize,
             shards: args.get_u64("shards", 1)? as usize,
             pipeline: args.get_u64("pipeline", 0)? as usize,
-            queue_depth: args.get_u64("queue-depth", 1024)? as usize,
+            queue_depth,
             swap_every: args.get_u64("swap-every", 0)?,
+            shed: parse_shed_policy(&args.get("shed-policy", "off"))?,
+            degrade,
         })
     }
 }
@@ -445,6 +493,15 @@ fn run_and_report(
     if knobs.swap_every > 0 {
         builder = builder.swap_every(knobs.swap_every);
     }
+    if let Some(policy) = knobs.shed {
+        builder = builder.shed(policy);
+    }
+    if knobs.degrade {
+        // CLI degradation is trigger-only (works on every backend); a
+        // fallback-model ladder is API-level (`DegradeSpec::with_fallback`)
+        // since it needs a shape-matched model per registry slot.
+        builder = builder.degrade(DegradeSpec::trigger_only());
+    }
     let svc = builder.build().map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, knobs.flows, 7);
@@ -473,6 +530,28 @@ fn run_and_report(
     println!("flows tracked    : {}", report.flows_tracked);
     println!("nn inferences    : {}", st.inferences);
     println!("class histogram  : {:?}", st.classes);
+    if knobs.shed.is_some() || st.sheds > 0 {
+        println!(
+            "sheds            : {} (admitted {} of {} triggers)",
+            st.sheds,
+            st.triggers - st.sheds,
+            st.triggers
+        );
+    }
+    if st.restarts > 0 {
+        println!("stage restarts   : {}", st.restarts);
+    }
+    for ev in &report.degradation {
+        println!("degradation      : {ev}");
+    }
+    if let Some(health) = &report.health {
+        for h in health {
+            println!(
+                "plane health     : {:8} calls={} failovers={} trips={} open={}",
+                h.backend, h.calls, h.failovers, h.trips, h.open
+            );
+        }
+    }
     if let Some(registry) = registry {
         let versions = registry.versions();
         for (name, m) in &st.per_model {

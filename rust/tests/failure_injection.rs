@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use n3ic::bnn::{BnnModel, EngineError, VersionTag};
 use n3ic::coordinator::{
-    BackendFactory, Capabilities, InferencePlane, OutputSelector, PacketEvent, ServeBuilder,
-    ServiceError, StageFailure, TriggerCondition,
+    BackendFactory, Capabilities, FaultPlan, InferencePlane, OutputSelector, PacketEvent,
+    ServeBuilder, ServiceError, StageFailure, SupervisorPolicy, TriggerCondition,
 };
 use n3ic::json::Json;
 use n3ic::net::traffic::CbrSpec;
@@ -292,6 +292,95 @@ fn serial_engine_fault_is_typed_and_preserves_partial_report() {
     assert_eq!(report.stats.triggers, 4_000);
     assert_eq!(report.stats.inferences, 100);
     assert_eq!(report.sink.memory.len(), 100);
+}
+
+/// Real (fpga) backend behind a 2-worker pipeline with small batches —
+/// the configuration the per-stage kill tests below run under load.
+fn fpga_pipeline() -> ServeBuilder {
+    let model = BnnModel::random("traffic", 256, &[32, 16, 2], 1);
+    ServeBuilder::new()
+        .backend(BackendFactory::single("fpga", model).unwrap())
+        .trigger(TriggerCondition::EveryNPackets(2))
+        .output(OutputSelector::Memory)
+        .pipeline(2)
+        .queue_depth(64)
+        .batching(4, 1e6)
+}
+
+#[test]
+fn supervised_stage_kills_recover_and_match_the_clean_run() {
+    let events = traffic_events(20_000, 200, 41);
+    let clean = fpga_pipeline().build().unwrap().run(events.iter().cloned()).unwrap();
+    assert_eq!(clean.stats.restarts, 0);
+    assert!(clean.stats.inferences >= 100, "need real load for the kills below");
+    let plans = [
+        ("parse", FaultPlan::new().kill_parse_at(500)),
+        ("inference", FaultPlan::new().kill_inference_at(10)),
+        ("sink", FaultPlan::new().kill_sink_at(50)),
+    ];
+    for (which, plan) in plans {
+        let rep = fpga_pipeline()
+            .supervise(SupervisorPolicy::default())
+            .inject_faults(plan)
+            .build()
+            .unwrap()
+            .run(events.iter().cloned())
+            .unwrap_or_else(|e| panic!("{which}: supervised run must complete: {e}"));
+        // The restart is visible in the report, and the recovered run is
+        // indistinguishable from the clean one everywhere else — the
+        // fault hook fires before the stage's compute, so the retried
+        // unit replays exactly once.
+        assert!(rep.stats.restarts > 0, "{which}");
+        assert_eq!(rep.stats.packets, clean.stats.packets, "{which}");
+        assert_eq!(rep.stats.triggers, clean.stats.triggers, "{which}");
+        assert_eq!(rep.stats.inferences, clean.stats.inferences, "{which}");
+        assert_eq!(rep.stats.classes, clean.stats.classes, "{which}");
+        let mut want = clean.sink.memory.clone();
+        let mut got = rep.sink.memory.clone();
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(want, got, "{which}");
+    }
+}
+
+#[test]
+fn unsupervised_stage_kills_fail_loudly_with_consistent_partial_reports() {
+    let events = traffic_events(20_000, 200, 43);
+    let plans = [
+        ("parse worker", FaultPlan::new().kill_parse_at(500)),
+        ("inference stage", FaultPlan::new().kill_inference_at(10)),
+        ("sink stage", FaultPlan::new().kill_sink_at(50)),
+    ];
+    for (expect, plan) in plans {
+        let err = fpga_pipeline()
+            .inject_faults(plan)
+            .build()
+            .unwrap()
+            .run(events.iter().cloned())
+            .expect_err("an unsupervised stage kill must surface as an error");
+        let ServiceError::Stage { failures, report } = err else {
+            panic!("{expect}: stage death must surface as ServiceError::Stage");
+        };
+        assert!(
+            failures.iter().any(|f| matches!(
+                f,
+                StageFailure::Panicked { stage, message }
+                    if *stage == expect && message.contains("injected")
+            )),
+            "{expect}: {failures:?}"
+        );
+        // The partial report stays self-consistent: every verdict that
+        // reached the sink is accounted exactly once, nothing is
+        // double-counted through the panic, and no restart fired.
+        assert_eq!(report.stats.restarts, 0, "{expect}");
+        assert_eq!(report.stats.inferences as usize, report.sink.memory.len(), "{expect}");
+        assert_eq!(
+            report.stats.classes.iter().sum::<u64>(),
+            report.stats.inferences,
+            "{expect}"
+        );
+        assert!(report.stats.packets > 0, "{expect}");
+    }
 }
 
 #[test]

@@ -1,0 +1,349 @@
+//! Overload-control integration tests (ISSUE 6): admission shedding
+//! bounds latency instead of letting queues collapse, the degradation
+//! ladder steps down under pressure and back up on recovery (including
+//! the registry fallback-model rung), placement breakers fail over
+//! without changing verdicts, and unfired policies leave reports
+//! bit-identical to policy-free runs.
+
+use n3ic::bnn::{BnnModel, EngineError, RegistryHandle, VersionTag};
+use n3ic::coordinator::{
+    BackendFactory, BreakerPolicy, Capabilities, DegradationEvent, DegradeSpec, InferencePlane,
+    OutputSelector, PacketEvent, PlacedPlane, ServeBuilder, ServiceLevel, ServiceReport,
+    ShedPolicy, TriggerCondition,
+};
+use n3ic::net::traffic::CbrSpec;
+
+use std::time::Duration;
+
+fn model() -> BnnModel {
+    BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+}
+
+/// A line-rate burst followed by a calm tail: the burst piles modeled
+/// work onto the backend far faster than it drains (tripping shedding
+/// and the ladder's step-down), the calm tail lets the backlog drain so
+/// recovery — the step back up to [`ServiceLevel::Full`] — is
+/// deterministic before the run ends.
+fn burst_then_calm(burst: usize, calm: usize, flows: u64, seed: u64) -> Vec<PacketEvent> {
+    let mut events =
+        PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, flows, seed, burst);
+    let mut tail =
+        PacketEvent::cbr_burst(CbrSpec { gbps: 0.05, pkt_size: 256 }, flows, seed + 1, calm);
+    let t0 = events.last().expect("burst is non-empty").packet.ts_ns + 1.0;
+    let c0 = tail.first().expect("tail is non-empty").packet.ts_ns;
+    for ev in &mut tail {
+        ev.packet.ts_ns += t0 - c0;
+    }
+    events.extend(tail);
+    events
+}
+
+fn ladder_shape(timeline: &[DegradationEvent]) -> Vec<(u64, ServiceLevel, ServiceLevel)> {
+    timeline.iter().map(|e| (e.at_packet, e.from, e.to)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Serial runtime: shed + trigger-only ladder.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shedding_bounds_latency_and_walks_the_ladder_down_and_back_up() {
+    // A 50 µs-per-inference backend against 51 ns packet arrivals: the
+    // burst's triggers represent ~5x more modeled work than the device
+    // can retire, so an unshed run would queue without bound.
+    let events = burst_then_calm(80_000, 20_000, 400, 7);
+    let run = || {
+        ServeBuilder::new()
+            .backend(BackendFactory::custom("slownic", model(), 50_000.0, 1))
+            .trigger(TriggerCondition::EveryNPackets(5))
+            .output(OutputSelector::Memory)
+            .shed(ShedPolicy::new(400_000.0, 100_000.0))
+            .degrade(DegradeSpec::trigger_only())
+            .build()
+            .unwrap()
+            .run(events.iter().cloned())
+            .unwrap()
+    };
+    let rep = run();
+    assert!(rep.stats.sheds > 0, "the burst must trip the admission controller");
+    assert!(rep.stats.inferences > 0, "shedding must not starve the service entirely");
+    assert_eq!(
+        rep.stats.triggers,
+        rep.stats.inferences + rep.stats.sheds,
+        "every trigger is either inferred or shed, never lost"
+    );
+    // Admitted inferences never see the unbounded queue the shed ones
+    // would have formed — the latency profile stays the device's own.
+    assert!(
+        rep.stats.latency.p99_us() < 200.0,
+        "p99 {} µs must stay near the 50 µs device latency",
+        rep.stats.latency.p99_us()
+    );
+    let tl = &rep.degradation;
+    assert!(tl.iter().any(DegradationEvent::is_step_down), "{tl:?}");
+    assert!(tl.iter().any(|e| !e.is_step_down()), "{tl:?}");
+    assert_eq!(
+        tl.last().unwrap().to,
+        ServiceLevel::Full,
+        "the calm tail must recover full service: {tl:?}"
+    );
+    // Everything above is packet-clock arithmetic: a rerun is identical.
+    let rep2 = run();
+    assert_eq!(rep.stats.sheds, rep2.stats.sheds);
+    assert_eq!(rep.stats.inferences, rep2.stats.inferences);
+    assert_eq!(rep.stats.classes, rep2.stats.classes);
+    assert_eq!(ladder_shape(&rep.degradation), ladder_shape(&rep2.degradation));
+    assert_eq!(rep.sink.memory, rep2.sink.memory);
+}
+
+// ---------------------------------------------------------------------------
+// Registry fallback rung: hot-swap down, roll back up.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fallback_degradation_swaps_and_rolls_back_registry_weights() {
+    let reg = RegistryHandle::new();
+    let full = BnnModel::random("traffic", 256, &[32, 16, 2], 11);
+    reg.publish("traffic", &full).unwrap();
+    let names = vec!["traffic".to_string()];
+
+    let events = burst_then_calm(80_000, 20_000, 400, 9);
+    let rep = ServeBuilder::new()
+        .backend(BackendFactory::registry(&reg, &names, 50_000.0, 1).unwrap())
+        .trigger(TriggerCondition::EveryNPackets(5))
+        .output(OutputSelector::Memory)
+        .shed(ShedPolicy::new(400_000.0, 100_000.0))
+        .degrade(DegradeSpec::with_fallback(BnnModel::random("traffic-lite", 256, &[8, 2], 43)))
+        .build()
+        .unwrap()
+        .run(events.iter().cloned())
+        .unwrap();
+
+    let tl = &rep.degradation;
+    assert!(tl.len() >= 2, "expected at least one step-down and one step-up: {tl:?}");
+    assert_eq!(
+        (tl[0].from, tl[0].to),
+        (ServiceLevel::Full, ServiceLevel::Fallback),
+        "the first rung under pressure is the fallback model: {tl:?}"
+    );
+    assert_eq!(tl.last().unwrap().to, ServiceLevel::Full, "{tl:?}");
+
+    // publish(v1) + at least one fallback swap + one rollback — the
+    // registry stays monotone, rollback republishes as a new version.
+    let cur = reg.current("traffic").unwrap();
+    assert!(cur.version() >= 3, "got v{}", cur.version());
+
+    // The rolled-back slot classifies exactly like the original model.
+    let mut restored = BackendFactory::registry(&reg, &names, 50_000.0, 1).unwrap();
+    let pristine = RegistryHandle::new();
+    pristine.publish("traffic", &full).unwrap();
+    let mut reference = BackendFactory::registry(&pristine, &names, 50_000.0, 1).unwrap();
+    for i in 0..32u32 {
+        let x: Vec<u32> =
+            (0..8).map(|w| i.wrapping_mul(2_654_435_761).wrapping_add(w * 97)).collect();
+        assert_eq!(restored.classify(0, &x).0, reference.classify(0, &x).0, "input {i}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined runtime: queue collapse without shedding, bounded with it.
+// ---------------------------------------------------------------------------
+
+/// Backend that really sleeps per inference — the pipelined collapse
+/// test needs wall-clock contention on the bounded channels, not just
+/// modeled cost (which it also advertises, for the admission math).
+struct SleepyPlane {
+    sleep: Duration,
+}
+
+impl InferencePlane for SleepyPlane {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::single("sleepy", 50_000.0)
+    }
+
+    fn classify(&mut self, _route: usize, x: &[u32]) -> (usize, Option<VersionTag>) {
+        std::thread::sleep(self.sleep);
+        ((x.first().copied().unwrap_or(0) & 1) as usize, None)
+    }
+
+    fn try_run_batch(
+        &mut self,
+        route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        classes.clear();
+        for x in inputs {
+            let (c, _) = self.classify(route, x);
+            classes.push(c);
+        }
+        Ok(None)
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+}
+
+fn sleepy(shed: bool) -> ServeBuilder {
+    let mut b = ServeBuilder::new()
+        .backend(Box::new(SleepyPlane { sleep: Duration::from_micros(200) }))
+        .trigger(TriggerCondition::EveryNPackets(2))
+        .output(OutputSelector::Memory)
+        .pipeline(4)
+        .queue_depth(1);
+    if shed {
+        b = b
+            .shed(ShedPolicy::new(200_000.0, 50_000.0))
+            .degrade(DegradeSpec::trigger_only());
+    }
+    b
+}
+
+#[test]
+fn without_shedding_the_pipeline_collapses_into_blocked_sends() {
+    // 600 flows fire their trigger within the first few thousand
+    // packets; at 200 µs per inference the inference stage cannot keep
+    // up and the depth-1 parse→inference channel backs up into the
+    // parse workers.
+    let events = PacketEvent::cbr_burst(CbrSpec { gbps: 40.0, pkt_size: 256 }, 600, 13, 45_000);
+    let blocked = |r: &ServiceReport| r.stats.stage_blocked.iter().sum::<u64>();
+
+    let collapsed = sleepy(false).build().unwrap().run(events.iter().cloned()).unwrap();
+    assert_eq!(collapsed.stats.sheds, 0);
+    assert!(
+        blocked(&collapsed) > collapsed.stats.triggers / 2,
+        "unshed run must spend its time blocked on full queues: {} blocked of {} triggers",
+        blocked(&collapsed),
+        collapsed.stats.triggers
+    );
+
+    let shed = sleepy(true).build().unwrap().run(events.iter().cloned()).unwrap();
+    assert!(shed.stats.sheds > 0);
+    assert_eq!(shed.stats.triggers, collapsed.stats.triggers, "triggering is load-independent");
+    assert!(
+        blocked(&shed) * 4 < blocked(&collapsed),
+        "admission must shed before backpressure stalls forwarding: {} vs {}",
+        blocked(&shed),
+        blocked(&collapsed)
+    );
+    assert!(
+        shed.degradation.iter().any(DegradationEvent::is_step_down),
+        "sustained pressure must step the ladder down: {:?}",
+        shed.degradation
+    );
+}
+
+// ---------------------------------------------------------------------------
+// No-op policies: reports stay bit-identical when nothing fires.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unfired_policies_leave_reports_bit_identical() {
+    let events = PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, 200, 21, 20_000);
+    for (name, workers) in [("fpga", 0), ("placed", 0), ("fpga", 2)] {
+        let run = |policies: bool| {
+            let mut b = ServeBuilder::new()
+                .backend(BackendFactory::single(name, model()).unwrap())
+                .trigger(TriggerCondition::EveryNPackets(2))
+                .output(OutputSelector::Memory)
+                .batching(8, 1e6);
+            if workers > 0 {
+                b = b.pipeline(workers).queue_depth(64);
+            }
+            if policies {
+                // Thresholds far above anything this run can reach.
+                b = b
+                    .shed(ShedPolicy::new(1e15, 1e14))
+                    .degrade(DegradeSpec::trigger_only());
+            }
+            b.build().unwrap().run(events.iter().cloned()).unwrap()
+        };
+        let plain = run(false);
+        let armed = run(true);
+        let tag = format!("{name}/{workers} workers");
+        assert_eq!(armed.stats.sheds, 0, "{tag}");
+        assert!(armed.degradation.is_empty(), "{tag}: {:?}", armed.degradation);
+        assert_eq!(armed.stats.packets, plain.stats.packets, "{tag}");
+        assert_eq!(armed.stats.triggers, plain.stats.triggers, "{tag}");
+        assert_eq!(armed.stats.inferences, plain.stats.inferences, "{tag}");
+        assert_eq!(armed.stats.classes, plain.stats.classes, "{tag}");
+        let mut want = plain.sink.memory;
+        let mut got = armed.sink.memory;
+        want.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(want, got, "{tag}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement breakers: failover is invisible in the verdict stream.
+// ---------------------------------------------------------------------------
+
+/// Member whose batch path always faults — the breaker-bait in front of
+/// the healthy fpga member below.
+struct FlakyPlane;
+
+impl InferencePlane for FlakyPlane {
+    fn capabilities(&self) -> Capabilities {
+        // Cheapest modeled cost, so the placer always tries it first.
+        Capabilities::single("flaky", 10.0)
+    }
+
+    fn classify(&mut self, _route: usize, _x: &[u32]) -> (usize, Option<VersionTag>) {
+        unreachable!("the batched service must route through try_run_batch");
+    }
+
+    fn try_run_batch(
+        &mut self,
+        _route: usize,
+        _inputs: &[Vec<u32>],
+        _classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        Err(EngineError::WorkerDied)
+    }
+
+    fn n_classes(&self) -> usize {
+        2
+    }
+}
+
+#[test]
+fn placed_plane_fails_over_from_a_faulting_member_without_changing_verdicts() {
+    let events = PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, 100, 31, 8_000);
+    let run = |backend: Box<dyn InferencePlane>| {
+        ServeBuilder::new()
+            .backend(backend)
+            .trigger(TriggerCondition::EveryNPackets(2))
+            .output(OutputSelector::Memory)
+            .batching(4, 1e6)
+            .build()
+            .unwrap()
+            .run(events.iter().cloned())
+            .unwrap()
+    };
+
+    let placed = PlacedPlane::new(
+        vec![Box::new(FlakyPlane), BackendFactory::single("fpga", model()).unwrap()],
+        BreakerPolicy { trip_after: 2, cooldown_calls: 4, ..BreakerPolicy::default() },
+    )
+    .unwrap();
+    let rep = run(Box::new(placed));
+    let reference = run(BackendFactory::single("fpga", model()).unwrap());
+
+    // Failover must be invisible: the healthy member computes the same
+    // Algorithm 1, so verdicts match a plain fpga run exactly.
+    assert_eq!(rep.sink.memory, reference.sink.memory);
+    assert_eq!(rep.stats.classes, reference.stats.classes);
+    assert_eq!(rep.stats.inferences, reference.stats.inferences);
+
+    let health = rep.health.expect("placement planes report member health");
+    let flaky = health.iter().find(|h| h.backend == "flaky").unwrap();
+    let fpga = health.iter().find(|h| h.backend == "fpga").unwrap();
+    assert!(flaky.trips >= 1, "{flaky:?}");
+    assert!(flaky.failovers >= 2, "{flaky:?}");
+    assert!(flaky.calls >= flaky.failovers, "{flaky:?}");
+    assert!(fpga.calls > 0, "{fpga:?}");
+    assert_eq!(fpga.trips, 0, "{fpga:?}");
+    assert!(!fpga.open, "{fpga:?}");
+}

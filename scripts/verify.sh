@@ -22,12 +22,6 @@ fi
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== lint: cargo clippy -D warnings =="
   cargo clippy --all-targets -- -D warnings
-  # The legacy serving API (CoordinatorService & friends) survives one
-  # PR as deprecated shims for out-of-tree users only: no in-repo test
-  # or bench may keep using it.  Scoped to tests/benches; the shims
-  # themselves live under a module-level allow(deprecated).
-  echo "== lint: cargo clippy --tests --benches -D deprecated (no in-repo legacy callers) =="
-  cargo clippy --tests --benches -- -D deprecated
 else
   echo "== lint: cargo clippy not installed — SKIPPED (install clippy) =="
 fi
@@ -61,5 +55,26 @@ N3IC_BENCH_SMOKE=1 cargo bench --bench pipeline
 # Registry pin/publish/swap-storm costs (hot-swap overhead record).
 echo "== perf smoke: registry bench =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench registry
+
+# Admission / degradation / failover costs (overload control record).
+echo "== perf smoke: overload bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench overload
+
+# Overload CLI smoke: a seeded 40 Gb/s burst against the slow host
+# backend must trip the admission controller and walk the degradation
+# ladder down AND back up (the tail of the run drains the backlog), all
+# on the deterministic packet clock — any change in that behavior shows
+# up here before it ships.
+echo "== overload smoke: seeded burst trips shedding + ladder round trip =="
+overload_out=$(cargo run --release --quiet -- serve --backend host \
+  --packets 300000 --flows 1500 --trigger-pkts 10 \
+  --shed-policy 500:100 --degrade on)
+echo "$overload_out"
+echo "$overload_out" | grep -Eq "sheds *: *[1-9]" \
+  || { echo "overload smoke: expected sheds > 0"; exit 1; }
+echo "$overload_out" | grep -q "step-down" \
+  || { echo "overload smoke: expected a ladder step-down"; exit 1; }
+echo "$overload_out" | grep -q "step-up" \
+  || { echo "overload smoke: expected a ladder step-up (recovery)"; exit 1; }
 
 echo "verify.sh: all gates passed"
