@@ -43,12 +43,13 @@ fn main() -> n3ic::Result<()> {
     let mut inferences = 0u64;
     for _ in 0..n_packets {
         let p = gen.next_packet();
-        let (stats, _new, pkts) = flows.update(&p);
-        if pkts == trigger_pkts {
-            let x = FeatureVector::from_stats(stats).pack();
-            let _decision: ShuntDecision = router.route(&x);
-            device_latency.record(router.nic_exec.latency_ns());
-            inferences += 1;
+        if let Some(up) = flows.update(&p) {
+            if up.pkts == trigger_pkts {
+                let x = FeatureVector::from_stats(up.stats).pack();
+                let _decision: ShuntDecision = router.route(&x);
+                device_latency.record(router.nic_exec.latency_ns());
+                inferences += 1;
+            }
         }
         let _ = PacketEvent { packet: p, payload_words: None }; // shape check
     }

@@ -35,7 +35,9 @@ fn main() {
     let mut table = FlowTable::new(1 << 18);
     let mut i = 0usize;
     let r = bench("flow_table_update", || {
-        let c = table.update(std::hint::black_box(&pkts[i & 8191])).2;
+        let c = table
+            .update(std::hint::black_box(&pkts[i & 8191]))
+            .map_or(0, |u| u.pkts);
         i += 1;
         c
     });
@@ -56,8 +58,7 @@ fn main() {
     let mut stats = Default::default();
     for _ in 0..50 {
         let p = gen.next_packet();
-        let (s, _, _) = t.update(&p);
-        stats = s.clone();
+        stats = t.update(&p).unwrap().stats.clone();
     }
     bench("feature_extract_pack", || {
         FeatureVector::from_stats(std::hint::black_box(&stats)).pack()

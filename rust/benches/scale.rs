@@ -1,0 +1,183 @@
+//! `scale` — the paper's headline workload at scale: serving under
+//! million-flow adversarial churn with a flow table capped well below
+//! the live flow count, so eviction runs continuously instead of never.
+//!
+//! Each grid cell drives one closed-loop serve run ([`ChurnGen`]
+//! traffic, `NewFlow` trigger, host executor) and reports:
+//!
+//! * sustained packets/s end-to-end (generation + flow table +
+//!   trigger + inference + sink),
+//! * modeled device latency p50/p99/p999 from the service's
+//!   [`LatencyHistogram`](n3ic::metrics::LatencyHistogram),
+//! * eviction pressure (evictions + aged_out per million packets) and
+//!   final table load factor.
+//!
+//! Modes:
+//!
+//! * default           — full grid: 1M / 4M / 16M live flows × {lru,
+//!                       age} against a 64Ki-slot-capacity table.
+//! * `N3IC_SCALE_GRID=ci` — one bounded 1M-flow cell (the acceptance
+//!                       cell verify.sh records into tracked BENCH.json).
+//! * `N3IC_BENCH_SMOKE=1` — tiny cells, writes BENCH.smoke.json.
+//!
+//! Results merge into the `benches.scale` entry of `BENCH.json`:
+//!
+//! ```text
+//! cd rust && cargo bench --bench scale
+//! ```
+
+use std::time::Instant;
+
+use n3ic::bench::{group, smoke_mode, write_bench_json};
+use n3ic::bnn::BnnModel;
+use n3ic::coordinator::{
+    BackendFactory, OutputSelector, PacketEvent, ServeBuilder, ServiceReport, TriggerCondition,
+};
+use n3ic::json::{obj, Json};
+use n3ic::net::flow::EvictPolicy;
+use n3ic::net::traffic::{CbrSpec, ChurnGen, ChurnSpec};
+
+fn model() -> BnnModel {
+    BnnModel::random("traffic", 256, &[32, 16, 2], 1)
+}
+
+struct Cell {
+    flows: u64,
+    packets: usize,
+    cap: usize,
+    policy: EvictPolicy,
+    policy_name: &'static str,
+}
+
+/// One serve run over freshly generated churn traffic; wall time spans
+/// the whole closed loop so pps is end-to-end, not table-only.
+fn run_cell(cell: &Cell) -> (ServiceReport, f64) {
+    let svc = ServeBuilder::new()
+        .backend(BackendFactory::single("host", model()).unwrap())
+        .trigger(TriggerCondition::NewFlow)
+        .output(OutputSelector::Memory)
+        .flow_capacity(cell.cap)
+        .evict(cell.policy)
+        .build()
+        .unwrap();
+    let mut gen = ChurnGen::new(
+        ChurnSpec::adversarial(CbrSpec { gbps: 40.0, pkt_size: 256 }, cell.flows),
+        7,
+    );
+    let packets = cell.packets;
+    let events = (0..packets).map(move |_| PacketEvent {
+        packet: gen.next_packet(),
+        payload_words: None,
+    });
+    let t0 = Instant::now();
+    let report = svc.run(events).unwrap();
+    (report, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let ci_grid = std::env::var_os("N3IC_SCALE_GRID")
+        .map(|v| v == "ci")
+        .unwrap_or(false);
+    let (mode, cells): (&str, Vec<Cell>) = if smoke_mode() {
+        (
+            "smoke",
+            vec![Cell {
+                flows: 50_000,
+                packets: 60_000,
+                cap: 4_096,
+                policy: EvictPolicy::Lru,
+                policy_name: "lru",
+            }],
+        )
+    } else if ci_grid {
+        (
+            "ci",
+            vec![Cell {
+                flows: 1_000_000,
+                packets: 400_000,
+                cap: 32_768,
+                policy: EvictPolicy::Lru,
+                policy_name: "lru",
+            }],
+        )
+    } else {
+        let mut cells = Vec::new();
+        for flows in [1_000_000u64, 4_000_000, 16_000_000] {
+            for (policy, policy_name) in [
+                (EvictPolicy::Lru, "lru"),
+                (EvictPolicy::Age { max_idle_ns: 200_000.0 }, "age"),
+            ] {
+                cells.push(Cell {
+                    flows,
+                    packets: 2_000_000,
+                    cap: 65_536,
+                    policy,
+                    policy_name,
+                });
+            }
+        }
+        ("full", cells)
+    };
+
+    group(&format!("scale / churn grid ({mode} mode, {} cells)", cells.len()));
+    let mut rows = Vec::new();
+    for cell in &cells {
+        let (report, wall_s) = run_cell(cell);
+        let st = &report.stats;
+        let ft = &st.flow_table;
+        let pps = cell.packets as f64 / wall_s.max(1e-9);
+        let mpkts = cell.packets as f64 / 1e6;
+        // Every cell caps the table below the live flow count, so a
+        // zero eviction count means the bounded table stopped working.
+        assert!(
+            ft.evictions + ft.aged_out > 0,
+            "cap {} < {} live flows but nothing was evicted",
+            cell.cap,
+            cell.flows
+        );
+        println!(
+            "flows={:>9} cap={:>6} evict={:<4} {:>10.0} pps  p50={:>8.2}us p99={:>8.2}us p999={:>8.2}us  evictions={} aged_out={} load={:.3}",
+            cell.flows,
+            cell.cap,
+            cell.policy_name,
+            pps,
+            st.latency.p50_us(),
+            st.latency.p99_us(),
+            st.latency.p999_us(),
+            ft.evictions,
+            ft.aged_out,
+            ft.load_factor(),
+        );
+        let round2 = |v: f64| (v * 100.0).round() / 100.0;
+        rows.push(obj(vec![
+            ("flows", Json::Num(cell.flows as f64)),
+            ("packets", Json::Num(cell.packets as f64)),
+            ("table_cap", Json::Num(cell.cap as f64)),
+            ("evict", Json::Str(cell.policy_name.to_string())),
+            ("sustained_pps", Json::Num(pps.round())),
+            ("p50_us", Json::Num(round2(st.latency.p50_us()))),
+            ("p99_us", Json::Num(round2(st.latency.p99_us()))),
+            ("p999_us", Json::Num(round2(st.latency.p999_us()))),
+            ("triggers", Json::Num(st.triggers as f64)),
+            ("inferences", Json::Num(st.inferences as f64)),
+            ("evictions", Json::Num(ft.evictions as f64)),
+            ("aged_out", Json::Num(ft.aged_out as f64)),
+            (
+                "evictions_per_mpkt",
+                Json::Num(((ft.evictions + ft.aged_out) as f64 / mpkts).round()),
+            ),
+            ("flows_tracked", Json::Num(report.flows_tracked as f64)),
+            ("load_factor", Json::Num(round2(ft.load_factor()))),
+        ]));
+    }
+
+    let fragment = obj(vec![
+        ("smoke", Json::Bool(smoke_mode())),
+        ("mode", Json::Str(mode.to_string())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("scale", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+}

@@ -24,15 +24,26 @@
 //!
 //! Given the same seeded traffic, this staged mode produces
 //! **bit-identical** verdict histograms, trigger counts, inference
-//! counts, and per-flow verdicts to the serial mode, for any worker
-//! count, queue depth, or batch size.  This holds by construction:
+//! counts, eviction counts, and per-flow verdicts to the serial mode,
+//! for any worker count, queue depth, or batch size.  This holds by
+//! construction:
 //!
-//! * packets are sharded by canonical flow hash
-//!   ([`ShardedFlowTable::shard_of`]), so every packet of a flow — both
-//!   directions — visits one stage-1 worker, in arrival order
-//!   (`sync_channel` is FIFO);
+//! * flow state lives in [`FLOW_SHARDS`] fixed logical shards in *both*
+//!   modes: the serial loop owns all of them, and here worker `w` owns
+//!   the shards `l` with `l % workers == w`.  Ingress routes each packet
+//!   to its shard's owner by canonical flow hash
+//!   ([`ShardedFlowTable::shard_of`] over `FLOW_SHARDS`, then
+//!   `% workers`), so every shard-table sees the exact same packet
+//!   subsequence, in arrival order (`sync_channel` is FIFO), for any
+//!   worker count;
+//! * eviction and aging ([`EvictPolicy`](crate::net::flow::EvictPolicy)) are pure
+//!   functions of one shard-table's update sequence on the packet clock
+//!   — with the shard populations fixed above, who gets evicted (and
+//!   therefore which flows re-trigger as new) cannot depend on thread
+//!   scheduling;
 //! * routing ([`RouteLogic`]) and the flow statistics a trigger
-//!   snapshots are functions of that flow's packets only, so cross-flow
+//!   snapshots are functions of that flow's packets only (plus its
+//!   shard-local eviction history, fixed above), so cross-flow
 //!   interleaving cannot change what fires, where it routes, or what
 //!   gets packed;
 //! * every [`InferencePlane`] classifies each packed input bit-exactly
@@ -59,7 +70,7 @@ use std::sync::Arc;
 use std::thread;
 
 use crate::bnn::{EngineStats, VersionTag};
-use crate::net::flow::{FlowTable, ShardedFlowTable};
+use crate::net::flow::{FlowKey, FlowTable, ShardedFlowTable, FLOW_SHARDS};
 
 use super::batcher::BatchSet;
 use super::overload::{
@@ -143,20 +154,22 @@ fn blank_stats() -> ServiceStats {
     }
 }
 
-/// Stage 1+2: flow update, routing/trigger, feature packing — one worker
-/// per flow shard, so this owns its `FlowTable` outright.  With
-/// `admission`, each worker runs its share of the leaky bucket and sheds
-/// triggers locally (shed decisions ride the packet clock, so they stay
-/// deterministic per shard); with `supervisor`, an injected or real
-/// panic in the per-packet compute is retried instead of killing the
-/// shard.
+/// Stage 1+2: flow update, routing/trigger, feature packing — each worker
+/// owns its subset of the [`FLOW_SHARDS`] logical shard tables outright
+/// (shard `l` lives at local index `l / n_workers` of the worker
+/// `l % n_workers`).  With `admission`, each worker runs its share of the
+/// leaky bucket and sheds triggers locally (shed decisions ride the
+/// packet clock, so they stay deterministic per shard); with
+/// `supervisor`, an injected or real panic in the per-packet compute is
+/// retried instead of killing the shard.
 #[allow(clippy::too_many_arguments)]
 fn parse_stage(
     rx: Receiver<PacketEvent>,
     tx: SyncSender<InfMsg>,
     route: RouteLogic,
-    mut flows: FlowTable,
+    mut flows: Vec<FlowTable>,
     worker: usize,
+    n_workers: usize,
     mut admission: Option<WorkerAdmission>,
     supervisor: Option<SupervisorPolicy>,
     faults: Option<FaultPlan>,
@@ -170,9 +183,9 @@ fn parse_stage(
         if let Some(a) = admission.as_mut() {
             a.on_packet(ev.packet.ts_ns);
         }
-        // The canonical key is hashed once more inside `update` after
-        // ingress already hashed it for sharding — 4 multiplies per
-        // packet, accepted so the channel messages stay plain
+        // The canonical key is derived once per worker and passed down
+        // (`update_keyed`); ingress hashed its own copy for routing — an
+        // accepted duplication so the channel messages stay plain
         // `PacketEvent`s instead of carrying (key, hash) everywhere.
         // The fault hook ticks *before* the flow update, so a retried
         // event replays the update exactly once.
@@ -180,13 +193,20 @@ fn parse_stage(
             if let Some(fp) = faults.as_ref() {
                 fp.tick_parse();
             }
-            let (fstats, is_new, pkts) = flows.update(&ev.packet);
+            let (key, fwd) = FlowKey::from_packet(&ev.packet);
+            let shard = ShardedFlowTable::shard_of_key(&key, FLOW_SHARDS);
+            // `None` = untracked (EvictPolicy::Off on a full table):
+            // forwarded without per-flow state, can't trigger — the
+            // counted degradation that replaced the old panic.
+            let Some(up) = flows[shard / n_workers].update_keyed(key, fwd, &ev.packet) else {
+                return Ok(None);
+            };
             // Shared with the serial loop — the determinism contract
             // says the two paths may never diverge.
-            Ok(route.route(&ev.packet, is_new, pkts).map(|r| InfMsg::Flow {
+            Ok(route.route(&ev.packet, up.is_new, up.pkts).map(|r| InfMsg::Flow {
                 route: r,
                 id: flow_id(&ev.packet),
-                packed: select_packed_input(&ev, fstats),
+                packed: select_packed_input(&ev, up.stats),
                 ts_ns: ev.packet.ts_ns,
             }))
         });
@@ -237,7 +257,10 @@ fn parse_stage(
         }
     }
     stats.restarts += restarts;
-    let flows_len = flows.len();
+    let flows_len = flows.iter().map(FlowTable::len).sum();
+    for t in &flows {
+        stats.flow_table.merge(&t.stats_snapshot());
+    }
     StageReport { stats, failure, flows: flows_len, engine: None, health: None }
 }
 
@@ -528,13 +551,25 @@ pub(crate) fn run_staged(
     let (tx_inf, rx_inf) = mpsc::sync_channel::<InfMsg>(depth);
     let (tx_sink, rx_sink) = mpsc::sync_channel::<VerdictMsg>(depth);
 
+    // Flow state: the same FLOW_SHARDS logical shard tables the serial
+    // mode uses, dealt round-robin to workers (worker w owns shards l
+    // with l % workers == w, at local index l / workers).  Fixing the
+    // shard partition — instead of sharding by worker count — is what
+    // keeps eviction, and therefore every verdict, independent of how
+    // many workers run.
+    let mut worker_tables: Vec<Vec<FlowTable>> = (0..workers).map(|_| Vec::new()).collect();
+    for (l, table) in
+        ShardedFlowTable::with_total_capacity(FLOW_SHARDS, svc.flow_capacity, svc.evict)
+            .into_shards()
+            .into_iter()
+            .enumerate()
+    {
+        worker_tables[l % workers].push(table);
+    }
+
     let mut parse_txs = Vec::with_capacity(workers);
     let mut parse_handles = Vec::with_capacity(workers);
-    for (w, table) in ShardedFlowTable::new(workers, svc.flow_capacity)
-        .into_shards()
-        .into_iter()
-        .enumerate()
-    {
+    for (w, tables) in worker_tables.into_iter().enumerate() {
         let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
         let tx_inf = tx_inf.clone();
         let route = svc.route.clone();
@@ -553,7 +588,7 @@ pub(crate) fn run_staged(
         let supervisor = svc.supervisor;
         let faults = svc.faults.clone();
         parse_handles.push(thread::spawn(move || {
-            parse_stage(rx, tx_inf, route, table, w, admission, supervisor, faults)
+            parse_stage(rx, tx_inf, route, tables, w, workers, admission, supervisor, faults)
         }));
         parse_txs.push(tx);
     }
@@ -623,7 +658,9 @@ pub(crate) fn run_staged(
                 }
             }
         }
-        let w = ShardedFlowTable::shard_of(&ev.packet, workers);
+        // Logical shard first, then its owning worker — the shard→worker
+        // map must match the table deal-out above.
+        let w = ShardedFlowTable::shard_of(&ev.packet, FLOW_SHARDS) % workers;
         if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
             failures.push(StageFailure::IngressUnreachable { worker: w });
             break;

@@ -33,7 +33,7 @@ use std::collections::BTreeMap;
 use crate::bnn::{EngineError, RegistryError, VersionTag};
 use crate::metrics::LatencyHistogram;
 use crate::net::features::FeatureVector;
-use crate::net::flow::{FlowStats, FlowTable};
+use crate::net::flow::{EvictPolicy, FlowStats, FlowTableStats, ShardedFlowTable, FLOW_SHARDS};
 use crate::net::packet::Packet;
 use crate::net::traffic::{CbrSpec, TrafficGen};
 
@@ -123,6 +123,11 @@ pub struct ServiceStats {
     /// Per-model accounting on routed (multi-model) backends, keyed by
     /// slot name.  Empty in single-model serving.
     pub per_model: BTreeMap<String, ModelServiceStats>,
+    /// Flow-table degradation accounting (evictions, aged-out flows,
+    /// collision probes, untracked packets, probe histogram, occupancy),
+    /// merged over every shard — and over every worker's shards in the
+    /// pipelined mode.
+    pub flow_table: FlowTableStats,
 }
 
 /// One routed model's share of a run: its verdict histogram plus the
@@ -194,6 +199,7 @@ impl ServiceStats {
             // Snapshots of one shared counter, not partitions of it.
             mine.swaps = mine.swaps.max(m.swaps);
         }
+        self.flow_table.merge(&other.flow_table);
     }
 }
 
@@ -407,6 +413,7 @@ pub struct ServeBuilder {
     workers: usize,
     queue_depth: usize,
     flow_capacity: usize,
+    evict: EvictPolicy,
     log_tags: bool,
     swap_every: u64,
     shed: Option<ShedPolicy>,
@@ -432,6 +439,7 @@ impl ServeBuilder {
             workers: 0,
             queue_depth: 1024,
             flow_capacity: 1 << 16,
+            evict: EvictPolicy::Lru,
             log_tags: true,
             swap_every: 0,
             shed: None,
@@ -493,9 +501,20 @@ impl ServeBuilder {
         self
     }
 
-    /// Flow-table capacity (per worker in the pipelined mode).
+    /// Total flow-table capacity budget for the whole service, split
+    /// evenly over the [`FLOW_SHARDS`] logical shards (the same split in
+    /// the serial and pipelined modes, so eviction behavior — and thus
+    /// every verdict — is independent of the worker count).
     pub fn flow_capacity(mut self, capacity: usize) -> Self {
         self.flow_capacity = capacity;
+        self
+    }
+
+    /// What the flow table does when a probe window fills: LRU
+    /// replacement (default), LRU + idle aging, or the legacy
+    /// no-eviction mode that leaves overflow packets untracked.
+    pub fn evict(mut self, policy: EvictPolicy) -> Self {
+        self.evict = policy;
         self
     }
 
@@ -593,6 +612,19 @@ impl ServeBuilder {
                     .into(),
             });
         }
+        // Workers own fixed logical flow shards; more workers than
+        // shards would leave some workers with no flow state at all and
+        // break the shard→worker routing formula.
+        if self.workers > FLOW_SHARDS {
+            return Err(ServiceError::InvalidConfig {
+                option: "pipeline",
+                reason: format!(
+                    "at most {FLOW_SHARDS} parse workers (one per logical flow shard); \
+                     asked for {}",
+                    self.workers
+                ),
+            });
+        }
         // A fallback model only makes sense on a hot-swap backend, and it
         // must fit every bound slot's wire shape — the registry would
         // reject the publish mid-run otherwise, turning a graceful
@@ -645,6 +677,7 @@ impl ServeBuilder {
             workers: self.workers,
             queue_depth: self.queue_depth,
             flow_capacity: self.flow_capacity,
+            evict: self.evict,
             log_tags: self.log_tags,
             swap_every: self.swap_every,
             shed: self.shed,
@@ -666,6 +699,7 @@ pub struct Service {
     pub(crate) workers: usize,
     pub(crate) queue_depth: usize,
     pub(crate) flow_capacity: usize,
+    pub(crate) evict: EvictPolicy,
     pub(crate) log_tags: bool,
     pub(crate) swap_every: u64,
     pub(crate) shed: Option<ShedPolicy>,
@@ -723,8 +757,13 @@ impl Service {
         } else {
             None
         };
-        let mut core =
-            SerialCore::unbatched(self.plane, self.route, self.output, self.flow_capacity);
+        let mut core = SerialCore::unbatched(
+            self.plane,
+            self.route,
+            self.output,
+            self.flow_capacity,
+            self.evict,
+        );
         if self.batch > 0 {
             core.set_batching(self.batch, self.max_wait_ns);
         }
@@ -776,7 +815,10 @@ pub(crate) struct SerialCore {
     plane: Box<dyn InferencePlane>,
     route: RouteLogic,
     output: OutputSelector,
-    flows: FlowTable,
+    /// Flow state in [`FLOW_SHARDS`] logical shards — the same partition
+    /// the pipelined runtime splits over its workers, so eviction (which
+    /// depends on which flows share a table) is identical in both modes.
+    flows: ShardedFlowTable,
     batchers: Option<BatchSet<PendingFlow>>,
     stats: ServiceStats,
     sink: OutputSink,
@@ -807,6 +849,7 @@ impl SerialCore {
         route: RouteLogic,
         output: OutputSelector,
         flow_capacity: usize,
+        evict: EvictPolicy,
     ) -> Self {
         let n_classes = plane.n_classes();
         let names = plane.route_names().to_vec();
@@ -816,7 +859,7 @@ impl SerialCore {
             plane,
             route,
             output,
-            flows: FlowTable::new(flow_capacity),
+            flows: ShardedFlowTable::with_total_capacity(FLOW_SHARDS, flow_capacity, evict),
             batchers: None,
             stats: ServiceStats {
                 classes: vec![0; n_classes],
@@ -897,8 +940,13 @@ impl SerialCore {
                 .map_or(0.0, |t| ev.packet.ts_ns - t);
             ctl.on_packet(ev.packet.ts_ns, queued_ns);
         }
-        let (fstats, is_new, pkts) = self.flows.update(&ev.packet);
-        let Some(route) = self.route.route(&ev.packet, is_new, pkts) else {
+        // `None` = untracked (EvictPolicy::Off on a full table): the
+        // packet is forwarded without per-flow state and can't trigger —
+        // the counted degradation that replaced the old panic.
+        let Some(up) = self.flows.update(&ev.packet) else {
+            return;
+        };
+        let Some(route) = self.route.route(&ev.packet, up.is_new, up.pkts) else {
             return;
         };
         self.stats.triggers += 1;
@@ -913,7 +961,7 @@ impl SerialCore {
                 return;
             }
         }
-        let packed = select_packed_input(ev, fstats);
+        let packed = select_packed_input(ev, up.stats);
         let id = flow_id(&ev.packet);
         if self.batchers.is_some() {
             let full = self
@@ -1030,6 +1078,7 @@ impl SerialCore {
         let engine = self.plane.engine_stats();
         let health = self.plane.health_snapshot();
         let flows_tracked = self.flows.len();
+        self.stats.flow_table = self.flows.stats_snapshot();
         let degradation =
             self.overload.take().map_or_else(Vec::new, OverloadControl::into_timeline);
         ServiceReport {

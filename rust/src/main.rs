@@ -19,7 +19,8 @@ use n3ic::coordinator::{
     BackendFactory, DegradeSpec, InferencePlane, ModelRouter, OutputSelector, PacketEvent,
     ServeBuilder, ServiceReport, ShedPolicy, TriggerCondition, STAGE_LINKS,
 };
-use n3ic::net::traffic::{CbrSpec, TrafficGen};
+use n3ic::net::flow::EvictPolicy;
+use n3ic::net::traffic::{CbrSpec, ChurnGen, ChurnSpec, TrafficGen};
 
 const USAGE: &str = "\
 repro — N3IC: NN inference in the NIC data plane
@@ -38,6 +39,22 @@ COMMANDS:
                              loop on the same seeded traffic)
                --queue-depth N (with --pipeline: bounded stage queues;
                                 0 is rejected — it would deadlock)
+               --table-cap N (total flow-table capacity budget, split
+                              over the fixed logical shards; default
+                              65536 — set it below --flows to exercise
+                              eviction)
+               --evict lru|age:NS|off
+                             (full-probe-window behavior: replace the
+                              stalest flow in the window [default],
+                              same plus aging out flows idle longer
+                              than NS nanoseconds, or never evict and
+                              leave overflow packets untracked)
+               --churn FRAC  (0.0-1.0: drive adversarial churn traffic
+                              instead of the fixed flow population —
+                              FRAC of packets are one-shot never-
+                              repeating flows, the rest a heavy-tailed
+                              working set of --flows flows that
+                              replaces itself as budgets drain)
                --shed-policy MAX_US[:RESUME_US] | off
                              (admission control: shed triggered work
                               once the modeled backlog passes MAX_US
@@ -181,6 +198,9 @@ fn main() -> n3ic::Result<()> {
             "shards",
             "pipeline",
             "queue-depth",
+            "table-cap",
+            "evict",
+            "churn",
             "swap-every",
             "shed-policy",
             "degrade",
@@ -300,6 +320,9 @@ struct ServeKnobs {
     shards: usize,
     pipeline: usize,
     queue_depth: usize,
+    table_cap: usize,
+    evict: EvictPolicy,
+    churn: f64,
     swap_every: u64,
     shed: Option<ShedPolicy>,
     degrade: bool,
@@ -328,6 +351,25 @@ fn parse_shed_policy(v: &str) -> Result<Option<ShedPolicy>, String> {
     Ok(Some(ShedPolicy::new(max_us * 1e3, resume_us * 1e3)))
 }
 
+/// Parse `--evict lru|age:NS|off` (NS = max idle nanoseconds).
+fn parse_evict(v: &str) -> Result<EvictPolicy, String> {
+    match v {
+        "lru" => Ok(EvictPolicy::Lru),
+        "off" => Ok(EvictPolicy::Off),
+        other => {
+            let bad = || format!("--evict {other:?} is not lru|age:NS|off");
+            let Some(ns) = other.strip_prefix("age:") else {
+                return Err(bad());
+            };
+            let max_idle_ns: f64 = ns.parse().map_err(|_| bad())?;
+            if max_idle_ns.is_nan() || max_idle_ns <= 0.0 {
+                return Err(bad());
+            }
+            Ok(EvictPolicy::Age { max_idle_ns })
+        }
+    }
+}
+
 impl ServeKnobs {
     fn parse(args: &Args) -> Result<Self, String> {
         let queue_depth = args.get_u64("queue-depth", 1024)? as usize;
@@ -339,6 +381,13 @@ impl ServeKnobs {
             "off" => false,
             other => return Err(format!("--degrade {other:?} is not on|off")),
         };
+        let churn_s = args.get("churn", "0");
+        let churn: f64 = churn_s
+            .parse()
+            .map_err(|_| format!("--churn {churn_s:?} is not a number"))?;
+        if !(0.0..=1.0).contains(&churn) {
+            return Err(format!("--churn {churn} is outside 0.0..=1.0"));
+        }
         Ok(Self {
             packets: args.get_u64("packets", 1_000_000)?,
             flows: args.get_u64("flows", 100_000)?,
@@ -348,6 +397,9 @@ impl ServeKnobs {
             shards: args.get_u64("shards", 1)? as usize,
             pipeline: args.get_u64("pipeline", 0)? as usize,
             queue_depth,
+            table_cap: args.get_u64("table-cap", 1 << 16)? as usize,
+            evict: parse_evict(&args.get("evict", "lru"))?,
+            churn,
             swap_every: args.get_u64("swap-every", 0)?,
             shed: parse_shed_policy(&args.get("shed-policy", "off"))?,
             degrade,
@@ -502,17 +554,37 @@ fn run_and_report(
         // since it needs a shape-matched model per registry slot.
         builder = builder.degrade(DegradeSpec::trigger_only());
     }
-    let svc = builder.build().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let svc = builder
+        .flow_capacity(knobs.table_cap)
+        .evict(knobs.evict)
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let mut gen = TrafficGen::new(CbrSpec { gbps: 40.0, pkt_size: 256 }, knobs.flows, 7);
+    // Seeded traffic (seed 7 in both modes: reruns are bit-identical).
+    // `--churn 0` keeps the fixed `--flows`-sized population; a nonzero
+    // fraction switches to the adversarial churn generator, whose
+    // distinct-flow count grows without bound over the run.
+    let cbr = CbrSpec { gbps: 40.0, pkt_size: 256 };
     let packets = knobs.packets;
-    let t0 = std::time::Instant::now();
-    let report: ServiceReport = svc
-        .run((0..packets).map(|_| PacketEvent {
+    let events: Box<dyn Iterator<Item = PacketEvent>> = if knobs.churn > 0.0 {
+        let spec = ChurnSpec {
+            churn_frac: knobs.churn,
+            ..ChurnSpec::adversarial(cbr, knobs.flows)
+        };
+        let mut gen = ChurnGen::new(spec, 7);
+        Box::new((0..packets).map(move |_| PacketEvent {
             packet: gen.next_packet(),
             payload_words: None,
         }))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    } else {
+        let mut gen = TrafficGen::new(cbr, knobs.flows, 7);
+        Box::new((0..packets).map(move |_| PacketEvent {
+            packet: gen.next_packet(),
+            payload_words: None,
+        }))
+    };
+    let t0 = std::time::Instant::now();
+    let report: ServiceReport = svc.run(events).map_err(|e| anyhow::anyhow!("{e}"))?;
     let wall = t0.elapsed();
 
     let st = &report.stats;
@@ -528,6 +600,17 @@ fn run_and_report(
     );
     println!("packets          : {}", st.packets);
     println!("flows tracked    : {}", report.flows_tracked);
+    // key=value form on one line so scripts can grep a single counter.
+    let ft = &st.flow_table;
+    println!(
+        "flow table       : evictions={} aged_out={} collision_probes={} untracked={} \
+         load={:.3}",
+        ft.evictions,
+        ft.aged_out,
+        ft.collision_probes,
+        ft.untracked,
+        ft.load_factor()
+    );
     println!("nn inferences    : {}", st.inferences);
     println!("class histogram  : {:?}", st.classes);
     if knobs.shed.is_some() || st.sheds > 0 {
@@ -565,6 +648,12 @@ fn run_and_report(
         }
     }
     println!("device p95 lat   : {:.2} us (modeled)", st.latency.p95_us());
+    println!(
+        "device lat tail  : p50={:.2} p99={:.2} p999={:.2} us (modeled)",
+        st.latency.p50_us(),
+        st.latency.p99_us(),
+        st.latency.p999_us()
+    );
     if knobs.pipeline > 0 {
         for (link, n) in STAGE_LINKS.iter().zip(&st.stage_blocked) {
             println!("backpressure     : {link:18} {n} blocked sends");

@@ -93,6 +93,10 @@ impl LatencyHistogram {
         self.percentile_ns(99.0) / 1000.0
     }
 
+    pub fn p999_us(&self) -> f64 {
+        self.percentile_ns(99.9) / 1000.0
+    }
+
     pub fn merge(&mut self, other: &Self) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;

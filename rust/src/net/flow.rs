@@ -4,8 +4,71 @@
 //! inter-arrival times, direction ratios, port/flag information) so the
 //! feature extractor can build the BNN's 256-bit input without touching
 //! payload bytes ("we assumed encrypted").
+//!
+//! ## Bounded memory (the paper's headline workload)
+//!
+//! The paper serves "millions of network flows per second" from a table
+//! that physically cannot hold millions of live entries — NIC SRAM is
+//! bounded, so the table must *replace*, never grow and never die.  This
+//! module adopts the contract both in-band co-processor designs assume
+//! (Inference-to-complete, In-network Neural Networks): open addressing
+//! with a **bounded probe window** and deterministic replacement on the
+//! packet clock:
+//!
+//! * [`EvictPolicy::Lru`] — when a key's [`PROBE_WINDOW`] is exhausted
+//!   by live flows, the entry with the oldest `last_ts_ns` in the window
+//!   is replaced (ties resolve to probe order, so replacement is a pure
+//!   function of table state — rerun-identical).
+//! * [`EvictPolicy::Age`] — LRU replacement plus a periodic sweep (every
+//!   [`SWEEP_INTERVAL`] updates of the table, on its own update counter)
+//!   that removes flows idle longer than `max_idle_ns` of packet time.
+//! * [`EvictPolicy::Off`] — the legacy shape: probe the whole table, and
+//!   when it is completely full leave the packet **untracked** (the old
+//!   code panicked here, which made the million-flow workload literally
+//!   unrunnable).
+//!
+//! Every degradation is counted in [`FlowTableStats`] (evictions,
+//! aged-out flows, collision probes, untracked packets, a probe-length
+//! histogram), which merges key-wise across shards and workers like the
+//! rest of the service counters.
 
 use super::packet::{Packet, Proto};
+
+/// Number of logical flow shards both runtimes partition flow state
+/// into, regardless of worker count.  The serial loop owns all of them;
+/// a pipelined run with `w` workers gives worker `i` the shards `l` with
+/// `l % w == i`.  Because eviction makes per-flow state depend on table
+/// *co-residents*, the determinism contract (pipelined ≡ serial for any
+/// worker count) only survives if every run partitions flows into the
+/// same tables — this constant is that partition.  Worker counts above
+/// `FLOW_SHARDS` are rejected at build time.
+pub const FLOW_SHARDS: usize = 64;
+
+/// Bounded probe walk under [`EvictPolicy::Lru`] / [`EvictPolicy::Age`]:
+/// a lookup or insert touches at most this many slots — the SRAM-style
+/// worst-case bound the data plane needs — and a full window triggers
+/// replacement instead of further probing.
+pub const PROBE_WINDOW: usize = 16;
+
+/// Under [`EvictPolicy::Age`], how many `update` calls a table absorbs
+/// between idle-flow sweeps.  The cadence rides the table's own update
+/// counter (not wall time), so serial and pipelined runs — whose tables
+/// see identical per-shard update subsequences — sweep identically.
+pub const SWEEP_INTERVAL: u64 = 512;
+
+/// Replacement behavior once a key's probe walk finds neither its entry
+/// nor a free slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EvictPolicy {
+    /// Replace the oldest-`last_ts_ns` entry in the probe window.
+    Lru,
+    /// LRU replacement plus periodic sweeps removing flows idle longer
+    /// than `max_idle_ns` on the packet clock.
+    Age { max_idle_ns: f64 },
+    /// Never replace: probe the whole table, and leave the packet
+    /// untracked (no stats, no trigger) when the table is full.
+    Off,
+}
 
 /// Bidirectional 5-tuple key (canonicalized so both directions map to one
 /// flow; direction is recovered per packet).
@@ -139,25 +202,117 @@ impl FlowStats {
     }
 }
 
+/// Degradation and collision accounting of one or more [`FlowTable`]s.
+/// Merges key-wise (counters add; `occupied`/`slots` add so the load
+/// factor of a merged snapshot is the aggregate over all tables), the
+/// same way the rest of [`ServiceStats`](crate::coordinator::ServiceStats)
+/// folds across shards and workers.
+///
+/// The pre-eviction code kept one `probe_overflows` counter that would
+/// have conflated two different events once replacement landed: a probe
+/// walk lengthened by *hash collisions* between live flows, and a walk
+/// that ended in *replacement* of an evicted slot.  They are split here:
+/// `collision_probes` counts only updates that resolved (hit or free
+/// slot) after at least one collision probe, `evictions` counts
+/// window-exhausted walks that displaced a flow — an update increments
+/// exactly one of them (or neither, on a direct home-slot hit).  The
+/// collision test in this module asserts on `collision_probes`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlowTableStats {
+    /// Live flows displaced by LRU/Age window replacement.
+    pub evictions: u64,
+    /// Idle flows removed by an [`EvictPolicy::Age`] sweep.
+    pub aged_out: u64,
+    /// Updates that resolved after probing past at least one live flow
+    /// with a different key (hash collisions; excludes eviction walks).
+    pub collision_probes: u64,
+    /// Packets left untracked: [`EvictPolicy::Off`] with a full table.
+    pub untracked: u64,
+    /// Probe-walk length histogram: bucket `d` counts updates that
+    /// probed `d` slots past the home slot; the last bucket absorbs
+    /// walks of [`PROBE_WINDOW`] or more (window-exhausted or the
+    /// unbounded `Off` walk).  Buckets sum to the table's update count.
+    pub probe_hist: [u64; PROBE_WINDOW + 1],
+    /// Live flows at snapshot time.
+    pub occupied: u64,
+    /// Slot capacity at snapshot time.
+    pub slots: u64,
+}
+
+impl FlowTableStats {
+    /// Fold another table's (or worker's) counters into this one.
+    pub fn merge(&mut self, other: &FlowTableStats) {
+        self.evictions += other.evictions;
+        self.aged_out += other.aged_out;
+        self.collision_probes += other.collision_probes;
+        self.untracked += other.untracked;
+        for (a, b) in self.probe_hist.iter_mut().zip(&other.probe_hist) {
+            *a += b;
+        }
+        self.occupied += other.occupied;
+        self.slots += other.slots;
+    }
+
+    /// Occupied fraction of the snapshotted slots (0 when no snapshot).
+    pub fn load_factor(&self) -> f64 {
+        if self.slots == 0 {
+            0.0
+        } else {
+            self.occupied as f64 / self.slots as f64
+        }
+    }
+}
+
+/// One flow-table update's outcome: the refreshed stats plus what the
+/// insert did to the table.
+#[derive(Debug)]
+pub struct FlowUpdate<'a> {
+    /// The flow's statistics after absorbing this packet.
+    pub stats: &'a FlowStats,
+    /// This packet started a new table entry (first packet of the flow
+    /// — or of its *return*, if it was evicted earlier and came back).
+    pub is_new: bool,
+    /// Packet count after the update (`1` when `is_new`).
+    pub pkts: u32,
+    /// The insert displaced a live flow (LRU/Age window replacement).
+    pub evicted: bool,
+}
+
 /// Open-addressing flow table sized like NIC SRAM tables; the paper's
-/// per-packet work is parse + lookup + counter update.
+/// per-packet work is parse + lookup + counter update.  Bounded memory:
+/// see the module docs for the probe-window/eviction contract.
 pub struct FlowTable {
     slots: Vec<Option<(FlowKey, FlowStats)>>,
     mask: usize,
+    policy: EvictPolicy,
     pub occupied: usize,
-    /// Lookups that probed more than one slot (collision metric).
-    pub probe_overflows: u64,
+    /// Degradation counters (`occupied`/`slots` stay zero here; they are
+    /// filled per snapshot by [`stats_snapshot`](Self::stats_snapshot)).
+    counters: FlowTableStats,
+    /// Updates absorbed — drives the [`SWEEP_INTERVAL`] aging cadence.
+    updates: u64,
 }
 
 impl FlowTable {
-    /// `capacity` is rounded up to a power of two.
+    /// `capacity` is rounded up to a power of two; the table keeps the
+    /// legacy [`EvictPolicy::Off`] behavior (minus the old full-table
+    /// panic).  Use [`with_policy`](Self::with_policy) for eviction.
     pub fn new(capacity: usize) -> Self {
+        Self::with_policy(capacity, EvictPolicy::Off)
+    }
+
+    /// `capacity` is rounded up to a power of two (≥ 16) and doubled
+    /// into slots, as before; `policy` governs what happens when a probe
+    /// window (or, under `Off`, the whole table) is exhausted.
+    pub fn with_policy(capacity: usize, policy: EvictPolicy) -> Self {
         let cap = capacity.next_power_of_two().max(16);
         Self {
             slots: (0..cap * 2).map(|_| None).collect(),
             mask: cap * 2 - 1,
+            policy,
             occupied: 0,
-            probe_overflows: 0,
+            counters: FlowTableStats::default(),
+            updates: 0,
         }
     }
 
@@ -166,28 +321,89 @@ impl FlowTable {
         key.hash64() as usize
     }
 
-    /// Update stats for a packet; returns (stats snapshot ref, is_new_flow,
-    /// packet count after update).
-    pub fn update(&mut self, p: &Packet) -> (&FlowStats, bool, u32) {
+    /// Probe bound for this policy: the bounded window under eviction,
+    /// the whole table under `Off`.
+    #[inline]
+    fn window(&self) -> usize {
+        match self.policy {
+            EvictPolicy::Off => self.slots.len(),
+            _ => PROBE_WINDOW.min(self.slots.len()),
+        }
+    }
+
+    /// Update stats for a packet.  Returns `None` only under
+    /// [`EvictPolicy::Off`] when the table is full and the key absent —
+    /// the packet is counted as untracked and forwarded without state
+    /// (degrade, don't die).
+    pub fn update(&mut self, p: &Packet) -> Option<FlowUpdate<'_>> {
         let (key, fwd) = FlowKey::from_packet(p);
-        let mut idx = Self::hash(&key) & self.mask;
-        let mut probes = 0;
-        loop {
-            match &self.slots[idx] {
-                Some((k, _)) if *k == key => break,
-                None => break,
-                _ => {
-                    idx = (idx + 1) & self.mask;
-                    probes += 1;
-                    if probes > self.mask {
-                        panic!("flow table full");
-                    }
-                }
+        self.update_keyed(key, fwd, p)
+    }
+
+    /// [`update`](Self::update) for callers that already canonicalized
+    /// the key (the sharded table and the pipelined ingress hash once
+    /// per packet and pass the key down instead of re-deriving it).
+    pub fn update_keyed(&mut self, key: FlowKey, fwd: bool, p: &Packet) -> Option<FlowUpdate<'_>> {
+        self.updates += 1;
+        if let EvictPolicy::Age { max_idle_ns } = self.policy {
+            if self.updates % SWEEP_INTERVAL == 0 {
+                self.sweep(p.ts_ns, max_idle_ns);
             }
         }
-        if probes > 0 {
-            self.probe_overflows += 1;
+        let home = Self::hash(&key) & self.mask;
+        let window = self.window();
+        let mut found = None;
+        let mut probes = window;
+        for d in 0..window {
+            let idx = (home + d) & self.mask;
+            match &self.slots[idx] {
+                Some((k, _)) if *k == key => {
+                    found = Some(idx);
+                    probes = d;
+                    break;
+                }
+                None => {
+                    found = Some(idx);
+                    probes = d;
+                    break;
+                }
+                Some(_) => {}
+            }
         }
+        self.counters.probe_hist[probes.min(PROBE_WINDOW)] += 1;
+        let (idx, evicted) = match found {
+            Some(idx) => {
+                if probes > 0 {
+                    self.counters.collision_probes += 1;
+                }
+                (idx, false)
+            }
+            None => {
+                if matches!(self.policy, EvictPolicy::Off) {
+                    self.counters.untracked += 1;
+                    return None;
+                }
+                // Deterministic replacement: the stalest entry in the
+                // window (oldest last_ts_ns; ties resolve to probe
+                // order) — a pure function of table state, so reruns
+                // and the pipelined runtime evict identically.
+                let mut victim = home;
+                let mut oldest = f64::INFINITY;
+                for d in 0..window {
+                    let i = (home + d) & self.mask;
+                    if let Some((_, s)) = &self.slots[i] {
+                        if s.last_ts_ns < oldest {
+                            oldest = s.last_ts_ns;
+                            victim = i;
+                        }
+                    }
+                }
+                self.counters.evictions += 1;
+                self.slots[victim] = None;
+                self.occupied -= 1;
+                (victim, true)
+            }
+        };
         let is_new = self.slots[idx].is_none();
         if is_new {
             self.slots[idx] = Some((key, FlowStats::default()));
@@ -196,17 +412,82 @@ impl FlowTable {
         let entry = self.slots[idx].as_mut().unwrap();
         entry.1.update(p, fwd);
         let pkts = entry.1.pkts;
-        (&self.slots[idx].as_ref().unwrap().1, is_new, pkts)
+        Some(FlowUpdate {
+            stats: &self.slots[idx].as_ref().unwrap().1,
+            is_new,
+            pkts,
+            evicted,
+        })
     }
 
+    /// Bounded lookup: probes at most [`window`](Self::window) slots and
+    /// returns `None` when the key is absent — including on a completely
+    /// full table, where the old unbounded walk spun forever.
     pub fn get(&self, key: &FlowKey) -> Option<&FlowStats> {
-        let mut idx = Self::hash(key) & self.mask;
-        loop {
+        let home = Self::hash(key) & self.mask;
+        for d in 0..self.window() {
+            let idx = (home + d) & self.mask;
             match &self.slots[idx] {
                 Some((k, s)) if k == key => return Some(s),
                 None => return None,
-                _ => idx = (idx + 1) & self.mask,
+                Some(_) => {}
             }
+        }
+        None
+    }
+
+    /// Remove every flow idle longer than `max_idle_ns` as of `now_ns`.
+    /// Deletions backward-shift later entries in the probe chain
+    /// (standard linear-probing hole fill), so surviving flows stay
+    /// reachable within their bounded window.
+    fn sweep(&mut self, now_ns: f64, max_idle_ns: f64) {
+        for i in 0..self.slots.len() {
+            // A removal can shift a later entry into slot i; re-check it
+            // until it holds a live flow (each pass removes one entry,
+            // so this terminates).  An idle entry shifted *behind* the
+            // scan survives until the next sweep — harmless, and still
+            // deterministic.
+            while let Some((_, s)) = &self.slots[i] {
+                if now_ns - s.last_ts_ns > max_idle_ns {
+                    self.remove_at(i);
+                    self.counters.aged_out += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Empty slot `i` and backward-shift the probe chain into the hole,
+    /// so no surviving entry ends up separated from its home slot by an
+    /// empty one (which would make it unreachable to the bounded `get`).
+    fn remove_at(&mut self, mut i: usize) {
+        self.slots[i] = None;
+        self.occupied -= 1;
+        let mut j = i;
+        // Bounded to one full cycle: on a table with no other empty slot
+        // the chain scan has no terminator, and an unbounded walk would
+        // spin — the exact failure mode this module exists to remove.
+        for _ in 0..self.slots.len() {
+            j = (j + 1) & self.mask;
+            let Some((k, _)) = &self.slots[j] else { break };
+            let home = Self::hash(k) & self.mask;
+            // Entry at j may fill the hole at i iff its home lies
+            // cyclically outside (i, j] — the standard deletion rule.
+            if (j.wrapping_sub(home) & self.mask) >= (j.wrapping_sub(i) & self.mask) {
+                self.slots[i] = self.slots[j].take();
+                i = j;
+            }
+        }
+    }
+
+    /// Degradation counters plus an occupancy snapshot (live flows /
+    /// slot capacity, for the load factor).
+    pub fn stats_snapshot(&self) -> FlowTableStats {
+        FlowTableStats {
+            occupied: self.occupied as u64,
+            slots: self.slots.len() as u64,
+            ..self.counters.clone()
         }
     }
 
@@ -237,12 +518,28 @@ pub struct ShardedFlowTable {
 }
 
 impl ShardedFlowTable {
-    /// `n_shards` tables (clamped to ≥ 1) of `capacity_per_shard` each.
+    /// `n_shards` tables (clamped to ≥ 1) of `capacity_per_shard` each,
+    /// with the legacy no-eviction policy.
     pub fn new(n_shards: usize, capacity_per_shard: usize) -> Self {
+        Self::with_policy(n_shards, capacity_per_shard, EvictPolicy::Off)
+    }
+
+    /// `n_shards` tables of `capacity_per_shard` each under `policy`.
+    pub fn with_policy(n_shards: usize, capacity_per_shard: usize, policy: EvictPolicy) -> Self {
         let n = n_shards.max(1);
         Self {
-            shards: (0..n).map(|_| FlowTable::new(capacity_per_shard)).collect(),
+            shards: (0..n)
+                .map(|_| FlowTable::with_policy(capacity_per_shard, policy))
+                .collect(),
         }
+    }
+
+    /// Split a *total* capacity budget evenly over `n_shards` tables —
+    /// the serving runtimes' constructor, so `flow_capacity` means one
+    /// budget for the whole service rather than per-table.
+    pub fn with_total_capacity(n_shards: usize, total_capacity: usize, policy: EvictPolicy) -> Self {
+        let n = n_shards.max(1);
+        Self::with_policy(n, total_capacity.div_ceil(n), policy)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -267,14 +564,26 @@ impl ShardedFlowTable {
     }
 
     /// Route a packet to its shard and update that shard's statistics;
-    /// same contract as [`FlowTable::update`].
-    pub fn update(&mut self, p: &Packet) -> (&FlowStats, bool, u32) {
-        let s = Self::shard_of(p, self.shards.len());
-        self.shards[s].update(p)
+    /// same contract as [`FlowTable::update`].  The key is canonicalized
+    /// exactly once: shard choice and the in-table probe share it (the
+    /// old path re-derived it inside the shard — double work per packet).
+    pub fn update(&mut self, p: &Packet) -> Option<FlowUpdate<'_>> {
+        let (key, fwd) = FlowKey::from_packet(p);
+        let s = Self::shard_of_key(&key, self.shards.len());
+        self.shards[s].update_keyed(key, fwd, p)
     }
 
     pub fn get(&self, key: &FlowKey) -> Option<&FlowStats> {
         self.shards[Self::shard_of_key(key, self.shards.len())].get(key)
+    }
+
+    /// Degradation counters + occupancy, merged over every shard.
+    pub fn stats_snapshot(&self) -> FlowTableStats {
+        let mut out = FlowTableStats::default();
+        for s in &self.shards {
+            out.merge(&s.stats_snapshot());
+        }
+        out
     }
 
     /// Live flows across all shards.
@@ -287,7 +596,7 @@ impl ShardedFlowTable {
     }
 
     /// Hand the partitions to per-shard owners (the pipeline's stage-1
-    /// workers take one table each).
+    /// workers take every `workers`-th table each).
     pub fn into_shards(self) -> Vec<FlowTable> {
         self.shards
     }
@@ -330,10 +639,10 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let mut t = FlowTable::new(64);
-        let (_, new1, c1) = t.update(&pkt(1, 10, 0.0, 100));
-        assert!(new1 && c1 == 1);
-        let (_, new2, c2) = t.update(&pkt(1, 10, 1000.0, 300));
-        assert!(!new2 && c2 == 2);
+        let u = t.update(&pkt(1, 10, 0.0, 100)).unwrap();
+        assert!(u.is_new && u.pkts == 1 && !u.evicted);
+        let u = t.update(&pkt(1, 10, 1000.0, 300)).unwrap();
+        assert!(!u.is_new && u.pkts == 2);
         let (key, _) = FlowKey::from_packet(&pkt(1, 10, 0.0, 0));
         let s = t.get(&key).unwrap();
         assert_eq!(s.pkts, 2);
@@ -345,6 +654,10 @@ mod tests {
         assert_eq!(t.len(), 1);
     }
 
+    /// The collision metric after the split: this test asserts on
+    /// `collision_probes` (walks lengthened by live same-table flows),
+    /// which under `Off` can never be polluted by evicted-slot reuse —
+    /// `evictions` stays 0 by construction.
     #[test]
     fn many_flows_no_collision_loss() {
         let mut t = FlowTable::new(4096);
@@ -353,6 +666,131 @@ mod tests {
         }
         assert_eq!(t.len(), 3000);
         assert_eq!(t.iter().count(), 3000);
+        let st = t.stats_snapshot();
+        // 3000 keys into 8192 slots: birthday collisions are certain.
+        assert!(st.collision_probes > 0);
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.untracked, 0);
+        // Every update lands in exactly one probe-length bucket.
+        assert_eq!(st.probe_hist.iter().sum::<u64>(), 3000);
+    }
+
+    /// Satellite regression: a full table must answer a missing-key
+    /// lookup with `None` (the old `get` probe loop had no terminator
+    /// and spun forever) and an update must degrade to untracked (the
+    /// old `update` panicked).
+    #[test]
+    fn full_table_get_returns_none_and_update_degrades() {
+        // new(16) → 32 slots, EvictPolicy::Off.
+        let mut t = FlowTable::new(16);
+        let mut untracked_seen = false;
+        for i in 0..200u32 {
+            match t.update(&pkt(1000 + i, 7, i as f64, 64)) {
+                Some(u) => assert!(!u.evicted),
+                None => untracked_seen = true,
+            }
+        }
+        assert!(untracked_seen, "200 distinct flows must overflow 32 slots");
+        assert_eq!(t.len(), 32, "Off fills every slot, then stops");
+        let st = t.stats_snapshot();
+        assert_eq!(st.untracked + t.len() as u64, 200);
+        assert_eq!(st.evictions, 0);
+        // Missing key on the full table: bounded walk, None, no spin.
+        let (missing, _) = FlowKey::from_packet(&pkt(9_999_999, 1, 0.0, 0));
+        assert!(t.get(&missing).is_none());
+        // Present keys still resolve.
+        let found = t.iter().count();
+        assert_eq!(found, 32);
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic_and_counted() {
+        let run = || {
+            let mut t = FlowTable::with_policy(16, EvictPolicy::Lru);
+            let mut evicted_flag_seen = false;
+            for i in 0..500u32 {
+                let u = t.update(&pkt(i, (i % 3000) as u16, i as f64, 64)).unwrap();
+                evicted_flag_seen |= u.evicted;
+            }
+            (t.stats_snapshot(), evicted_flag_seen)
+        };
+        let (a, saw_evicted) = run();
+        assert!(a.evictions > 0, "500 flows must thrash 32 slots");
+        assert!(saw_evicted);
+        assert_eq!(a.untracked, 0, "eviction policies never drop updates");
+        assert!(a.occupied <= 32);
+        assert_eq!(a.probe_hist.iter().sum::<u64>(), 500);
+        // Pure function of the input stream: rerun-identical.
+        let (b, _) = run();
+        assert_eq!(a, b);
+    }
+
+    /// Satellite behavior: an evicted flow that returns is a *new* flow
+    /// — stats reset, `is_new` fires again (so `NewFlow`/`EveryNPackets`
+    /// triggers re-arm naturally).
+    #[test]
+    fn evicted_flow_returns_as_new() {
+        let mut t = FlowTable::with_policy(16, EvictPolicy::Lru);
+        let flow_a = |ts: f64| pkt(1, 1, ts, 64);
+        for k in 0..5 {
+            t.update(&flow_a(k as f64));
+        }
+        let (key_a, _) = FlowKey::from_packet(&flow_a(0.0));
+        assert_eq!(t.get(&key_a).unwrap().pkts, 5);
+        // Thrash with newer distinct flows until A (the oldest entry in
+        // any window that covers it) is displaced.
+        let mut i = 0u32;
+        while t.get(&key_a).is_some() {
+            i += 1;
+            assert!(i < 100_000, "flow A was never evicted");
+            t.update(&pkt(1000 + i, 2, 10.0 + i as f64, 64));
+        }
+        assert!(t.stats_snapshot().evictions > 0);
+        let u = t.update(&flow_a(1e9)).unwrap();
+        assert!(u.is_new, "a returning evicted flow restarts as new");
+        assert_eq!(u.pkts, 1, "its statistics restart from zero");
+    }
+
+    #[test]
+    fn aging_sweep_removes_idle_flows() {
+        let mut t = FlowTable::with_policy(16, EvictPolicy::Age { max_idle_ns: 1000.0 });
+        t.update(&pkt(1, 1, 0.0, 64));
+        let (key_a, _) = FlowKey::from_packet(&pkt(1, 1, 0.0, 0));
+        let (key_b, _) = FlowKey::from_packet(&pkt(2, 2, 0.0, 0));
+        // Keep flow B hot past a sweep boundary; A sits idle at ts 0.
+        for i in 0..(SWEEP_INTERVAL + 2) {
+            t.update(&pkt(2, 2, 5000.0 + i as f64, 64));
+        }
+        assert!(t.get(&key_a).is_none(), "idle flow A must age out");
+        assert!(t.get(&key_b).is_some(), "hot flow B must survive");
+        let st = t.stats_snapshot();
+        assert!(st.aged_out >= 1);
+        assert_eq!(t.len(), t.iter().count());
+    }
+
+    /// Backward-shift deletion keeps probe chains intact: every survivor
+    /// of a sweep is still reachable through the bounded `get`.
+    #[test]
+    fn aging_preserves_survivor_reachability() {
+        let mut t = FlowTable::with_policy(64, EvictPolicy::Age { max_idle_ns: 500.0 });
+        // 60 idle flows interleaved with 60 hot ones in one table, so
+        // sweeps punch holes inside real probe chains.
+        for i in 0..60u32 {
+            t.update(&pkt(10_000 + i, 3, 0.0, 64));
+        }
+        let hot: Vec<FlowKey> = (0..60u32)
+            .map(|i| FlowKey::from_packet(&pkt(20_000 + i, 4, 0.0, 0)).0)
+            .collect();
+        for round in 0..((SWEEP_INTERVAL / 60) + 2) {
+            for i in 0..60u32 {
+                t.update(&pkt(20_000 + i, 4, 2000.0 + round as f64, 64));
+            }
+        }
+        assert!(t.stats_snapshot().aged_out > 0);
+        for k in &hot {
+            assert!(t.get(k).is_some(), "hot flow lost after sweep");
+        }
+        assert_eq!(t.len(), t.iter().count());
     }
 
     #[test]
@@ -372,22 +810,49 @@ mod tests {
         }
     }
 
+    /// Satellite agreement test: the sharded table (one canonicalization
+    /// per packet, key passed down via `update_keyed`) and the flat
+    /// table must agree on every update for the same packet stream —
+    /// including reverse-direction packets, where a canonicalization bug
+    /// would split one flow in two.
     #[test]
     fn sharded_table_matches_flat_table() {
         let mut flat = FlowTable::new(4096);
         let mut sharded = ShardedFlowTable::new(4, 1024);
         for i in 0..2000u32 {
-            let p = pkt(i % 300, (i % 300) as u16, i as f64, 64);
-            let (_, flat_new, flat_pkts) = flat.update(&p);
-            let (_, sh_new, sh_pkts) = sharded.update(&p);
-            assert_eq!(flat_new, sh_new, "pkt {i}");
-            assert_eq!(flat_pkts, sh_pkts, "pkt {i}");
+            let mut p = pkt(i % 300, (i % 300) as u16, i as f64, 64);
+            if i % 2 == 1 {
+                std::mem::swap(&mut p.src_ip, &mut p.dst_ip);
+                std::mem::swap(&mut p.src_port, &mut p.dst_port);
+            }
+            let uf = flat.update(&p).unwrap();
+            let (flat_new, flat_pkts) = (uf.is_new, uf.pkts);
+            let us = sharded.update(&p).unwrap();
+            assert_eq!(flat_new, us.is_new, "pkt {i}");
+            assert_eq!(flat_pkts, us.pkts, "pkt {i}");
         }
         assert_eq!(flat.len(), sharded.len());
         assert_eq!(sharded.iter().count(), flat.len());
         // Per-flow stats agree through either access path.
         let (key, _) = FlowKey::from_packet(&pkt(7, 7, 0.0, 0));
         assert_eq!(flat.get(&key).unwrap().pkts, sharded.get(&key).unwrap().pkts);
+    }
+
+    #[test]
+    fn update_keyed_matches_update() {
+        let mut a = FlowTable::new(256);
+        let mut b = FlowTable::new(256);
+        for i in 0..400u32 {
+            let p = pkt(i % 50, 9, i as f64, 64);
+            let (key, fwd) = FlowKey::from_packet(&p);
+            let ua = a.update(&p).unwrap();
+            let (na, ca) = (ua.is_new, ua.pkts);
+            let ub = b.update_keyed(key, fwd, &p).unwrap();
+            assert_eq!(na, ub.is_new);
+            assert_eq!(ca, ub.pkts);
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.stats_snapshot(), b.stats_snapshot());
     }
 
     #[test]
@@ -403,5 +868,46 @@ mod tests {
         assert_eq!(total, 500);
         // The hash actually spreads flows over the partitions.
         assert!(shards.iter().filter(|s| !s.is_empty()).count() >= 2);
+    }
+
+    #[test]
+    fn total_capacity_splits_across_shards() {
+        let st = ShardedFlowTable::with_total_capacity(64, 1 << 16, EvictPolicy::Lru);
+        assert_eq!(st.n_shards(), 64);
+        // 65536 / 64 = 1024 per shard → 2048 slots each → 131072 total,
+        // the same slot count the old single table allocated.
+        assert_eq!(st.stats_snapshot().slots, 131_072);
+    }
+
+    #[test]
+    fn flow_table_stats_merge_is_keywise() {
+        let mut a = FlowTableStats {
+            evictions: 1,
+            aged_out: 2,
+            collision_probes: 3,
+            untracked: 4,
+            occupied: 10,
+            slots: 32,
+            ..Default::default()
+        };
+        a.probe_hist[0] = 5;
+        let mut b = FlowTableStats {
+            evictions: 10,
+            occupied: 6,
+            slots: 32,
+            ..Default::default()
+        };
+        b.probe_hist[0] = 1;
+        b.probe_hist[PROBE_WINDOW] = 7;
+        a.merge(&b);
+        assert_eq!(a.evictions, 11);
+        assert_eq!(a.aged_out, 2);
+        assert_eq!(a.collision_probes, 3);
+        assert_eq!(a.untracked, 4);
+        assert_eq!(a.probe_hist[0], 6);
+        assert_eq!(a.probe_hist[PROBE_WINDOW], 7);
+        assert_eq!(a.occupied, 16);
+        assert_eq!(a.slots, 64);
+        assert!((a.load_factor() - 0.25).abs() < 1e-12);
     }
 }

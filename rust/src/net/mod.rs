@@ -14,6 +14,9 @@ pub mod packet;
 pub mod traffic;
 
 pub use features::FeatureVector;
-pub use flow::{FlowKey, FlowStats, FlowTable, ShardedFlowTable};
+pub use flow::{
+    EvictPolicy, FlowKey, FlowStats, FlowTable, FlowTableStats, FlowUpdate, ShardedFlowTable,
+    FLOW_SHARDS,
+};
 pub use packet::{Packet, ParsedHeaders, Proto};
-pub use traffic::{CbrSpec, FlowArrivals, TrafficGen};
+pub use traffic::{CbrSpec, ChurnGen, ChurnSpec, FlowArrivals, TrafficGen};

@@ -1,11 +1,16 @@
 //! Traffic generators — the in-process stand-in for the paper's 40Gb/s
 //! DPDK pktgen (DESIGN.md substitution S7).
 //!
-//! Two processes are provided:
+//! Three processes are provided:
 //! * [`CbrSpec`] — constant-bit-rate packet stream at a given rate and
 //!   packet size (the §6 testbed loads, e.g. 40Gb/s@256B = 18.1 Mpps).
 //! * [`FlowArrivals`] — Poisson flow arrivals with per-flow packet trains
 //!   (the "1.8M flows/s, ~10 packets per flow" analysis workload).
+//! * [`ChurnGen`] — the adversarial scale workload: a heavy-tailed
+//!   (bounded-Pareto) flow-size mix over a rolling working set of
+//!   long-lived flows, plus a tunable fraction of one-packet "mice" with
+//!   never-repeating 5-tuples that exist only to thrash the flow table's
+//!   eviction machinery.
 
 use super::packet::{Packet, Proto};
 
@@ -157,9 +162,137 @@ impl FlowArrivals {
     }
 }
 
+/// Adversarial-churn workload specification (see [`ChurnGen`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnSpec {
+    /// Line rate + packet size (CBR pacing, like [`TrafficGen`]).
+    pub cbr: CbrSpec,
+    /// Concurrent long-lived ("elephant") flows at any instant.
+    pub working_set: u64,
+    /// Fraction of packets spent on one-shot "mouse" flows with
+    /// never-repeating 5-tuples — each one forces a fresh table insert
+    /// (and, on a full window, an eviction) for a single packet of
+    /// payoff.  `0.0` = no mice, `1.0` = every packet is a new flow.
+    pub churn_frac: f64,
+    /// Bounded-Pareto shape for elephant flow lengths (smaller = heavier
+    /// tail; 1.0–1.5 matches measured flow-size mixes).
+    pub alpha: f64,
+    /// Flow-length bounds (packets) for the Pareto draw.
+    pub min_pkts: u32,
+    pub max_pkts: u32,
+}
+
+impl ChurnSpec {
+    /// The scale harness default: heavy-tailed elephants plus 30% mice.
+    pub fn adversarial(cbr: CbrSpec, working_set: u64) -> Self {
+        Self {
+            cbr,
+            working_set,
+            churn_frac: 0.3,
+            alpha: 1.2,
+            min_pkts: 2,
+            max_pkts: 10_000,
+        }
+    }
+}
+
+/// Closed-loop churn generator: a rolling working set of heavy-tailed
+/// flows, each replaced by a brand-new 5-tuple the moment its packet
+/// budget is spent, interleaved with one-shot mice.  Unlike
+/// [`TrafficGen`] (a *fixed* flow population), the distinct-flow count
+/// grows without bound over the run — the table must evict to survive,
+/// which is the point.  Fully seeded: the packet stream is a pure
+/// function of `(spec, seed)`.
+pub struct ChurnGen {
+    rng: Rng,
+    spec: ChurnSpec,
+    /// Live elephants: (flow id, remaining packet budget).
+    live: Vec<(u64, u32)>,
+    next_id: u64,
+    t_ns: f64,
+}
+
+impl ChurnGen {
+    pub fn new(spec: ChurnSpec, seed: u64) -> Self {
+        let mut g = Self {
+            rng: Rng::new(seed),
+            spec,
+            live: Vec::with_capacity(spec.working_set.max(1) as usize),
+            next_id: 0,
+            t_ns: 0.0,
+        };
+        for _ in 0..spec.working_set.max(1) {
+            let id = g.fresh_id();
+            let budget = g.flow_budget();
+            g.live.push((id, budget));
+        }
+        g
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Bounded-Pareto flow length in `[min_pkts, max_pkts]`.
+    fn flow_budget(&mut self) -> u32 {
+        let u = self.rng.next_f64();
+        let raw = self.spec.min_pkts.max(1) as f64 * (1.0 - u).powf(-1.0 / self.spec.alpha);
+        (raw as u32).clamp(self.spec.min_pkts.max(1), self.spec.max_pkts)
+    }
+
+    /// Distinct flow ids emitted so far (mice + elephants, live or dead).
+    pub fn flows_emitted(&self) -> u64 {
+        self.next_id
+    }
+
+    /// A flow id's 5-tuple.  The two 24-bit ip halves encode the id
+    /// exactly (unique for every id below 2^48), and the `0x0A…` source
+    /// prefix sorts below the `0x0B…` destination prefix, so every id
+    /// maps to a distinct canonical [`FlowKey`](super::flow::FlowKey)
+    /// and churned flows never collide with each other's keys.
+    fn packet_for(&self, id: u64) -> Packet {
+        let tcp = id % 4 != 0;
+        Packet {
+            ts_ns: self.t_ns,
+            src_ip: 0x0A00_0000 | (id as u32 & 0x00FF_FFFF),
+            dst_ip: 0x0B00_0000 | ((id >> 24) as u32 & 0x00FF_FFFF),
+            src_port: 1024 + (id % 50000) as u16,
+            dst_port: if tcp { 443 } else { 53 },
+            proto: if tcp { Proto::Tcp } else { Proto::Udp },
+            size: self.spec.cbr.pkt_size,
+            tcp_flags: if tcp { 0x10 } else { 0 },
+        }
+    }
+
+    /// Next packet: a fresh one-shot mouse with probability
+    /// `churn_frac`, otherwise one packet of a random live elephant
+    /// (replacing it with a brand-new flow once its budget is spent).
+    pub fn next_packet(&mut self) -> Packet {
+        self.t_ns += self.spec.cbr.gap_ns();
+        if self.spec.churn_frac > 0.0 && self.rng.next_f64() < self.spec.churn_frac {
+            let id = self.fresh_id();
+            return self.packet_for(id);
+        }
+        let slot = self.rng.below(self.live.len() as u64) as usize;
+        let (id, budget) = self.live[slot];
+        let p = self.packet_for(id);
+        if budget <= 1 {
+            let id = self.fresh_id();
+            let budget = self.flow_budget();
+            self.live[slot] = (id, budget);
+        } else {
+            self.live[slot].1 = budget - 1;
+        }
+        p
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::flow::FlowKey;
 
     #[test]
     fn cbr_rates_match_paper_arithmetic() {
@@ -236,5 +369,76 @@ mod tests {
         let mean = (0..50_000).map(|_| rng.below(big) as f64).sum::<f64>() / 50_000.0;
         let half = (1u64 << 61) as f64;
         assert!((mean / half - 1.0).abs() < 0.02, "mean={mean:e}");
+    }
+
+    fn churn_spec(working_set: u64, churn_frac: f64) -> ChurnSpec {
+        ChurnSpec {
+            cbr: CbrSpec { gbps: 40.0, pkt_size: 256 },
+            working_set,
+            churn_frac,
+            alpha: 1.2,
+            min_pkts: 2,
+            max_pkts: 10_000,
+        }
+    }
+
+    #[test]
+    fn churn_is_deterministic() {
+        let mut a = ChurnGen::new(churn_spec(500, 0.4), 7);
+        let mut b = ChurnGen::new(churn_spec(500, 0.4), 7);
+        for _ in 0..5000 {
+            assert_eq!(a.next_packet(), b.next_packet());
+        }
+        assert_eq!(a.flows_emitted(), b.flows_emitted());
+    }
+
+    #[test]
+    fn all_mice_never_repeat_a_tuple() {
+        let mut g = ChurnGen::new(churn_spec(10, 1.0), 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let p = g.next_packet();
+            let (key, _) = FlowKey::from_packet(&p);
+            assert!(seen.insert(key), "mouse repeated a canonical 5-tuple");
+        }
+    }
+
+    #[test]
+    fn churn_grows_distinct_flows_past_working_set() {
+        let mut g = ChurnGen::new(churn_spec(200, 0.3), 11);
+        let mut last = 0.0;
+        for _ in 0..50_000 {
+            let p = g.next_packet();
+            assert!(p.ts_ns > last, "CBR pacing must be monotone");
+            last = p.ts_ns;
+        }
+        // Mice (~30% of 50k) plus finished elephants dwarf the base set.
+        assert!(
+            g.flows_emitted() > 10_000,
+            "only {} distinct flows — no churn",
+            g.flows_emitted()
+        );
+    }
+
+    #[test]
+    fn flow_budgets_are_heavy_tailed_and_bounded() {
+        let mut g = ChurnGen::new(churn_spec(1, 0.0), 5);
+        let budgets: Vec<u32> = (0..20_000).map(|_| g.flow_budget()).collect();
+        assert!(budgets.iter().all(|&b| (2..=10_000).contains(&b)));
+        // Heavy tail: most flows are short, but big elephants do occur.
+        let short = budgets.iter().filter(|&&b| b <= 10).count();
+        assert!(short > budgets.len() / 2, "short={short}");
+        assert!(budgets.iter().any(|&b| b > 500), "no tail at all");
+    }
+
+    #[test]
+    fn distinct_ids_map_to_distinct_canonical_keys() {
+        let g = ChurnGen::new(churn_spec(1, 0.0), 1);
+        let mut keys = std::collections::HashSet::new();
+        for id in (0..1u64 << 26).step_by(4097) {
+            let (key, fwd) = FlowKey::from_packet(&g.packet_for(id));
+            assert!(fwd, "0x0A… source must already be canonical");
+            assert!(keys.insert(key), "id {id} collided");
+        }
     }
 }

@@ -117,8 +117,8 @@ fn property_feature_determinism() {
         let mut t = FlowTable::new(64);
         let mut last = None;
         for p in pkts {
-            let (s, _, _) = t.update(p);
-            last = Some(FeatureVector::from_stats(s).pack());
+            let up = t.update(p).unwrap();
+            last = Some(FeatureVector::from_stats(up.stats).pack());
         }
         last.unwrap()
     };

@@ -60,6 +60,29 @@ N3IC_BENCH_SMOKE=1 cargo bench --bench registry
 echo "== perf smoke: overload bench =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench overload
 
+# Flow-table scale grid, smoke cell (tiny working set, BENCH.smoke.json;
+# the bench itself asserts evictions > 0, so a silently-unbounded table
+# fails here).
+echo "== perf smoke: scale bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench scale
+
+# The acceptance cell of the scale grid: one bounded 1M-flow churn run,
+# recorded into the *tracked* BENCH.json (no smoke env on purpose).
+echo "== perf: scale grid CI cell (1M flows, writes tracked BENCH.json) =="
+N3IC_SCALE_GRID=ci cargo bench --bench scale
+grep -q '"scale"' ../BENCH.json \
+  || { echo "scale bench: no 'scale' entry in BENCH.json"; exit 1; }
+
+# Churn CLI smoke: a capped table under forced churn must finish without
+# panicking (the pre-eviction table died here) and report evictions.
+echo "== scale smoke: churn against a capped table reports evictions =="
+churn_out=$(cargo run --release --quiet -- serve --backend host \
+  --packets 200000 --flows 50000 --table-cap 4096 --churn 0.5 \
+  --trigger-pkts 5)
+echo "$churn_out"
+echo "$churn_out" | grep -Eq "evictions=[1-9]" \
+  || { echo "scale smoke: expected evictions > 0"; exit 1; }
+
 # Overload CLI smoke: a seeded 40 Gb/s burst against the slow host
 # backend must trip the admission controller and walk the degradation
 # ladder down AND back up (the tail of the run drains the backlog), all
