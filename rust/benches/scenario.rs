@@ -1,0 +1,100 @@
+//! `scenario` — end-to-end throughput of the three paper use cases
+//! (§5) through the unified service, serial and pipelined.
+//!
+//! Each cell runs one seeded scenario end-to-end — workload generation,
+//! centroid calibration, oracle replay, and the serve loop all inside
+//! the timed region, so `events_per_sec` is the whole use-case cost,
+//! not just the hot loop.  Rows land in the `benches.scenario` entry of
+//! `BENCH.json`:
+//!
+//! ```text
+//! cd rust && cargo bench --bench scenario
+//! ```
+//!
+//! `N3IC_BENCH_SMOKE=1` shrinks every cell for CI; verify.sh runs that
+//! mode and asserts the `"scenario"` key exists.
+
+use std::time::Instant;
+
+use n3ic::bench::{group, smoke_mode, write_bench_json};
+use n3ic::json::{obj, Json};
+use n3ic::scenario::{ScenarioConfig, ScenarioRegistry};
+
+struct Cell {
+    scenario: &'static str,
+    events: u64,
+    workers: usize,
+    batch: usize,
+}
+
+fn main() {
+    let registry = ScenarioRegistry::standard();
+    let scale: u64 = if smoke_mode() { 1 } else { 10 };
+    let mut cells = Vec::new();
+    for name in registry.names() {
+        // Tomography events are probe rounds (each one simulator
+        // interval), not packets — keep them two orders smaller.
+        let events = if name == "tomography" { 160 * scale } else { 20_000 * scale };
+        cells.push(Cell { scenario: name, events, workers: 0, batch: 0 });
+        cells.push(Cell { scenario: name, events, workers: 3, batch: 16 });
+    }
+
+    group(&format!(
+        "scenario / paper use cases ({} mode, {} cells)",
+        if smoke_mode() { "smoke" } else { "full" },
+        cells.len()
+    ));
+    let mut rows = Vec::new();
+    for cell in &cells {
+        let cfg = ScenarioConfig {
+            events: cell.events,
+            workers: cell.workers,
+            batch: cell.batch,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let rep = registry.run(cell.scenario, &cfg).expect(cell.scenario);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let st = &rep.service.stats;
+        let eps = st.packets as f64 / wall_s.max(1e-9);
+        assert!(
+            rep.passes_floor(),
+            "{}: bench run under its accuracy floor ({:.3} < {:.2})",
+            cell.scenario,
+            rep.score.accuracy,
+            rep.floor
+        );
+        println!(
+            "{:10} workers={} batch={:>2}  {:>10.0} events/s  inferences={:>7}  acc={:.3} cov={:.3}",
+            cell.scenario,
+            cell.workers,
+            cell.batch,
+            eps,
+            st.inferences,
+            rep.score.accuracy,
+            rep.score.coverage,
+        );
+        let round3 = |v: f64| (v * 1000.0).round() / 1000.0;
+        rows.push(obj(vec![
+            ("scenario", Json::Str(cell.scenario.to_string())),
+            ("backend", Json::Str(rep.backend.to_string())),
+            ("workers", Json::Num(cell.workers as f64)),
+            ("batch", Json::Num(cell.batch as f64)),
+            ("events", Json::Num(st.packets as f64)),
+            ("events_per_sec", Json::Num(eps.round())),
+            ("inferences", Json::Num(st.inferences as f64)),
+            ("accuracy", Json::Num(round3(rep.score.accuracy))),
+            ("coverage", Json::Num(round3(rep.score.coverage))),
+            ("floor", Json::Num(rep.floor)),
+        ]));
+    }
+
+    let fragment = obj(vec![
+        ("smoke", Json::Bool(smoke_mode())),
+        ("rows", Json::Arr(rows)),
+    ]);
+    match write_bench_json("scenario", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+}

@@ -1,0 +1,383 @@
+//! Typed admin/introspection surface for a running service — the
+//! operational control plane the ROADMAP asks for, without dragging an
+//! HTTP stack into the crate.  An [`AdminHandle`] is handed to
+//! [`ServeBuilder::admin`](super::ServeBuilder::admin) before `build()`;
+//! the serving runtime (serial and pipelined) binds it with the
+//! backend's [`Capabilities`] and keeps a live packet counter plus a
+//! periodic [`ServiceStats`] snapshot current while the run is in
+//! flight.  Any other thread can then route requests through
+//! [`AdminRequest::route`] — health check, capability introspection,
+//! stats scrape, and model touch-publish/rollback against the backing
+//! [`RegistryHandle`] — exactly the surface a sidecar daemon would wrap
+//! in HTTP.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bnn::{BnnModel, ModelEpoch, RegistryError, RegistryHandle, VersionTag};
+
+use super::plane::Capabilities;
+use super::service::ServiceStats;
+
+/// Stats snapshot cadence in the serving loops (packets).
+pub(crate) const SNAPSHOT_EVERY: u64 = 1024;
+
+#[derive(Default)]
+struct AdminState {
+    serving: AtomicBool,
+    failed: AtomicBool,
+    packets: AtomicU64,
+    snapshot: Mutex<ServiceStats>,
+    caps: Mutex<Option<Capabilities>>,
+    registry: Mutex<Option<RegistryHandle>>,
+    /// Per-slot stack of archived epochs: every publish/touch pushes the
+    /// previous current, rollback pops.
+    history: Mutex<BTreeMap<String, Vec<Arc<ModelEpoch>>>>,
+}
+
+/// Cloneable handle onto one service's admin state.  Create it, pass a
+/// clone to the builder, keep the original to issue requests from any
+/// thread while the run is live (and after it finishes).
+#[derive(Clone, Default)]
+pub struct AdminHandle(Arc<AdminState>);
+
+impl std::fmt::Debug for AdminHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AdminHandle")
+            .field("serving", &self.0.serving.load(Ordering::Relaxed))
+            .field("failed", &self.0.failed.load(Ordering::Relaxed))
+            .field("packets", &self.0.packets.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// A parsed admin request (what an HTTP router would produce).
+#[derive(Debug, Clone)]
+pub enum AdminRequest {
+    /// `GET /healthz`
+    Health,
+    /// `GET /capabilities`
+    Capabilities,
+    /// `GET /stats`
+    Stats,
+    /// `POST /models/<name>` with a model body: publish new weights.
+    Publish { name: String, model: BnnModel },
+    /// `POST /models/<name>/publish`: republish current weights
+    /// (version bump, verdicts unchanged).
+    Touch { name: String },
+    /// `POST /models/<name>/rollback`: restore the previously archived
+    /// epoch.
+    Rollback { name: String },
+}
+
+impl AdminRequest {
+    /// Route a `(method, path)` pair onto a typed request.  `Publish`
+    /// carries a body and cannot be routed from a path alone.
+    pub fn route(method: &str, path: &str) -> Result<Self, AdminError> {
+        let not_found = || AdminError::NotFound(format!("{method} {path}"));
+        match (method, path) {
+            ("GET", "/healthz") => Ok(Self::Health),
+            ("GET", "/capabilities") => Ok(Self::Capabilities),
+            ("GET", "/stats") => Ok(Self::Stats),
+            ("POST", _) => {
+                let rest = path.strip_prefix("/models/").ok_or_else(not_found)?;
+                let (name, action) = rest.rsplit_once('/').ok_or_else(not_found)?;
+                if name.is_empty() || name.contains('/') {
+                    return Err(not_found());
+                }
+                match action {
+                    "publish" => Ok(Self::Touch { name: name.to_string() }),
+                    "rollback" => Ok(Self::Rollback { name: name.to_string() }),
+                    _ => Err(not_found()),
+                }
+            }
+            _ => Err(not_found()),
+        }
+    }
+}
+
+/// `GET /healthz` response.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthStatus {
+    /// The serving loop is (still) processing packets.
+    pub serving: bool,
+    /// The run ended with a stage/overload failure.
+    pub failed: bool,
+    /// Packets ingested so far.
+    pub packets: u64,
+}
+
+/// Typed admin response.
+#[derive(Debug, Clone)]
+pub enum AdminResponse {
+    Health(HealthStatus),
+    Capabilities(Capabilities),
+    Stats(Box<ServiceStats>),
+    Published(VersionTag),
+    RolledBack(VersionTag),
+}
+
+/// Admin request failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdminError {
+    /// No route for this method/path.
+    NotFound(String),
+    /// The handle was never bound to a built service.
+    Unbound,
+    /// The bound backend has no registry (publish/rollback need one).
+    NoRegistry,
+    /// Rollback with no archived epoch for this slot.
+    NoHistory(String),
+    /// Registry rejected the operation.
+    Registry(RegistryError),
+}
+
+impl std::fmt::Display for AdminError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::NotFound(r) => write!(f, "no admin route: {r}"),
+            Self::Unbound => write!(f, "admin handle not bound to a service"),
+            Self::NoRegistry => write!(f, "backend has no model registry"),
+            Self::NoHistory(n) => write!(f, "no archived epoch to roll {n:?} back to"),
+            Self::Registry(e) => write!(f, "registry: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for AdminError {}
+
+impl From<RegistryError> for AdminError {
+    fn from(e: RegistryError) -> Self {
+        Self::Registry(e)
+    }
+}
+
+impl AdminHandle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Called by `ServeBuilder::build`: attach capabilities and (for
+    /// registry backends) the registry, reset live counters.
+    pub(crate) fn bind(&self, caps: Capabilities, registry: Option<RegistryHandle>) {
+        *self.0.caps.lock().unwrap() = Some(caps);
+        *self.0.registry.lock().unwrap() = registry;
+        self.0.packets.store(0, Ordering::Relaxed);
+        self.0.failed.store(false, Ordering::Relaxed);
+        self.0.serving.store(true, Ordering::Relaxed);
+    }
+
+    /// One packet ingested (called from the serving hot loop).
+    #[inline]
+    pub(crate) fn on_packet(&self) {
+        self.0.packets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Refresh the scrapeable stats snapshot.
+    pub(crate) fn publish_stats(&self, stats: &ServiceStats) {
+        *self.0.snapshot.lock().unwrap() = stats.clone();
+    }
+
+    /// Run finished: final snapshot + health flip.
+    pub(crate) fn finish(&self, stats: &ServiceStats, failed: bool) {
+        self.publish_stats(stats);
+        self.0.failed.store(failed, Ordering::Relaxed);
+        self.0.serving.store(false, Ordering::Relaxed);
+    }
+
+    fn registry(&self) -> Result<RegistryHandle, AdminError> {
+        if self.0.caps.lock().unwrap().is_none() {
+            return Err(AdminError::Unbound);
+        }
+        self.0.registry.lock().unwrap().clone().ok_or(AdminError::NoRegistry)
+    }
+
+    /// Archive the slot's current epoch so a later rollback can restore
+    /// it.
+    fn archive(&self, reg: &RegistryHandle, name: &str) {
+        if let Some(cur) = reg.current(name) {
+            self.0
+                .history
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default()
+                .push(cur);
+        }
+    }
+
+    /// Serve one typed request.
+    pub fn handle(&self, req: AdminRequest) -> Result<AdminResponse, AdminError> {
+        match req {
+            AdminRequest::Health => Ok(AdminResponse::Health(HealthStatus {
+                serving: self.0.serving.load(Ordering::Relaxed),
+                failed: self.0.failed.load(Ordering::Relaxed),
+                packets: self.0.packets.load(Ordering::Relaxed),
+            })),
+            AdminRequest::Capabilities => self
+                .0
+                .caps
+                .lock()
+                .unwrap()
+                .clone()
+                .map(AdminResponse::Capabilities)
+                .ok_or(AdminError::Unbound),
+            AdminRequest::Stats => Ok(AdminResponse::Stats(Box::new(
+                self.0.snapshot.lock().unwrap().clone(),
+            ))),
+            AdminRequest::Publish { name, model } => {
+                let reg = self.registry()?;
+                self.archive(&reg, &name);
+                Ok(AdminResponse::Published(reg.publish(&name, &model)?))
+            }
+            AdminRequest::Touch { name } => {
+                let reg = self.registry()?;
+                self.archive(&reg, &name);
+                Ok(AdminResponse::Published(reg.touch(&name)?))
+            }
+            AdminRequest::Rollback { name } => {
+                let reg = self.registry()?;
+                let epoch = self
+                    .0
+                    .history
+                    .lock()
+                    .unwrap()
+                    .get_mut(&name)
+                    .and_then(Vec::pop)
+                    .ok_or_else(|| AdminError::NoHistory(name.clone()))?;
+                Ok(AdminResponse::RolledBack(reg.rollback(&name, &epoch)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_parse_and_reject() {
+        assert!(matches!(
+            AdminRequest::route("GET", "/healthz").unwrap(),
+            AdminRequest::Health
+        ));
+        assert!(matches!(
+            AdminRequest::route("GET", "/capabilities").unwrap(),
+            AdminRequest::Capabilities
+        ));
+        assert!(matches!(
+            AdminRequest::route("GET", "/stats").unwrap(),
+            AdminRequest::Stats
+        ));
+        match AdminRequest::route("POST", "/models/anomaly/publish").unwrap() {
+            AdminRequest::Touch { name } => assert_eq!(name, "anomaly"),
+            other => panic!("{other:?}"),
+        }
+        match AdminRequest::route("POST", "/models/tomography_64/rollback").unwrap() {
+            AdminRequest::Rollback { name } => assert_eq!(name, "tomography_64"),
+            other => panic!("{other:?}"),
+        }
+        for (m, p) in [
+            ("GET", "/nope"),
+            ("POST", "/models//publish"),
+            ("POST", "/models/a/b/publish"),
+            ("POST", "/models/a/drop"),
+            ("DELETE", "/stats"),
+        ] {
+            assert!(
+                matches!(AdminRequest::route(m, p), Err(AdminError::NotFound(_))),
+                "{m} {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn unbound_handle_reports_not_serving_and_rejects_caps() {
+        let h = AdminHandle::new();
+        match h.handle(AdminRequest::Health).unwrap() {
+            AdminResponse::Health(s) => {
+                assert!(!s.serving && !s.failed);
+                assert_eq!(s.packets, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            h.handle(AdminRequest::Capabilities).unwrap_err(),
+            AdminError::Unbound
+        );
+        assert_eq!(
+            h.handle(AdminRequest::Touch { name: "m".into() }).unwrap_err(),
+            AdminError::Unbound
+        );
+    }
+
+    #[test]
+    fn bound_handle_tracks_lifecycle_and_stats() {
+        let h = AdminHandle::new();
+        h.bind(Capabilities::single("fpga", 1_700.0), None);
+        h.on_packet();
+        h.on_packet();
+        match h.handle(AdminRequest::Health).unwrap() {
+            AdminResponse::Health(s) => {
+                assert!(s.serving && !s.failed);
+                assert_eq!(s.packets, 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        match h.handle(AdminRequest::Capabilities).unwrap() {
+            AdminResponse::Capabilities(c) => assert_eq!(c.backend, "fpga"),
+            other => panic!("{other:?}"),
+        }
+        let stats = ServiceStats { packets: 2, ..Default::default() };
+        h.finish(&stats, true);
+        match h.handle(AdminRequest::Health).unwrap() {
+            AdminResponse::Health(s) => assert!(!s.serving && s.failed),
+            other => panic!("{other:?}"),
+        }
+        match h.handle(AdminRequest::Stats).unwrap() {
+            AdminResponse::Stats(s) => assert_eq!(s.packets, 2),
+            other => panic!("{other:?}"),
+        }
+        // Registry ops still rejected: this backend has none.
+        assert_eq!(
+            h.handle(AdminRequest::Touch { name: "m".into() }).unwrap_err(),
+            AdminError::NoRegistry
+        );
+    }
+
+    #[test]
+    fn publish_touch_rollback_round_trip() {
+        let reg = RegistryHandle::new();
+        let m1 = BnnModel::random("m", 64, &[8, 2], 1);
+        reg.publish("m", &m1).unwrap();
+        let h = AdminHandle::new();
+        h.bind(Capabilities::single("registry", 800.0), Some(reg.clone()));
+
+        // Touch: version bump, old epoch archived.
+        match h.handle(AdminRequest::Touch { name: "m".into() }).unwrap() {
+            AdminResponse::Published(tag) => assert_eq!(tag.version(), 2),
+            other => panic!("{other:?}"),
+        }
+        // Publish new weights on top.
+        let m2 = BnnModel::random("m", 64, &[8, 2], 9);
+        match h
+            .handle(AdminRequest::Publish { name: "m".into(), model: m2 })
+            .unwrap()
+        {
+            AdminResponse::Published(tag) => assert_eq!(tag.version(), 3),
+            other => panic!("{other:?}"),
+        }
+        // Rollback restores the archived v2 epoch under a new version.
+        match h.handle(AdminRequest::Rollback { name: "m".into() }).unwrap() {
+            AdminResponse::RolledBack(tag) => assert_eq!(tag.version(), 4),
+            other => panic!("{other:?}"),
+        }
+        // One more rollback pops the v1 archive; a third is empty.
+        h.handle(AdminRequest::Rollback { name: "m".into() }).unwrap();
+        assert_eq!(
+            h.handle(AdminRequest::Rollback { name: "m".into() }).unwrap_err(),
+            AdminError::NoHistory("m".into())
+        );
+    }
+}

@@ -20,6 +20,7 @@
 //! admission shedding, the degradation ladder, per-backend circuit
 //! breakers behind [`PlacedPlane`], and stage supervision.
 
+pub mod admin;
 pub mod backend;
 pub mod batcher;
 pub mod multinn;
@@ -31,6 +32,7 @@ pub mod service;
 pub mod shunt;
 pub mod trigger;
 
+pub use admin::{AdminError, AdminHandle, AdminRequest, AdminResponse, HealthStatus};
 pub use backend::BackendFactory;
 pub use batcher::{BatchSet, Batcher, TimedBatch};
 pub use overload::{

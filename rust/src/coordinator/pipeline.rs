@@ -616,6 +616,7 @@ pub(crate) fn run_staged(
 
     // Stage 0: shard by flow hash and feed.  A dead worker (its rx
     // dropped) surfaces here as a failed send, not a hang.
+    let admin = svc.admin.clone();
     let mut ingress_blocked = 0u64;
     let mut failures: Vec<StageFailure> = Vec::new();
     let mut n = 0u64;
@@ -657,6 +658,12 @@ pub(crate) fn run_staged(
                     l.disable_fallback();
                 }
             }
+        }
+        // Admin liveness rides ingress: packet count is exact here; the
+        // stats snapshot stays whatever the last finished run published
+        // until this run's stages join (stage stats merge at exit only).
+        if let Some(a) = admin.as_ref() {
+            a.on_packet();
         }
         // Logical shard first, then its owning worker — the shard→worker
         // map must match the table deal-out above.
@@ -731,6 +738,9 @@ pub(crate) fn run_staged(
 
     let degradation = ladder.map_or_else(Vec::new, DegradationLadder::into_timeline);
     let report = ServiceReport { stats, sink, tagged, flows_tracked, engine, degradation, health };
+    if let Some(a) = admin.as_ref() {
+        a.finish(&report.stats, !failures.is_empty());
+    }
     if failures.is_empty() {
         Ok(report)
     } else {

@@ -63,6 +63,25 @@ impl Capabilities {
             inference_ns,
         }
     }
+
+    /// One-line human summary for the admin capability endpoint and CLI.
+    pub fn summary(&self) -> String {
+        let batch = if self.max_batch == usize::MAX {
+            "unbounded".to_string()
+        } else {
+            self.max_batch.to_string()
+        };
+        format!(
+            "backend={} shards={} routes={} max_batch={} hot_swap={} epoch_pinning={} inference_ns={:.1}",
+            self.backend,
+            self.shards,
+            self.routes,
+            batch,
+            self.supports_hot_swap,
+            self.supports_epoch_pinning,
+            self.inference_ns,
+        )
+    }
 }
 
 /// Uniform interface over every inference backend: host scalar executor,

@@ -37,6 +37,7 @@ use crate::net::flow::{EvictPolicy, FlowStats, FlowTableStats, ShardedFlowTable,
 use crate::net::packet::Packet;
 use crate::net::traffic::{CbrSpec, TrafficGen};
 
+use super::admin::{AdminHandle, SNAPSHOT_EVERY};
 use super::batcher::{BatchSet, TimedBatch};
 use super::overload::{
     AdmissionController, DegradationEvent, DegradeSpec, FaultPlan, OverloadControl, PlaneHealth,
@@ -420,6 +421,7 @@ pub struct ServeBuilder {
     degrade: Option<DegradeSpec>,
     supervisor: Option<SupervisorPolicy>,
     faults: Option<FaultPlan>,
+    admin: Option<AdminHandle>,
 }
 
 impl Default for ServeBuilder {
@@ -446,6 +448,7 @@ impl ServeBuilder {
             degrade: None,
             supervisor: None,
             faults: None,
+            admin: None,
         }
     }
 
@@ -566,6 +569,16 @@ impl ServeBuilder {
         self
     }
 
+    /// Attach an admin/introspection handle
+    /// ([`AdminHandle`](super::AdminHandle)): `build` binds it with the
+    /// backend's capabilities (and registry, when there is one), and the
+    /// serving loops keep its health counter and stats snapshot live so
+    /// other threads can scrape a running service.
+    pub fn admin(mut self, handle: AdminHandle) -> Self {
+        self.admin = Some(handle);
+        self
+    }
+
     /// Validate the configuration against the backend's capabilities.
     pub fn build(self) -> Result<Service, ServiceError> {
         let plane = self
@@ -651,8 +664,8 @@ impl ServeBuilder {
                 let Some(cur) = ctl.registry().current(name) else {
                     continue;
                 };
-                if fallback.in_words() != cur.in_words
-                    || fallback.out_neurons() != cur.out_neurons
+                if fallback.in_words() != cur.in_words()
+                    || fallback.out_neurons() != cur.out_neurons()
                 {
                     return Err(ServiceError::InvalidConfig {
                         option: "degrade",
@@ -661,12 +674,15 @@ impl ServeBuilder {
                              match slot {name:?} ({} in-words, {} classes)",
                             fallback.in_words(),
                             fallback.out_neurons(),
-                            cur.in_words,
-                            cur.out_neurons
+                            cur.in_words(),
+                            cur.out_neurons()
                         ),
                     });
                 }
             }
+        }
+        if let Some(a) = self.admin.as_ref() {
+            a.bind(caps, plane.swap_controller().map(|c| c.registry().clone()));
         }
         Ok(Service {
             plane,
@@ -684,6 +700,7 @@ impl ServeBuilder {
             degrade: self.degrade,
             supervisor: self.supervisor,
             faults: self.faults,
+            admin: self.admin,
         })
     }
 }
@@ -706,6 +723,7 @@ pub struct Service {
     pub(crate) degrade: Option<DegradeSpec>,
     pub(crate) supervisor: Option<SupervisorPolicy>,
     pub(crate) faults: Option<FaultPlan>,
+    pub(crate) admin: Option<AdminHandle>,
 }
 
 impl Service {
@@ -773,6 +791,7 @@ impl Service {
         if let Some(ctl) = overload {
             core.set_overload(ctl);
         }
+        let admin = self.admin;
         let mut n = 0u64;
         // Same failure semantics as the staged mode: a failed republish
         // is reported once (further ticks are disabled), the run keeps
@@ -790,6 +809,12 @@ impl Service {
             }
             n += 1;
             core.handle(&ev);
+            if let Some(a) = admin.as_ref() {
+                a.on_packet();
+                if n % SNAPSHOT_EVERY == 0 {
+                    a.publish_stats(core.stats());
+                }
+            }
         }
         core.flush();
         let mut failures = swap_failures;
@@ -800,6 +825,9 @@ impl Service {
             failures.push(f);
         }
         let report = core.into_report();
+        if let Some(a) = admin.as_ref() {
+            a.finish(&report.stats, !failures.is_empty());
+        }
         if failures.is_empty() {
             Ok(report)
         } else {
@@ -886,6 +914,11 @@ impl SerialCore {
 
     pub(crate) fn disable_tag_log(&mut self) {
         self.log_tags = false;
+    }
+
+    /// Live accounting view (admin stats snapshots mid-run).
+    pub(crate) fn stats(&self) -> &ServiceStats {
+        &self.stats
     }
 
     /// Arm admission control + the degradation ladder (call before any

@@ -148,7 +148,8 @@ pub fn tab01_use_cases(artifacts: &Path) -> String {
     let mut s = String::from(
         "Table 1/5 — use cases\nmodel            arch            bin_KB  mlp_KB  bin_acc  mlp_acc\n",
     );
-    for name in ["traffic", "anomaly", "tomography_32", "tomography_64", "tomography_128"] {
+    for model in crate::scenario::ScenarioRegistry::standard().use_case_models() {
+        let name = model.name;
         match BnnModel::load_named(artifacts, name) {
             Ok(m) => {
                 let _ = writeln!(

@@ -12,7 +12,7 @@ pub mod sim;
 pub mod topology;
 pub mod workload;
 
-pub use probes::{ProbeCollector, ProbeSample};
+pub use probes::{thermo_code, ProbeCollector, ProbeSample, THERMO_LEVELS};
 pub use sim::{FatTreeSim, SimConfig};
 pub use topology::{Topology, N_MONITORED_QUEUES, N_PROBE_PATHS};
 pub use workload::IncastWorkload;

@@ -4,6 +4,18 @@
 use super::sim::ProbeRound;
 use crate::net::features::pack_features;
 
+/// Thermometer-code levels per probe delay (App. C.2: unary encoding
+/// preserves ordinal structure — Hamming distance between two codes
+/// equals the L1 distance between their levels).
+pub const THERMO_LEVELS: usize = 8;
+
+/// Unary (thermometer) code of a quantized `[0, 255]` delay: the bottom
+/// `level` bits set, where `level` scales linearly with the delay.
+pub fn thermo_code(delay_q: u16, levels: usize) -> u16 {
+    let level = (delay_q as usize * levels / 255).min(levels);
+    ((1u32 << level) - 1) as u16
+}
+
 /// One quantized probe sample ready for inference.
 #[derive(Debug, Clone)]
 pub struct ProbeSample {
@@ -72,6 +84,26 @@ impl ProbeCollector {
             packed,
         }
     }
+
+    /// Like [`sample`](Self::sample), but the packed input uses the
+    /// thermometer encoding: 19 delays × [`THERMO_LEVELS`] unary bits
+    /// (152 bits → 5 words), so Hamming distance over the packed vector
+    /// is the L1 distance over quantized delay levels — the geometry a
+    /// nearest-centroid BNN classifies on.
+    pub fn thermo_sample(&self, round: &ProbeRound) -> ProbeSample {
+        let mut s = self.sample(round);
+        let codes: Vec<u16> = s
+            .delays_q
+            .iter()
+            .map(|&d| thermo_code(d, THERMO_LEVELS))
+            .collect();
+        s.packed = pack_features(
+            &codes,
+            THERMO_LEVELS,
+            crate::bnn::words_for(codes.len() * THERMO_LEVELS),
+        );
+        s
+    }
 }
 
 #[cfg(test)]
@@ -98,6 +130,46 @@ mod tests {
         assert!(s.delays_q.iter().all(|&v| v <= 255));
         // Monotone: later probes (longer delays) → larger quantized value.
         assert!(s.delays_q[18] >= s.delays_q[0]);
+    }
+
+    #[test]
+    fn thermo_code_boundaries_and_l1_geometry() {
+        // Boundaries: zero delay → empty code, max delay → all bits set.
+        assert_eq!(thermo_code(0, THERMO_LEVELS), 0);
+        assert_eq!(
+            thermo_code(255, THERMO_LEVELS),
+            (1u16 << THERMO_LEVELS) - 1
+        );
+        // Monotone, and Hamming(code_a, code_b) == |level_a - level_b|.
+        let level = |d: u16| (d as usize * THERMO_LEVELS / 255).min(THERMO_LEVELS);
+        for a in (0..=255u16).step_by(5) {
+            for b in (0..=255u16).step_by(7) {
+                let h = (thermo_code(a, THERMO_LEVELS) ^ thermo_code(b, THERMO_LEVELS))
+                    .count_ones() as usize;
+                let l1 = level(a).abs_diff(level(b));
+                assert_eq!(h, l1, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn thermo_sample_packs_152_bits() {
+        let rounds: Vec<ProbeRound> = (0..50).map(|i| mk_round(1000.0 + i as f64 * 50.0)).collect();
+        let c = ProbeCollector::fit(&rounds, 0.25);
+        let s = c.thermo_sample(&rounds[10]);
+        assert_eq!(s.packed.len(), 5, "19 × 8 thermo bits = 152 → 5 words");
+        // Labels and raw quantized delays are unchanged from sample().
+        let plain = c.sample(&rounds[10]);
+        assert_eq!(s.delays_q, plain.delays_q);
+        assert_eq!(s.congested, plain.congested);
+        // Total set bits = sum of levels.
+        let set: u32 = s.packed.iter().map(|w| w.count_ones()).sum();
+        let levels: u32 = s
+            .delays_q
+            .iter()
+            .map(|&d| (d as usize * THERMO_LEVELS / 255).min(THERMO_LEVELS) as u32)
+            .sum();
+        assert_eq!(set, levels);
     }
 
     #[test]

@@ -29,6 +29,9 @@
 //!   `Service` built by `ServeBuilder` (§3.2's orchestration).
 //! * `runtime` — PJRT loader/executor for the AOT artifacts (behind the
 //!   off-by-default `pjrt` feature: needs a vendored xla-rs).
+//! * [`scenario`] — the three paper use cases (§5: traffic analysis,
+//!   anomaly detection, tomography) as seeded, oracle-scored end-to-end
+//!   scenarios behind one `Scenario` trait, all served by `ServeBuilder`.
 //! * [`experiments`] — one reproduction driver per paper table/figure.
 
 #![deny(rustdoc::broken_intra_doc_links)]
@@ -50,6 +53,7 @@ pub mod pcie;
 pub mod pisa;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scenario;
 pub mod tomography;
 
 /// Crate-wide result alias.

@@ -79,6 +79,22 @@ COMMANDS:
                RegistryHandle and call publish(name, &model) from any
                thread; readers observe the new version on their next
                batch, never a torn one.
+  scenario     <traffic|anomaly|tomography> — serve one paper use case
+               (§5) end-to-end with its seeded workload, calibrated
+               model, and ground-truth oracle, then print the score
+               --events N (0 = scenario default; packets for the
+                           flow-stats scenarios, probe rounds for
+                           tomography)
+               --flows N --trigger-pkts N --seed N
+               --backend NAME (any serve backend; `registry` publishes
+                               the scenario model and serves it routed,
+                               hot-swap capable)
+               --pipeline N --batch N --shards N
+               --table-cap N --evict lru|age:NS|off
+               --shed-policy MAX_US[:RESUME_US] | off
+               The report ends with `floor check ... PASS|FAIL` and an
+               order-independent `verdict digest` — identical for
+               serial and pipelined runs of the same seed.
   experiment   <fig03|...|tab02|abl-crossover|abl-cam|all>
   models
   compile-p4   --model NAME [--format p4|bmv2]
@@ -169,11 +185,12 @@ impl Args {
 fn load_model(artifacts: &std::path::Path, name: &str) -> BnnModel {
     BnnModel::load_named(artifacts, name).unwrap_or_else(|e| {
         eprintln!("warning: {e}; using random weights for shape {name}");
-        match name {
-            "tomography_128" => BnnModel::random(name, 152, &[128, 64, 2], 1),
-            "tomography_64" => BnnModel::random(name, 152, &[64, 32, 2], 1),
-            "tomography_32" => BnnModel::random(name, 152, &[32, 16, 2], 1),
-            _ => BnnModel::random(name, 256, &[32, 16, 2], 1),
+        // The scenario registry is the one authoritative list of use-case
+        // model shapes; anything it doesn't know gets the flow-stats
+        // default.
+        match n3ic::scenario::model_shape(name) {
+            Some((in_bits, arch)) => BnnModel::random(name, in_bits, arch, 1),
+            None => BnnModel::random(name, 256, &[32, 16, 2], 1),
         }
     })
 }
@@ -205,6 +222,20 @@ fn main() -> n3ic::Result<()> {
             "shed-policy",
             "degrade",
         ],
+        "scenario" => &[
+            "artifacts",
+            "events",
+            "flows",
+            "trigger-pkts",
+            "seed",
+            "backend",
+            "pipeline",
+            "batch",
+            "shards",
+            "table-cap",
+            "evict",
+            "shed-policy",
+        ],
         "experiment" | "models" => &["artifacts"],
         "compile-p4" => &["artifacts", "model", "format"],
         _ => &["artifacts"],
@@ -214,6 +245,7 @@ fn main() -> n3ic::Result<()> {
     }
     match cmd {
         "serve" => serve(&args, &artifacts),
+        "scenario" => scenario_cmd(&args),
         "experiment" => {
             let id = args
                 .positional
@@ -278,6 +310,117 @@ fn main() -> n3ic::Result<()> {
         }
         other => usage_err(&format!("unknown command {other:?}")),
     }
+}
+
+/// Run one paper use case end-to-end through the unified service and
+/// print its oracle score, floor verdict, deadline checks, and the
+/// order-independent verdict digest (the CI determinism gate compares
+/// this line across serial and pipelined runs).
+fn scenario_cmd(args: &Args) -> n3ic::Result<()> {
+    let registry = n3ic::scenario::ScenarioRegistry::standard();
+    let Some(name) = args.positional.get(1).map(String::as_str) else {
+        usage_err(&format!(
+            "scenario needs a name: {}",
+            registry.names().join("|")
+        ));
+    };
+    let cfg = n3ic::scenario::ScenarioConfig {
+        events: match args.get_u64("events", 0) {
+            Ok(v) => v,
+            Err(e) => usage_err(&e),
+        },
+        flows: match args.get_u64("flows", 256) {
+            Ok(v) => v,
+            Err(e) => usage_err(&e),
+        },
+        trigger_pkts: match args.get_u64("trigger-pkts", 5) {
+            Ok(v) => u32::try_from(v)
+                .unwrap_or_else(|_| usage_err("--trigger-pkts does not fit in 32 bits")),
+            Err(e) => usage_err(&e),
+        },
+        seed: match args.get_u64("seed", 7) {
+            Ok(v) => v,
+            Err(e) => usage_err(&e),
+        },
+        backend: args.get("backend", "fpga"),
+        workers: match args.get_u64("pipeline", 0) {
+            Ok(v) => v as usize,
+            Err(e) => usage_err(&e),
+        },
+        batch: match args.get_u64("batch", 0) {
+            Ok(v) => v as usize,
+            Err(e) => usage_err(&e),
+        },
+        shards: match args.get_u64("shards", 1) {
+            Ok(v) => v as usize,
+            Err(e) => usage_err(&e),
+        },
+        flow_capacity: match args.get_u64("table-cap", 1 << 16) {
+            Ok(v) => v as usize,
+            Err(e) => usage_err(&e),
+        },
+        evict: match parse_evict(&args.get("evict", "lru")) {
+            Ok(v) => v,
+            Err(e) => usage_err(&e),
+        },
+        shed: match parse_shed_policy(&args.get("shed-policy", "off")) {
+            Ok(v) => v,
+            Err(e) => usage_err(&e),
+        },
+        admin: None,
+    };
+    let about = registry.get(name).map(|s| s.about().to_string());
+    let rep = registry.run(name, &cfg)?;
+    let st = &rep.service.stats;
+    println!("== scenario report ==");
+    println!("scenario         : {}", rep.scenario);
+    if let Some(about) = about {
+        println!("use case         : {about}");
+    }
+    println!("backend          : {}", rep.backend);
+    println!("events           : {}", st.packets);
+    println!("flows tracked    : {}", rep.service.flows_tracked);
+    println!("nn inferences    : {}", st.inferences);
+    if st.sheds > 0 {
+        println!("sheds            : {}", st.sheds);
+    }
+    let ft = &st.flow_table;
+    if ft.evictions + ft.aged_out > 0 {
+        println!(
+            "flow table       : evictions={} aged_out={}",
+            ft.evictions, ft.aged_out
+        );
+    }
+    let s = rep.score;
+    println!(
+        "score            : coverage={:.3} agreement={:.3} accuracy={:.3} \
+         (scored {} of {} expected flows)",
+        s.coverage, s.agreement, s.accuracy, s.scored, s.expected
+    );
+    for d in &rep.deadlines {
+        println!(
+            "deadline {:4}    : {} NNs in {:.0} us -> {}",
+            d.link,
+            d.nns,
+            d.period_ns / 1e3,
+            if d.ok { "ok" } else { "missed" }
+        );
+    }
+    println!(
+        "floor check      : accuracy {:.3} vs floor {:.2} -> {}",
+        s.accuracy,
+        rep.floor,
+        if rep.passes_floor() { "PASS" } else { "FAIL" }
+    );
+    println!("verdict digest   : 0x{:016x}", rep.digest());
+    if !rep.passes_floor() {
+        anyhow::bail!(
+            "scenario {name}: accuracy {:.3} below floor {:.2}",
+            s.accuracy,
+            rep.floor
+        );
+    }
+    Ok(())
 }
 
 /// Verify the AOT artifact end to end, then serve through the bit-exact

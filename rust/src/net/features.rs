@@ -141,6 +141,79 @@ mod tests {
         assert_eq!(p[4] >> 24, 0);
     }
 
+    fn tcp_packet(ts_ns: f64, size: u16) -> crate::net::packet::Packet {
+        crate::net::packet::Packet {
+            ts_ns,
+            src_ip: 1,
+            dst_ip: 2,
+            src_port: 9,
+            dst_port: 10,
+            proto: crate::net::packet::Proto::Tcp,
+            size,
+            tcp_flags: 0x10,
+        }
+    }
+
+    #[test]
+    fn zero_packet_flow_features_are_all_zero() {
+        // A never-updated FlowStats exercises every division guard at
+        // once: pkts == 0 (mean, variance, up-ratio, flag rate), bytes
+        // == 0 (byte ratio), duration == 0 (burstiness).
+        let f = FeatureVector::from_stats(&FlowStats::default());
+        assert_eq!(f.0, [0u16; N_FEATURES]);
+        // And the packed form is the zero vector, not garbage.
+        assert!(f.pack().iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn zero_byte_flow_guards_byte_ratio() {
+        // Zero-length packets: pkts > 0 but bytes == 0, so the up/down
+        // byte ratio hits its bytes-denominator guard while the packet
+        // ratio still divides normally.
+        let mut s = FlowStats::default();
+        s.update(&tcp_packet(0.0, 0), true);
+        s.update(&tcp_packet(1000.0, 0), true);
+        assert_eq!(s.bytes, 0);
+        let f = FeatureVector::from_stats(&s);
+        assert_eq!(f.0[10], 0); // byte ratio guarded to 0, not NaN-cast
+        assert_eq!(f.0[9], 65535); // pkt ratio: 2/2 forward
+        assert_eq!(f.0[0], 0); // mean size of empty packets
+        assert_eq!(f.0[6], 0); // total bytes
+    }
+
+    #[test]
+    fn single_packet_flow_has_no_time_derived_features() {
+        // One packet: duration 0 (burstiness guard), no IATs, variance
+        // exactly mean² − mean² = 0.
+        let mut s = FlowStats::default();
+        s.update(&tcp_packet(5_000.0, 100), true);
+        let f = FeatureVector::from_stats(&s);
+        assert_eq!(f.0[3], 0); // size std of a single sample
+        assert_eq!(f.0[4], 0); // duration
+        assert_eq!(f.0[7], 0); // mean IAT
+        assert_eq!(f.0[8], 0); // max IAT
+        assert_eq!(f.0[15], 0); // burstiness: dur_ms == 0 branch
+        assert_eq!(f.0[0], 4000); // mean size 100 × 40 still computed
+        assert_eq!(f.0[9], 65535); // 1/1 forward packets
+    }
+
+    #[test]
+    fn saturation_clamps_at_u16_max() {
+        // Drive the byte counter far past 65535×16 and duration past the
+        // scale: every clamped feature must read exactly 65535 — the
+        // cast must never wrap.
+        let mut s = FlowStats::default();
+        for i in 0..5_000u32 {
+            // 1 ms apart → 5 s duration → dur_ms × 100 ≫ 65535.
+            s.update(&tcp_packet(i as f64 * 1e6, 1500), true);
+        }
+        let f = FeatureVector::from_stats(&s);
+        assert_eq!(f.0[4], 65535); // duration clamp
+        assert_eq!(f.0[5], 65535); // pkts × 20 clamp
+        assert_eq!(f.0[6], 65535); // bytes / 16 clamp
+        assert_eq!(f.0[9], 65535); // ratio upper bound is exact, no wrap
+    }
+
     #[test]
     fn features_saturate() {
         let mut s = FlowStats::default();

@@ -289,6 +289,81 @@ impl ChurnGen {
     }
 }
 
+/// Labeled attack-mix specification (see [`AttackMixGen`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AttackSpec {
+    /// Benign background: the adversarial churn workload.
+    pub churn: ChurnSpec,
+    /// Fraction of packets belonging to attack flows.
+    pub attack_frac: f64,
+    /// Packets each attacker sends before a fresh source takes over —
+    /// size this above the serving trigger so every attacker is seen.
+    pub attack_pkts: u32,
+}
+
+/// Seeded attack mix: benign [`ChurnGen`] background interleaved with
+/// short-packet TCP SYN probe flows from a reserved `0x0C…` source
+/// prefix, so ground truth is recoverable per packet via
+/// [`AttackMixGen::is_attack`].  One master CBR clock paces the merged
+/// stream (benign timestamps are overwritten), keeping time monotone
+/// and the whole stream a pure function of `(spec, seed)`.
+pub struct AttackMixGen {
+    rng: Rng,
+    spec: AttackSpec,
+    benign: ChurnGen,
+    cur_attacker: u64,
+    cur_left: u32,
+    t_ns: f64,
+}
+
+impl AttackMixGen {
+    pub fn new(spec: AttackSpec, seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed ^ 0xA77A_C4E5_EED5_1234),
+            spec,
+            benign: ChurnGen::new(spec.churn, seed),
+            cur_attacker: 0,
+            cur_left: spec.attack_pkts.max(1),
+            t_ns: 0.0,
+        }
+    }
+
+    /// Ground truth: was this packet emitted by an attack flow?
+    pub fn is_attack(p: &Packet) -> bool {
+        p.src_ip >> 24 == 0x0C
+    }
+
+    fn attack_packet(&self) -> Packet {
+        let id = self.cur_attacker;
+        Packet {
+            ts_ns: self.t_ns,
+            src_ip: 0x0C00_0000 | (id as u32 & 0x00FF_FFFF),
+            dst_ip: 0x0D00_0000 | ((id >> 24) as u32 & 0x00FF_FFFF),
+            src_port: 1024 + (id % 50000) as u16,
+            dst_port: 23,
+            proto: Proto::Tcp,
+            size: 64,
+            tcp_flags: 0x02,
+        }
+    }
+
+    /// Next packet of the merged stream (CBR-paced, monotone time).
+    pub fn next_packet(&mut self) -> Packet {
+        self.t_ns += self.spec.churn.cbr.gap_ns();
+        if self.spec.attack_frac > 0.0 && self.rng.next_f64() < self.spec.attack_frac {
+            if self.cur_left == 0 {
+                self.cur_attacker += 1;
+                self.cur_left = self.spec.attack_pkts.max(1);
+            }
+            self.cur_left -= 1;
+            return self.attack_packet();
+        }
+        let mut p = self.benign.next_packet();
+        p.ts_ns = self.t_ns;
+        p
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -429,6 +504,62 @@ mod tests {
         let short = budgets.iter().filter(|&&b| b <= 10).count();
         assert!(short > budgets.len() / 2, "short={short}");
         assert!(budgets.iter().any(|&b| b > 500), "no tail at all");
+    }
+
+    fn attack_spec(working_set: u64, attack_frac: f64) -> AttackSpec {
+        AttackSpec {
+            churn: churn_spec(working_set, 0.2),
+            attack_frac,
+            attack_pkts: 20,
+        }
+    }
+
+    #[test]
+    fn attack_mix_is_deterministic_and_monotone() {
+        let mut a = AttackMixGen::new(attack_spec(256, 0.25), 9);
+        let mut b = AttackMixGen::new(attack_spec(256, 0.25), 9);
+        let mut last = 0.0;
+        for _ in 0..5000 {
+            let pa = a.next_packet();
+            assert_eq!(pa, b.next_packet());
+            assert!(pa.ts_ns > last, "merged clock must stay monotone");
+            last = pa.ts_ns;
+        }
+    }
+
+    #[test]
+    fn attack_fraction_and_labels_match_spec() {
+        let mut g = AttackMixGen::new(attack_spec(256, 0.25), 42);
+        let n = 40_000;
+        let mut attacks = 0usize;
+        for _ in 0..n {
+            let p = g.next_packet();
+            if AttackMixGen::is_attack(&p) {
+                attacks += 1;
+                // Attack signature: SYN probe, short packet, telnet port.
+                assert_eq!(p.dst_port, 23);
+                assert_eq!(p.tcp_flags, 0x02);
+                assert_eq!(p.size, 64);
+                let (_, fwd) = FlowKey::from_packet(&p);
+                assert!(fwd, "0x0C… source must already be canonical");
+            } else {
+                assert_eq!(p.src_ip >> 24, 0x0A, "benign keeps its prefix");
+            }
+        }
+        let frac = attacks as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.02, "attack frac {frac}");
+    }
+
+    #[test]
+    fn attackers_rotate_after_their_packet_budget() {
+        let mut g = AttackMixGen::new(attack_spec(64, 1.0), 3);
+        let mut per_src = std::collections::HashMap::new();
+        for _ in 0..1000 {
+            let p = g.next_packet();
+            *per_src.entry(p.src_ip).or_insert(0u32) += 1;
+        }
+        assert!(per_src.len() >= 1000 / 20, "sources: {}", per_src.len());
+        assert!(per_src.values().all(|&c| c <= 20));
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! `anomaly` — §5 use case 2 (anomaly detection): a seeded attack mix
+//! layered over the adversarial churn workload, with every malicious
+//! flow labeled at the generator.  Attack flows are short-packet TCP
+//! SYN probes from a reserved source prefix
+//! ([`AttackMixGen::is_attack`]); benign background is the same
+//! heavy-tailed [`ChurnGen`](crate::net::traffic::ChurnGen) mix the
+//! scale harness uses — so this scenario composes directly with
+//! eviction pressure and admission shedding, and the score's
+//! `coverage`/`agreement` quantify exactly what those degradations
+//! cost in detections.
+
+use crate::coordinator::{PacketEvent, TriggerCondition};
+use crate::net::features::INPUT_BITS;
+use crate::net::packet::Packet;
+use crate::net::traffic::{AttackMixGen, AttackSpec, CbrSpec, ChurnSpec};
+
+use super::{
+    centroid_model, oracle_from_firings, replay_trigger_inputs, Prepared, Scenario,
+    ScenarioConfig, UseCaseModel,
+};
+
+/// §5 use case 2: anomaly detection over a labeled attack mix.
+pub struct AnomalyScenario;
+
+const MODELS: &[UseCaseModel] = &[UseCaseModel {
+    name: "anomaly",
+    in_bits: INPUT_BITS,
+    arch: &[32, 16, 2],
+}];
+
+/// Class 1 = attack flow (by generator label), class 0 = benign.
+fn label(p: &Packet) -> usize {
+    usize::from(AttackMixGen::is_attack(p))
+}
+
+impl Scenario for AnomalyScenario {
+    fn name(&self) -> &'static str {
+        "anomaly"
+    }
+
+    fn about(&self) -> &'static str {
+        "anomaly detection: labeled attack mix over churning background (§5 use case 2)"
+    }
+
+    fn use_case_models(&self) -> &'static [UseCaseModel] {
+        MODELS
+    }
+
+    fn default_events(&self) -> u64 {
+        20_000
+    }
+
+    fn accuracy_floor(&self) -> f64 {
+        0.85
+    }
+
+    fn prepare(&self, cfg: &ScenarioConfig) -> Prepared {
+        let n = if cfg.events == 0 { self.default_events() } else { cfg.events } as usize;
+        let trigger_pkts = cfg.trigger_pkts.max(1);
+        let spec = AttackSpec {
+            churn: ChurnSpec {
+                cbr: CbrSpec { gbps: 40.0, pkt_size: 256 },
+                working_set: cfg.flows.max(1),
+                churn_frac: 0.2,
+                alpha: 1.2,
+                min_pkts: 2,
+                max_pkts: 10_000,
+            },
+            attack_frac: 0.25,
+            // Each attacker sends enough packets to clear the trigger.
+            attack_pkts: trigger_pkts * 4,
+        };
+        let mut gen = AttackMixGen::new(spec, cfg.seed);
+        let events: Vec<PacketEvent> = (0..n)
+            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
+            .collect();
+        let trigger = TriggerCondition::EveryNPackets(trigger_pkts);
+        let firings = replay_trigger_inputs(&events, trigger);
+        let mut class0 = Vec::new();
+        let mut class1 = Vec::new();
+        for (_, packed, pkt) in &firings {
+            if label(pkt) == 1 {
+                class1.push(packed.clone());
+            } else {
+                class0.push(packed.clone());
+            }
+        }
+        let model = centroid_model("anomaly", INPUT_BITS, &class0, &class1);
+        let oracle = oracle_from_firings(&firings, &model, label);
+        Prepared { events, trigger, model, oracle }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attack_mix_is_labeled_and_separable() {
+        let cfg = ScenarioConfig::default();
+        let p = AnomalyScenario.prepare(&cfg);
+        p.model.validate().unwrap();
+        let attacks: usize = p.oracle.labels.values().sum();
+        let benign = p.oracle.labels.len() - attacks;
+        assert!(attacks > 10, "attack flows must trigger ({attacks})");
+        assert!(benign > 10, "benign flows must trigger ({benign})");
+        // Detection accuracy of the calibrated model on its own
+        // transcript clears the scenario floor with margin.
+        let agree = p
+            .oracle
+            .expected
+            .iter()
+            .filter(|&(id, class)| p.oracle.labels.get(id) == Some(class))
+            .count();
+        let acc = agree as f64 / p.oracle.expected.len() as f64;
+        assert!(acc >= AnomalyScenario.accuracy_floor(), "calibration acc {acc}");
+    }
+
+    #[test]
+    fn prepare_is_deterministic() {
+        let cfg = ScenarioConfig { seed: 11, ..ScenarioConfig::default() };
+        let a = AnomalyScenario.prepare(&cfg);
+        let b = AnomalyScenario.prepare(&cfg);
+        assert_eq!(a.oracle.expected, b.oracle.expected);
+        assert_eq!(a.model.layers[0].words, b.model.layers[0].words);
+    }
+}

@@ -1,0 +1,187 @@
+//! `tomography` — §5 use case 3 (modified SIMON): bridge fat-tree probe
+//! rounds into the serving plane as a packet-clocked event stream.  Each
+//! probe round becomes one synthetic "flow" whose payload carries the
+//! thermometer-encoded probe delays (19 × 8 unary bits = 152), fired at
+//! the service through the `NewFlow` trigger; the congestion verdict per
+//! round is scored against the simulator's ground-truth backlog for the
+//! monitored queue.  The scenario also checks the Fig. 15 real-time
+//! budget: the backend's per-NN latency × NNs-per-NIC against the probe
+//! period at each link speed.
+
+use crate::bnn::BnnExecutor;
+use crate::coordinator::service::flow_id;
+use crate::coordinator::{Capabilities, PacketEvent, TriggerCondition};
+use crate::fattree::{
+    FatTreeSim, IncastWorkload, ProbeCollector, SimConfig, Topology, N_MONITORED_QUEUES,
+    THERMO_LEVELS,
+};
+use crate::net::packet::{Packet, Proto};
+use crate::tomography::{
+    meets_deadline, PROBE_PERIOD_100G_NS, PROBE_PERIOD_400G_NS, PROBE_PERIOD_40G_NS,
+};
+
+use super::{
+    centroid_model, DeadlineCheck, Oracle, Prepared, Scenario, ScenarioConfig, UseCaseModel,
+};
+
+/// §5 use case 3: network tomography over probe delays.
+pub struct TomographyScenario;
+
+/// 19 probe paths × 8 thermometer levels.
+const TOMO_BITS: usize = 19 * THERMO_LEVELS;
+
+const MODELS: &[UseCaseModel] = &[
+    UseCaseModel { name: "tomography_32", in_bits: 152, arch: &[32, 16, 2] },
+    UseCaseModel { name: "tomography_64", in_bits: 152, arch: &[64, 32, 2] },
+    UseCaseModel { name: "tomography_128", in_bits: 152, arch: &[128, 64, 2] },
+];
+
+impl Scenario for TomographyScenario {
+    fn name(&self) -> &'static str {
+        "tomography"
+    }
+
+    fn about(&self) -> &'static str {
+        "network tomography: congestion verdicts from probe delays (§5 use case 3)"
+    }
+
+    fn use_case_models(&self) -> &'static [UseCaseModel] {
+        MODELS
+    }
+
+    /// Total probe rounds; the first half calibrates, the second serves.
+    fn default_events(&self) -> u64 {
+        240
+    }
+
+    fn accuracy_floor(&self) -> f64 {
+        0.6
+    }
+
+    fn prepare(&self, cfg: &ScenarioConfig) -> Prepared {
+        let rounds = if cfg.events == 0 { self.default_events() } else { cfg.events } as usize;
+        let topo = Topology::new();
+        let sim_cfg = SimConfig { probe_interval_ns: 1e6, load: 1.1, ..SimConfig::default() };
+        let mut wl = IncastWorkload::new(&topo, &sim_cfg);
+        let mut sim = FatTreeSim::new(topo.clone(), sim_cfg, cfg.seed);
+        let data = sim.run(rounds, &mut wl);
+        let half = data.len() / 2;
+        let collector = ProbeCollector::fit(&data[..half], 0.25);
+
+        // Calibrate a nearest-centroid BNN on the first half: thermometer
+        // packing makes Hamming distance the L1 delay distance, so the
+        // centroid model is a genuine minimum-distance congestion test.
+        let mut class0 = Vec::new();
+        let mut class1 = Vec::new();
+        for r in &data[..half] {
+            let s = collector.thermo_sample(r);
+            if s.congested[0] {
+                class1.push(s.packed);
+            } else {
+                class0.push(s.packed);
+            }
+        }
+        let model = centroid_model("tomography", TOMO_BITS, &class0, &class1);
+
+        // Serve the second half: one synthetic flow per probe round,
+        // payload = packed thermometer sample, label = sim ground truth.
+        let mut exec = BnnExecutor::new(model.clone());
+        let mut oracle = Oracle::default();
+        let mut events = Vec::with_capacity(data.len() - half);
+        for (i, r) in data[half..].iter().enumerate() {
+            let s = collector.thermo_sample(r);
+            let packet = Packet {
+                ts_ns: r.t_ns,
+                src_ip: 0x0A00_0000 | (i as u32 & 0x00FF_FFFF),
+                dst_ip: 0x0B00_0000,
+                src_port: 7777,
+                dst_port: 7777,
+                proto: Proto::Udp,
+                size: 64,
+                tcp_flags: 0,
+            };
+            let id = flow_id(&packet);
+            oracle.labels.insert(id, usize::from(s.congested[0]));
+            oracle.expected.insert(id, exec.classify(&s.packed));
+            events.push(PacketEvent { packet, payload_words: Some(s.packed) });
+        }
+        Prepared { events, trigger: TriggerCondition::NewFlow, model, oracle }
+    }
+
+    fn deadlines(&self, caps: &Capabilities) -> Vec<DeadlineCheck> {
+        let nns = N_MONITORED_QUEUES;
+        [
+            ("40G", PROBE_PERIOD_40G_NS),
+            ("100G", PROBE_PERIOD_100G_NS),
+            ("400G", PROBE_PERIOD_400G_NS),
+        ]
+        .into_iter()
+        .map(|(link, period_ns)| DeadlineCheck {
+            link,
+            period_ns,
+            nns,
+            ok: meets_deadline(caps.inference_ns, nns, period_ns),
+        })
+        .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_rounds_become_one_flow_each() {
+        let cfg = ScenarioConfig { events: 160, ..ScenarioConfig::default() };
+        let p = TomographyScenario.prepare(&cfg);
+        assert_eq!(p.events.len(), 80, "second half of rounds serves");
+        assert_eq!(p.oracle.labels.len(), 80, "every round gets a label");
+        assert_eq!(p.trigger, TriggerCondition::NewFlow);
+        p.model.validate().unwrap();
+        assert_eq!(p.model.in_bits, TOMO_BITS);
+        // Payload is pre-packed to the model's input width.
+        for ev in &p.events {
+            assert_eq!(ev.payload_words.as_ref().unwrap().len(), p.model.in_words());
+        }
+        // Both congestion classes occur under incast overload.
+        let ones: usize = p.oracle.labels.values().sum();
+        assert!(ones > 0 && ones < p.oracle.labels.len(), "ones={ones}");
+        // The calibrated centroid clears the scenario floor on the
+        // held-out serving half.
+        let agree = p
+            .oracle
+            .expected
+            .iter()
+            .filter(|&(id, class)| p.oracle.labels.get(id) == Some(class))
+            .count();
+        let acc = agree as f64 / p.oracle.expected.len() as f64;
+        assert!(acc >= TomographyScenario.accuracy_floor(), "held-out acc {acc}");
+    }
+
+    #[test]
+    fn prepare_is_deterministic() {
+        let cfg = ScenarioConfig { events: 120, seed: 3, ..ScenarioConfig::default() };
+        let a = TomographyScenario.prepare(&cfg);
+        let b = TomographyScenario.prepare(&cfg);
+        assert_eq!(a.oracle.expected, b.oracle.expected);
+        assert_eq!(a.model.layers[0].words, b.model.layers[0].words);
+    }
+
+    #[test]
+    fn deadline_checks_cover_all_three_link_speeds() {
+        let caps = Capabilities {
+            backend: "fpga",
+            max_batch: 1,
+            shards: 1,
+            routes: 1,
+            supports_hot_swap: false,
+            supports_epoch_pinning: false,
+            inference_ns: 1_700.0,
+        };
+        let d = TomographyScenario.deadlines(&caps);
+        assert_eq!(d.len(), 3);
+        assert!(d.iter().all(|c| c.nns == N_MONITORED_QUEUES));
+        // 1.7 µs × 17 NNs ≈ 29 µs: fits 250/100 µs, misses 25 µs.
+        assert!(d[0].ok && d[1].ok && !d[2].ok);
+    }
+}

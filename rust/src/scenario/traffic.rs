@@ -1,0 +1,117 @@
+//! `traffic` — §5 use case 1 (traffic analysis): classify flows from
+//! the 256-bit packed flow-statistics vector, triggered once a flow has
+//! accumulated enough packets.  This wraps the serving path the crate
+//! has exercised since PR 1, but now with a ground-truth oracle: the
+//! generator's protocol mix is the label (TCP/443 service traffic vs
+//! UDP/53), the model is a nearest-centroid BNN calibrated on the
+//! replayed trigger-point features, and the score checks the live
+//! service reproduces the offline replay flow-for-flow.
+
+use crate::coordinator::{PacketEvent, TriggerCondition};
+use crate::net::features::INPUT_BITS;
+use crate::net::packet::{Packet, Proto};
+use crate::net::traffic::{CbrSpec, TrafficGen};
+
+use super::{
+    centroid_model, oracle_from_firings, replay_trigger_inputs, Prepared, Scenario,
+    ScenarioConfig, UseCaseModel,
+};
+
+/// §5 use case 1: per-flow traffic analysis.
+pub struct TrafficScenario;
+
+const MODELS: &[UseCaseModel] = &[UseCaseModel {
+    name: "traffic",
+    in_bits: INPUT_BITS,
+    arch: &[32, 16, 2],
+}];
+
+/// Class 1 = TCP service traffic, class 0 = UDP (the generator's mix).
+fn label(p: &Packet) -> usize {
+    usize::from(p.proto == Proto::Tcp)
+}
+
+impl Scenario for TrafficScenario {
+    fn name(&self) -> &'static str {
+        "traffic"
+    }
+
+    fn about(&self) -> &'static str {
+        "traffic analysis: protocol class from 256-bit flow statistics (§5 use case 1)"
+    }
+
+    fn use_case_models(&self) -> &'static [UseCaseModel] {
+        MODELS
+    }
+
+    fn default_events(&self) -> u64 {
+        20_000
+    }
+
+    fn accuracy_floor(&self) -> f64 {
+        0.9
+    }
+
+    fn prepare(&self, cfg: &ScenarioConfig) -> Prepared {
+        let n = if cfg.events == 0 { self.default_events() } else { cfg.events } as usize;
+        let spec = CbrSpec { gbps: 40.0, pkt_size: 256 };
+        let mut gen = TrafficGen::new(spec, cfg.flows.max(1), cfg.seed);
+        let events: Vec<PacketEvent> = (0..n)
+            .map(|_| PacketEvent { packet: gen.next_packet(), payload_words: None })
+            .collect();
+        let trigger = TriggerCondition::EveryNPackets(cfg.trigger_pkts.max(1));
+        let firings = replay_trigger_inputs(&events, trigger);
+        let mut class0 = Vec::new();
+        let mut class1 = Vec::new();
+        for (_, packed, pkt) in &firings {
+            if label(pkt) == 1 {
+                class1.push(packed.clone());
+            } else {
+                class0.push(packed.clone());
+            }
+        }
+        let model = centroid_model("traffic", INPUT_BITS, &class0, &class1);
+        let oracle = oracle_from_firings(&firings, &model, label);
+        Prepared { events, trigger, model, oracle }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepared_oracle_separates_the_protocol_mix() {
+        let cfg = ScenarioConfig::default();
+        let p = TrafficScenario.prepare(&cfg);
+        assert_eq!(p.model.in_bits, INPUT_BITS);
+        assert_eq!(p.model.out_neurons(), 2);
+        p.model.validate().unwrap();
+        assert!(!p.oracle.expected.is_empty());
+        assert_eq!(p.oracle.expected.len(), p.oracle.labels.len());
+        // Both classes occur in the seeded mix (flow % 4 split).
+        let ones: usize = p.oracle.labels.values().sum();
+        assert!(ones > 0 && ones < p.oracle.labels.len());
+        // The calibrated centroid model must separate its own
+        // calibration transcript at least to the scenario floor —
+        // otherwise the end-to-end floor could never pass.
+        let agree = p
+            .oracle
+            .expected
+            .iter()
+            .filter(|&(id, class)| p.oracle.labels.get(id) == Some(class))
+            .count();
+        let acc = agree as f64 / p.oracle.expected.len() as f64;
+        assert!(acc >= TrafficScenario.accuracy_floor(), "calibration acc {acc}");
+    }
+
+    #[test]
+    fn prepare_is_deterministic() {
+        let cfg = ScenarioConfig::default();
+        let a = TrafficScenario.prepare(&cfg);
+        let b = TrafficScenario.prepare(&cfg);
+        assert_eq!(a.oracle.expected, b.oracle.expected);
+        assert_eq!(a.model.layers[0].words, b.model.layers[0].words);
+        assert_eq!(a.events.len(), b.events.len());
+    }
+}

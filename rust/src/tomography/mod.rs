@@ -173,6 +173,35 @@ mod tests {
     }
 
     #[test]
+    fn deadline_boundary_exact_fit_and_zero_nns() {
+        // Exact fit: latency × NNs == period is *meeting* the deadline
+        // (the paper's ≤, not <) — at every link speed.
+        assert!(meets_deadline(PROBE_PERIOD_40G_NS / 4.0, 4, PROBE_PERIOD_40G_NS));
+        assert!(meets_deadline(PROBE_PERIOD_100G_NS, 1, PROBE_PERIOD_100G_NS));
+        assert!(meets_deadline(PROBE_PERIOD_400G_NS / 17.0, 17, PROBE_PERIOD_400G_NS));
+        // One unit past the exact fit misses.
+        assert!(!meets_deadline(PROBE_PERIOD_100G_NS + 1.0, 1, PROBE_PERIOD_100G_NS));
+        // Zero NNs to run: trivially met, even with absurd latency —
+        // `nns` must scale the cost, not gate the comparison.
+        assert!(meets_deadline(1e12, 0, PROBE_PERIOD_400G_NS));
+        // Zero period with work to do misses; zero period with no work
+        // is the degenerate exact fit.
+        assert!(!meets_deadline(1.0, 1, 0.0));
+        assert!(meets_deadline(1.0, 0, 0.0));
+    }
+
+    #[test]
+    fn probe_periods_match_simon_link_speeds() {
+        // §6.2's budgets: 250/100/25 µs at 40/100/400 Gb/s.  The period
+        // scales inversely with link speed (2.5× then 4×).
+        assert_eq!(PROBE_PERIOD_40G_NS, 250_000.0);
+        assert_eq!(PROBE_PERIOD_100G_NS, 100_000.0);
+        assert_eq!(PROBE_PERIOD_400G_NS, 25_000.0);
+        assert_eq!(PROBE_PERIOD_40G_NS / PROBE_PERIOD_100G_NS, 2.5);
+        assert_eq!(PROBE_PERIOD_100G_NS / PROBE_PERIOD_400G_NS, 4.0);
+    }
+
+    #[test]
     fn linear_detectors_beat_chance() {
         let run = TomographyRun::default();
         let model = crate::bnn::BnnModel::random("tomo", 152, &[32, 16, 2], 3);

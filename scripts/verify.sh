@@ -100,4 +100,37 @@ echo "$overload_out" | grep -q "step-down" \
 echo "$overload_out" | grep -q "step-up" \
   || { echo "overload smoke: expected a ladder step-up (recovery)"; exit 1; }
 
+# Scenario smoke: every paper use case (§5) runs seeded and small
+# through the unified service, serial AND pipelined.  Each run must
+# clear its accuracy floor (the CLI exits nonzero and prints FAIL
+# otherwise), and the pipelined run must reproduce the serial run's
+# order-independent verdict digest — the determinism contract checked
+# end-to-end through the scenario subsystem.
+echo "== scenario smoke: all three use cases, floor + serial≡pipelined digest =="
+for sc in traffic anomaly tomography; do
+  if [ "$sc" = tomography ]; then ev=160; else ev=8000; fi
+  serial_out=$(cargo run --release --quiet -- scenario "$sc" --events "$ev")
+  echo "$serial_out"
+  echo "$serial_out" | grep -q "PASS" \
+    || { echo "scenario smoke: $sc serial did not PASS its floor"; exit 1; }
+  piped_out=$(cargo run --release --quiet -- scenario "$sc" --events "$ev" \
+    --pipeline 3 --batch 8)
+  echo "$piped_out" | grep -q "PASS" \
+    || { echo "scenario smoke: $sc pipelined did not PASS its floor"; exit 1; }
+  d_serial=$(echo "$serial_out" | grep "verdict digest")
+  d_piped=$(echo "$piped_out" | grep "verdict digest")
+  [ -n "$d_serial" ] && [ "$d_serial" = "$d_piped" ] \
+    || { echo "scenario smoke: $sc digest mismatch: '$d_serial' vs '$d_piped'"; exit 1; }
+done
+
+# Per-scenario throughput record (smoke cells assert each floor too).
+echo "== perf smoke: scenario bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench scenario
+
+# The tracked per-scenario throughput entry in BENCH.json.
+echo "== perf: scenario bench (writes tracked BENCH.json) =="
+cargo bench --bench scenario
+grep -q '"scenario"' ../BENCH.json \
+  || { echo "scenario bench: no 'scenario' entry in BENCH.json"; exit 1; }
+
 echo "verify.sh: all gates passed"
