@@ -4,14 +4,17 @@
 //! (tomography net), Fig. 25/26 (big FCs) — measured wall-clock on this
 //! host via the in-tree harness (`n3ic::bench`), recorded in
 //! EXPERIMENTS.md §Perf alongside the modeled numbers.
+//!
+//! Every row here drives a [`BackendFactory`] plane — the shipped
+//! serving path — rather than a raw executor struct, so what this bench
+//! times is what `serve --backend` actually runs.
 
 use n3ic::bench::{bench, group};
-use n3ic::bnn::{BnnExecutor, BnnLayer, BnnModel};
+use n3ic::bnn::{BnnLayer, BnnModel};
 use n3ic::coordinator::{BackendFactory, InferencePlane};
-use n3ic::pisa::compile_bnn;
 
 fn main() {
-    group("core_inference (one inference, bit-exact executor)");
+    group("core_inference (one inference through the batch plane)");
     for (name, in_bits, arch) in [
         ("traffic_32_16_2", 256usize, vec![32usize, 16, 2]),
         ("tomo_128_64_2", 152, vec![128, 64, 2]),
@@ -19,12 +22,8 @@ fn main() {
     ] {
         let model = BnnModel::random(name, in_bits, &arch, 1);
         let x = BnnLayer::random(1, in_bits, 7).words;
-        let mut exec = BnnExecutor::new(model.clone());
-        let mut scores = vec![0i32; model.out_neurons()];
-        bench(name, || {
-            exec.infer(std::hint::black_box(&x), &mut scores);
-            scores[0]
-        });
+        let mut plane = BackendFactory::single("batch", model).unwrap();
+        bench(name, || plane.classify(0, std::hint::black_box(&x)).0);
     }
 
     // Since the batch-engine PR this runs the weight-stationary tiled
@@ -49,12 +48,16 @@ fn main() {
         );
     }
 
-    group("pisa_interpreter (NNtoP4 functional path)");
-    let prog = compile_bnn(&model).unwrap();
+    group("pisa_interpreter (NNtoP4 functional path, via the pisa plane)");
+    let mut pisa = BackendFactory::single("pisa", model.clone()).unwrap();
     let x = BnnLayer::random(1, 256, 3).words;
     bench("pisa_interpreter_traffic", || {
-        std::hint::black_box(prog.run(std::hint::black_box(&x)))
+        pisa.classify(0, std::hint::black_box(&x)).0
     });
+
+    group("qmlp_fixed_point (quantized-MLP plane)");
+    let mut qmlp = BackendFactory::single("qmlp", model.clone()).unwrap();
+    bench("qmlp_traffic", || qmlp.classify(0, std::hint::black_box(&x)).0);
 
     // The AOT/PJRT path (L1+L2 through XLA): per-call overhead vs the
     // native core — quantifies why the coordinator keeps the bit-exact

@@ -1,10 +1,17 @@
 //! Benches for the device-model engines (Figs. 17/18, 21–31): the NFP
 //! queueing simulation, the fat-tree discrete-event core, and the NNtoP4
-//! compiler — the compute that regenerates the scaling figures.
+//! compiler — the compute that regenerates the scaling figures — plus an
+//! end-to-end serve-path cell so the shipped `ServeBuilder` pipeline
+//! (packet clock → trigger → plane → sink) is timed here too, for the
+//! batch and qmlp backends.
 
 use n3ic::bench::{bench, group};
 use n3ic::bnn::BnnModel;
+use n3ic::coordinator::{
+    BackendFactory, OutputSelector, PacketEvent, ServeBuilder, TriggerCondition,
+};
 use n3ic::fattree::{FatTreeSim, IncastWorkload, SimConfig, Topology};
+use n3ic::net::traffic::CbrSpec;
 use n3ic::nfp::{MemKind, NfpSim};
 use n3ic::pisa::compile_bnn;
 
@@ -31,4 +38,24 @@ fn main() {
     bench("nntop4_compile_traffic", || {
         compile_bnn(std::hint::black_box(&model)).unwrap().total_ops()
     });
+
+    // End to end through the unified service (a Service is consumed by
+    // `run`, so each iteration rebuilds it; the event burst is prebuilt
+    // and cloned per run).
+    group("serve path (ServeBuilder, 5k CBR packets, trigger every 10)");
+    let events =
+        PacketEvent::cbr_burst(CbrSpec { gbps: 10.0, pkt_size: 256 }, 500, 11, 5_000);
+    for backend in ["batch", "qmlp"] {
+        bench(&format!("serve_5k_{backend}"), || {
+            let rep = ServeBuilder::new()
+                .backend(BackendFactory::single(backend, model.clone()).unwrap())
+                .trigger(TriggerCondition::EveryNPackets(10))
+                .output(OutputSelector::Memory)
+                .build()
+                .unwrap()
+                .run(events.iter().cloned())
+                .expect("healthy serve run");
+            rep.stats.inferences
+        });
+    }
 }

@@ -1,0 +1,192 @@
+//! `simd` — GOPS / inputs-per-second grid for the kernel scoring paths
+//! (ISSUE 9): the scalar XNOR/popcount loop vs the AVX2 path (when
+//! `--features simd` compiled it in and the CPU has it), on the paper's
+//! `traffic_32_16_2` model and a deliberately fat fully-connected model
+//! where the vector loop has room to win.  A `qmlp` row sizes the
+//! fixed-point executor next to them.
+//!
+//! GOPS counts 2 bit-ops per synapse (XNOR + popcount-accumulate):
+//! `work_words × 32 × 2` per inference.  The grid merges into the
+//! `benches.simd` entry of `BENCH.json`; `scripts/verify.sh` fails if
+//! that key is missing.  Regenerate with:
+//!
+//! ```text
+//! cd rust && cargo bench --bench simd --features simd
+//! ```
+//!
+//! `N3IC_BENCH_SMOKE=1` routes numbers to the gitignored
+//! `BENCH.smoke.json`; `N3IC_BENCH_ENFORCE=1` turns the speedup floor
+//! (vector ≥ 1.2× scalar on the fat model, only where AVX2 is live)
+//! into a nonzero exit code.
+
+use n3ic::bench::{bench, group, smoke_mode, write_bench_json, BenchResult};
+use n3ic::bnn::{simd, BatchKernel, BnnLayer, BnnModel, KernelPath};
+use n3ic::json::{obj, Json};
+use n3ic::qmlp::{QmlpExecutor, QMLP_FRAC_BITS};
+
+const BATCH: usize = 1024;
+
+struct Row {
+    model: &'static str,
+    path: &'static str,
+    lanes: usize,
+    batch: usize,
+    ns_per_batch: f64,
+    inputs_per_sec: f64,
+    gops: f64,
+}
+
+fn ops_per_inference(model: &BnnModel) -> f64 {
+    // XNOR + popcount-accumulate per synapse bit.
+    model.work_words() as f64 * 32.0 * 2.0
+}
+
+fn inputs_for(model: &BnnModel, batch: usize) -> Vec<Vec<u32>> {
+    (0..batch)
+        .map(|i| BnnLayer::random(1, model.in_bits, 7_000 + i as u64).words)
+        .collect()
+}
+
+fn kernel_row(
+    rows: &mut Vec<Row>,
+    model: &BnnModel,
+    model_tag: &'static str,
+    path: KernelPath,
+    path_tag: &'static str,
+) {
+    let mut kernel = BatchKernel::new_with_path(model, path);
+    let inputs = inputs_for(model, BATCH);
+    let mut classes = Vec::with_capacity(BATCH);
+    let r: BenchResult = bench(&format!("{model_tag}_{path_tag}_b{BATCH}"), || {
+        kernel.run_batch(std::hint::black_box(&inputs), &mut classes);
+        classes.len()
+    });
+    let inputs_per_sec = BATCH as f64 * r.per_second();
+    rows.push(Row {
+        model: model_tag,
+        path: path_tag,
+        lanes: kernel.simd_lanes(),
+        batch: BATCH,
+        ns_per_batch: r.ns_per_iter,
+        inputs_per_sec,
+        gops: inputs_per_sec * ops_per_inference(model) / 1e9,
+    });
+}
+
+fn find(rows: &[Row], model: &str, path: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.model == model && r.path == path)
+        .map(|r| r.inputs_per_sec)
+}
+
+fn main() {
+    println!(
+        "simd_compiled={} simd_available={} active_lanes={}",
+        simd::simd_compiled(),
+        simd::simd_available(),
+        simd::active_lanes(),
+    );
+
+    let traffic = BnnModel::random("traffic_32_16_2", 256, &[32, 16, 2], 1);
+    let fat = BnnModel::random("fc_2048_256_2", 2048, &[256, 2], 2);
+    let mut rows: Vec<Row> = Vec::new();
+
+    group("simd / traffic_32_16_2 (the paper's use-case shape)");
+    kernel_row(&mut rows, &traffic, "traffic_32_16_2", KernelPath::Scalar, "scalar");
+    kernel_row(&mut rows, &traffic, "traffic_32_16_2", KernelPath::Simd, "simd");
+
+    group("simd / fc_2048_256_2 (fat rows: vector headroom)");
+    kernel_row(&mut rows, &fat, "fc_2048_256_2", KernelPath::Scalar, "scalar");
+    kernel_row(&mut rows, &fat, "fc_2048_256_2", KernelPath::Simd, "simd");
+
+    group("simd / qmlp fixed-point executor (serial, for scale)");
+    {
+        let mut exec = QmlpExecutor::from_bnn(&traffic, QMLP_FRAC_BITS).unwrap();
+        let inputs = inputs_for(&traffic, 64);
+        let r = bench("qmlp_traffic_serial", || {
+            let mut acc = 0usize;
+            for x in &inputs {
+                acc += exec.classify(std::hint::black_box(x));
+            }
+            acc
+        });
+        let inputs_per_sec = 64.0 * r.per_second();
+        rows.push(Row {
+            model: "traffic_32_16_2",
+            path: "qmlp",
+            lanes: 1,
+            batch: 64,
+            ns_per_batch: r.ns_per_iter,
+            inputs_per_sec,
+            gops: inputs_per_sec * ops_per_inference(&traffic) / 1e9,
+        });
+    }
+
+    println!("\n== simd summary ==");
+    let enforce = std::env::var_os("N3IC_BENCH_ENFORCE").is_some();
+    let mut floors_missed = false;
+    if let (Some(scalar), Some(vector)) = (
+        find(&rows, "fc_2048_256_2", "scalar"),
+        find(&rows, "fc_2048_256_2", "simd"),
+    ) {
+        let ratio = vector / scalar;
+        if simd::simd_available() {
+            // The vector path must pay for itself where it runs at all.
+            floors_missed |= ratio < 1.2;
+            println!(
+                "avx2 @ fc_2048_256_2      : {:.2}M inputs/s = {ratio:.2}x scalar \
+                 (acceptance floor: 1.2x)",
+                vector / 1e6
+            );
+        } else {
+            println!(
+                "avx2 unavailable: both rows took the scalar path ({ratio:.2}x, no floor)"
+            );
+        }
+    }
+    for r in &rows {
+        println!(
+            "{:>16} {:>7}  lanes={} batch={:>5}  {:>10.2}M inputs/s  {:>8.2} GOPS",
+            r.model,
+            r.path,
+            r.lanes,
+            r.batch,
+            r.inputs_per_sec / 1e6,
+            r.gops
+        );
+    }
+
+    let fragment = obj(vec![
+        ("smoke", Json::Bool(smoke_mode())),
+        ("simd_compiled", Json::Bool(simd::simd_compiled())),
+        ("simd_available", Json::Bool(simd::simd_available())),
+        ("active_lanes", Json::Num(simd::active_lanes() as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("model", Json::Str(r.model.into())),
+                            ("path", Json::Str(r.path.into())),
+                            ("lanes", Json::Num(r.lanes as f64)),
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("ns_per_batch", Json::Num((r.ns_per_batch * 10.0).round() / 10.0)),
+                            ("inputs_per_sec", Json::Num(r.inputs_per_sec.round())),
+                            ("gops", Json::Num((r.gops * 100.0).round() / 100.0)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    match write_bench_json("simd", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+
+    if enforce && floors_missed {
+        eprintln!("simd: acceptance floor missed (see summary above)");
+        std::process::exit(1);
+    }
+}

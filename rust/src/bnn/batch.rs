@@ -14,6 +14,12 @@
 //! lane `t` lives at `act[q * TILE + t]` — so the inner loop reads one
 //! contiguous `TILE`-wide stripe per weight qword.
 //!
+//! The per-tile scoring loop itself lives in [`super::simd`]: kernels
+//! resolve a [`KernelPath`] at construction and score tiles through
+//! either the scalar reference loop or the AVX2 XNOR/popcount path
+//! (`--features simd` + runtime detection) — both exact integer
+//! arithmetic, bit-identical on every shape.
+//!
 //! Bit-exact with [`BnnExecutor::infer`](super::BnnExecutor): asserted
 //! by `tests/batch_exact.rs` across odd word counts, ragged final tiles,
 //! and every batch size the tests sweep.
@@ -21,6 +27,7 @@
 use std::sync::Arc;
 
 use super::exec::{argmax, qword, Layer64, PackedModel};
+use super::simd::{self, KernelPath};
 use super::BnnModel;
 
 /// Inputs scored per weight-row pass.  8 lanes is a design estimate,
@@ -47,24 +54,49 @@ pub struct BatchKernel {
     act_b: Vec<u64>,
     /// Final-layer scores of the current tile, `[lane][neuron]`.
     scores: Vec<i32>,
+    /// Resolved once at construction from a [`KernelPath`]: score tiles
+    /// through the AVX2 XNOR/popcount loop (`simd` feature + runtime
+    /// detection) or the scalar reference.  Both are bit-identical.
+    use_simd: bool,
 }
 
 impl BatchKernel {
     pub fn new(model: &BnnModel) -> Self {
-        Self::with_packed(PackedModel::arc(model))
+        Self::new_with_path(model, KernelPath::Auto)
+    }
+
+    /// Build with an explicit scoring path — the differential suite uses
+    /// this to run `Scalar` and `Simd` kernels side by side on one model.
+    pub fn new_with_path(model: &BnnModel, path: KernelPath) -> Self {
+        Self::with_packed_path(PackedModel::arc(model), path)
     }
 
     /// Build on an existing packed-weight handle (shared with a
     /// [`BnnExecutor`](super::BnnExecutor) or sibling shard workers).
     pub(crate) fn with_packed(packed: Arc<PackedModel>) -> Self {
+        Self::with_packed_path(packed, KernelPath::Auto)
+    }
+
+    pub(crate) fn with_packed_path(packed: Arc<PackedModel>, path: KernelPath) -> Self {
         let mut k = Self {
             packed,
             act_a: Vec::new(),
             act_b: Vec::new(),
             scores: Vec::new(),
+            use_simd: simd::resolve(path),
         };
         k.grow_scratch();
         k
+    }
+
+    /// 64-bit qword lanes one vector op covers on this kernel's resolved
+    /// path (4 = AVX2, 1 = scalar) — surfaced as `Capabilities::simd_lanes`.
+    pub fn simd_lanes(&self) -> usize {
+        if self.use_simd {
+            4
+        } else {
+            1
+        }
     }
 
     /// Point this kernel at a different packed model (a registry epoch's
@@ -154,7 +186,7 @@ impl BatchKernel {
             } else {
                 (&self.act_b, &mut self.act_a)
             };
-            Self::layer_forward_tile(layer, lanes, &src[..layer.qwords * TILE], dst);
+            Self::layer_forward_tile(layer, lanes, &src[..layer.qwords * TILE], dst, self.use_simd);
             cur_in_a = !cur_in_a;
         }
         let last = &self.packed.layers[n_layers - 1];
@@ -165,6 +197,7 @@ impl BatchKernel {
             &src[..last.qwords * TILE],
             self.packed.out_neurons,
             &mut self.scores,
+            self.use_simd,
         );
     }
 
@@ -184,11 +217,11 @@ impl BatchKernel {
 
     /// One hidden layer over a tile.  The weight-stationary inner loop:
     /// each weight qword is loaded once and scored against every lane.
-    fn layer_forward_tile(layer: &Layer64, lanes: usize, x: &[u64], out: &mut [u64]) {
+    fn layer_forward_tile(layer: &Layer64, lanes: usize, x: &[u64], out: &mut [u64], simd: bool) {
         let out_q = layer.out_qwords();
         out[..out_q * TILE].fill(0);
         for n in 0..layer.neurons {
-            let acc = Self::score_tile(layer.row(n), x);
+            let acc = simd::score_tile(layer.row(n), x, simd);
             let base = (n / 64) * TILE;
             let bit = 1u64 << (n % 64);
             for (t, &a) in acc.iter().enumerate().take(lanes) {
@@ -206,29 +239,15 @@ impl BatchKernel {
         x: &[u64],
         out_neurons: usize,
         scores: &mut [i32],
+        simd: bool,
     ) {
         debug_assert_eq!(layer.neurons, out_neurons);
         for n in 0..layer.neurons {
-            let acc = Self::score_tile(layer.row(n), x);
+            let acc = simd::score_tile(layer.row(n), x, simd);
             for (t, &a) in acc.iter().enumerate().take(lanes) {
                 scores[t * out_neurons + n] = a as i32 - layer.pad_bias;
             }
         }
-    }
-
-    /// The hot loop: one neuron's weight row against all TILE lanes.
-    /// `TILE` independent accumulators — LLVM turns the fixed-width inner
-    /// loop into a vector XNOR + vector popcount.
-    #[inline]
-    fn score_tile(row: &[u64], x: &[u64]) -> [u32; TILE] {
-        let mut acc = [0u32; TILE];
-        for (q, &w) in row.iter().enumerate() {
-            let stripe = &x[q * TILE..q * TILE + TILE];
-            for t in 0..TILE {
-                acc[t] += (!(w ^ stripe[t])).count_ones();
-            }
-        }
-        acc
     }
 }
 
@@ -268,5 +287,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn explicit_paths_agree_and_report_their_lanes() {
+        let model = BnnModel::random("m", 256, &[32, 16, 2], 11);
+        let inputs: Vec<Vec<u32>> = (0..TILE + 5)
+            .map(|i| BnnLayer::random(1, 256, 900 + i as u64).words)
+            .collect();
+        let mut scalar = BatchKernel::new_with_path(&model, KernelPath::Scalar);
+        let mut forced = BatchKernel::new_with_path(&model, KernelPath::Simd);
+        assert_eq!(scalar.simd_lanes(), 1);
+        assert_eq!(forced.simd_lanes() == 4, simd::simd_available());
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        scalar.infer_batch_scores(&inputs, &mut a);
+        forced.infer_batch_scores(&inputs, &mut b);
+        assert_eq!(a, b, "scalar and vector paths must be bit-identical");
     }
 }

@@ -26,6 +26,7 @@ pub mod engine;
 pub mod exec;
 mod model;
 pub mod registry;
+pub mod simd;
 
 pub use batch::{BatchKernel, TILE};
 pub use engine::{EngineError, EngineStats, ShardedEngine};
@@ -35,6 +36,7 @@ pub use registry::{
     ModelEpoch, ModelRegistry, MultiModelExecutor, RegistryError, RegistryHandle, SlotReader,
     VersionTag,
 };
+pub use simd::KernelPath;
 
 /// Word width of the packed representation (the paper's `block_size`).
 pub const BLOCK_SIZE: usize = 32;

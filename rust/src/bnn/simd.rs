@@ -1,0 +1,274 @@
+//! Runtime-dispatched SIMD scoring path for the batch kernel (ISSUE 9).
+//!
+//! The scalar hot loop in [`BatchKernel`](super::BatchKernel) scores one
+//! weight qword against all [`TILE`] lanes with `u64::count_ones`; this
+//! module adds an explicit AVX2 twin behind the off-by-default `simd`
+//! cargo feature: the weight qword is broadcast into a 256-bit register,
+//! XNORed against two 4-lane stripes of the activation tile, and
+//! popcounted with the nibble-lookup (`pshufb`) + `psadbw` reduction —
+//! exact integer arithmetic end to end, so the vector path is
+//! **bit-identical** to the scalar loop on every shape (asserted by the
+//! widened differential suite in `tests/differential.rs`).
+//!
+//! Selection is a runtime decision, not a compile-time one: kernels
+//! resolve a [`KernelPath`] at construction against
+//! [`simd_available`] (compiled in **and** `avx2` detected on this CPU)
+//! and the process-wide [`force_scalar`] override, so the same binary
+//! serves the vector path where the hardware has it and falls back to
+//! the scalar loop everywhere else.  Planes report the resolved width
+//! through `Capabilities::simd_lanes`.
+//!
+//! Without the `simd` feature (or off x86-64) every entry point here
+//! still exists — [`simd_available`] is `false`, every path resolves to
+//! the scalar loop, and the differential tests pass trivially, which is
+//! exactly what `scripts/verify.sh` checks by building both feature
+//! sets.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::batch::TILE;
+
+/// Which scoring loop a [`BatchKernel`](super::BatchKernel) should use.
+/// Resolved once at kernel construction (and kept across `retarget`);
+/// tests construct `Scalar` and `Simd` kernels side by side to prove
+/// bit-exactness, production code uses `Auto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Vector path when compiled in, detected, and not forced off —
+    /// the default everywhere.
+    Auto,
+    /// Always the scalar loop (the differential reference).
+    Scalar,
+    /// Vector path whenever compiled + detected, ignoring
+    /// [`force_scalar`] (the differential suite's forced arm).
+    Simd,
+}
+
+/// Process-wide scalar override for `Auto` kernels, so end-to-end tests
+/// and benches can run the same scenario through both paths of one
+/// binary.  Only consulted at kernel *construction*: already-built
+/// kernels keep their resolved path.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force (or unforce) every subsequently constructed `Auto` kernel onto
+/// the scalar loop.  Both paths are bit-identical, so flipping this
+/// mid-run can never change a verdict — it only changes speed.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::SeqCst);
+}
+
+/// Is the scalar override currently set?
+pub fn scalar_forced() -> bool {
+    FORCE_SCALAR.load(Ordering::SeqCst)
+}
+
+/// Was the vector path compiled into this binary (`--features simd` on
+/// x86-64)?
+pub const fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Compiled in **and** AVX2 detected on this CPU (cached after the
+/// first query).
+pub fn simd_available() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        static DETECTED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *DETECTED.get_or_init(|| is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// 64-bit qword lanes one vector op covers on the path an `Auto` kernel
+/// would resolve to right now: 4 on the AVX2 path, 1 on the scalar
+/// loop.  This is what planes publish as `Capabilities::simd_lanes`.
+pub fn active_lanes() -> usize {
+    if simd_available() && !scalar_forced() {
+        4
+    } else {
+        1
+    }
+}
+
+/// Resolve a [`KernelPath`] to "use the vector loop?" — the one place
+/// the dispatch decision is made.
+pub(crate) fn resolve(path: KernelPath) -> bool {
+    match path {
+        KernelPath::Scalar => false,
+        KernelPath::Simd => simd_available(),
+        KernelPath::Auto => simd_available() && !scalar_forced(),
+    }
+}
+
+/// The scalar hot loop: one neuron's weight row against all TILE lanes,
+/// `TILE` independent accumulators (LLVM turns the fixed-width inner
+/// loop into a vector XNOR + vector popcount where the baseline ISA
+/// allows).  This is the reference the vector path must match bit for
+/// bit.
+#[inline]
+pub(crate) fn score_tile_scalar(row: &[u64], x: &[u64]) -> [u32; TILE] {
+    let mut acc = [0u32; TILE];
+    for (q, &w) in row.iter().enumerate() {
+        let stripe = &x[q * TILE..q * TILE + TILE];
+        for t in 0..TILE {
+            acc[t] += (!(w ^ stripe[t])).count_ones();
+        }
+    }
+    acc
+}
+
+/// Dispatch one tile score through the resolved path.  `use_simd` comes
+/// from [`resolve`], so it is only ever true when AVX2 was detected at
+/// runtime on a build that compiled the intrinsics in.
+#[inline]
+pub(crate) fn score_tile(row: &[u64], x: &[u64], use_simd: bool) -> [u32; TILE] {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_simd {
+        // SAFETY: `resolve` gates on `simd_available()`, which requires
+        // a positive `is_x86_feature_detected!("avx2")` on this CPU.
+        return unsafe { avx2::score_tile(row, x) };
+    }
+    let _ = use_simd;
+    score_tile_scalar(row, x)
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_add_epi8, _mm256_and_si256, _mm256_loadu_si256,
+        _mm256_sad_epu8, _mm256_set1_epi64x, _mm256_set1_epi8, _mm256_setr_epi8,
+        _mm256_setzero_si256, _mm256_shuffle_epi8, _mm256_srli_epi16, _mm256_storeu_si256,
+        _mm256_xor_si256,
+    };
+
+    use super::TILE;
+
+    // The two-halves-of-4 layout below hardcodes the 8-lane tile.
+    const _: () = assert!(TILE == 8);
+
+    /// Per-64-bit-lane popcount of a 256-bit vector: nibble lookup via
+    /// `pshufb` (each byte split into two 4-bit table indexes), then
+    /// `psadbw` against zero sums the 8 byte-counts of each 64-bit lane.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount_epi64(
+        v: __m256i,
+        lookup: __m256i,
+        low_mask: __m256i,
+        zero: __m256i,
+    ) -> __m256i {
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+        let cnt =
+            _mm256_add_epi8(_mm256_shuffle_epi8(lookup, lo), _mm256_shuffle_epi8(lookup, hi));
+        _mm256_sad_epu8(cnt, zero)
+    }
+
+    /// AVX2 twin of [`score_tile_scalar`](super::score_tile_scalar):
+    /// each weight qword is broadcast once and XNORed (xor + complement)
+    /// against the tile's 8-lane stripe, held as two 4×u64 vectors with
+    /// two independent 4×u64 accumulators.  All arithmetic is exact
+    /// integer popcounting — bit-identical to the scalar loop by
+    /// construction.
+    ///
+    /// # Safety
+    /// Requires AVX2 at runtime; `x` must hold at least
+    /// `row.len() * TILE` qwords (the kernel's lane-interleaved layout
+    /// guarantees this).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn score_tile(row: &[u64], x: &[u64]) -> [u32; TILE] {
+        debug_assert!(x.len() >= row.len() * TILE);
+        let zero = _mm256_setzero_si256();
+        let low_mask = _mm256_set1_epi8(0x0f);
+        #[rustfmt::skip]
+        let lookup = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let ones = _mm256_set1_epi8(-1);
+        let mut acc0 = zero;
+        let mut acc1 = zero;
+        for (q, &w) in row.iter().enumerate() {
+            let wv = _mm256_set1_epi64x(w as i64);
+            let p = x.as_ptr().add(q * TILE);
+            let s0 = _mm256_loadu_si256(p.cast());
+            let s1 = _mm256_loadu_si256(p.add(4).cast());
+            let v0 = _mm256_xor_si256(_mm256_xor_si256(wv, s0), ones);
+            let v1 = _mm256_xor_si256(_mm256_xor_si256(wv, s1), ones);
+            acc0 = _mm256_add_epi64(acc0, popcount_epi64(v0, lookup, low_mask, zero));
+            acc1 = _mm256_add_epi64(acc1, popcount_epi64(v1, lookup, low_mask, zero));
+        }
+        let mut lanes = [0u64; TILE];
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), acc0);
+        _mm256_storeu_si256(lanes.as_mut_ptr().add(4).cast(), acc1);
+        let mut acc = [0u32; TILE];
+        for (a, &l) in acc.iter_mut().zip(&lanes) {
+            *a = l as u32;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_honors_the_force_flag_and_feature_state() {
+        assert!(!resolve(KernelPath::Scalar));
+        // Simd/Auto resolve to the vector loop only where it exists.
+        assert_eq!(resolve(KernelPath::Simd), simd_available());
+        force_scalar(true);
+        assert!(scalar_forced());
+        assert!(!resolve(KernelPath::Auto), "force_scalar must win over Auto");
+        assert_eq!(resolve(KernelPath::Simd), simd_available(), "Simd ignores the override");
+        assert_eq!(active_lanes(), 1);
+        force_scalar(false);
+        assert!(!scalar_forced());
+        assert_eq!(resolve(KernelPath::Auto), simd_available());
+        assert_eq!(active_lanes() > 1, simd_available());
+        if !simd_compiled() {
+            assert!(!simd_available(), "vector path cannot appear uncompiled");
+        }
+    }
+
+    #[test]
+    fn scalar_tile_scorer_counts_xnor_matches() {
+        // 2 qwords per row: all-ones weights against per-lane patterns.
+        let row = [!0u64, !0u64];
+        let mut x = [0u64; 2 * TILE];
+        x[0] = !0; // lane 0, qword 0: full match = 64
+        x[1] = 0; // lane 1, qword 0: no match
+        x[TILE] = !0; // lane 0, qword 1: full match again
+        x[TILE + 2] = 0xFFFF_FFFF; // lane 2, qword 1: half match
+        let acc = score_tile_scalar(&row, &x);
+        assert_eq!(acc[0], 128, "lane 0: two full-match qwords");
+        assert_eq!(acc[1], 0, "lane 1: zero vs all-ones never matches");
+        assert_eq!(acc[2], 32, "lane 2: only the low half of qword 1 matches");
+        assert_eq!(acc[7], 0, "untouched lanes score zero against all-ones");
+    }
+
+    #[test]
+    fn dispatched_tile_scorer_matches_scalar_on_every_path() {
+        // Deterministic pseudo-random rows/stripes; compare the dispatch
+        // (vector where available) against the scalar reference.
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for qwords in [1usize, 2, 3, 5, 8, 13] {
+            let row: Vec<u64> = (0..qwords).map(|_| next()).collect();
+            let x: Vec<u64> = (0..qwords * TILE).map(|_| next()).collect();
+            let want = score_tile_scalar(&row, &x);
+            for use_simd in [false, resolve(KernelPath::Simd)] {
+                assert_eq!(score_tile(&row, &x, use_simd), want, "qwords={qwords}");
+            }
+        }
+    }
+}

@@ -12,9 +12,13 @@
 //! | `fpga`     | bit-exact core, FPGA module timing      | weight-stationary kernel | §4.3 device model latency |
 //! | `nfp`      | bit-exact core, NFP data-parallel timing| weight-stationary kernel | alias kept for the `serve` CLI |
 //! | `placed`   | cost-aware [`PlacedPlane`] over fpga/sharded/host (+pisa when it compiles) | cheapest healthy member per batch width | per-member circuit breakers + failover |
+//! | `qmlp`     | fixed-point i32 [`QmlpExecutor`] (Q-format, Taylor activations) | serial (inline per input) | P4-FPGA SmartNIC executor shape |
 //! | `registry` | versioned [`MultiModelExecutor`]        | per-epoch kernel / engine | hot swap + epoch pinning |
 //!
-//! All of them compute the paper's Algorithm 1 bit-exactly; the
+//! All of them produce Algorithm 1's verdicts bit-exactly — the BNN
+//! planes compute it directly; `qmlp` computes the quantized-MLP
+//! equivalent whose verdicts are provably identical
+//! ([`QuantMlp::from_bnn`](crate::qmlp::QuantMlp::from_bnn)).  The
 //! conformance suite (`tests/plane_conformance.rs`) asserts identical
 //! verdict histograms across every row of this table.
 
@@ -26,6 +30,7 @@ use crate::bnn::{
 };
 use crate::bnnexec::HostCostModel;
 use crate::pisa::PisaProgram;
+use crate::qmlp::{QmlpExecutor, QMLP_FRAC_BITS};
 
 use super::overload::{BreakerPolicy, PlacedPlane};
 use super::plane::{Capabilities, InferencePlane, SwapController};
@@ -36,8 +41,8 @@ pub struct BackendFactory;
 
 impl BackendFactory {
     /// Every registered backend name, in capability-table order.
-    pub const BACKENDS: [&'static str; 7] =
-        ["host", "batch", "sharded", "pisa", "fpga", "placed", "registry"];
+    pub const BACKENDS: [&'static str; 8] =
+        ["host", "batch", "sharded", "pisa", "fpga", "placed", "qmlp", "registry"];
 
     /// Build a single-model backend by name (single-core batch path
     /// where one applies; see [`single_sharded`](Self::single_sharded)).
@@ -146,6 +151,22 @@ impl BackendFactory {
                 members.push(Self::single("host", model)?);
                 Ok(Box::new(PlacedPlane::new(members, BreakerPolicy::default())?))
             }
+            // The quantized-MLP executor (P4-FPGA SmartNIC shape):
+            // fixed-point i32 layers with Taylor activations, built from
+            // the BNN by the verdict-preserving `from_bnn` quantization.
+            // It scores each input serially (no tiled batch kernel), so
+            // like pisa there is nothing to shard.
+            "qmlp" => {
+                if shards > 1 {
+                    return Err(ServiceError::Config(
+                        "the qmlp backend scores serially and has no batch path to shard".into(),
+                    ));
+                }
+                let latency_ns = qmlp_latency_ns(&model);
+                let exec = QmlpExecutor::from_bnn(&model, QMLP_FRAC_BITS)
+                    .map_err(|e| ServiceError::Config(format!("qmlp quantization: {e}")))?;
+                Ok(Box::new(QmlpPlane { exec, latency_ns }))
+            }
             "registry" => Err(ServiceError::Config(
                 "the registry backend serves named slots: publish models into a \
                  RegistryHandle and use BackendFactory::registry"
@@ -250,6 +271,7 @@ impl InferencePlane for CorePlane {
     fn capabilities(&self) -> Capabilities {
         Capabilities {
             shards: self.engine.as_ref().map_or(1, ShardedEngine::n_shards),
+            simd_lanes: self.kernel.simd_lanes(),
             ..Capabilities::single(self.backend, self.latency_ns)
         }
     }
@@ -339,6 +361,52 @@ impl InferencePlane for PisaPlane {
     }
 }
 
+/// Modeled per-inference latency of the quantized-MLP executor: a fixed
+/// dispatch cost plus the integer MAC stream at 4 MACs/ns — a host-CPU
+/// figure in the same analytic spirit as the other backends' models
+/// (the conformance suite only requires it to be positive).
+fn qmlp_latency_ns(model: &BnnModel) -> f64 {
+    30.0 + model.work_words() as f64 * 32.0 / 4.0
+}
+
+/// The fixed-point quantized-MLP plane: a [`QmlpExecutor`] built from
+/// the BNN by the verdict-preserving quantization, scoring each input
+/// serially (data-plane MLP executors pipeline packets, they don't
+/// batch).  No shards, no swap machinery, scalar kernel — the
+/// capability row is deliberately modest; what the backend buys is
+/// scenario reach beyond pure BNNs.
+struct QmlpPlane {
+    exec: QmlpExecutor,
+    latency_ns: f64,
+}
+
+impl InferencePlane for QmlpPlane {
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::single("qmlp", self.latency_ns)
+    }
+
+    fn classify(&mut self, _route: usize, x: &[u32]) -> (usize, Option<VersionTag>) {
+        (self.exec.classify(x), None)
+    }
+
+    fn try_run_batch(
+        &mut self,
+        _route: usize,
+        inputs: &[Vec<u32>],
+        classes: &mut Vec<usize>,
+    ) -> Result<Option<VersionTag>, EngineError> {
+        classes.clear();
+        for x in inputs {
+            classes.push(self.exec.classify(x));
+        }
+        Ok(None)
+    }
+
+    fn n_classes(&self) -> usize {
+        self.exec.mlp().out_neurons()
+    }
+}
+
 /// The registry-backed multi-model plane: one
 /// [`MultiModelExecutor`] behind the unified surface.  Epoch pinning
 /// and verdict tagging are the backend's own guarantees
@@ -360,6 +428,7 @@ impl InferencePlane for RegistryPlane {
             supports_hot_swap: true,
             supports_epoch_pinning: true,
             inference_ns: self.exec.latency_ns(),
+            simd_lanes: crate::bnn::simd::active_lanes(),
         }
     }
 
@@ -457,6 +526,10 @@ mod tests {
         let implied = BackendFactory::single("sharded", m.clone()).unwrap();
         assert!(implied.capabilities().shards >= 2);
         assert!(BackendFactory::single_sharded("pisa", m.clone(), 2).is_err());
+        assert!(BackendFactory::single_sharded("qmlp", m.clone(), 2).is_err());
+        let qmlp = BackendFactory::single("qmlp", m.clone()).unwrap();
+        assert_eq!(qmlp.capabilities().max_batch, usize::MAX, "serial loop, still batchable");
+        assert!(qmlp.latency_ns() > 0.0);
         let registry = RegistryHandle::new();
         registry.publish("a", &m).unwrap();
         registry.publish("b", &BnnModel::random("b", 256, &[32, 16, 2], 9)).unwrap();

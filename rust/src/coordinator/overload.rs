@@ -773,6 +773,7 @@ impl InferencePlane for PlacedPlane {
                 .iter()
                 .map(|m| m.caps.inference_ns)
                 .fold(f64::INFINITY, f64::min),
+            simd_lanes: self.members.iter().map(|m| m.caps.simd_lanes).max().unwrap_or(1),
         }
     }
 

@@ -47,6 +47,10 @@ pub struct Capabilities {
     /// the cost model.  The full batch-cost hook is
     /// [`InferencePlane::batch_latency_ns`].
     pub inference_ns: f64,
+    /// 64-bit qword lanes one vector op of the scoring kernel covers:
+    /// `1` = the scalar loop, `4` = the AVX2 XNOR/popcount path resolved
+    /// at kernel construction (see [`crate::bnn::simd`]).
+    pub simd_lanes: usize,
 }
 
 impl Capabilities {
@@ -61,6 +65,7 @@ impl Capabilities {
             supports_hot_swap: false,
             supports_epoch_pinning: false,
             inference_ns,
+            simd_lanes: 1,
         }
     }
 
@@ -72,7 +77,7 @@ impl Capabilities {
             self.max_batch.to_string()
         };
         format!(
-            "backend={} shards={} routes={} max_batch={} hot_swap={} epoch_pinning={} inference_ns={:.1}",
+            "backend={} shards={} routes={} max_batch={} hot_swap={} epoch_pinning={} inference_ns={:.1} simd_lanes={}",
             self.backend,
             self.shards,
             self.routes,
@@ -80,6 +85,7 @@ impl Capabilities {
             self.supports_hot_swap,
             self.supports_epoch_pinning,
             self.inference_ns,
+            self.simd_lanes,
         )
     }
 }
@@ -287,6 +293,8 @@ mod tests {
         assert_eq!((c.shards, c.routes), (1, 1));
         assert!(!c.supports_hot_swap && !c.supports_epoch_pinning);
         assert_eq!(c.inference_ns, 42.0);
+        assert_eq!(c.simd_lanes, 1, "single() describes the scalar loop");
+        assert!(c.summary().contains("simd_lanes=1"));
     }
 
     #[test]

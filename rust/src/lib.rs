@@ -23,6 +23,10 @@
 //!   ns-3 substitute for the SIMON tomography use case).
 //! * [`tomography`] — modified-SIMON probe/inference pipeline (§5 #3).
 //! * [`bnnexec`] — the host-CPU comparison system (§6 "comparison term").
+//! * [`qmlp`] — fixed-point (Q-format i32) quantized-MLP executor with
+//!   Taylor-approximated activations, after the P4-FPGA SmartNIC line of
+//!   work; `QuantMlp::from_bnn` is verdict-equivalent to Algorithm 1, so
+//!   the `qmlp` backend rides the same conformance matrix.
 //! * [`coordinator`] — triggers, input/output selectors, flow shunting,
 //!   batching, and the unified serving runtime: one `InferencePlane`
 //!   trait over every backend, a named `BackendFactory`, and one
@@ -51,6 +55,7 @@ pub mod net;
 pub mod nfp;
 pub mod pcie;
 pub mod pisa;
+pub mod qmlp;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scenario;

@@ -29,7 +29,7 @@ USAGE:
   repro [--artifacts DIR] <command> [options]
 
 COMMANDS:
-  serve        --model NAME --backend host|batch|sharded|pisa|fpga|nfp|placed|pjrt
+  serve        --model NAME --backend host|batch|sharded|pisa|fpga|nfp|placed|qmlp|pjrt
                --packets N --flows N --trigger-pkts N
                --batch N (0 = classify inline; N>0 = batch fast path)
                --shards N (spread batches over N cores where the

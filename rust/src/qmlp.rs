@@ -1,0 +1,496 @@
+//! Fixed-point (Q-format i32) quantized-MLP executor with
+//! Taylor-approximated activations — the `qmlp` backend (ISSUE 9).
+//!
+//! The P4-FPGA SmartNIC line of work (arXiv 2507.00428, PAPERS.md) runs
+//! small quantized MLPs in the data plane with integer-only arithmetic:
+//! weights and activations in a fixed Q-format, and transcendental
+//! activations replaced by low-order Taylor polynomials evaluated in the
+//! same integer domain.  This module reproduces that executor shape on
+//! the host so the scenario suite can score it next to the BNN planes:
+//!
+//! * [`QFormat`] — `Qx.f` fixed point in `i32` with `f` fractional bits
+//!   (`f ∈ 1..=16`), saturating add/mul, half-away-from-zero rounding,
+//!   and a load-time gate that rejects zero/non-power-of-two scales.
+//! * [`QFormat::sigmoid_taylor`] — `σ̃(x) = ½ + x/4 − x³/48` on the
+//!   clamp range `[−2, 2]`, evaluated with a **single** rounded division
+//!   of a monotone numerator, so the approximation is monotone and odd
+//!   (`σ̃(x) + σ̃(−x) = 1` exactly) at every resolution.
+//! * [`QuantMlp`] / [`QmlpExecutor`] — dense integer layers with
+//!   [`Activation`] per layer and a scratch-reusing forward pass.
+//!
+//! The bridge to the rest of the crate is [`QuantMlp::from_bnn`]: a BNN
+//! layer fires iff `popcount ≥ T = W/2` iff the ±1 dot product
+//! `2·popcount − W ≥ 0`, and on those inputs the Taylor sigmoid crosses
+//! ½ at exactly the same point, so the quantized network is
+//! **verdict-identical** to Algorithm 1 (same class, ties included) —
+//! which is what lets the `qmlp` backend ride the existing conformance
+//! matrix and scenario floors unchanged (`tests/qmlp.rs` proves it).
+
+use std::fmt;
+
+use crate::bnn::{argmax, BnnModel};
+
+/// Fractional bits the `qmlp` backend uses (`Q23.8`): enough headroom
+/// for every scenario model and an exact `from_bnn` round trip.
+pub const QMLP_FRAC_BITS: u32 = 8;
+
+/// Typed errors for Q-format construction and model loading.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QmlpError {
+    /// Fractional bit count outside `1..=16`.
+    BadFracBits(u32),
+    /// Quantization scale that is zero, negative, non-finite, or not a
+    /// power of two in `[2^-16, 2^-1]` — rejected at load time.
+    BadScale(f64),
+    /// A non-finite weight/bias/input reached the quantizer.
+    NonFinite(f64),
+    /// Layer geometry that cannot be wired into a network.
+    Shape(String),
+}
+
+impl fmt::Display for QmlpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            QmlpError::BadFracBits(b) => write!(f, "frac_bits {b} outside the supported 1..=16"),
+            QmlpError::BadScale(s) => {
+                write!(f, "scale {s} is not a power-of-two in [2^-16, 2^-1]")
+            }
+            QmlpError::NonFinite(v) => write!(f, "non-finite value {v} cannot be quantized"),
+            QmlpError::Shape(msg) => write!(f, "bad qmlp shape: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for QmlpError {}
+
+/// Round `v / 2^f` half away from zero (the DSP convention; symmetric,
+/// so negating the input negates the output).
+fn round_shift(v: i64, f: u32) -> i64 {
+    debug_assert!(f >= 1);
+    let half = 1i64 << (f - 1);
+    if v >= 0 {
+        v.saturating_add(half) >> f
+    } else {
+        -(v.saturating_neg().saturating_add(half) >> f)
+    }
+}
+
+/// Round `n / d` half away from zero (`d > 0`).
+fn round_div(n: i64, d: i64) -> i64 {
+    debug_assert!(d > 0);
+    let half = d / 2;
+    if n >= 0 {
+        (n + half) / d
+    } else {
+        -((-n + half) / d)
+    }
+}
+
+/// Saturate an `i64` into `i32`.
+fn sat_i32(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// A `Qx.f` fixed-point format in `i32`: `f` fractional bits, value
+/// `q / 2^f`.  All arithmetic saturates instead of wrapping — data-plane
+/// executors cannot trap on overflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    frac_bits: u32,
+}
+
+impl QFormat {
+    /// `f` fractional bits, `1..=16` (beyond 16 the Taylor numerator
+    /// `12·2^2f·x − x³` would not fit the i64 intermediate).
+    pub fn new(frac_bits: u32) -> Result<Self, QmlpError> {
+        if !(1..=16).contains(&frac_bits) {
+            return Err(QmlpError::BadFracBits(frac_bits));
+        }
+        Ok(Self { frac_bits })
+    }
+
+    /// Build from a quantization scale, the way model files carry it.
+    /// Only exact power-of-two scales `2^-16 ..= 2^-1` are accepted;
+    /// zero, negative, and non-finite scales are load-time errors.
+    pub fn from_scale(scale: f64) -> Result<Self, QmlpError> {
+        if scale.is_finite() && scale > 0.0 {
+            for f in 1..=16u32 {
+                if scale == 2f64.powi(-(f as i32)) {
+                    return Self::new(f);
+                }
+            }
+        }
+        Err(QmlpError::BadScale(scale))
+    }
+
+    pub fn frac_bits(&self) -> u32 {
+        self.frac_bits
+    }
+
+    /// The fixed-point representation of 1.0.
+    pub fn one(&self) -> i32 {
+        1i32 << self.frac_bits
+    }
+
+    /// Quantize an `f64` (round half away from zero, saturate to i32).
+    /// Non-finite inputs are errors, not silent saturations.
+    pub fn quantize(&self, v: f64) -> Result<i32, QmlpError> {
+        if !v.is_finite() {
+            return Err(QmlpError::NonFinite(v));
+        }
+        let scaled = (v * self.one() as f64).round();
+        if scaled >= i32::MAX as f64 {
+            Ok(i32::MAX)
+        } else if scaled <= i32::MIN as f64 {
+            Ok(i32::MIN)
+        } else {
+            Ok(scaled as i32)
+        }
+    }
+
+    /// The real value a fixed-point number represents.
+    pub fn to_f64(&self, q: i32) -> f64 {
+        q as f64 / self.one() as f64
+    }
+
+    /// Saturating fixed-point add.
+    pub fn sat_add(&self, a: i32, b: i32) -> i32 {
+        a.saturating_add(b)
+    }
+
+    /// Saturating fixed-point multiply: exact i64 product, rounded back
+    /// by `f` bits, saturated to i32.
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        sat_i32(round_shift(a as i64 * b as i64, self.frac_bits))
+    }
+
+    /// Degree-3 Taylor sigmoid `σ̃(x) = ½ + x/4 − x³/48`, clamped to
+    /// `x ∈ [−2, 2]` where the polynomial is monotone.
+    ///
+    /// Evaluated as `½ + round((12·2^2f·x − x³) / (48·2^2f))` — one
+    /// rounded division of a numerator whose derivative `12·2^2f − 3x²`
+    /// is ≥ 0 on the clamp range, so the fixed-point curve is monotone;
+    /// half-away rounding is odd, so `σ̃(x) + σ̃(−x) = one` exactly and
+    /// `σ̃(0) = one/2` exactly.
+    pub fn sigmoid_taylor(&self, x: i32) -> i32 {
+        let one = self.one() as i64;
+        let x = (x as i64).clamp(-2 * one, 2 * one);
+        let one_sq = one * one;
+        let num = 12 * one_sq * x - x * x * x;
+        let den = 48 * one_sq;
+        sat_i32((one >> 1) + round_div(num, den))
+    }
+}
+
+/// Per-layer activation of a quantized MLP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    /// Pass the Q-format pre-activation through (final scoring layers).
+    Identity,
+    /// The clamped degree-3 Taylor sigmoid.
+    TaylorSigmoid,
+    /// Binarize on the sigmoid's ½ crossing: `+one` iff `σ̃(x) ≥ ½`.
+    /// This is the BNN sign threshold in fixed point.
+    TaylorSign,
+}
+
+impl Activation {
+    fn apply(self, q: QFormat, x: i32) -> i32 {
+        match self {
+            Activation::Identity => x,
+            Activation::TaylorSigmoid => q.sigmoid_taylor(x),
+            Activation::TaylorSign => {
+                if q.sigmoid_taylor(x) >= q.one() >> 1 {
+                    q.one()
+                } else {
+                    -q.one()
+                }
+            }
+        }
+    }
+}
+
+/// One dense integer layer: `neurons × inputs` Q-format weights
+/// (row-major), per-neuron bias, one activation.
+#[derive(Debug, Clone)]
+pub struct QuantLayer {
+    pub neurons: usize,
+    pub inputs: usize,
+    weights: Vec<i32>,
+    bias: Vec<i32>,
+    pub act: Activation,
+}
+
+impl QuantLayer {
+    /// Build from already-quantized weights.
+    pub fn new(
+        neurons: usize,
+        inputs: usize,
+        weights: Vec<i32>,
+        bias: Vec<i32>,
+        act: Activation,
+    ) -> Result<Self, QmlpError> {
+        if neurons == 0 || inputs == 0 {
+            return Err(QmlpError::Shape(format!("empty layer {neurons}x{inputs}")));
+        }
+        if weights.len() != neurons * inputs {
+            return Err(QmlpError::Shape(format!(
+                "weight count {} != {neurons}x{inputs}",
+                weights.len()
+            )));
+        }
+        if bias.len() != neurons {
+            return Err(QmlpError::Shape(format!("bias count {} != {neurons}", bias.len())));
+        }
+        Ok(Self { neurons, inputs, weights, bias, act })
+    }
+
+    /// The load path: quantize f64 weights/biases, rejecting non-finite
+    /// values and shape mismatches before anything reaches the executor.
+    pub fn quantized(
+        neurons: usize,
+        inputs: usize,
+        weights: &[f64],
+        bias: &[f64],
+        act: Activation,
+        q: QFormat,
+    ) -> Result<Self, QmlpError> {
+        let w = weights.iter().map(|&v| q.quantize(v)).collect::<Result<Vec<_>, _>>()?;
+        let b = bias.iter().map(|&v| q.quantize(v)).collect::<Result<Vec<_>, _>>()?;
+        Self::new(neurons, inputs, w, b, act)
+    }
+
+    /// Forward one input vector: i64 multiply-accumulate over Q(f)
+    /// operands (product is Q(2f)), one rounding back to Q(f), bias,
+    /// activation.
+    fn forward(&self, q: QFormat, x: &[i32], out: &mut [i32]) {
+        debug_assert_eq!(x.len(), self.inputs);
+        for (n, o) in out.iter_mut().enumerate().take(self.neurons) {
+            let row = &self.weights[n * self.inputs..(n + 1) * self.inputs];
+            let acc = row
+                .iter()
+                .zip(x)
+                .fold(0i64, |a, (&w, &v)| a.saturating_add(w as i64 * v as i64));
+            let pre = q.sat_add(sat_i32(round_shift(acc, q.frac_bits())), self.bias[n]);
+            *o = self.act.apply(q, pre);
+        }
+    }
+}
+
+/// A quantized MLP: layers chained with BNN-style width padding.  A
+/// layer may feed a *wider* next layer only through
+/// [`Activation::TaylorSign`], because the pad slots are filled with
+/// `−one` — the packed-BNN convention that 0 pad bits mean −1 in the
+/// ±1 algebra.
+#[derive(Debug, Clone)]
+pub struct QuantMlp {
+    name: String,
+    q: QFormat,
+    layers: Vec<QuantLayer>,
+}
+
+impl QuantMlp {
+    pub fn new(name: &str, q: QFormat, layers: Vec<QuantLayer>) -> Result<Self, QmlpError> {
+        if layers.is_empty() {
+            return Err(QmlpError::Shape("no layers".into()));
+        }
+        for (k, pair) in layers.windows(2).enumerate() {
+            let (a, b) = (&pair[0], &pair[1]);
+            if b.inputs < a.neurons {
+                return Err(QmlpError::Shape(format!(
+                    "layer {k} feeds {} neurons into {} inputs",
+                    a.neurons, b.inputs
+                )));
+            }
+            if b.inputs > a.neurons && a.act != Activation::TaylorSign {
+                return Err(QmlpError::Shape(format!(
+                    "layer {k} pads {} -> {} without a sign activation",
+                    a.neurons, b.inputs
+                )));
+            }
+        }
+        Ok(Self { name: name.to_string(), q, layers })
+    }
+
+    /// Verdict-identical quantization of a packed BNN (see the module
+    /// docs): ±1 weights become `±one`, the sign threshold `T` becomes
+    /// the bias `(W − 2T)·one` (zero under Algorithm 1's `T = W/2`),
+    /// hidden layers activate through [`Activation::TaylorSign`], and
+    /// the final layer scores through [`Activation::Identity`] — an
+    /// affine, order-preserving map of the BNN's popcount scores.
+    pub fn from_bnn(model: &BnnModel, frac_bits: u32) -> Result<Self, QmlpError> {
+        let q = QFormat::new(frac_bits)?;
+        let one = q.one();
+        let n_layers = model.layers.len();
+        let mut layers = Vec::with_capacity(n_layers);
+        for (k, l) in model.layers.iter().enumerate() {
+            let inputs = l.in_words * 32;
+            let mut weights = Vec::with_capacity(l.neurons * inputs);
+            for n in 0..l.neurons {
+                for &w32 in l.row(n) {
+                    for b in 0..32 {
+                        weights.push(if (w32 >> b) & 1 == 1 { one } else { -one });
+                    }
+                }
+            }
+            let bias_q = (inputs as i64 - 2 * l.threshold as i64) * one as i64;
+            let bias = vec![sat_i32(bias_q); l.neurons];
+            let act = if k + 1 == n_layers {
+                Activation::Identity
+            } else {
+                Activation::TaylorSign
+            };
+            layers.push(QuantLayer::new(l.neurons, inputs, weights, bias, act)?);
+        }
+        Self::new(&model.name, q, layers)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn q(&self) -> QFormat {
+        self.q
+    }
+
+    pub fn layers(&self) -> &[QuantLayer] {
+        &self.layers
+    }
+
+    /// Input width of the first layer.
+    pub fn in_len(&self) -> usize {
+        self.layers[0].inputs
+    }
+
+    pub fn out_neurons(&self) -> usize {
+        self.layers.last().unwrap().neurons
+    }
+}
+
+/// Scratch-reusing forward executor for a [`QuantMlp`] — the plane the
+/// `qmlp` backend wraps.
+pub struct QmlpExecutor {
+    mlp: QuantMlp,
+    buf_a: Vec<i32>,
+    buf_b: Vec<i32>,
+    scores: Vec<i32>,
+}
+
+impl QmlpExecutor {
+    pub fn new(mlp: QuantMlp) -> Self {
+        let width = mlp.layers.iter().map(|l| l.inputs.max(l.neurons)).max().unwrap_or(0);
+        Self { mlp, buf_a: vec![0; width], buf_b: vec![0; width], scores: Vec::new() }
+    }
+
+    pub fn from_bnn(model: &BnnModel, frac_bits: u32) -> Result<Self, QmlpError> {
+        Ok(Self::new(QuantMlp::from_bnn(model, frac_bits)?))
+    }
+
+    pub fn mlp(&self) -> &QuantMlp {
+        &self.mlp
+    }
+
+    /// Forward a Q-format input vector; `scores` receives the final
+    /// layer's outputs (`out_neurons` of them).
+    pub fn infer(&mut self, x: &[i32], scores: &mut [i32]) {
+        assert_eq!(x.len(), self.mlp.in_len(), "input width != first layer inputs");
+        self.buf_a[..x.len()].copy_from_slice(x);
+        self.run_layers(scores);
+    }
+
+    /// Forward a packed bit vector (the wire format every other backend
+    /// consumes): bit `i` of word `i/32` expands to `±one`, exactly the
+    /// BNN's ±1 input algebra.
+    pub fn infer_bits(&mut self, x: &[u32], scores: &mut [i32]) {
+        let n_in = self.mlp.in_len();
+        assert_eq!(x.len() * 32, n_in, "packed input width != first layer inputs");
+        let one = self.mlp.q.one();
+        for (i, slot) in self.buf_a.iter_mut().enumerate().take(n_in) {
+            let bit = (x[i / 32] >> (i % 32)) & 1;
+            *slot = if bit == 1 { one } else { -one };
+        }
+        self.run_layers(scores);
+    }
+
+    /// Classify a packed bit input: forward + argmax (ties low, same as
+    /// [`argmax`] everywhere else in the crate).
+    pub fn classify(&mut self, x: &[u32]) -> usize {
+        let mut scores = std::mem::take(&mut self.scores);
+        scores.resize(self.mlp.out_neurons(), 0);
+        self.infer_bits(x, &mut scores);
+        let class = argmax(&scores);
+        self.scores = scores;
+        class
+    }
+
+    /// Run all layers assuming `buf_a` holds the first layer's inputs.
+    fn run_layers(&mut self, scores: &mut [i32]) {
+        assert_eq!(scores.len(), self.mlp.out_neurons(), "score buffer width");
+        let q = self.mlp.q;
+        let neg_one = -q.one();
+        let n_layers = self.mlp.layers.len();
+        let mut cur_in_a = true;
+        for k in 0..n_layers - 1 {
+            let layer = &self.mlp.layers[k];
+            let next_inputs = self.mlp.layers[k + 1].inputs;
+            let (src, dst) = if cur_in_a {
+                (&self.buf_a, &mut self.buf_b)
+            } else {
+                (&self.buf_b, &mut self.buf_a)
+            };
+            layer.forward(q, &src[..layer.inputs], &mut dst[..layer.neurons]);
+            // BNN-style width padding: pad slots carry −1 (= 0 pad bits
+            // in the packed algebra); QuantMlp::new proved layer k is a
+            // sign layer whenever this range is non-empty.
+            dst[layer.neurons..next_inputs].fill(neg_one);
+            cur_in_a = !cur_in_a;
+        }
+        let last = &self.mlp.layers[n_layers - 1];
+        let src = if cur_in_a { &self.buf_a } else { &self.buf_b };
+        last.forward(q, &src[..last.inputs], scores);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding_helpers_are_symmetric_and_half_away() {
+        assert_eq!(round_shift(384, 8), 2, "256+128 rounds up");
+        assert_eq!(round_shift(-384, 8), -2, "symmetric");
+        assert_eq!(round_shift(383, 8), 1);
+        assert_eq!(round_shift(-383, 8), -1);
+        assert_eq!(round_shift(i64::MIN, 8), -(i64::MAX >> 8), "saturating negate");
+        assert_eq!(round_div(5, 10), 1, "half rounds away");
+        assert_eq!(round_div(-5, 10), -1);
+        assert_eq!(round_div(4, 10), 0);
+        assert_eq!(round_div(-1, 10), 0);
+    }
+
+    #[test]
+    fn from_bnn_matches_the_bnn_classifier_on_a_small_model() {
+        let model = BnnModel::random("q", 96, &[16, 4], 5);
+        let mut bnn = crate::bnn::BnnExecutor::new(model.clone());
+        let mut qx = QmlpExecutor::from_bnn(&model, QMLP_FRAC_BITS).unwrap();
+        for seed in 0..24u64 {
+            let x = crate::bnn::BnnLayer::random(1, 96, 1000 + seed).words;
+            assert_eq!(qx.classify(&x), bnn.classify(&x), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn final_layer_scores_are_the_affine_bnn_scores() {
+        let model = BnnModel::random("q", 64, &[8, 3], 7);
+        let mut qx = QmlpExecutor::from_bnn(&model, QMLP_FRAC_BITS).unwrap();
+        let x = crate::bnn::BnnLayer::random(1, 64, 77).words;
+        let bnn_scores = crate::bnn::infer_scores(&model, &x);
+        let mut q_scores = vec![0; model.out_neurons()];
+        qx.infer_bits(&x, &mut q_scores);
+        let one = qx.mlp().q().one();
+        let w_last = qx.mlp().layers().last().unwrap().inputs as i32;
+        for (&s, &sq) in bnn_scores.iter().zip(&q_scores) {
+            assert_eq!(sq, (2 * s - w_last) * one, "q = (2s - W)*one");
+        }
+    }
+}

@@ -177,6 +177,7 @@ mod tests {
             supports_hot_swap: false,
             supports_epoch_pinning: false,
             inference_ns: 1_700.0,
+            simd_lanes: 1,
         };
         let d = TomographyScenario.deadlines(&caps);
         assert_eq!(d.len(), 3);

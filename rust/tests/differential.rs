@@ -9,7 +9,9 @@
 //! no proptest), extending `batch_exact.rs` from the batch subsystem to
 //! every backend.
 
-use n3ic::bnn::{argmax, BatchKernel, BnnExecutor, BnnModel, RegistryHandle, ShardedEngine};
+use n3ic::bnn::{
+    argmax, BatchKernel, BnnExecutor, BnnModel, KernelPath, RegistryHandle, ShardedEngine, TILE,
+};
 use n3ic::coordinator::{
     BackendFactory, ModelRouter, OutputSelector, PacketEvent, ServeBuilder, TriggerCondition,
 };
@@ -211,6 +213,72 @@ fn registry_route_matches_standalone_per_flow_subset() {
         .filter(|m| m.inferences > 0)
         .count();
     assert!(active >= 3, "only {active} of {N_MODELS} models saw traffic");
+}
+
+/// ISSUE 9 satellite: the SIMD-vs-scalar shape fuzzer.  Unlike the
+/// five-path fuzz above, these shapes are *not* clamped to the PISA PHV
+/// budget — the kernel paths must agree on every width, so the grid
+/// deliberately hits 1-bit inputs, lane-multiple ± 1 widths, ragged
+/// qword pairings, and batch sizes straddling the tile boundary.  All
+/// three [`KernelPath`]s (and the single-input executor) must agree bit
+/// for bit on classes *and* raw scores; without `--features simd` (or
+/// AVX2) every path resolves scalar and the test still pins the
+/// kernel-vs-executor contract.
+#[test]
+fn simd_scalar_and_single_input_executor_agree_across_fuzzed_shapes() {
+    const FUZZ_MODELS: u64 = 40;
+    // Widths the tile/lane math is most likely to get wrong: around one
+    // word (17, 64), one odd-word qword pad (96), one qword + 1 (129) —
+    // then random, including non-multiples of 32 and 64.
+    const PINNED_BITS: [usize; 4] = [17, 64, 96, 129];
+    let batches = [1usize, TILE - 1, TILE, TILE + 1, 3 * TILE + 5];
+    let mut rng = Rng::new(0x51D0);
+    for m in 0..FUZZ_MODELS {
+        let in_bits = PINNED_BITS
+            .get(m as usize)
+            .copied()
+            .unwrap_or_else(|| 1 + rng.below(300) as usize);
+        let depth = 1 + rng.below(3) as usize;
+        let arch: Vec<usize> = (0..depth).map(|_| 1 + rng.below(70) as usize).collect();
+        let model = BnnModel::random(&format!("simd{m}"), in_bits, &arch, 0x51D0 + m);
+
+        let mut host = BnnExecutor::new(model.clone());
+        let mut scalar = BatchKernel::new_with_path(&model, KernelPath::Scalar);
+        let mut auto = BatchKernel::new_with_path(&model, KernelPath::Auto);
+        let mut forced = BatchKernel::new_with_path(&model, KernelPath::Simd);
+
+        let max_batch = *batches.iter().max().unwrap();
+        let inputs: Vec<Vec<u32>> = (0..max_batch)
+            .map(|_| random_input(&mut rng, model.in_words()))
+            .collect();
+
+        // Reference scores + classes from the single-input executor.
+        let mut buf = vec![0i32; model.out_neurons()];
+        let mut ref_scores = Vec::new();
+        let mut ref_classes = Vec::new();
+        for x in &inputs {
+            host.infer(x, &mut buf);
+            ref_scores.extend_from_slice(&buf);
+            ref_classes.push(argmax(&buf));
+        }
+
+        for &b in &batches {
+            let slice = &inputs[..b];
+            let want_scores = &ref_scores[..b * model.out_neurons()];
+            let want_classes = &ref_classes[..b];
+            for (tag, kernel) in [
+                ("scalar", &mut scalar),
+                ("auto", &mut auto),
+                ("simd", &mut forced),
+            ] {
+                let (mut classes, mut scores) = (Vec::new(), Vec::new());
+                kernel.run_batch(slice, &mut classes);
+                kernel.infer_batch_scores(slice, &mut scores);
+                assert_eq!(classes, want_classes, "simd{m} {tag} b={b} classes");
+                assert_eq!(scores, want_scores, "simd{m} {tag} b={b} scores");
+            }
+        }
+    }
 }
 
 #[test]

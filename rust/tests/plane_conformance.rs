@@ -8,10 +8,12 @@
 //! histogram, same per-flow verdict multiset.
 //!
 //! This folds the cross-executor differential checks in as one lens:
-//! every backend (the six registered names plus the `nfp` CLI alias)
-//! computes the paper's Algorithm 1, so any divergence anywhere in the
-//! matrix is a real defect (a torn swap, a mis-sharded batch, a broken
-//! interpreter), never an "expected backend quirk".
+//! every backend (the registered names plus the `nfp` CLI alias)
+//! produces the paper's Algorithm 1 verdicts — the BNN planes compute
+//! it directly, the `qmlp` plane through its verdict-preserving
+//! quantization — so any divergence anywhere in the matrix is a real
+//! defect (a torn swap, a mis-sharded batch, a broken interpreter, a
+//! rounding bug), never an "expected backend quirk".
 
 use n3ic::bnn::{infer_packed, BnnLayer, BnnModel, RegistryHandle};
 use n3ic::coordinator::{
@@ -44,8 +46,8 @@ fn registry() -> RegistryHandle {
     h
 }
 
-/// Every factory name the suite sweeps: the six registered backends
-/// plus the `nfp` CLI alias (a distinct latency model over the shared
+/// Every factory name the suite sweeps: the registered backends plus
+/// the `nfp` CLI alias (a distinct latency model over the shared
 /// kernel — it must conform like everything else).
 fn all_backends() -> Vec<&'static str> {
     let mut names = BackendFactory::BACKENDS.to_vec();
@@ -226,8 +228,68 @@ fn capability_table_matches_the_documented_contract() {
     assert!(by_name("sharded").shards >= 2);
     assert!(by_name("registry").supports_hot_swap);
     assert!(by_name("registry").supports_epoch_pinning);
-    for n in ["host", "batch", "sharded", "pisa", "fpga"] {
+    for n in ["host", "batch", "sharded", "pisa", "fpga", "qmlp"] {
         assert!(!by_name(n).supports_hot_swap, "{n}");
         assert!(!by_name(n).supports_epoch_pinning, "{n}");
     }
+    // The quantized-MLP plane scores serially but accepts any batch
+    // width, and never shards.
+    assert_eq!(by_name("qmlp").max_batch, usize::MAX);
+    assert_eq!(by_name("qmlp").shards, 1);
+    // Every row reports a kernel lane width.
+    for (name, caps) in BackendFactory::BACKENDS.iter().zip(&rows) {
+        assert!(caps.simd_lanes == 1 || caps.simd_lanes == 4, "{name}");
+    }
+}
+
+/// ISSUE 9 satellite: the vector and scalar kernels must be
+/// indistinguishable at the far end of the system — identical verdict
+/// digests and floor outcomes on all three paper scenarios.  On builds
+/// without `--features simd` (or without AVX2) both runs take the scalar
+/// path and the equality is trivially green, which is exactly the
+/// both-feature-sets contract `scripts/verify.sh` drives.
+#[test]
+fn simd_and_scalar_kernels_produce_identical_scenario_digests() {
+    use n3ic::bnn::simd;
+    use n3ic::scenario::{ScenarioConfig, ScenarioRegistry};
+
+    let registry = ScenarioRegistry::standard();
+    for name in registry.names() {
+        let events = if name == "tomography" { 120 } else { 6_000 };
+        let cfg = ScenarioConfig {
+            events,
+            backend: "batch".into(),
+            batch: 8,
+            ..ScenarioConfig::default()
+        };
+        let auto = registry.run(name, &cfg).unwrap();
+        simd::force_scalar(true);
+        let scalar = registry.run(name, &cfg).unwrap();
+        simd::force_scalar(false);
+        assert_eq!(auto.digest(), scalar.digest(), "{name}: path changed verdicts");
+        assert_eq!(auto.passes_floor(), scalar.passes_floor(), "{name}");
+        assert_eq!(auto.score.scored, scalar.score.scored, "{name}");
+    }
+}
+
+/// ISSUE 9 acceptance: the quantized-MLP backend is scored by the
+/// scenario suite and clears the floor — and because `from_bnn` is
+/// verdict-preserving, its digest matches the reference backend's run
+/// of the same seeded scenario exactly.
+#[test]
+fn qmlp_backend_clears_the_traffic_scenario_floor() {
+    use n3ic::scenario::{ScenarioConfig, ScenarioRegistry};
+
+    let registry = ScenarioRegistry::standard();
+    let cfg = |backend: &str| ScenarioConfig {
+        events: 8_000,
+        backend: backend.into(),
+        ..ScenarioConfig::default()
+    };
+    let qmlp = registry.run("traffic", &cfg("qmlp")).unwrap();
+    assert!(qmlp.passes_floor(), "qmlp accuracy {}", qmlp.score.accuracy);
+    assert!(qmlp.score.scored > 0);
+    let reference = registry.run("traffic", &cfg("fpga")).unwrap();
+    assert_eq!(qmlp.digest(), reference.digest(), "quantization changed a verdict");
+    assert_eq!(qmlp.score.accuracy, reference.score.accuracy);
 }

@@ -1,0 +1,207 @@
+//! ISSUE 9 satellite: fixed-point unit tests for the quantized-MLP
+//! backend — Taylor-activation monotonicity and error bounds against
+//! the f64 reference, Q-format saturation/rounding edge cases
+//! (`i32::MIN`/`MAX`, zero scale rejected at load), and the
+//! verdict-preserving `from_bnn` quantization fuzzed against the BNN
+//! executor.
+
+use n3ic::bnn::{BnnExecutor, BnnLayer, BnnModel};
+use n3ic::net::traffic::Rng;
+use n3ic::qmlp::{
+    Activation, QFormat, QmlpError, QmlpExecutor, QuantLayer, QuantMlp, QMLP_FRAC_BITS,
+};
+
+/// The f64 reference the fixed-point sigmoid approximates:
+/// `½ + x/4 − x³/48` on the clamp range.
+fn taylor_f64(x: f64) -> f64 {
+    let x = x.clamp(-2.0, 2.0);
+    0.5 + x / 4.0 - x * x * x / 48.0
+}
+
+fn sigmoid_f64(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[test]
+fn taylor_sigmoid_is_monotone_across_and_beyond_the_clamp_range() {
+    let q = QFormat::new(8).unwrap();
+    let one = q.one();
+    let mut prev = q.sigmoid_taylor(-3 * one);
+    for x in (-3 * one + 1)..=(3 * one) {
+        let y = q.sigmoid_taylor(x);
+        assert!(y >= prev, "x={x}: {y} < {prev}");
+        prev = y;
+    }
+    // The clamp makes the tails flat, not wrapped.
+    assert_eq!(q.sigmoid_taylor(3 * one), q.sigmoid_taylor(2 * one));
+    assert_eq!(q.sigmoid_taylor(i32::MAX), q.sigmoid_taylor(2 * one));
+    assert_eq!(q.sigmoid_taylor(i32::MIN), q.sigmoid_taylor(-2 * one));
+}
+
+#[test]
+fn taylor_sigmoid_fixed_points_and_odd_symmetry_at_every_resolution() {
+    for f in [1u32, 4, 8, 12, 16] {
+        let q = QFormat::new(f).unwrap();
+        let one = q.one();
+        assert_eq!(q.sigmoid_taylor(0), one / 2, "f={f}: σ̃(0) must be exactly ½");
+        for x in [1, 2, one / 2, one, 2 * one - 1, 2 * one, 3 * one, i32::MAX] {
+            let pos = q.sigmoid_taylor(x);
+            let neg = q.sigmoid_taylor(-x);
+            assert_eq!(pos + neg, one, "f={f} x={x}: σ̃(x)+σ̃(−x) must be exactly 1");
+        }
+        // Saturated extremes mirror too (both clamp to ±2).
+        assert_eq!(q.sigmoid_taylor(i32::MAX) + q.sigmoid_taylor(i32::MIN), one, "f={f}");
+    }
+}
+
+#[test]
+fn taylor_sigmoid_error_bounds_against_the_f64_references() {
+    let q = QFormat::new(12).unwrap();
+    let one = q.one();
+    let ulp = 1.0 / one as f64;
+    let mut max_vs_sigmoid = 0.0f64;
+    for x in -2 * one..=2 * one {
+        let got = q.to_f64(q.sigmoid_taylor(x));
+        let xf = q.to_f64(x);
+        // Against the exact polynomial at representable points: one
+        // rounded division ⇒ at most half an ulp of error.
+        assert!((got - taylor_f64(xf)).abs() <= ulp, "x={xf}: {got}");
+        max_vs_sigmoid = max_vs_sigmoid.max((got - sigmoid_f64(xf)).abs());
+    }
+    // Against the true sigmoid: the degree-3 truncation peaks near the
+    // clamp edge (≈0.0475 at ±2); the bound must hold but not be vacuous.
+    assert!(max_vs_sigmoid <= 0.05, "max error {max_vs_sigmoid}");
+    assert!(max_vs_sigmoid > 0.04, "suspiciously small error {max_vs_sigmoid}");
+}
+
+#[test]
+fn q_format_rounding_and_saturation_edges() {
+    let q = QFormat::new(8).unwrap();
+    let one = q.one();
+    assert_eq!(one, 256);
+
+    // Quantize: half-away rounding, saturation, non-finite rejection.
+    assert_eq!(q.quantize(0.5).unwrap(), one / 2);
+    assert_eq!(q.quantize(0.001953125).unwrap(), 1, "0.5 steps round away from zero");
+    assert_eq!(q.quantize(-0.001953125).unwrap(), -1);
+    assert_eq!(q.quantize(1e30).unwrap(), i32::MAX, "overflow saturates");
+    assert_eq!(q.quantize(-1e30).unwrap(), i32::MIN);
+    assert!(matches!(q.quantize(f64::NAN), Err(QmlpError::NonFinite(_))));
+    assert!(matches!(q.quantize(f64::INFINITY), Err(QmlpError::NonFinite(_))));
+    assert_eq!(q.to_f64(q.quantize(-1.5).unwrap()), -1.5);
+
+    // Multiply: Q(2f) product rounded back, saturating at the rails.
+    assert_eq!(q.mul(one / 2, one / 2), one / 4);
+    assert_eq!(q.mul(3, 128), 2, "384/256 rounds up");
+    assert_eq!(q.mul(-3, 128), -2, "symmetric rounding");
+    assert_eq!(q.mul(i32::MAX, one), i32::MAX);
+    assert_eq!(q.mul(i32::MIN, one), i32::MIN);
+    assert_eq!(q.mul(i32::MIN, i32::MIN), i32::MAX, "−·− saturates high");
+    assert_eq!(q.mul(i32::MAX, i32::MIN), i32::MIN, "+·− saturates low");
+
+    // Saturating add at the rails.
+    assert_eq!(q.sat_add(i32::MAX, 1), i32::MAX);
+    assert_eq!(q.sat_add(i32::MIN, -1), i32::MIN);
+    assert_eq!(q.sat_add(100, -50), 50);
+}
+
+#[test]
+fn bad_scales_and_bad_frac_bits_are_load_time_errors() {
+    assert!(matches!(QFormat::from_scale(0.0), Err(QmlpError::BadScale(_))), "zero scale");
+    assert!(matches!(QFormat::from_scale(-0.25), Err(QmlpError::BadScale(_))));
+    assert!(matches!(QFormat::from_scale(f64::NAN), Err(QmlpError::BadScale(_))));
+    assert!(matches!(QFormat::from_scale(0.3), Err(QmlpError::BadScale(_))), "not a power of 2");
+    assert!(matches!(QFormat::from_scale(1.0), Err(QmlpError::BadScale(_))), "f=0 out of range");
+    assert_eq!(QFormat::from_scale(0.00390625).unwrap().frac_bits(), 8);
+    assert_eq!(QFormat::from_scale(0.25).unwrap().frac_bits(), 2);
+    assert_eq!(QFormat::from_scale(2f64.powi(-16)).unwrap().frac_bits(), 16);
+    assert!(matches!(QFormat::new(0), Err(QmlpError::BadFracBits(0))));
+    assert!(matches!(QFormat::new(17), Err(QmlpError::BadFracBits(17))));
+    assert_eq!(QFormat::new(QMLP_FRAC_BITS).unwrap().one(), 256);
+}
+
+#[test]
+fn layer_loading_rejects_non_finite_weights_and_bad_shapes() {
+    let q = QFormat::new(8).unwrap();
+    let ok = QuantLayer::quantized(2, 3, &[0.5; 6], &[0.0; 2], Activation::Identity, q);
+    assert!(ok.is_ok());
+    let nan = QuantLayer::quantized(
+        2,
+        3,
+        &[0.5, f64::NAN, 0.5, 0.5, 0.5, 0.5],
+        &[0.0; 2],
+        Activation::Identity,
+        q,
+    );
+    assert!(matches!(nan, Err(QmlpError::NonFinite(_))));
+    let bad_w = QuantLayer::new(2, 3, vec![0; 5], vec![0; 2], Activation::Identity);
+    assert!(matches!(bad_w, Err(QmlpError::Shape(_))));
+    let bad_b = QuantLayer::new(2, 3, vec![0; 6], vec![0; 3], Activation::Identity);
+    assert!(matches!(bad_b, Err(QmlpError::Shape(_))));
+    let empty = QuantLayer::new(0, 3, vec![], vec![], Activation::Identity);
+    assert!(matches!(empty, Err(QmlpError::Shape(_))));
+}
+
+#[test]
+fn network_chaining_allows_padding_only_through_sign_layers() {
+    let q = QFormat::new(8).unwrap();
+    let layer = |neurons: usize, inputs: usize, act: Activation| {
+        QuantLayer::new(neurons, inputs, vec![q.one(); neurons * inputs], vec![0; neurons], act)
+            .unwrap()
+    };
+    // 4 sign neurons padded up to a 32-wide next layer: the BNN word
+    // convention, allowed.
+    let padded = QuantMlp::new(
+        "pad",
+        q,
+        vec![layer(4, 8, Activation::TaylorSign), layer(2, 32, Activation::Identity)],
+    );
+    assert!(padded.is_ok());
+    // The same hand-off without a sign activation would pad continuous
+    // values with −1 — rejected.
+    let continuous = QuantMlp::new(
+        "cont",
+        q,
+        vec![layer(4, 8, Activation::TaylorSigmoid), layer(2, 32, Activation::Identity)],
+    );
+    assert!(matches!(continuous, Err(QmlpError::Shape(_))));
+    // A narrowing hand-off drops neurons — always rejected.
+    let narrow = QuantMlp::new(
+        "narrow",
+        q,
+        vec![layer(4, 8, Activation::TaylorSign), layer(2, 3, Activation::Identity)],
+    );
+    assert!(matches!(narrow, Err(QmlpError::Shape(_))));
+    assert!(matches!(QuantMlp::new("empty", q, vec![]), Err(QmlpError::Shape(_))));
+}
+
+/// The heart of the backend's conformance claim: quantizing a random
+/// BNN yields the same classifier, input for input, and the final-layer
+/// scores are exactly the affine image `(2s − W)·one` of the BNN's
+/// popcount scores.
+#[test]
+fn from_bnn_is_verdict_identical_across_fuzzed_models() {
+    const FUZZ_MODELS: u64 = 20;
+    let mut rng = Rng::new(0x0F1D0);
+    for m in 0..FUZZ_MODELS {
+        let in_bits = 1 + rng.below(260) as usize;
+        let depth = 1 + rng.below(3) as usize;
+        let arch: Vec<usize> = (0..depth).map(|_| 1 + rng.below(40) as usize).collect();
+        let model = BnnModel::random(&format!("fq{m}"), in_bits, &arch, 0xF1D0 + m);
+        let mut bnn = BnnExecutor::new(model.clone());
+        let mut qx = QmlpExecutor::from_bnn(&model, QMLP_FRAC_BITS).unwrap();
+        let one = qx.mlp().q().one() as i64;
+        let w_last = qx.mlp().layers().last().unwrap().inputs as i64;
+        let mut bnn_scores = vec![0i32; model.out_neurons()];
+        let mut q_scores = vec![0i32; model.out_neurons()];
+        for i in 0..12u64 {
+            let x = BnnLayer::random(1, in_bits, 3_000 + m * 100 + i).words;
+            assert_eq!(qx.classify(&x), bnn.classify(&x), "fq{m} input {i}");
+            bnn.infer(&x, &mut bnn_scores);
+            qx.infer_bits(&x, &mut q_scores);
+            for (n, (&s, &sq)) in bnn_scores.iter().zip(&q_scores).enumerate() {
+                assert_eq!(sq as i64, (2 * s as i64 - w_last) * one, "fq{m} neuron {n}");
+            }
+        }
+    }
+}

@@ -22,6 +22,8 @@ fi
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== lint: cargo clippy -D warnings =="
   cargo clippy --all-targets -- -D warnings
+  echo "== lint: cargo clippy -D warnings (--features simd) =="
+  cargo clippy --all-targets --features simd -- -D warnings
 else
   echo "== lint: cargo clippy not installed — SKIPPED (install clippy) =="
 fi
@@ -37,6 +39,17 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+# The SIMD feature set is a first-class build: the AVX2 kernel must
+# compile AND pass the whole suite (the differential fuzzer compares it
+# bit-for-bit against the scalar path on every fuzzed shape; on hosts
+# without AVX2 it degrades to scalar-vs-scalar, still a valid build
+# gate).
+echo "== tier-1: cargo build --release --features simd =="
+cargo build --release --features simd
+
+echo "== tier-1: cargo test -q --features simd =="
+cargo test -q --features simd
 
 echo "== perf smoke: executors bench =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench executors
@@ -123,6 +136,17 @@ for sc in traffic anomaly tomography; do
     || { echo "scenario smoke: $sc digest mismatch: '$d_serial' vs '$d_piped'"; exit 1; }
 done
 
+# Quantized-MLP backend smoke: the fixed-point executor must clear the
+# traffic-classification floor through the same scenario CLI (its
+# verdict-equality with the BNN planes is asserted in the test suite;
+# this gate proves the wiring end to end).
+echo "== qmlp smoke: traffic scenario on the fixed-point backend =="
+qmlp_out=$(cargo run --release --quiet -- scenario traffic --events 8000 \
+  --backend qmlp)
+echo "$qmlp_out"
+echo "$qmlp_out" | grep -q "PASS" \
+  || { echo "qmlp smoke: traffic on qmlp did not PASS its floor"; exit 1; }
+
 # Per-scenario throughput record (smoke cells assert each floor too).
 echo "== perf smoke: scenario bench =="
 N3IC_BENCH_SMOKE=1 cargo bench --bench scenario
@@ -132,5 +156,18 @@ echo "== perf: scenario bench (writes tracked BENCH.json) =="
 cargo bench --bench scenario
 grep -q '"scenario"' ../BENCH.json \
   || { echo "scenario bench: no 'scenario' entry in BENCH.json"; exit 1; }
+
+# Kernel-path grid (scalar vs AVX2 vs qmlp), smoke first, then the
+# tracked GOPS/inputs-per-sec record.  Built with the simd feature so
+# the vector rows are real where the host has AVX2; BENCH.json records
+# `simd_compiled`/`simd_available` so a scalar-only host is visible in
+# the data instead of silently passing.
+echo "== perf smoke: simd bench (--features simd) =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench simd --features simd
+
+echo "== perf: simd bench (writes tracked BENCH.json) =="
+cargo bench --bench simd --features simd
+grep -q '"simd"' ../BENCH.json \
+  || { echo "simd bench: no 'simd' entry in BENCH.json"; exit 1; }
 
 echo "verify.sh: all gates passed"
