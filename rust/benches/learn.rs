@@ -1,0 +1,119 @@
+//! `learn` — cost of the online-learning subsystem (ISSUE 10): how long
+//! an in-process retrain takes, and what the drift scenario's
+//! detect→retrain→republish loop costs end-to-end, serial and
+//! pipelined.
+//!
+//! Two cell families land in the `benches.learn` entry of `BENCH.json`:
+//!
+//! * `refit` — wall time of [`n3ic::learn::refit`] on a seeded labeled
+//!   sample set, with and without STE fine-tune epochs.  This is the
+//!   budget the serving loop pays inline at a window close, so it must
+//!   stay far under a window's worth of packet time.
+//! * `serve` — the full `drift` scenario (generation, calibration,
+//!   oracle replay, serve loop with live republishes) in events/s, with
+//!   the learn counters alongside so a run that never retrained can't
+//!   masquerade as a fast one.
+//!
+//! ```text
+//! cd rust && cargo bench --bench learn
+//! ```
+//!
+//! `N3IC_BENCH_SMOKE=1` shrinks every cell for CI; verify.sh runs that
+//! mode and asserts the `"learn"` key exists.
+
+use std::time::Instant;
+
+use n3ic::bench::{group, smoke_mode, write_bench_json};
+use n3ic::bnn::BnnLayer;
+use n3ic::json::{obj, Json};
+use n3ic::learn::{refit, Sample};
+use n3ic::net::features::INPUT_BITS;
+use n3ic::scenario::{ScenarioConfig, ScenarioRegistry};
+
+/// Seeded labeled corpus: random packed inputs, labeled by popcount
+/// majority — a rule a centroid fit genuinely has to learn.
+fn corpus(n: usize, seed: u64) -> Vec<Sample> {
+    (0..n)
+        .map(|i| {
+            let packed = BnnLayer::random(1, INPUT_BITS, seed + i as u64).words;
+            let ones: u32 = packed.iter().map(|w| w.count_ones()).sum();
+            Sample { packed, label: usize::from(ones as usize * 2 > INPUT_BITS) }
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    group(&format!("learn / retrain + swap-under-load ({} mode)", if smoke { "smoke" } else { "full" }));
+
+    // --- refit latency -------------------------------------------------
+    let iters = if smoke { 5 } else { 50 };
+    let samples = corpus(512, 42);
+    let refs: Vec<&Sample> = samples.iter().collect();
+    let mut refit_rows = Vec::new();
+    for ste_epochs in [0u32, 2] {
+        let t0 = Instant::now();
+        let mut out_words = 0usize;
+        for i in 0..iters {
+            let m = refit("drift", INPUT_BITS, &refs, ste_epochs, 7 + i as u64);
+            out_words += m.layers[0].words.len();
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        assert!(out_words > 0);
+        println!(
+            "refit      samples=512 ste_epochs={}  {:>10.0} ns/refit",
+            ste_epochs, ns
+        );
+        refit_rows.push(obj(vec![
+            ("samples", Json::Num(512.0)),
+            ("ste_epochs", Json::Num(ste_epochs as f64)),
+            ("ns_per_refit", Json::Num(ns.round())),
+        ]));
+    }
+
+    // --- drift scenario end-to-end ------------------------------------
+    let events: u64 = if smoke { 8_000 } else { 16_000 };
+    let registry = ScenarioRegistry::standard();
+    let mut serve_rows = Vec::new();
+    for (workers, batch) in [(0usize, 0usize), (3, 16)] {
+        let cfg = ScenarioConfig { events, workers, batch, ..Default::default() };
+        let t0 = Instant::now();
+        let rep = registry.run("drift", &cfg).expect("drift scenario");
+        let wall_s = t0.elapsed().as_secs_f64();
+        let st = &rep.service.stats;
+        let l = st.learn.as_ref().expect("drift exports learn stats");
+        let eps = st.packets as f64 / wall_s.max(1e-9);
+        assert!(
+            rep.passes_floor(),
+            "drift bench run under its accuracy floor ({:.3} < {:.2})",
+            rep.score.accuracy,
+            rep.floor
+        );
+        assert!(l.promotions >= 1, "a learn bench run that never republished is meaningless");
+        println!(
+            "drift      workers={} batch={:>2}  {:>10.0} events/s  retrains={} promotions={} rollbacks={} acc={:.3}",
+            workers, batch, eps, l.retrains, l.promotions, l.rollbacks, rep.score.accuracy,
+        );
+        let round3 = |v: f64| (v * 1000.0).round() / 1000.0;
+        serve_rows.push(obj(vec![
+            ("workers", Json::Num(workers as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("events", Json::Num(st.packets as f64)),
+            ("events_per_sec", Json::Num(eps.round())),
+            ("retrains", Json::Num(l.retrains as f64)),
+            ("promotions", Json::Num(l.promotions as f64)),
+            ("rollbacks", Json::Num(l.rollbacks as f64)),
+            ("accuracy", Json::Num(round3(rep.score.accuracy))),
+        ]));
+    }
+
+    let fragment = obj(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("refit", Json::Arr(refit_rows)),
+        ("serve", Json::Arr(serve_rows)),
+    ]);
+    match write_bench_json("learn", fragment) {
+        Ok(path) => println!("\nmerged into {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench json: {e}"),
+    }
+}

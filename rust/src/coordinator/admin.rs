@@ -12,11 +12,13 @@
 //! in HTTP.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::bnn::{BnnModel, ModelEpoch, RegistryError, RegistryHandle, VersionTag};
 
+use super::pipeline::STAGE_LINKS;
 use super::plane::Capabilities;
 use super::service::ServiceStats;
 
@@ -34,6 +36,9 @@ struct AdminState {
     /// Per-slot stack of archived epochs: every publish/touch pushes the
     /// previous current, rollback pops.
     history: Mutex<BTreeMap<String, Vec<Arc<ModelEpoch>>>>,
+    /// Queued `POST /models/<name>/retrain` requests, drained by the
+    /// serving loop's online learner at its snapshot cadence.
+    retrains: Mutex<Vec<String>>,
 }
 
 /// Cloneable handle onto one service's admin state.  Create it, pass a
@@ -61,6 +66,8 @@ pub enum AdminRequest {
     Capabilities,
     /// `GET /stats`
     Stats,
+    /// `GET /metrics`: the stats snapshot in Prometheus text format.
+    Metrics,
     /// `POST /models/<name>` with a model body: publish new weights.
     Publish { name: String, model: BnnModel },
     /// `POST /models/<name>/publish`: republish current weights
@@ -69,6 +76,10 @@ pub enum AdminRequest {
     /// `POST /models/<name>/rollback`: restore the previously archived
     /// epoch.
     Rollback { name: String },
+    /// `POST /models/<name>/retrain`: queue one forced retrain for the
+    /// online learner watching this slot (a no-op if no learner is
+    /// armed or the name doesn't match its slot).
+    Retrain { name: String },
 }
 
 impl AdminRequest {
@@ -80,6 +91,7 @@ impl AdminRequest {
             ("GET", "/healthz") => Ok(Self::Health),
             ("GET", "/capabilities") => Ok(Self::Capabilities),
             ("GET", "/stats") => Ok(Self::Stats),
+            ("GET", "/metrics") => Ok(Self::Metrics),
             ("POST", _) => {
                 let rest = path.strip_prefix("/models/").ok_or_else(not_found)?;
                 let (name, action) = rest.rsplit_once('/').ok_or_else(not_found)?;
@@ -89,6 +101,7 @@ impl AdminRequest {
                 match action {
                     "publish" => Ok(Self::Touch { name: name.to_string() }),
                     "rollback" => Ok(Self::Rollback { name: name.to_string() }),
+                    "retrain" => Ok(Self::Retrain { name: name.to_string() }),
                     _ => Err(not_found()),
                 }
             }
@@ -114,8 +127,12 @@ pub enum AdminResponse {
     Health(HealthStatus),
     Capabilities(Capabilities),
     Stats(Box<ServiceStats>),
+    /// Prometheus text-format rendering of the stats snapshot.
+    Metrics(String),
     Published(VersionTag),
     RolledBack(VersionTag),
+    /// The retrain request was queued for the learner.
+    RetrainQueued { name: String },
 }
 
 /// Admin request failures.
@@ -226,6 +243,9 @@ impl AdminHandle {
             AdminRequest::Stats => Ok(AdminResponse::Stats(Box::new(
                 self.0.snapshot.lock().unwrap().clone(),
             ))),
+            AdminRequest::Metrics => Ok(AdminResponse::Metrics(prometheus_text(
+                &self.0.snapshot.lock().unwrap(),
+            ))),
             AdminRequest::Publish { name, model } => {
                 let reg = self.registry()?;
                 self.archive(&reg, &name);
@@ -248,8 +268,127 @@ impl AdminHandle {
                     .ok_or_else(|| AdminError::NoHistory(name.clone()))?;
                 Ok(AdminResponse::RolledBack(reg.rollback(&name, &epoch)?))
             }
+            AdminRequest::Retrain { name } => {
+                self.0.retrains.lock().unwrap().push(name.clone());
+                Ok(AdminResponse::RetrainQueued { name })
+            }
         }
     }
+
+    /// Drain the queued retrain requests (called by the serving loop at
+    /// its snapshot cadence; the learner filters for its own slot).
+    pub(crate) fn take_retrains(&self) -> Vec<String> {
+        std::mem::take(&mut *self.0.retrains.lock().unwrap())
+    }
+}
+
+/// Escape a Prometheus label value (`\` → `\\`, `"` → `\"`, newline →
+/// `\n`).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a [`ServiceStats`] snapshot in the Prometheus text exposition
+/// format — the `GET /metrics` body a sidecar exporter would serve.
+/// Typed against the stats struct (every field is written out by name
+/// here), so a new counter that should be scrapeable fails review, not
+/// silently disappears.
+pub fn prometheus_text(stats: &ServiceStats) -> String {
+    let mut out = String::with_capacity(2048);
+    let mut counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    counter(&mut out, "n3ic_packets_total", "Packets ingested.", stats.packets);
+    counter(&mut out, "n3ic_triggers_total", "Flow triggers fired.", stats.triggers);
+    counter(&mut out, "n3ic_inferences_total", "Verdicts produced.", stats.inferences);
+    counter(&mut out, "n3ic_sheds_total", "Triggers shed by admission control.", stats.sheds);
+    counter(&mut out, "n3ic_restarts_total", "Supervised stage restarts.", stats.restarts);
+
+    let _ = writeln!(out, "# HELP n3ic_verdicts_total Verdict histogram by class.");
+    let _ = writeln!(out, "# TYPE n3ic_verdicts_total counter");
+    for (c, n) in stats.classes.iter().enumerate() {
+        let _ = writeln!(out, "n3ic_verdicts_total{{class=\"{c}\"}} {n}");
+    }
+
+    if !stats.stage_blocked.is_empty() {
+        let _ = writeln!(out, "# HELP n3ic_stage_blocked_total Backpressured sends per inter-stage link.");
+        let _ = writeln!(out, "# TYPE n3ic_stage_blocked_total counter");
+        for (i, n) in stats.stage_blocked.iter().enumerate() {
+            let link = STAGE_LINKS.get(i).copied().unwrap_or("unknown");
+            let _ = writeln!(out, "n3ic_stage_blocked_total{{link=\"{}\"}} {n}", escape_label(link));
+        }
+    }
+
+    let _ = writeln!(out, "# HELP n3ic_latency_ns Verdict latency summary (modeled ns).");
+    let _ = writeln!(out, "# TYPE n3ic_latency_ns gauge");
+    let _ = writeln!(out, "n3ic_latency_ns{{stat=\"mean\"}} {}", stats.latency.mean_ns());
+    let _ = writeln!(out, "n3ic_latency_ns{{stat=\"p50\"}} {}", stats.latency.percentile_ns(50.0));
+    let _ = writeln!(out, "n3ic_latency_ns{{stat=\"p99\"}} {}", stats.latency.percentile_ns(99.0));
+    let _ = writeln!(out, "n3ic_latency_ns{{stat=\"max\"}} {}", stats.latency.max_ns());
+
+    let ft = &stats.flow_table;
+    counter(&mut out, "n3ic_flow_evictions_total", "Flows displaced by eviction.", ft.evictions);
+    counter(&mut out, "n3ic_flow_aged_out_total", "Idle flows removed by aging.", ft.aged_out);
+    counter(&mut out, "n3ic_flow_collision_probes_total", "Hash-collision probe walks.", ft.collision_probes);
+    counter(&mut out, "n3ic_flow_untracked_total", "Packets left untracked at capacity.", ft.untracked);
+    let _ = writeln!(out, "# HELP n3ic_flow_occupied Live flows at snapshot time.");
+    let _ = writeln!(out, "# TYPE n3ic_flow_occupied gauge");
+    let _ = writeln!(out, "n3ic_flow_occupied {}", ft.occupied);
+    let _ = writeln!(out, "# HELP n3ic_flow_slots Flow-table slot capacity.");
+    let _ = writeln!(out, "# TYPE n3ic_flow_slots gauge");
+    let _ = writeln!(out, "n3ic_flow_slots {}", ft.slots);
+
+    if !stats.per_model.is_empty() {
+        let _ = writeln!(out, "# HELP n3ic_model_inferences_total Verdicts per routed model.");
+        let _ = writeln!(out, "# TYPE n3ic_model_inferences_total counter");
+        for (name, m) in &stats.per_model {
+            let _ = writeln!(
+                out,
+                "n3ic_model_inferences_total{{model=\"{}\"}} {}",
+                escape_label(name),
+                m.inferences
+            );
+        }
+        let _ = writeln!(out, "# HELP n3ic_model_swaps_total Registry hot swaps per slot.");
+        let _ = writeln!(out, "# TYPE n3ic_model_swaps_total counter");
+        for (name, m) in &stats.per_model {
+            let _ = writeln!(
+                out,
+                "n3ic_model_swaps_total{{model=\"{}\"}} {}",
+                escape_label(name),
+                m.swaps
+            );
+        }
+    }
+
+    if let Some(l) = &stats.learn {
+        counter(&mut out, "n3ic_learn_windows_total", "Accuracy windows closed.", l.windows);
+        counter(&mut out, "n3ic_learn_evaluated_total", "Labeled verdicts scored.", l.evaluated);
+        counter(&mut out, "n3ic_learn_retrains_total", "Retraining attempts.", l.retrains);
+        counter(&mut out, "n3ic_learn_promotions_total", "Candidates published through the gate.", l.promotions);
+        counter(&mut out, "n3ic_learn_rejections_total", "Candidates the gate refused.", l.rejections);
+        counter(&mut out, "n3ic_learn_rollbacks_total", "Probation rollbacks.", l.rollbacks);
+        let _ = writeln!(out, "# HELP n3ic_learn_last_window_accuracy Labeled accuracy of the last closed window.");
+        let _ = writeln!(out, "# TYPE n3ic_learn_last_window_accuracy gauge");
+        let _ = writeln!(out, "n3ic_learn_last_window_accuracy {}", l.last_window_accuracy);
+        let _ = writeln!(out, "# HELP n3ic_learn_in_probation A promotion is on probation (0/1).");
+        let _ = writeln!(out, "# TYPE n3ic_learn_in_probation gauge");
+        let _ = writeln!(out, "n3ic_learn_in_probation {}", u8::from(l.in_probation));
+        if let Some(p) = l.drift_fired_at {
+            let _ = writeln!(out, "# HELP n3ic_learn_drift_fired_at_packet Packet index of the first drift firing.");
+            let _ = writeln!(out, "# TYPE n3ic_learn_drift_fired_at_packet gauge");
+            let _ = writeln!(out, "n3ic_learn_drift_fired_at_packet {p}");
+        }
+        if let (Some(c), Some(cur)) = (l.gate_last_candidate, l.gate_last_current) {
+            let _ = writeln!(out, "# HELP n3ic_learn_gate_accuracy Last gate decision's holdout scores.");
+            let _ = writeln!(out, "# TYPE n3ic_learn_gate_accuracy gauge");
+            let _ = writeln!(out, "n3ic_learn_gate_accuracy{{side=\"candidate\"}} {c}");
+            let _ = writeln!(out, "n3ic_learn_gate_accuracy{{side=\"current\"}} {cur}");
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -276,6 +415,14 @@ mod tests {
         }
         match AdminRequest::route("POST", "/models/tomography_64/rollback").unwrap() {
             AdminRequest::Rollback { name } => assert_eq!(name, "tomography_64"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            AdminRequest::route("GET", "/metrics").unwrap(),
+            AdminRequest::Metrics
+        ));
+        match AdminRequest::route("POST", "/models/traffic/retrain").unwrap() {
+            AdminRequest::Retrain { name } => assert_eq!(name, "traffic"),
             other => panic!("{other:?}"),
         }
         for (m, p) in [
@@ -379,5 +526,91 @@ mod tests {
             h.handle(AdminRequest::Rollback { name: "m".into() }).unwrap_err(),
             AdminError::NoHistory("m".into())
         );
+    }
+
+    #[test]
+    fn retrain_queue_is_fifo_and_drains_once() {
+        let h = AdminHandle::new();
+        assert!(h.take_retrains().is_empty());
+        for name in ["a", "b", "a"] {
+            match h.handle(AdminRequest::Retrain { name: name.into() }).unwrap() {
+                AdminResponse::RetrainQueued { name: n } => assert_eq!(n, name),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(h.take_retrains(), vec!["a", "b", "a"]);
+        assert!(h.take_retrains().is_empty(), "drained");
+    }
+
+    #[test]
+    fn prometheus_text_covers_core_and_learn_series() {
+        use crate::learn::LearnStats;
+        let mut stats = ServiceStats {
+            packets: 100,
+            triggers: 10,
+            inferences: 9,
+            classes: vec![4, 5],
+            stage_blocked: vec![0, 2, 0],
+            ..Default::default()
+        };
+        stats.latency.record(500.0);
+        stats.per_model.insert(
+            "anomaly".into(),
+            crate::coordinator::service::ModelServiceStats {
+                inferences: 9,
+                classes: vec![4, 5],
+                swaps: 3,
+            },
+        );
+        stats.learn = Some(LearnStats {
+            windows: 8,
+            evaluated: 80,
+            drift_fired_at: Some(2500),
+            retrains: 2,
+            promotions: 1,
+            rejections: 1,
+            rollbacks: 0,
+            last_window_accuracy: 0.95,
+            gate_last_candidate: Some(0.97),
+            gate_last_current: Some(0.55),
+            in_probation: true,
+        });
+        let text = prometheus_text(&stats);
+        for needle in [
+            "n3ic_packets_total 100",
+            "n3ic_triggers_total 10",
+            "n3ic_inferences_total 9",
+            "n3ic_verdicts_total{class=\"1\"} 5",
+            "n3ic_stage_blocked_total{link=\"parse→inference\"} 2",
+            "n3ic_model_inferences_total{model=\"anomaly\"} 9",
+            "n3ic_model_swaps_total{model=\"anomaly\"} 3",
+            "n3ic_learn_windows_total 8",
+            "n3ic_learn_retrains_total 2",
+            "n3ic_learn_promotions_total 1",
+            "n3ic_learn_drift_fired_at_packet 2500",
+            "n3ic_learn_last_window_accuracy 0.95",
+            "n3ic_learn_in_probation 1",
+            "n3ic_learn_gate_accuracy{side=\"candidate\"} 0.97",
+            "# TYPE n3ic_packets_total counter",
+            "# TYPE n3ic_latency_ns gauge",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // No learner, no learn series.
+        stats.learn = None;
+        assert!(!prometheus_text(&stats).contains("n3ic_learn_"));
+    }
+
+    #[test]
+    fn metrics_request_renders_the_snapshot() {
+        let h = AdminHandle::new();
+        h.bind(Capabilities::single("fpga", 1_700.0), None);
+        h.publish_stats(&ServiceStats { packets: 42, ..Default::default() });
+        match h.handle(AdminRequest::Metrics).unwrap() {
+            AdminResponse::Metrics(text) => {
+                assert!(text.contains("n3ic_packets_total 42"), "{text}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

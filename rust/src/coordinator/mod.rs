@@ -32,7 +32,9 @@ pub mod service;
 pub mod shunt;
 pub mod trigger;
 
-pub use admin::{AdminError, AdminHandle, AdminRequest, AdminResponse, HealthStatus};
+pub use admin::{
+    prometheus_text, AdminError, AdminHandle, AdminRequest, AdminResponse, HealthStatus,
+};
 pub use backend::BackendFactory;
 pub use batcher::{BatchSet, Batcher, TimedBatch};
 pub use overload::{

@@ -656,6 +656,11 @@ struct Member {
     failovers: u64,
 }
 
+/// Batch width from which [`PlacedPlane`]'s placement cost model starts
+/// crediting a member's SIMD width (an elephant batch, in the paper's
+/// mice/elephants flow taxonomy).
+pub(crate) const ELEPHANT_BATCH: usize = 16;
+
 /// A placement plane fronting several bit-exact member planes.  Each
 /// call goes to the cheapest member (by the modeled
 /// [`batch_latency_ns`](InferencePlane::batch_latency_ns) cost curve at
@@ -721,6 +726,18 @@ impl PlacedPlane {
     /// Member indices able to take a batch of `b`, cheapest modeled
     /// cost first (stable sort: ties keep construction order, so the
     /// placement is deterministic).
+    ///
+    /// From [`ELEPHANT_BATCH`] inputs up, each member's modeled cost is
+    /// discounted by its [`Capabilities::simd_lanes`]: a 4-lane AVX2
+    /// member retires a wide batch's popcount work in a quarter of the
+    /// scalar ops, which the per-backend analytic latency curves (tuned
+    /// on the scalar device models) don't capture.  The discount biases
+    /// *placement only* — the aggregate
+    /// [`batch_latency_ns`](InferencePlane::batch_latency_ns) cost
+    /// curve reports undiscounted member costs, so latency accounting
+    /// never claims the speedup, it just routes the elephants at the
+    /// member most able to deliver it.  Mice keep the raw cost order:
+    /// a single input can't fill a vector register.
     fn order(&self, b: usize) -> Vec<usize> {
         let mut idx: Vec<usize> = (0..self.members.len())
             .filter(|&i| self.members[i].caps.max_batch >= b)
@@ -733,13 +750,16 @@ impl PlacedPlane {
                 .unwrap();
             return vec![widest];
         }
-        idx.sort_by(|&a, &c| {
-            self.members[a]
-                .plane
-                .batch_latency_ns(b)
-                .partial_cmp(&self.members[c].plane.batch_latency_ns(b))
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        let cost = |i: usize| {
+            let m = &self.members[i];
+            let ns = m.plane.batch_latency_ns(b);
+            if b >= ELEPHANT_BATCH {
+                ns / m.caps.simd_lanes.max(1) as f64
+            } else {
+                ns
+            }
+        };
+        idx.sort_by(|&a, &c| cost(a).partial_cmp(&cost(c)).unwrap_or(std::cmp::Ordering::Equal));
         idx
     }
 
@@ -1280,6 +1300,78 @@ mod tests {
             .map(|mm| mm.plane.batch_latency_ns(1))
             .fold(f64::INFINITY, f64::min);
         assert_eq!(placed.batch_latency_ns(1), best);
+    }
+
+    /// Single-route plane with a fixed per-item cost and a declared
+    /// SIMD width — the placement cost model's two inputs, isolated.
+    struct StubPlane {
+        backend: &'static str,
+        ns_per_item: f64,
+        lanes: usize,
+    }
+
+    impl InferencePlane for StubPlane {
+        fn capabilities(&self) -> Capabilities {
+            Capabilities {
+                simd_lanes: self.lanes,
+                ..Capabilities::single(self.backend, self.ns_per_item)
+            }
+        }
+
+        fn classify(&mut self, _route: usize, _x: &[u32]) -> (usize, Option<VersionTag>) {
+            (0, None)
+        }
+
+        fn try_run_batch(
+            &mut self,
+            _route: usize,
+            inputs: &[Vec<u32>],
+            classes: &mut Vec<usize>,
+        ) -> Result<Option<VersionTag>, EngineError> {
+            classes.clear();
+            classes.resize(inputs.len(), 0);
+            Ok(None)
+        }
+
+        fn n_classes(&self) -> usize {
+            2
+        }
+    }
+
+    #[test]
+    fn placed_plane_prefers_simd_members_for_elephant_batches_only() {
+        // The scalar member is slightly cheaper per item; the vector
+        // member has 4 lanes.  Mice must go scalar (raw cost), elephants
+        // vector (discounted cost: 100/4 < 80).
+        let members: Vec<Box<dyn InferencePlane>> = vec![
+            Box::new(StubPlane { backend: "scalar", ns_per_item: 80.0, lanes: 1 }),
+            Box::new(StubPlane { backend: "vector", ns_per_item: 100.0, lanes: 4 }),
+        ];
+        let placed = PlacedPlane::new(members, BreakerPolicy::default()).unwrap();
+        assert_eq!(placed.capabilities().simd_lanes, 4, "aggregate advertises the widest");
+
+        let mouse = placed.order(1);
+        assert_eq!(placed.members[mouse[0]].caps.backend, "scalar");
+        let sub_elephant = placed.order(ELEPHANT_BATCH - 1);
+        assert_eq!(
+            placed.members[sub_elephant[0]].caps.backend, "scalar",
+            "the discount must not kick in below the elephant width"
+        );
+        let elephant = placed.order(ELEPHANT_BATCH);
+        assert_eq!(placed.members[elephant[0]].caps.backend, "vector");
+
+        // Placement bias only: the aggregate cost curve stays
+        // undiscounted (cheapest member's raw model at every width).
+        let b = ELEPHANT_BATCH;
+        assert_eq!(placed.batch_latency_ns(b), 80.0 * b as f64);
+
+        // Equal lanes ⇒ the discount cancels and raw cost decides.
+        let members: Vec<Box<dyn InferencePlane>> = vec![
+            Box::new(StubPlane { backend: "a", ns_per_item: 100.0, lanes: 4 }),
+            Box::new(StubPlane { backend: "b", ns_per_item: 80.0, lanes: 4 }),
+        ];
+        let placed = PlacedPlane::new(members, BreakerPolicy::default()).unwrap();
+        assert_eq!(placed.members[placed.order(ELEPHANT_BATCH)[0]].caps.backend, "b");
     }
 
     #[test]

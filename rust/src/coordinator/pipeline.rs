@@ -65,9 +65,10 @@
 //! stats accumulated up to the fault (`tests/failure_injection.rs`).
 
 use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use crate::bnn::{EngineStats, VersionTag};
 use crate::net::flow::{FlowKey, FlowTable, ShardedFlowTable, FLOW_SHARDS};
@@ -77,6 +78,7 @@ use super::overload::{
     guard, ladder_for, panic_text, AdmissionController, DegradationLadder, FaultPlan, PlaneHealth,
     ServiceLevel, ShedPolicy, SupervisorPolicy, WorkerAdmission,
 };
+use super::admin::SNAPSHOT_EVERY;
 use super::plane::InferencePlane;
 use super::selector::{OutputSelector, OutputSink};
 use super::service::{
@@ -87,6 +89,17 @@ use super::service::{
 
 /// Inter-stage links, in `ServiceStats::stage_blocked` index order.
 pub const STAGE_LINKS: [&str; 3] = ["ingress→parse", "parse→inference", "inference→sink"];
+
+/// Stage 0 → stage 1+2 messages.
+enum ParseMsg {
+    /// One ingress packet, sharded to this worker by flow hash.
+    Event(PacketEvent),
+    /// Learner publish barrier (see the `learn` module docs): the
+    /// worker forwards it downstream in FIFO position, so everything it
+    /// parsed before the barrier reaches the inference stage before the
+    /// barrier does.
+    Barrier,
+}
 
 /// Stage 1+2 → stage 3 messages.
 enum InfMsg {
@@ -106,6 +119,11 @@ enum InfMsg {
     /// condition is simply false), and ticks never change verdicts —
     /// only when a partial batch flushes.
     Clock(f64),
+    /// Learner publish barrier, relayed by one parse worker.  Once one
+    /// arrives from *every* worker, all flows triggered before the
+    /// staged registry write are in the lanes: the stage drains them
+    /// under the old weights and acks back to ingress.
+    Barrier,
 }
 
 /// How often each parse worker forwards its packet clock to stage 3:
@@ -164,7 +182,7 @@ fn blank_stats() -> ServiceStats {
 /// retried instead of killing the shard.
 #[allow(clippy::too_many_arguments)]
 fn parse_stage(
-    rx: Receiver<PacketEvent>,
+    rx: Receiver<ParseMsg>,
     tx: SyncSender<InfMsg>,
     route: RouteLogic,
     mut flows: Vec<FlowTable>,
@@ -178,7 +196,18 @@ fn parse_stage(
     let mut failure = None;
     let mut restarts_used = 0u32;
     let mut restarts = 0u64;
-    while let Ok(ev) = rx.recv() {
+    while let Ok(msg) = rx.recv() {
+        let ev = match msg {
+            ParseMsg::Event(ev) => ev,
+            ParseMsg::Barrier => {
+                // Relay in FIFO position — not a packet, just a fence.
+                if send_counted(&tx, InfMsg::Barrier, &mut stats.stage_blocked[1]).is_err() {
+                    failure = Some(StageFailure::ParseDisconnected { worker });
+                    break;
+                }
+                continue;
+            }
+        };
         stats.packets += 1;
         if let Some(a) = admission.as_mut() {
             a.on_packet(ev.packet.ts_ns);
@@ -280,6 +309,12 @@ struct InferenceStage {
     supervisor: Option<SupervisorPolicy>,
     faults: Option<FaultPlan>,
     restarts_used: u32,
+    /// Parse workers feeding this stage — the barrier quorum.
+    n_producers: usize,
+    /// Barriers seen in the current quorum round.
+    barriers_seen: usize,
+    /// Ack channel back to the (blocked) ingress thread.
+    ack_tx: Sender<()>,
 }
 
 impl InferenceStage {
@@ -289,6 +324,8 @@ impl InferenceStage {
         batchers: Option<BatchSet<PendingFlow>>,
         supervisor: Option<SupervisorPolicy>,
         faults: Option<FaultPlan>,
+        n_producers: usize,
+        ack_tx: Sender<()>,
     ) -> Self {
         Self {
             plane,
@@ -301,6 +338,9 @@ impl InferenceStage {
             supervisor,
             faults,
             restarts_used: 0,
+            n_producers,
+            barriers_seen: 0,
+            ack_tx,
         }
     }
 
@@ -409,8 +449,26 @@ impl InferenceStage {
         }
     }
 
-    /// End-of-stream drain of every lane (newest enqueue time as "now"
-    /// — the serial loop's shutdown semantics).
+    /// One parse worker's barrier arrived.  Sync_channels are FIFO per
+    /// producer, so once every worker's barrier is in, every flow
+    /// triggered before the staged registry write is in the lanes:
+    /// drain them under the still-current weights, then ack so ingress
+    /// can commit.  (A gone ack peer means ingress already abandoned
+    /// the run — the stage keeps winding down normally.)
+    fn on_barrier(&mut self) -> Result<(), StageFailure> {
+        self.barriers_seen += 1;
+        if self.barriers_seen < self.n_producers {
+            return Ok(());
+        }
+        self.barriers_seen = 0;
+        self.drain()?;
+        let _ = self.ack_tx.send(());
+        Ok(())
+    }
+
+    /// Full drain of every lane (newest enqueue time as "now" — the
+    /// serial loop's shutdown semantics): at end-of-stream and at each
+    /// learner publish barrier.
     fn drain(&mut self) -> Result<(), StageFailure> {
         let due = match self.batchers.as_mut() {
             Some(b) => b.poll(f64::INFINITY),
@@ -430,6 +488,7 @@ impl InferenceStage {
             let step = match msg {
                 InfMsg::Flow { route, id, packed, ts_ns } => self.on_flow(route, id, packed, ts_ns),
                 InfMsg::Clock(ts_ns) => self.on_clock(ts_ns),
+                InfMsg::Barrier => self.on_barrier(),
             };
             if let Err(f) = step {
                 failure = Some(f);
@@ -525,6 +584,10 @@ pub(crate) fn run_staged(
     // the final swap-count snapshot run from this (ingress) thread while
     // inference proceeds — a true concurrent hot swap.
     let mut swap = svc.plane.swap_controller();
+    // The online learner (if armed) lives on the ingress thread — the
+    // only place that sees every packet exactly once, before fan-out —
+    // and its registry writes go through the publish barrier below.
+    let mut learner = svc.build_learner()?;
 
     // Overload control: each parse worker runs its share of the leaky
     // bucket (the drain rate — backend parallelism — splits evenly) and
@@ -550,6 +613,9 @@ pub(crate) fn run_staged(
 
     let (tx_inf, rx_inf) = mpsc::sync_channel::<InfMsg>(depth);
     let (tx_sink, rx_sink) = mpsc::sync_channel::<VerdictMsg>(depth);
+    // Barrier acks flow against the data direction (stage 3 → stage 0);
+    // unbounded, since at most one barrier is ever in flight.
+    let (ack_tx, ack_rx) = mpsc::channel::<()>();
 
     // Flow state: the same FLOW_SHARDS logical shard tables the serial
     // mode uses, dealt round-robin to workers (worker w owns shards l
@@ -570,7 +636,7 @@ pub(crate) fn run_staged(
     let mut parse_txs = Vec::with_capacity(workers);
     let mut parse_handles = Vec::with_capacity(workers);
     for (w, tables) in worker_tables.into_iter().enumerate() {
-        let (tx, rx) = mpsc::sync_channel::<PacketEvent>(depth);
+        let (tx, rx) = mpsc::sync_channel::<ParseMsg>(depth);
         let tx_inf = tx_inf.clone();
         let route = svc.route.clone();
         let admission = if overload_on {
@@ -603,7 +669,8 @@ pub(crate) fn run_staged(
     let inf_supervisor = svc.supervisor;
     let inf_faults = svc.faults.clone();
     let inf_handle = thread::spawn(move || {
-        InferenceStage::new(plane, tx_sink, batchers, inf_supervisor, inf_faults).run(rx_inf)
+        InferenceStage::new(plane, tx_sink, batchers, inf_supervisor, inf_faults, workers, ack_tx)
+            .run(rx_inf)
     });
     let output = svc.output;
     let log_tags = svc.log_tags;
@@ -659,18 +726,73 @@ pub(crate) fn run_staged(
                 }
             }
         }
-        // Admin liveness rides ingress: packet count is exact here; the
-        // stats snapshot stays whatever the last finished run published
-        // until this run's stages join (stage stats merge at exit only).
+        // Admin liveness rides ingress: packet count is exact here.
+        // Stage stats merge at join only, so mid-run the snapshot stays
+        // whatever the last finished run published — except the learn
+        // telemetry, which lives right here on the ingress thread and
+        // *can* be kept live for `/stats` scrapes.
         if let Some(a) = admin.as_ref() {
             a.on_packet();
+            if n % SNAPSHOT_EVERY == 0 {
+                if let Some(l) = learner.as_mut() {
+                    for name in a.take_retrains() {
+                        if name == l.model_name() {
+                            l.request_retrain();
+                        }
+                    }
+                    let mut s = blank_stats();
+                    s.packets = n;
+                    l.publish_into(&mut s);
+                    a.publish_stats(&s);
+                }
+            }
         }
+        // The learner observes every packet here at ingress, before
+        // fan-out, mirroring the serial loop's "serving side first"
+        // order: the event is enqueued to its worker *before* any
+        // barrier, so per-producer FIFO guarantees the committing
+        // packet itself scores under the old weights.
+        let commit = match learner.as_mut() {
+            Some(l) => l.on_packet(&ev),
+            None => false,
+        };
         // Logical shard first, then its owning worker — the shard→worker
         // map must match the table deal-out above.
         let w = ShardedFlowTable::shard_of(&ev.packet, FLOW_SHARDS) % workers;
-        if send_counted(&parse_txs[w], ev, &mut ingress_blocked).is_err() {
+        if send_counted(&parse_txs[w], ParseMsg::Event(ev), &mut ingress_blocked).is_err() {
             failures.push(StageFailure::IngressUnreachable { worker: w });
             break;
+        }
+        if commit {
+            // Publish barrier (two-phase commit; see the learn module
+            // docs): fence every worker, wait for the inference stage
+            // to drain all lanes under the old weights, then write the
+            // registry.  The timeout only guards the *failure* path — a
+            // healthy drain is pure arithmetic and acks immediately.
+            let mut lost = false;
+            for (bw, tx) in parse_txs.iter().enumerate() {
+                if send_counted(tx, ParseMsg::Barrier, &mut ingress_blocked).is_err() {
+                    failures.push(StageFailure::IngressUnreachable { worker: bw });
+                    lost = true;
+                    break;
+                }
+            }
+            if !lost && ack_rx.recv_timeout(Duration::from_secs(10)).is_err() {
+                lost = true;
+            }
+            if lost {
+                failures.push(StageFailure::BarrierLost);
+                if let Some(l) = learner.as_mut() {
+                    l.poison();
+                }
+                break;
+            }
+            if let Some(l) = learner.as_mut() {
+                if let Err(e) = l.commit_pending() {
+                    failures.push(StageFailure::Swap(e));
+                    l.poison();
+                }
+            }
         }
     }
     drop(parse_txs);
@@ -734,6 +856,11 @@ pub(crate) fn run_staged(
             let entry = stats.per_model.entry(name.clone()).or_default();
             entry.swaps = s.registry().swap_count(name);
         }
+    }
+    // The learner lives on this thread, so its telemetry needs no merge
+    // — stamp it onto the joined stats directly.
+    if let Some(l) = learner.as_mut() {
+        l.publish_into(&mut stats);
     }
 
     let degradation = ladder.map_or_else(Vec::new, DegradationLadder::into_timeline);

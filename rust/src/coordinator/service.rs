@@ -31,6 +31,7 @@
 use std::collections::BTreeMap;
 
 use crate::bnn::{EngineError, RegistryError, VersionTag};
+use crate::learn::{AccuracyWindow, LearnSpec, LearnStats, OnlineLearner};
 use crate::metrics::LatencyHistogram;
 use crate::net::features::FeatureVector;
 use crate::net::flow::{EvictPolicy, FlowStats, FlowTableStats, ShardedFlowTable, FLOW_SHARDS};
@@ -129,6 +130,11 @@ pub struct ServiceStats {
     /// merged over every shard — and over every worker's shards in the
     /// pipelined mode.
     pub flow_table: FlowTableStats,
+    /// Closed labeled-accuracy windows of the online learner, in packet
+    /// order.  Empty unless `.online_learn(...)` armed the loop.
+    pub accuracy_timeline: Vec<AccuracyWindow>,
+    /// Online-learning loop counters (`None` when learning is off).
+    pub learn: Option<LearnStats>,
 }
 
 /// One routed model's share of a run: its verdict histogram plus the
@@ -173,9 +179,28 @@ impl ModelServiceStats {
 
 impl ServiceStats {
     /// Fold another stage's (or shard's) counters into this one — the
-    /// pipeline's join step.  Histograms merge bucket-wise; the verdict
-    /// histogram grows to the wider of the two.
+    /// pipeline's join step.  Merge semantics are explicit per field,
+    /// because the fields mean different things:
+    ///
+    /// * **partition counters** (each side counted disjoint work): add —
+    ///   `packets`, `triggers`, `inferences`, `sheds`, `restarts`, the
+    ///   `classes`/`stage_blocked` histograms (grown to the wider), the
+    ///   latency histogram, per-model inference/verdict counts, and the
+    ///   flow-table accounting.
+    /// * **shared-counter snapshots** (both sides read the *same* live
+    ///   counter): max — `per_model[..].swaps` is a report-time snapshot
+    ///   of one registry slot's swap count, so adding would double-count
+    ///   every retrain-driven republish once per merging stage.  Max is
+    ///   exact for monotone counters: the later snapshot contains every
+    ///   swap the earlier one saw.
+    /// * **singleton telemetry** (exactly one side ever produces it):
+    ///   take/fold — the learner timeline concatenates then restores
+    ///   packet order, and `learn` folds via [`LearnStats::merge`]
+    ///   (counts add, `drift_fired_at` takes the earliest).
+    ///
+    /// `tests` pins each rule (`stats_merge_semantics_are_per_field`).
     pub fn merge(&mut self, other: &ServiceStats) {
+        // Partition counters: add.
         self.packets += other.packets;
         self.triggers += other.triggers;
         self.inferences += other.inferences;
@@ -197,10 +222,21 @@ impl ServiceStats {
         for (name, m) in &other.per_model {
             let mine = self.per_model.entry(name.clone()).or_default();
             mine.absorb(m);
-            // Snapshots of one shared counter, not partitions of it.
+            // Shared-counter snapshot: max, not add (see above).
             mine.swaps = mine.swaps.max(m.swaps);
         }
         self.flow_table.merge(&other.flow_table);
+        // Singleton telemetry: one learner per service, so at most one
+        // side carries these — but the merge is written for the general
+        // case anyway.
+        if !other.accuracy_timeline.is_empty() {
+            self.accuracy_timeline.extend(other.accuracy_timeline.iter().cloned());
+            self.accuracy_timeline
+                .sort_by(|a, b| (a.end_packet, &a.model).cmp(&(b.end_packet, &b.model)));
+        }
+        if let Some(b) = &other.learn {
+            self.learn.get_or_insert_with(LearnStats::default).merge(b);
+        }
     }
 }
 
@@ -250,6 +286,10 @@ pub enum StageFailure {
     Inference(EngineError),
     /// A `.swap_every(n)` republish failed mid-run.
     Swap(RegistryError),
+    /// A learner publish barrier could not complete (a stage died while
+    /// ingress waited for the lanes to drain); the staged registry
+    /// write was abandoned.
+    BarrierLost,
     /// A stage thread panicked; the payload text is preserved.
     Panicked { stage: &'static str, message: String },
     /// A supervised stage kept dying until its restart budget ran out;
@@ -275,6 +315,9 @@ impl std::fmt::Display for StageFailure {
             }
             StageFailure::Inference(e) => write!(f, "inference stage: {e}"),
             StageFailure::Swap(e) => write!(f, "hot-swap republish failed: {e}"),
+            StageFailure::BarrierLost => {
+                write!(f, "learner publish barrier lost: a stage died before acking")
+            }
             StageFailure::Panicked { stage, message } => {
                 write!(f, "{stage} panicked: {message}")
             }
@@ -422,6 +465,7 @@ pub struct ServeBuilder {
     supervisor: Option<SupervisorPolicy>,
     faults: Option<FaultPlan>,
     admin: Option<AdminHandle>,
+    learn: Option<LearnSpec>,
 }
 
 impl Default for ServeBuilder {
@@ -449,6 +493,7 @@ impl ServeBuilder {
             supervisor: None,
             faults: None,
             admin: None,
+            learn: None,
         }
     }
 
@@ -579,6 +624,16 @@ impl ServeBuilder {
         self
     }
 
+    /// Arm the online-learning loop on one bound registry slot: drift
+    /// detection on per-window labeled accuracy, in-process retraining
+    /// from a bounded labeled reservoir, and gate-guarded republish
+    /// with probation rollback (see [`crate::learn`]).  Requires a
+    /// hot-swap backend with `spec.model` among its bound slots.
+    pub fn online_learn(mut self, spec: LearnSpec) -> Self {
+        self.learn = Some(spec);
+        self
+    }
+
     /// Validate the configuration against the backend's capabilities.
     pub fn build(self) -> Result<Service, ServiceError> {
         let plane = self
@@ -681,6 +736,31 @@ impl ServeBuilder {
                 }
             }
         }
+        // The learner republishes through the registry, so it needs a
+        // hot-swap backend — and the watched slot must actually be bound,
+        // or every retrain would fail at publish time instead of here.
+        if let Some(spec) = self.learn.as_ref() {
+            if !caps.supports_hot_swap {
+                return Err(ServiceError::InvalidConfig {
+                    option: "online_learn",
+                    reason: format!(
+                        "backend {:?} does not support hot swap; online learning \
+                         republishes through the registry backend",
+                        caps.backend
+                    ),
+                });
+            }
+            let bound = plane.route_names();
+            if !bound.is_empty() && !bound.iter().any(|n| *n == spec.model) {
+                return Err(ServiceError::InvalidConfig {
+                    option: "online_learn",
+                    reason: format!(
+                        "model {:?} is not among the bound slots {bound:?}",
+                        spec.model
+                    ),
+                });
+            }
+        }
         if let Some(a) = self.admin.as_ref() {
             a.bind(caps, plane.swap_controller().map(|c| c.registry().clone()));
         }
@@ -701,6 +781,7 @@ impl ServeBuilder {
             supervisor: self.supervisor,
             faults: self.faults,
             admin: self.admin,
+            learn: self.learn,
         })
     }
 }
@@ -724,6 +805,35 @@ pub struct Service {
     pub(crate) supervisor: Option<SupervisorPolicy>,
     pub(crate) faults: Option<FaultPlan>,
     pub(crate) admin: Option<AdminHandle>,
+    pub(crate) learn: Option<LearnSpec>,
+}
+
+impl Service {
+    /// Build the [`OnlineLearner`] for this service's learn spec, if
+    /// one is armed — shared by the serial loop and the pipelined
+    /// ingress so both construct the *same* shadow state (same routing,
+    /// same flow-table split, same eviction policy).
+    pub(crate) fn build_learner(&self) -> Result<Option<OnlineLearner>, ServiceError> {
+        let Some(spec) = self.learn.as_ref() else {
+            return Ok(None);
+        };
+        let Some(ctl) = self.plane.swap_controller() else {
+            return Err(ServiceError::Config(
+                "online_learn: backend advertises hot swap but exposes no swap controller"
+                    .into(),
+            ));
+        };
+        let learner = OnlineLearner::new(
+            spec.clone(),
+            ctl.registry().clone(),
+            self.route.clone(),
+            self.plane.latency_ns(),
+            self.flow_capacity,
+            self.evict,
+        )
+        .map_err(ServiceError::Registry)?;
+        Ok(Some(learner))
+    }
 }
 
 impl Service {
@@ -753,6 +863,7 @@ impl Service {
         self,
         events: impl IntoIterator<Item = PacketEvent>,
     ) -> Result<ServiceReport, ServiceError> {
+        let mut learner = self.build_learner()?;
         let overload = if self.shed.is_some() || self.degrade.is_some() {
             let caps = self.plane.capabilities();
             // Modeled cost of one admitted trigger: amortized batch cost
@@ -809,10 +920,35 @@ impl Service {
             }
             n += 1;
             core.handle(&ev);
+            // The learner observes strictly after the serving side: the
+            // committing packet itself is always scored under the old
+            // weights (the pipelined ingress keeps the same order).
+            if let Some(l) = learner.as_mut() {
+                if l.on_packet(&ev) {
+                    // Publish barrier: score everything enqueued so far
+                    // under the pre-publish weights, then swap.
+                    core.flush_lanes();
+                    if let Err(e) = l.commit_pending() {
+                        swap_failures.push(StageFailure::Swap(e));
+                        l.poison();
+                    }
+                }
+            }
             if let Some(a) = admin.as_ref() {
                 a.on_packet();
                 if n % SNAPSHOT_EVERY == 0 {
-                    a.publish_stats(core.stats());
+                    if let Some(l) = learner.as_mut() {
+                        for name in a.take_retrains() {
+                            if name == l.model_name() {
+                                l.request_retrain();
+                            }
+                        }
+                        let mut s = core.stats().clone();
+                        l.publish_into(&mut s);
+                        a.publish_stats(&s);
+                    } else {
+                        a.publish_stats(core.stats());
+                    }
                 }
             }
         }
@@ -824,7 +960,10 @@ impl Service {
         if let Some(f) = core.take_failure() {
             failures.push(f);
         }
-        let report = core.into_report();
+        let mut report = core.into_report();
+        if let Some(l) = learner.as_mut() {
+            l.publish_into(&mut report.stats);
+        }
         if let Some(a) = admin.as_ref() {
             a.finish(&report.stats, !failures.is_empty());
         }
@@ -1012,18 +1151,25 @@ impl SerialCore {
         }
     }
 
-    /// Drain every batch lane (end of stream / shutdown) and fold the
-    /// per-route scratch into the name-keyed per-model map.
-    pub(crate) fn flush(&mut self) {
+    /// Force-flush every pending batch lane *now* — the learner's
+    /// publish barrier.  Each batch's "now" is its newest enqueue time,
+    /// a pure packet-clock quantity, so the latency accounting of a
+    /// barrier flush is identical in the serial and pipelined runtimes.
+    pub(crate) fn flush_lanes(&mut self) {
         let due = match self.batchers.as_mut() {
             Some(b) => b.poll(f64::INFINITY),
             None => Vec::new(),
         };
         for (lane, batch) in due {
-            // Best "now" available at shutdown: the newest enqueue time.
             let now_ns = batch.last().map_or(0.0, |&(t, _)| t);
             self.flush_batch(lane, batch, now_ns);
         }
+    }
+
+    /// Drain every batch lane (end of stream / shutdown) and fold the
+    /// per-route scratch into the name-keyed per-model map.
+    pub(crate) fn flush(&mut self) {
+        self.flush_lanes();
         self.snapshot_per_model();
     }
 
@@ -1276,6 +1422,67 @@ mod tests {
         assert_eq!(a.per_model, snapshot);
     }
 
+    #[test]
+    fn stats_merge_semantics_are_per_field() {
+        use crate::learn::{AccuracyWindow, LearnStats};
+        // Retrain-driven multi-publish: one stage snapshots the slot's
+        // swap counter at 3 (after three republishes), a later stage at
+        // 5.  Max reconstructs the true count; adding would report 8
+        // swaps that never happened.
+        let mut a = ServiceStats::default();
+        a.per_model
+            .insert("drift".into(), ModelServiceStats { inferences: 4, classes: vec![4], swaps: 3 });
+        a.accuracy_timeline.push(AccuracyWindow {
+            model: "drift".into(),
+            end_packet: 500,
+            evaluated: 10,
+            correct: 9,
+            version: 1,
+        });
+        a.learn = Some(LearnStats { windows: 1, evaluated: 10, ..Default::default() });
+        let mut b = ServiceStats::default();
+        b.per_model
+            .insert("drift".into(), ModelServiceStats { inferences: 6, classes: vec![6], swaps: 5 });
+        b.accuracy_timeline.push(AccuracyWindow {
+            model: "drift".into(),
+            end_packet: 250,
+            evaluated: 10,
+            correct: 4,
+            version: 1,
+        });
+        b.learn = Some(LearnStats {
+            windows: 1,
+            evaluated: 10,
+            drift_fired_at: Some(250),
+            retrains: 2,
+            promotions: 1,
+            rejections: 1,
+            ..Default::default()
+        });
+        a.merge(&b);
+        let m = &a.per_model["drift"];
+        assert_eq!(m.swaps, 5, "shared-counter snapshot: max, not sum");
+        assert_eq!(m.inferences, 10, "partition counter: sum");
+        // Timeline restored to packet order after concatenation.
+        let ends: Vec<u64> = a.accuracy_timeline.iter().map(|w| w.end_packet).collect();
+        assert_eq!(ends, vec![250, 500]);
+        let learn = a.learn.as_ref().unwrap();
+        assert_eq!(learn.windows, 2);
+        assert_eq!(learn.evaluated, 20);
+        assert_eq!(learn.retrains, 2);
+        assert_eq!(learn.promotions, 1);
+        assert_eq!(learn.drift_fired_at, Some(250));
+        // One-sided learn telemetry survives a merge with a learner-less
+        // stage unchanged.
+        let keep = a.learn.clone();
+        a.merge(&ServiceStats::default());
+        assert_eq!(a.learn, keep);
+        let mut empty = ServiceStats::default();
+        empty.merge(&a);
+        assert_eq!(empty.learn, keep);
+        assert_eq!(empty.accuracy_timeline, a.accuracy_timeline);
+    }
+
     fn two_model_registry() -> (RegistryHandle, ModelRouter) {
         let h = RegistryHandle::new();
         h.publish("anomaly", &BnnModel::random("anomaly", 256, &[32, 16, 2], 21))
@@ -1372,6 +1579,25 @@ mod tests {
         assert!(swapped.tagged.iter().any(|t| t.tag.version() > 1));
         let total_swaps: u64 = swapped.stats.per_model.values().map(|m| m.swaps).sum();
         assert!(total_swaps > 0);
+    }
+
+    #[test]
+    fn builder_rejects_online_learn_misconfig() {
+        use crate::learn::{LabelFn, LearnSpec};
+        let labeler: LabelFn = std::sync::Arc::new(|_p: &Packet| 0);
+        // fpga single backend: no hot swap, no registry to republish to.
+        let err = builder()
+            .online_learn(LearnSpec::new("traffic", labeler.clone()))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidConfig { option: "online_learn", .. }), "{err}");
+        // Registry backend, but the watched slot is not bound.
+        let (h, router) = two_model_registry();
+        let err = routed_builder(&h, router, 1)
+            .online_learn(LearnSpec::new("nope", labeler))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::InvalidConfig { option: "online_learn", .. }), "{err}");
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Page–Hinkley change-point detection on the per-window error rate.
+//!
+//! The online-learning loop closes an accuracy window every
+//! [`LearnSpec::window_pkts`](super::LearnSpec) packets on the *packet
+//! clock* and feeds the window's error rate (1 − labeled accuracy) to
+//! this detector.  Everything here is pure integer/float arithmetic over
+//! the observed sequence — no wall time, no randomness — so the packet
+//! index at which drift fires is a deterministic function of the traffic
+//! stream, and serial, pipelined, and offline-replay runs all fire at
+//! the same window boundary.
+//!
+//! The test is the classic Page–Hinkley statistic for upward mean shift:
+//! after each observation `x_t` with running mean `x̄_t`,
+//!
+//! ```text
+//! m_t = Σ_{i≤t} (x_i − x̄_i − δ)        (cumulative deviation)
+//! PH_t = m_t − min_{i≤t} m_i           (rise above the low-water mark)
+//! ```
+//!
+//! drift fires when `PH_t > λ`.  `δ` absorbs the pre-drift noise floor
+//! (small window-to-window accuracy jitter); `λ` sets how much sustained
+//! regression is required before the trainer is woken up.
+
+/// Seeded Page–Hinkley test for an upward shift in window error rate.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    /// Minimum magnitude of change to accumulate (noise tolerance).
+    delta: f64,
+    /// Detection threshold on the PH statistic.
+    lambda: f64,
+    /// Observations so far (for the running mean).
+    n: u64,
+    /// Running mean of the observed error rates.
+    mean: f64,
+    /// Cumulative deviation `m_t`.
+    cum: f64,
+    /// Low-water mark `min m_i`.
+    cum_min: f64,
+}
+
+impl DriftDetector {
+    pub fn new(delta: f64, lambda: f64) -> Self {
+        Self { delta, lambda, n: 0, mean: 0.0, cum: 0.0, cum_min: 0.0 }
+    }
+
+    /// Feed one window's error rate; returns `true` when the cumulative
+    /// upward deviation crosses `lambda` — the drift signal.
+    pub fn observe(&mut self, error_rate: f64) -> bool {
+        self.n += 1;
+        self.mean += (error_rate - self.mean) / self.n as f64;
+        self.cum += error_rate - self.mean - self.delta;
+        if self.cum < self.cum_min {
+            self.cum_min = self.cum;
+        }
+        self.cum - self.cum_min > self.lambda
+    }
+
+    /// Current PH statistic (telemetry; `> lambda` means fired).
+    pub fn statistic(&self) -> f64 {
+        self.cum - self.cum_min
+    }
+
+    /// Forget all history — called after a promotion or rollback so the
+    /// detector re-baselines on the freshly served model.
+    pub fn reset(&mut self) {
+        self.n = 0;
+        self.mean = 0.0;
+        self.cum = 0.0;
+        self.cum_min = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_error_rate_never_fires() {
+        let mut d = DriftDetector::new(0.05, 0.6);
+        for i in 0..200 {
+            // 3–7% error, jittering deterministically.
+            let x = 0.05 + 0.02 * f64::from(i % 3) - 0.02;
+            assert!(!d.observe(x), "fired on stable stream at window {i}");
+        }
+        assert!(d.statistic() <= 0.6);
+    }
+
+    #[test]
+    fn step_change_fires_within_a_few_windows() {
+        let mut d = DriftDetector::new(0.05, 0.6);
+        for _ in 0..20 {
+            assert!(!d.observe(0.05));
+        }
+        // Accuracy collapses: 75% error per window.
+        let mut fired_at = None;
+        for w in 0..10 {
+            if d.observe(0.75) {
+                fired_at = Some(w);
+                break;
+            }
+        }
+        // (0.75 − mean − δ) ≈ 0.6 per window → fires by the second.
+        assert!(fired_at.is_some_and(|w| w <= 2), "{fired_at:?}");
+    }
+
+    #[test]
+    fn firing_window_is_deterministic_across_reruns() {
+        let run = || {
+            let mut d = DriftDetector::new(0.05, 0.6);
+            let mut fired = None;
+            for w in 0..100u32 {
+                let x = if w < 40 { 0.08 } else { 0.7 };
+                if d.observe(x) && fired.is_none() {
+                    fired = Some(w);
+                }
+            }
+            fired
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.is_some());
+    }
+
+    #[test]
+    fn reset_rebaselines() {
+        let mut d = DriftDetector::new(0.05, 0.6);
+        for _ in 0..10 {
+            d.observe(0.05);
+        }
+        while !d.observe(0.9) {}
+        d.reset();
+        assert_eq!(d.statistic(), 0.0);
+        // The new baseline *is* the high error rate: no refire.
+        for _ in 0..50 {
+            assert!(!d.observe(0.9));
+        }
+    }
+
+    #[test]
+    fn slow_ramp_still_fires() {
+        let mut d = DriftDetector::new(0.02, 0.5);
+        let mut fired = false;
+        for w in 0..200 {
+            let x = 0.05 + 0.005 * f64::from(w); // +0.5% error per window
+            if d.observe(x.min(0.95)) {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "ramp to 95% error must eventually fire");
+    }
+}

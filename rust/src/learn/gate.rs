@@ -1,0 +1,262 @@
+//! Guarded republish: holdout-scored promotion plus post-swap probation.
+//!
+//! A retrained candidate never reaches [`ModelRegistry::publish`]
+//! (crate::bnn::ModelRegistry::publish) directly.  The
+//! [`PromotionGate`] first scores it on a holdout slice the trainer
+//! never saw and promotes only if the candidate (a) clears an absolute
+//! accuracy floor and (b) beats the currently-served model by a margin.
+//! After a promotion the gate runs a **probation window**: if the
+//! freshly-served model's windowed live accuracy falls below
+//! `min_accuracy − rollback_drop`, the gate hands back the pre-swap
+//! epoch for an automatic [`rollback`](crate::bnn::ModelRegistry::rollback).
+//!
+//! The probation floor is deliberately *absolute* — not relative to the
+//! candidate's own gate score.  A relative rule would let a bad
+//! candidate that promised little escape rollback by delivering little.
+//!
+//! [`GateMode`] exists for the acceptance tests: `SabotageCandidate`
+//! inverts every candidate's class rows (the gate must then reject every
+//! attempt), and `ForceAccept` inverts *and* bypasses the gate exactly
+//! once (the probation check must then catch the regression and roll
+//! back).
+
+use std::sync::Arc;
+
+use crate::bnn::{BnnModel, ModelEpoch};
+
+use super::trainer::invert_classes;
+
+/// How the gate treats candidates — `Normal` in production; the other
+/// modes are fault-injection switches for the drift scenario's
+/// gate-rejection and auto-rollback acceptance runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GateMode {
+    /// Honest candidates, gate enforced.
+    #[default]
+    Normal,
+    /// Every candidate is class-inverted before scoring; the gate is
+    /// expected to reject all of them (promotions stay at zero).
+    SabotageCandidate,
+    /// The *first* candidate is class-inverted and published without
+    /// consulting the gate; afterwards the mode degenerates to
+    /// `Normal` so the scenario can recover post-rollback.
+    ForceAccept,
+}
+
+impl GateMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "normal" => Some(Self::Normal),
+            "sabotage" => Some(Self::SabotageCandidate),
+            "force-accept" => Some(Self::ForceAccept),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Normal => "normal",
+            Self::SabotageCandidate => "sabotage",
+            Self::ForceAccept => "force-accept",
+        }
+    }
+}
+
+/// Verdict on one candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GateOutcome {
+    /// Publish the candidate; `forced` marks a `ForceAccept` bypass.
+    Promote { forced: bool },
+    /// Keep serving the current model.
+    Reject { candidate: f64, current: f64 },
+}
+
+#[derive(Debug)]
+struct Probation {
+    /// Epoch served before the swap — the rollback target.
+    pre: Arc<ModelEpoch>,
+    windows_left: u32,
+}
+
+/// Holdout-scored promotion gate with post-swap probation.
+#[derive(Debug)]
+pub struct PromotionGate {
+    /// Absolute holdout-accuracy floor a candidate must clear.
+    pub min_accuracy: f64,
+    /// How much better than the live model the candidate must score.
+    pub margin: f64,
+    /// Windows of post-swap probation before a promotion is final.
+    pub probation_windows: u32,
+    /// Probation tolerance below `min_accuracy` before auto-rollback.
+    pub rollback_drop: f64,
+    mode: GateMode,
+    /// `ForceAccept` fires once; afterwards the gate behaves normally.
+    forced_done: bool,
+    probation: Option<Probation>,
+    /// Last candidate/current holdout scores (admin `/stats` telemetry).
+    pub last_candidate: Option<f64>,
+    pub last_current: Option<f64>,
+}
+
+impl PromotionGate {
+    pub fn new(
+        min_accuracy: f64,
+        margin: f64,
+        probation_windows: u32,
+        rollback_drop: f64,
+        mode: GateMode,
+    ) -> Self {
+        Self {
+            min_accuracy,
+            margin,
+            probation_windows,
+            rollback_drop,
+            mode,
+            forced_done: false,
+            probation: None,
+            last_candidate: None,
+            last_current: None,
+        }
+    }
+
+    /// Apply the fault-injection mode to a fresh candidate (class
+    /// inversion under `SabotageCandidate`, and under `ForceAccept`
+    /// until its one bypass has fired).
+    pub fn prepare(&self, candidate: &mut BnnModel) {
+        match self.mode {
+            GateMode::Normal => {}
+            GateMode::SabotageCandidate => invert_classes(candidate),
+            GateMode::ForceAccept if !self.forced_done => invert_classes(candidate),
+            GateMode::ForceAccept => {}
+        }
+    }
+
+    /// Score-based promotion decision for a prepared candidate.
+    pub fn decide(&mut self, candidate_acc: f64, current_acc: f64) -> GateOutcome {
+        self.last_candidate = Some(candidate_acc);
+        self.last_current = Some(current_acc);
+        if self.mode == GateMode::ForceAccept && !self.forced_done {
+            self.forced_done = true;
+            return GateOutcome::Promote { forced: true };
+        }
+        if candidate_acc >= self.min_accuracy && candidate_acc >= current_acc + self.margin {
+            GateOutcome::Promote { forced: false }
+        } else {
+            GateOutcome::Reject { candidate: candidate_acc, current: current_acc }
+        }
+    }
+
+    /// Arm probation after a publish: `pre` is the epoch to restore if
+    /// the promotion regresses live accuracy.
+    pub fn begin_probation(&mut self, pre: Arc<ModelEpoch>) {
+        self.probation = Some(Probation { pre, windows_left: self.probation_windows.max(1) });
+    }
+
+    /// Feed one closed accuracy window.  Returns the pre-swap epoch when
+    /// the promoted model must be rolled back; `None` otherwise.
+    pub fn observe_window(&mut self, accuracy: f64) -> Option<Arc<ModelEpoch>> {
+        self.probation.as_ref()?;
+        if accuracy < self.min_accuracy - self.rollback_drop {
+            return self.probation.take().map(|p| p.pre);
+        }
+        let p = self.probation.as_mut().expect("checked above");
+        p.windows_left -= 1;
+        if p.windows_left == 0 {
+            self.probation = None; // promotion is final
+        }
+        None
+    }
+
+    pub fn in_probation(&self) -> bool {
+        self.probation.is_some()
+    }
+
+    pub fn mode(&self) -> GateMode {
+        self.mode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{BnnModel, ModelRegistry};
+
+    fn gate(mode: GateMode) -> PromotionGate {
+        PromotionGate::new(0.75, 0.05, 3, 0.10, mode)
+    }
+
+    fn epoch() -> Arc<ModelEpoch> {
+        let reg = ModelRegistry::new();
+        reg.publish("m", &BnnModel::random("m", 64, &[2], 3)).unwrap();
+        reg.current("m").unwrap()
+    }
+
+    #[test]
+    fn promotes_only_above_floor_and_margin() {
+        let mut g = gate(GateMode::Normal);
+        assert_eq!(g.decide(0.9, 0.5), GateOutcome::Promote { forced: false });
+        // Clears the floor but not the margin over the live model.
+        assert!(matches!(g.decide(0.80, 0.78), GateOutcome::Reject { .. }));
+        // Beats the live model but misses the absolute floor.
+        assert!(matches!(g.decide(0.70, 0.20), GateOutcome::Reject { .. }));
+        assert_eq!(g.last_candidate, Some(0.70));
+        assert_eq!(g.last_current, Some(0.20));
+    }
+
+    #[test]
+    fn sabotage_mode_inverts_and_normal_gate_still_applies() {
+        let g = gate(GateMode::SabotageCandidate);
+        let mut m = BnnModel::random("m", 64, &[2], 3);
+        let before = m.layers[0].words.clone();
+        g.prepare(&mut m);
+        assert_ne!(m.layers[0].words, before);
+        // Rows swapped, nothing lost.
+        let w = m.layers[0].in_words;
+        assert_eq!(&m.layers[0].words[..w], &before[w..]);
+        assert_eq!(&m.layers[0].words[w..], &before[..w]);
+    }
+
+    #[test]
+    fn force_accept_bypasses_exactly_once() {
+        let mut g = gate(GateMode::ForceAccept);
+        let mut m = BnnModel::random("m", 64, &[2], 3);
+        let before = m.layers[0].words.clone();
+        g.prepare(&mut m);
+        assert_ne!(m.layers[0].words, before, "first candidate is sabotaged");
+        assert_eq!(g.decide(0.0, 0.9), GateOutcome::Promote { forced: true });
+        // Second attempt: honest candidate, honest gate.
+        let mut m2 = BnnModel::random("m", 64, &[2], 4);
+        let before2 = m2.layers[0].words.clone();
+        g.prepare(&mut m2);
+        assert_eq!(m2.layers[0].words, before2);
+        assert!(matches!(g.decide(0.0, 0.9), GateOutcome::Reject { .. }));
+        assert_eq!(g.decide(0.95, 0.1), GateOutcome::Promote { forced: false });
+    }
+
+    #[test]
+    fn probation_rolls_back_on_absolute_floor_not_relative() {
+        let mut g = gate(GateMode::Normal);
+        let pre = epoch();
+        g.begin_probation(Arc::clone(&pre));
+        assert!(g.in_probation());
+        // Floor is min_accuracy − rollback_drop = 0.65, regardless of
+        // what the candidate scored at the gate.
+        assert!(g.observe_window(0.66).is_none());
+        let rolled = g.observe_window(0.10).expect("must roll back");
+        assert_eq!(rolled.version(), pre.version());
+        assert!(!g.in_probation());
+    }
+
+    #[test]
+    fn probation_clears_after_configured_windows() {
+        let mut g = gate(GateMode::Normal);
+        g.begin_probation(epoch());
+        assert!(g.observe_window(0.9).is_none());
+        assert!(g.observe_window(0.9).is_none());
+        assert!(g.observe_window(0.9).is_none());
+        assert!(!g.in_probation(), "3 clean windows end probation");
+        // Out of probation: even a terrible window is the detector's
+        // problem now, not the gate's.
+        assert!(g.observe_window(0.0).is_none());
+    }
+}

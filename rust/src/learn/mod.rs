@@ -1,0 +1,709 @@
+//! Online learning: drift detection → in-process retraining → guarded
+//! live republish.  The closed training loop over the registry's
+//! zero-downtime hot swap (the paper's "monitoring models must track
+//! live traffic" use case, §5).
+//!
+//! ```text
+//!           ┌────────────── OnlineLearner (at ingress) ──────────────┐
+//! packets ─►│ shadow flow table ─► route ─► classify ─► label oracle │
+//!           │        │                          │                    │
+//!           │   reservoir (labeled)      accuracy windows            │
+//!           │        │                          │                    │
+//!           │   trainer::refit ◄── DriftDetector (Page–Hinkley)      │
+//!           │        │                                               │
+//!           │   PromotionGate (holdout score, probation, rollback)   │
+//!           └────────┼───────────────────────────────────────────────┘
+//!                    ▼  (after a lane barrier: see below)
+//!            ModelRegistry::publish / ::rollback
+//! ```
+//!
+//! **Determinism contract.**  Everything runs on the packet clock: the
+//! learner sees every packet exactly once at ingress (before fan-out in
+//! the pipelined runtime), windows close at fixed packet counts, the
+//! Page–Hinkley statistic is pure arithmetic, and the trainer is a pure
+//! function of `(samples, epochs, seed)`.  A registry write would still
+//! be racy in the pipelined mode — batch lanes downstream may hold
+//! triggered flows that a worker could score before *or* after the
+//! publish depending on thread timing — so every learner-driven write
+//! is **two-phase**: `on_packet` only *stages* it (`commit` flag), the
+//! runtime force-flushes all batch lanes (serial: directly; pipelined:
+//! a barrier broadcast through the stages, acked back to ingress), and
+//! only then calls [`OnlineLearner::commit_pending`].  The set of
+//! verdicts scored under the old weights is therefore exactly "every
+//! packet up to the committing one", in both runtimes.
+
+pub mod drift;
+pub mod gate;
+pub mod trainer;
+
+pub use drift::DriftDetector;
+pub use gate::{GateMode, GateOutcome, PromotionGate};
+pub use trainer::{centroid_fit, invert_classes, refit, Reservoir, Sample};
+
+use std::sync::Arc;
+
+use crate::bnn::{BnnModel, ModelEpoch, MultiModelExecutor, RegistryError, RegistryHandle};
+use crate::coordinator::service::{select_packed_input, PacketEvent, RouteLogic};
+use crate::net::flow::{EvictPolicy, ShardedFlowTable, FLOW_SHARDS};
+use crate::net::packet::Packet;
+
+/// Ground-truth oracle: the label of the flow this packet belongs to.
+/// Scenario oracles derive this from the generator recipe; a live
+/// deployment would plug in delayed feedback (IDS alerts, billing, …).
+pub type LabelFn = Arc<dyn Fn(&Packet) -> usize + Send + Sync>;
+
+/// Keep at most this many closed windows in the exported timeline (a
+/// multi-hour serve would otherwise grow `ServiceStats` without bound).
+const TIMELINE_CAP: usize = 4096;
+
+/// Configuration of the online-learning loop for one registry slot.
+#[derive(Clone)]
+pub struct LearnSpec {
+    /// Registry slot to watch and retrain.
+    pub model: String,
+    /// Ground-truth label oracle.
+    pub labeler: LabelFn,
+    /// Accuracy-window length on the packet clock.
+    pub window_pkts: u64,
+    /// Bounded labeled-sample reservoir capacity.
+    pub reservoir: usize,
+    /// Freshest samples reserved for gate scoring (never trained on).
+    pub holdout: usize,
+    /// Training-slice size (taken just below the holdout).
+    pub train_recent: usize,
+    /// Page–Hinkley noise tolerance δ.
+    pub ph_delta: f64,
+    /// Page–Hinkley firing threshold λ.
+    pub ph_lambda: f64,
+    /// Absolute holdout-accuracy floor for promotion (and, minus
+    /// `rollback_drop`, the probation rollback floor).
+    pub min_gate_accuracy: f64,
+    /// How much a candidate must beat the live model by.
+    pub gate_margin: f64,
+    /// Post-swap probation length, in windows.
+    pub probation_windows: u32,
+    /// Probation tolerance below `min_gate_accuracy` before rollback.
+    pub rollback_drop: f64,
+    /// Straight-through fine-tune epochs on top of the centroid refit.
+    pub ste_epochs: u32,
+    /// Trainer seed (epoch-offset walk).
+    pub seed: u64,
+    /// Gate fault-injection mode (`Normal` in production).
+    pub mode: GateMode,
+}
+
+impl LearnSpec {
+    /// Defaults tuned for the drift scenario's window/accuracy scales.
+    pub fn new(model: &str, labeler: LabelFn) -> Self {
+        Self {
+            model: model.to_string(),
+            labeler,
+            window_pkts: 250,
+            reservoir: 512,
+            holdout: 48,
+            train_recent: 128,
+            ph_delta: 0.05,
+            ph_lambda: 0.6,
+            min_gate_accuracy: 0.75,
+            gate_margin: 0.05,
+            probation_windows: 3,
+            rollback_drop: 0.10,
+            ste_epochs: 2,
+            seed: 7,
+            mode: GateMode::Normal,
+        }
+    }
+}
+
+impl std::fmt::Debug for LearnSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LearnSpec")
+            .field("model", &self.model)
+            .field("window_pkts", &self.window_pkts)
+            .field("reservoir", &self.reservoir)
+            .field("holdout", &self.holdout)
+            .field("train_recent", &self.train_recent)
+            .field("ph_delta", &self.ph_delta)
+            .field("ph_lambda", &self.ph_lambda)
+            .field("min_gate_accuracy", &self.min_gate_accuracy)
+            .field("gate_margin", &self.gate_margin)
+            .field("probation_windows", &self.probation_windows)
+            .field("rollback_drop", &self.rollback_drop)
+            .field("ste_epochs", &self.ste_epochs)
+            .field("seed", &self.seed)
+            .field("mode", &self.mode)
+            .finish_non_exhaustive() // labeler is an opaque closure
+    }
+}
+
+/// One closed accuracy window of one model — `ServiceStats::
+/// accuracy_timeline` material.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccuracyWindow {
+    pub model: String,
+    /// Packet index (1-based, at ingress) at which the window closed.
+    pub end_packet: u64,
+    /// Labeled verdicts scored inside the window.
+    pub evaluated: u64,
+    pub correct: u64,
+    /// Registry version serving when the window closed.
+    pub version: u64,
+}
+
+impl AccuracyWindow {
+    /// Labeled accuracy; windows with nothing evaluated read as perfect
+    /// (no evidence of error — the detector skips them anyway).
+    pub fn accuracy(&self) -> f64 {
+        if self.evaluated == 0 {
+            1.0
+        } else {
+            self.correct as f64 / self.evaluated as f64
+        }
+    }
+}
+
+/// Counters of the learning loop.  Merge semantics are explicit per
+/// field (see [`merge`](Self::merge)) because exactly one learner runs
+/// per service — the other side of a stage merge carries `None`.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LearnStats {
+    /// Accuracy windows closed.
+    pub windows: u64,
+    /// Labeled verdicts scored.
+    pub evaluated: u64,
+    /// Packet index at which drift first fired (never resets).
+    pub drift_fired_at: Option<u64>,
+    /// Retraining attempts (gate-accepted or not).
+    pub retrains: u64,
+    /// Candidates published through the gate.
+    pub promotions: u64,
+    /// Candidates the gate refused.
+    pub rejections: u64,
+    /// Probation rollbacks performed.
+    pub rollbacks: u64,
+    /// Accuracy of the last window with any evaluations.
+    pub last_window_accuracy: f64,
+    /// Last gate decision's candidate/current holdout scores.
+    pub gate_last_candidate: Option<f64>,
+    pub gate_last_current: Option<f64>,
+    /// A promotion is currently on probation.
+    pub in_probation: bool,
+}
+
+impl LearnStats {
+    /// Fold `other` into `self`.  Counts add (partitions of the work);
+    /// `drift_fired_at` takes the earliest firing; the `last_*` /
+    /// `in_probation` point-in-time fields are taken from whichever side
+    /// has closed windows (at most one side has, since one learner
+    /// exists per service — when both have, `other` wins as the later
+    /// snapshot).
+    pub fn merge(&mut self, other: &LearnStats) {
+        self.windows += other.windows;
+        self.evaluated += other.evaluated;
+        self.retrains += other.retrains;
+        self.promotions += other.promotions;
+        self.rejections += other.rejections;
+        self.rollbacks += other.rollbacks;
+        self.drift_fired_at = match (self.drift_fired_at, other.drift_fired_at) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if other.windows > 0 {
+            self.last_window_accuracy = other.last_window_accuracy;
+            self.gate_last_candidate = other.gate_last_candidate;
+            self.gate_last_current = other.gate_last_current;
+            self.in_probation = other.in_probation;
+        }
+    }
+}
+
+/// The in-process learning loop: shadow flow state, per-window labeled
+/// accuracy, drift detection, retraining, and the two-phase registry
+/// writes.  Lives at ingress (exactly one per service run).
+pub struct OnlineLearner {
+    spec: LearnSpec,
+    registry: RegistryHandle,
+    /// Registry-reading executor of the watched slot (route 0 here).
+    exec: MultiModelExecutor,
+    /// Clone of the service's routing logic, replayed on the shadow
+    /// table so the learner evaluates exactly the flows the service
+    /// classifies.
+    route: RouteLogic,
+    /// The watched model's route index in the *service's* route space.
+    route_idx: usize,
+    /// Shadow replica of the service's flow state (same shard split and
+    /// eviction policy ⇒ same per-flow feature stats).
+    flows: ShardedFlowTable,
+    reservoir: Reservoir,
+    detector: DriftDetector,
+    gate: PromotionGate,
+    in_bits: usize,
+    packets: u64,
+    win_evaluated: u64,
+    win_correct: u64,
+    /// Drift fired and no candidate has been promoted yet: retrain at
+    /// every window close until the gate accepts one.
+    drifting: bool,
+    /// One-shot admin-requested retrain at the next window close.
+    forced: bool,
+    pending_publish: Option<BnnModel>,
+    pending_rollback: Option<Arc<ModelEpoch>>,
+    stats: LearnStats,
+    timeline: Vec<AccuracyWindow>,
+}
+
+impl OnlineLearner {
+    /// `route`/`flow_capacity`/`evict`/`latency_ns` must mirror the
+    /// service's own configuration — the shadow state is only a replica
+    /// if it is built the same way.
+    pub(crate) fn new(
+        spec: LearnSpec,
+        registry: RegistryHandle,
+        route: RouteLogic,
+        latency_ns: f64,
+        flow_capacity: usize,
+        evict: EvictPolicy,
+    ) -> Result<Self, RegistryError> {
+        let mut exec = MultiModelExecutor::new(&registry, &[spec.model.clone()], latency_ns)?;
+        let in_bits = exec.epoch(0).in_words() * crate::bnn::BLOCK_SIZE;
+        let route_idx = route
+            .names()
+            .and_then(|ns| ns.iter().position(|n| *n == spec.model))
+            .unwrap_or(0);
+        let detector = DriftDetector::new(spec.ph_delta, spec.ph_lambda);
+        let gate = PromotionGate::new(
+            spec.min_gate_accuracy,
+            spec.gate_margin,
+            spec.probation_windows,
+            spec.rollback_drop,
+            spec.mode,
+        );
+        let reservoir = Reservoir::new(spec.reservoir);
+        Ok(Self {
+            spec,
+            registry,
+            exec,
+            route,
+            route_idx,
+            flows: ShardedFlowTable::with_total_capacity(FLOW_SHARDS, flow_capacity, evict),
+            reservoir,
+            detector,
+            gate,
+            in_bits,
+            packets: 0,
+            win_evaluated: 0,
+            win_correct: 0,
+            drifting: false,
+            forced: false,
+            pending_publish: None,
+            pending_rollback: None,
+            stats: LearnStats::default(),
+            timeline: Vec::new(),
+        })
+    }
+
+    /// Observe one ingress packet (call *after* the serving side has
+    /// seen it).  Returns `true` when a registry write is staged: the
+    /// caller must flush all batch lanes, then call
+    /// [`commit_pending`](Self::commit_pending).
+    pub fn on_packet(&mut self, ev: &PacketEvent) -> bool {
+        self.packets += 1;
+        if let Some(up) = self.flows.update(&ev.packet) {
+            if self.route.route(&ev.packet, up.is_new, up.pkts) == Some(self.route_idx) {
+                let packed = select_packed_input(ev, up.stats);
+                let (class, _tag) = self.exec.classify(0, &packed);
+                let label = (self.spec.labeler)(&ev.packet);
+                self.win_evaluated += 1;
+                self.stats.evaluated += 1;
+                if class == usize::from(label != 0) {
+                    self.win_correct += 1;
+                }
+                self.reservoir.push(packed, label);
+            }
+        }
+        if self.spec.window_pkts > 0 && self.packets % self.spec.window_pkts == 0 {
+            self.close_window();
+        }
+        self.pending_publish.is_some() || self.pending_rollback.is_some()
+    }
+
+    /// Admin surface hook (`POST /models/<name>/retrain`): one retrain
+    /// attempt at the next window close, drift or no drift.
+    pub fn request_retrain(&mut self) {
+        self.forced = true;
+    }
+
+    fn close_window(&mut self) {
+        let version = self.exec.epoch(0).version();
+        let evaluated = std::mem::take(&mut self.win_evaluated);
+        let correct = std::mem::take(&mut self.win_correct);
+        self.stats.windows += 1;
+        self.timeline.push(AccuracyWindow {
+            model: self.spec.model.clone(),
+            end_packet: self.packets,
+            evaluated,
+            correct,
+            version,
+        });
+        if self.timeline.len() > TIMELINE_CAP {
+            self.timeline.remove(0);
+        }
+        if evaluated == 0 {
+            // No labeled verdicts: no signal.  The detector never sees
+            // empty windows, so sparse traffic cannot fake a recovery.
+            return;
+        }
+        let acc = correct as f64 / evaluated as f64;
+        self.stats.last_window_accuracy = acc;
+        if self.gate.in_probation() {
+            // During probation the gate owns the verdict on this window;
+            // the detector stays paused until the promotion settles.
+            if let Some(pre) = self.gate.observe_window(acc) {
+                self.pending_rollback = Some(pre);
+            }
+            return;
+        }
+        if self.detector.observe(1.0 - acc) && !self.drifting {
+            self.drifting = true;
+            if self.stats.drift_fired_at.is_none() {
+                self.stats.drift_fired_at = Some(self.packets);
+            }
+        }
+        if self.drifting || self.forced {
+            self.forced = false;
+            self.attempt_retrain();
+        }
+    }
+
+    /// Refit a candidate from the reservoir and put it to the gate.
+    /// While drift persists this runs at every window close: early
+    /// candidates trained on a mixed pre/post-drift reservoir score low
+    /// and are rejected; once post-drift samples dominate, one clears
+    /// the gate and is staged for publish.
+    fn attempt_retrain(&mut self) {
+        let holdout = self.reservoir.recent(0, self.spec.holdout);
+        let train = self.reservoir.recent(self.spec.holdout, self.spec.train_recent);
+        if holdout.len() < self.spec.holdout || train.len() < self.spec.holdout {
+            return; // not enough labeled evidence yet
+        }
+        self.stats.retrains += 1;
+        let seed = self.spec.seed ^ self.stats.retrains.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut cand = trainer::refit(&self.spec.model, self.in_bits, &train, self.spec.ste_epochs, seed);
+        self.gate.prepare(&mut cand);
+        let cand_acc = trainer::score(&cand, &holdout);
+        let mut cur_correct = 0usize;
+        for s in &holdout {
+            let (class, _) = self.exec.classify(0, &s.packed);
+            if class == usize::from(s.label != 0) {
+                cur_correct += 1;
+            }
+        }
+        let cur_acc = cur_correct as f64 / holdout.len() as f64;
+        match self.gate.decide(cand_acc, cur_acc) {
+            GateOutcome::Promote { .. } => self.pending_publish = Some(cand),
+            GateOutcome::Reject { .. } => self.stats.rejections += 1,
+        }
+    }
+
+    /// Perform the staged registry write.  Only call after every batch
+    /// lane has been force-flushed (see the module docs) — this is what
+    /// keeps pipelined verdicts identical to serial ones across a swap.
+    pub fn commit_pending(&mut self) -> Result<(), RegistryError> {
+        if let Some(pre) = self.pending_rollback.take() {
+            self.registry.rollback(&self.spec.model, &pre)?;
+            self.stats.rollbacks += 1;
+            // The rolled-back-to model is still the one drift defeated:
+            // stay in the retrain loop, but re-baseline the detector so
+            // it doesn't refire on the same evidence.
+            self.drifting = true;
+            self.detector.reset();
+        }
+        if let Some(cand) = self.pending_publish.take() {
+            let pre = self.registry.current(&self.spec.model);
+            self.registry.publish(&self.spec.model, &cand)?;
+            self.stats.promotions += 1;
+            if let Some(pre) = pre {
+                self.gate.begin_probation(pre);
+            }
+            self.drifting = false;
+            self.detector.reset();
+        }
+        Ok(())
+    }
+
+    /// Copy the learn telemetry into a stats snapshot (live admin
+    /// scrapes and the final report).
+    pub fn publish_into(&mut self, stats: &mut crate::coordinator::ServiceStats) {
+        self.stats.in_probation = self.gate.in_probation();
+        self.stats.gate_last_candidate = self.gate.last_candidate;
+        self.stats.gate_last_current = self.gate.last_current;
+        stats.learn = Some(self.stats.clone());
+        stats.accuracy_timeline = self.timeline.clone();
+    }
+
+    /// Disable further learner activity (a stage already failed; a
+    /// half-coordinated publish would do more harm than stale weights).
+    pub fn poison(&mut self) {
+        self.spec.window_pkts = 0;
+        self.pending_publish = None;
+        self.pending_rollback = None;
+    }
+
+    pub fn stats(&self) -> &LearnStats {
+        &self.stats
+    }
+
+    pub fn timeline(&self) -> &[AccuracyWindow] {
+        &self.timeline
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.spec.model
+    }
+}
+
+/// Mean accuracy over the last `k` windows that evaluated anything —
+/// the scenario's "recovered" measurement.
+pub fn recovery_accuracy(timeline: &[AccuracyWindow], k: usize) -> f64 {
+    let tail: Vec<&AccuracyWindow> =
+        timeline.iter().rev().filter(|w| w.evaluated > 0).take(k.max(1)).collect();
+    if tail.is_empty() {
+        return 1.0;
+    }
+    let (c, e) = tail.iter().fold((0u64, 0u64), |(c, e), w| (c + w.correct, e + w.evaluated));
+    c as f64 / e as f64
+}
+
+/// Lowest window accuracy observed (only windows that evaluated
+/// anything) — the scenario's "accuracy actually fell" evidence.
+pub fn min_window_accuracy(timeline: &[AccuracyWindow]) -> f64 {
+    timeline
+        .iter()
+        .filter(|w| w.evaluated > 0)
+        .map(AccuracyWindow::accuracy)
+        .fold(1.0, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trigger::TriggerCondition;
+    use crate::net::packet::{Packet, Proto};
+
+    /// Payload patterns: class 0 lives near all-zeros, the pre-drift
+    /// class 1 near all-ones, and the *drifted* class 1 in a pattern the
+    /// seed model reads as class 0 (closer to the zeros centroid).
+    const ZEROS: [u32; 8] = [0; 8];
+    const ONES: [u32; 8] = [!0; 8];
+    const DRIFTED: [u32; 8] = [0, 0, 0, 0, 0, 0, !0, !0];
+
+    fn seed_model() -> BnnModel {
+        centroid_fit("m", 256, &[ZEROS.to_vec()], &[ONES.to_vec()])
+    }
+
+    /// Label oracle: src prefix 0x0C ⇒ class 1.
+    fn labeler() -> LabelFn {
+        Arc::new(|p: &Packet| usize::from(p.src_ip >> 24 == 0x0C))
+    }
+
+    fn event(i: u64, class1: bool, payload: [u32; 8]) -> PacketEvent {
+        PacketEvent {
+            packet: Packet {
+                ts_ns: i as f64 * 100.0,
+                src_ip: if class1 { 0x0C00_0000 + (i % 13) as u32 } else { 0x0A00_0000 + (i % 17) as u32 },
+                dst_ip: 0x0B00_0001,
+                src_port: 1000 + (i % 7) as u16,
+                dst_port: 443,
+                proto: Proto::Tcp,
+                size: 256,
+                tcp_flags: 0x10,
+            },
+            payload_words: Some(payload.to_vec()),
+        }
+    }
+
+    fn learner(spec: LearnSpec) -> (OnlineLearner, RegistryHandle) {
+        let reg = RegistryHandle::new();
+        reg.publish("m", &seed_model()).unwrap();
+        let l = OnlineLearner::new(
+            spec,
+            reg.clone(),
+            RouteLogic::Trigger(TriggerCondition::EveryPacket),
+            60.0,
+            1 << 12,
+            EvictPolicy::Lru,
+        )
+        .unwrap();
+        (l, reg)
+    }
+
+    fn spec() -> LearnSpec {
+        let mut s = LearnSpec::new("m", labeler());
+        s.window_pkts = 50;
+        s.holdout = 16;
+        s.train_recent = 48;
+        s.reservoir = 128;
+        s
+    }
+
+    /// Drive `n` packets: alternate benign/class-1, class-1 payload per
+    /// `drifted`.  Commits staged writes immediately (no batching here).
+    fn drive(l: &mut OnlineLearner, start: u64, n: u64, drifted: bool) {
+        for i in start..start + n {
+            let class1 = i % 2 == 0;
+            let payload = if !class1 {
+                ZEROS
+            } else if drifted {
+                DRIFTED
+            } else {
+                ONES
+            };
+            if l.on_packet(&event(i, class1, payload)) {
+                l.commit_pending().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn stable_traffic_never_retrains() {
+        let (mut l, _reg) = learner(spec());
+        drive(&mut l, 0, 2000, false);
+        assert!(l.stats().drift_fired_at.is_none());
+        assert_eq!(l.stats().retrains, 0);
+        assert!(l.stats().last_window_accuracy > 0.99);
+        assert_eq!(l.stats().windows, 40);
+    }
+
+    #[test]
+    fn drift_fires_retrains_and_recovers() {
+        let (mut l, reg) = learner(spec());
+        drive(&mut l, 0, 1000, false);
+        assert!(l.stats().drift_fired_at.is_none());
+        drive(&mut l, 1000, 2000, true);
+        let st = l.stats().clone();
+        assert!(st.drift_fired_at.is_some(), "drift must fire: {st:?}");
+        assert!(st.promotions >= 1, "a candidate must be promoted: {st:?}");
+        assert!(reg.current("m").unwrap().version() > 1, "registry republished");
+        assert!(st.last_window_accuracy > 0.9, "recovered: {st:?}");
+        assert!(recovery_accuracy(l.timeline(), 4) > 0.9);
+        assert!(min_window_accuracy(l.timeline()) < 0.6, "the dip is visible");
+    }
+
+    #[test]
+    fn drift_firing_packet_is_deterministic() {
+        let run = || {
+            let (mut l, _reg) = learner(spec());
+            drive(&mut l, 0, 1000, false);
+            drive(&mut l, 1000, 1500, true);
+            (l.stats().drift_fired_at, l.stats().promotions)
+        };
+        let (fired, promos) = run();
+        assert!(fired.is_some());
+        assert_eq!((fired, promos), run());
+    }
+
+    #[test]
+    fn sabotage_mode_rejects_every_candidate() {
+        let mut s = spec();
+        s.mode = GateMode::SabotageCandidate;
+        let (mut l, reg) = learner(s);
+        drive(&mut l, 0, 1000, false);
+        drive(&mut l, 1000, 2000, true);
+        let st = l.stats();
+        assert!(st.drift_fired_at.is_some());
+        assert!(st.retrains >= 1);
+        assert_eq!(st.promotions, 0, "{st:?}");
+        assert!(st.rejections >= st.retrains, "every attempt rejected: {st:?}");
+        assert_eq!(reg.current("m").unwrap().version(), 1, "nothing published");
+    }
+
+    #[test]
+    fn force_accept_rolls_back_then_recovers() {
+        let mut s = spec();
+        s.mode = GateMode::ForceAccept;
+        let (mut l, reg) = learner(s);
+        drive(&mut l, 0, 1000, false);
+        drive(&mut l, 1000, 2500, true);
+        let st = l.stats().clone();
+        assert!(st.rollbacks >= 1, "probation must catch the bad forced model: {st:?}");
+        assert!(st.promotions >= 2, "forced promotion + honest recovery: {st:?}");
+        assert!(st.last_window_accuracy > 0.9, "recovered after rollback: {st:?}");
+        // Rollback bumps the slot version too: publish(bad) + rollback +
+        // publish(good) ⇒ at least v4.
+        assert!(reg.current("m").unwrap().version() >= 4);
+    }
+
+    #[test]
+    fn forced_retrain_is_one_shot_and_gated() {
+        let (mut l, _reg) = learner(spec());
+        drive(&mut l, 0, 600, false);
+        assert_eq!(l.stats().retrains, 0);
+        l.request_retrain();
+        drive(&mut l, 600, 100, false);
+        // One attempt; same-distribution candidate can't beat the live
+        // model by the margin, so it is rejected — and not retried.
+        assert_eq!(l.stats().retrains, 1);
+        assert_eq!(l.stats().rejections, 1);
+        assert_eq!(l.stats().promotions, 0);
+        drive(&mut l, 700, 500, false);
+        assert_eq!(l.stats().retrains, 1);
+    }
+
+    #[test]
+    fn learn_stats_merge_is_explicit_per_field() {
+        let mut a = LearnStats {
+            windows: 2,
+            evaluated: 10,
+            drift_fired_at: Some(500),
+            retrains: 1,
+            promotions: 1,
+            rejections: 0,
+            rollbacks: 0,
+            last_window_accuracy: 0.5,
+            gate_last_candidate: Some(0.9),
+            gate_last_current: Some(0.4),
+            in_probation: true,
+        };
+        let b = LearnStats {
+            windows: 3,
+            evaluated: 20,
+            drift_fired_at: Some(250),
+            retrains: 2,
+            promotions: 0,
+            rejections: 2,
+            rollbacks: 1,
+            last_window_accuracy: 0.8,
+            gate_last_candidate: Some(0.7),
+            gate_last_current: Some(0.6),
+            in_probation: false,
+        };
+        a.merge(&b);
+        assert_eq!(a.windows, 5);
+        assert_eq!(a.evaluated, 30);
+        assert_eq!(a.drift_fired_at, Some(250), "earliest firing wins");
+        assert_eq!(a.retrains, 3);
+        assert_eq!(a.promotions, 1);
+        assert_eq!(a.rejections, 2);
+        assert_eq!(a.rollbacks, 1);
+        assert_eq!(a.last_window_accuracy, 0.8, "later snapshot wins");
+        assert!(!a.in_probation);
+        // The empty side of a stage merge changes nothing.
+        let snapshot = a.clone();
+        a.merge(&LearnStats::default());
+        assert_eq!(a, snapshot);
+    }
+
+    #[test]
+    fn timeline_is_bounded() {
+        let mut s = spec();
+        s.window_pkts = 1;
+        let (mut l, _reg) = learner(s);
+        for i in 0..(TIMELINE_CAP as u64 + 100) {
+            // Benign-only traffic: windows close every packet.
+            if l.on_packet(&event(i * 2 + 1, false, ZEROS)) {
+                l.commit_pending().unwrap();
+            }
+        }
+        assert_eq!(l.timeline().len(), TIMELINE_CAP);
+    }
+}

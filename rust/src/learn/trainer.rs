@@ -1,0 +1,328 @@
+//! In-process retraining: a bounded reservoir of recent labeled feature
+//! vectors and a native-Rust refit — no Python anywhere in the loop.
+//!
+//! The refit is two-staged, mirroring how the paper's binary models are
+//! produced offline:
+//!
+//! 1. **Centroid refit** ([`centroid_fit`]) — per-class majority vote
+//!    over the packed sample bits.  This is the same machinery the
+//!    scenario oracles train their seed models with
+//!    ([`scenario::centroid_model`](crate::scenario::centroid_model)
+//!    delegates here), so a retrained model is directly comparable to
+//!    the model it replaces.
+//! 2. **Optional STE fine-tune** ([`refit`] with `ste_epochs > 0`) — a
+//!    straight-through-estimator pass over the training slice: latent
+//!    integer weights are initialized from the centroid signs, each
+//!    misclassified sample nudges the true class's latent weights toward
+//!    its bits (and the predicted class's away), and the binarized signs
+//!    are re-derived after every epoch.  Sample order is fixed and the
+//!    only randomness is the seeded epoch-offset walk, so a refit is a
+//!    pure function of `(samples, epochs, seed)`.
+
+use crate::bnn::{words_for, BnnExecutor, BnnLayer, BnnModel, ModelMetrics, BLOCK_SIZE};
+
+/// One labeled training sample: the packed BNN input that was scored
+/// live, plus the oracle label for the packet that triggered it.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub packed: Vec<u32>,
+    pub label: usize,
+}
+
+/// Bounded ring of the most recent labeled samples (recency-biased on
+/// purpose: after drift, the freshest slice is the new distribution).
+#[derive(Debug, Default)]
+pub struct Reservoir {
+    cap: usize,
+    buf: std::collections::VecDeque<Sample>,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), buf: std::collections::VecDeque::new() }
+    }
+
+    pub fn push(&mut self, packed: Vec<u32>, label: usize) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(Sample { packed, label });
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The `take` freshest samples after skipping the `skip` freshest —
+    /// newest first.  `split(h, t)` style callers use `recent(0, h)` as
+    /// a holdout and `recent(h, t)` as the (disjoint) training slice.
+    pub fn recent(&self, skip: usize, take: usize) -> Vec<&Sample> {
+        self.buf.iter().rev().skip(skip).take(take).collect()
+    }
+}
+
+/// Per-class majority-vote centroid model: two neurons, one layer, the
+/// canonical seed shape for the paper's binary-feature use cases.  Class
+/// scores are bit-agreement with the class centroid; an empty class
+/// falls back to the complement of the other's centroid (maximally far),
+/// and two empty classes yield the degenerate zero/ones pair.
+pub fn centroid_fit(name: &str, in_bits: usize, class0: &[Vec<u32>], class1: &[Vec<u32>]) -> BnnModel {
+    let in_words = words_for(in_bits);
+    let majority = |vs: &[Vec<u32>]| -> Vec<u32> {
+        let mut out = vec![0u32; in_words];
+        for (w, slot) in out.iter_mut().enumerate() {
+            for bit in 0..BLOCK_SIZE {
+                let ones = vs.iter().filter(|v| (v[w] >> bit) & 1 == 1).count();
+                if ones * 2 >= vs.len() && !vs.is_empty() {
+                    *slot |= 1 << bit;
+                }
+            }
+        }
+        out
+    };
+    let complement = |v: &[u32]| v.iter().map(|w| !w).collect::<Vec<u32>>();
+    let (c0, c1) = match (class0.is_empty(), class1.is_empty()) {
+        (false, false) => (majority(class0), majority(class1)),
+        (false, true) => {
+            let c0 = majority(class0);
+            let c1 = complement(&c0);
+            (c0, c1)
+        }
+        (true, false) => {
+            let c1 = majority(class1);
+            (complement(&c1), c1)
+        }
+        (true, true) => (vec![0u32; in_words], vec![!0u32; in_words]),
+    };
+    let mut words = c0;
+    words.extend_from_slice(&c1);
+    let layer = BnnLayer::new(2, in_words, words).expect("centroid layer dimensions");
+    BnnModel {
+        name: name.to_string(),
+        in_bits,
+        neurons: vec![2],
+        layers: vec![layer],
+        metrics: ModelMetrics::default(),
+    }
+}
+
+/// Latent-weight clamp for the STE pass: wide enough that a confident
+/// sign survives a burst of outliers, small enough that the sign can
+/// still flip within a few epochs of consistent disagreement.
+const LATENT_CLAMP: i32 = 8;
+
+/// Refit a candidate from labeled samples: centroid majority vote, then
+/// `ste_epochs` straight-through fine-tune passes.  Deterministic for a
+/// given `(samples, ste_epochs, seed)`.
+pub fn refit(
+    name: &str,
+    in_bits: usize,
+    samples: &[&Sample],
+    ste_epochs: u32,
+    seed: u64,
+) -> BnnModel {
+    let class0: Vec<Vec<u32>> = samples
+        .iter()
+        .filter(|s| s.label == 0)
+        .map(|s| s.packed.clone())
+        .collect();
+    let class1: Vec<Vec<u32>> = samples
+        .iter()
+        .filter(|s| s.label != 0)
+        .map(|s| s.packed.clone())
+        .collect();
+    let mut model = centroid_fit(name, in_bits, &class0, &class1);
+    if ste_epochs == 0 || samples.is_empty() {
+        return model;
+    }
+
+    let in_words = words_for(in_bits);
+    let padded = in_words * BLOCK_SIZE;
+    // Latent per-class per-bit weights: +clamp where the centroid bit is
+    // set, −clamp otherwise (the straight-through "real" weights whose
+    // signs are the binary model).
+    let layer = &model.layers[0];
+    let mut latent = vec![vec![0i32; padded]; 2];
+    for (c, lat) in latent.iter_mut().enumerate() {
+        let row = layer.row(c);
+        for (b, l) in lat.iter_mut().enumerate() {
+            let set = (row[b / BLOCK_SIZE] >> (b % BLOCK_SIZE)) & 1 == 1;
+            *l = if set { LATENT_CLAMP } else { -LATENT_CLAMP };
+        }
+    }
+    let bit = |v: &[u32], b: usize| (v[b / BLOCK_SIZE] >> (b % BLOCK_SIZE)) & 1 == 1;
+    for epoch in 0..ste_epochs {
+        // Seeded epoch offset: a cheap deterministic reshuffle that
+        // avoids pathological sample-order lock-in without an RNG on
+        // the sample data itself.
+        let offset = ((seed.wrapping_add(u64::from(epoch)).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            >> 33) as usize)
+            % samples.len().max(1);
+        let mut exec = BnnExecutor::new(model.clone());
+        let mut changed = false;
+        for k in 0..samples.len() {
+            let s = samples[(k + offset) % samples.len()];
+            let truth = usize::from(s.label != 0);
+            let pred = exec.classify(&s.packed);
+            if pred == truth {
+                continue;
+            }
+            changed = true;
+            // Straight-through update: move the true class's latent
+            // weights toward the sample bits, the mispredicting class's
+            // away from them.
+            for b in 0..padded {
+                let x = if bit(&s.packed, b) { 1 } else { -1 };
+                latent[truth][b] = (latent[truth][b] + x).clamp(-LATENT_CLAMP, LATENT_CLAMP);
+                latent[pred][b] = (latent[pred][b] - x).clamp(-LATENT_CLAMP, LATENT_CLAMP);
+            }
+            // Re-binarize (sign function; 0 rounds up, matching the
+            // packed ±1 convention where a set bit is +1).
+            let mut words = vec![0u32; 2 * in_words];
+            for (c, lat) in latent.iter().enumerate() {
+                for (b, &l) in lat.iter().enumerate() {
+                    if l >= 0 {
+                        words[c * in_words + b / BLOCK_SIZE] |= 1 << (b % BLOCK_SIZE);
+                    }
+                }
+            }
+            model.layers[0] =
+                BnnLayer::new(2, in_words, words).expect("fine-tuned layer dimensions");
+            exec = BnnExecutor::new(model.clone());
+        }
+        if !changed {
+            break; // converged on the training slice
+        }
+    }
+    model
+}
+
+/// Labeled accuracy of `model` over `samples` (1.0 on an empty slice:
+/// no evidence of error).
+pub fn score(model: &BnnModel, samples: &[&Sample]) -> f64 {
+    if samples.is_empty() {
+        return 1.0;
+    }
+    let mut exec = BnnExecutor::new(model.clone());
+    let correct = samples
+        .iter()
+        .filter(|s| exec.classify(&s.packed) == usize::from(s.label != 0))
+        .count();
+    correct as f64 / samples.len() as f64
+}
+
+/// Swap the two class rows of a single-layer two-class model — the
+/// "sabotaged candidate" used to exercise gate rejection and probation
+/// rollback: systematically wrong wherever the honest model is right.
+pub fn invert_classes(model: &mut BnnModel) {
+    let layer = &mut model.layers[0];
+    debug_assert_eq!(layer.neurons, 2, "invert_classes expects a 2-class layer");
+    let w = layer.in_words;
+    let (a, b) = layer.words.split_at_mut(w);
+    a.swap_with_slice(&mut b[..w]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(words: [u32; 8], label: usize) -> Sample {
+        Sample { packed: words.to_vec(), label }
+    }
+
+    /// Two well-separated clusters: class 0 near all-zeros, class 1 near
+    /// all-ones, with per-sample noise bits.
+    fn separable(n: usize) -> Vec<Sample> {
+        (0..n)
+            .map(|i| {
+                let noise = 1u32 << (i % 32);
+                if i % 2 == 0 {
+                    sample([noise, 0, noise, 0, 0, 0, 0, 0], 0)
+                } else {
+                    sample([!noise, !0, !0, !noise, !0, !0, !0, !0], 1)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_recency_ordered() {
+        let mut r = Reservoir::new(4);
+        for i in 0..10u32 {
+            r.push(vec![i], (i % 2) as usize);
+        }
+        assert_eq!(r.len(), 4);
+        let newest: Vec<u32> = r.recent(0, 2).iter().map(|s| s.packed[0]).collect();
+        assert_eq!(newest, vec![9, 8]);
+        // Disjoint holdout/train split: skip the holdout.
+        let train: Vec<u32> = r.recent(2, 2).iter().map(|s| s.packed[0]).collect();
+        assert_eq!(train, vec![7, 6]);
+    }
+
+    #[test]
+    fn centroid_refit_separates_clusters() {
+        let samples = separable(40);
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let model = refit("m", 256, &refs, 0, 7);
+        assert!((score(&model, &refs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ste_pass_never_degrades_separable_fit_and_is_deterministic() {
+        let samples = separable(40);
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let tuned = refit("m", 256, &refs, 3, 42);
+        assert!((score(&tuned, &refs) - 1.0).abs() < 1e-12);
+        let again = refit("m", 256, &refs, 3, 42);
+        assert_eq!(tuned.layers[0].words, again.layers[0].words);
+    }
+
+    #[test]
+    fn ste_survives_heavy_class_imbalance() {
+        // 30:8 imbalance with the minority class carrying a narrow
+        // signal (words 4–5 only).  The guard: STE's per-sample updates
+        // must never undo a fit the centroid init already achieves, no
+        // matter how lopsided the per-epoch update traffic is.
+        let mut samples = Vec::new();
+        for i in 0..30u32 {
+            samples.push(sample([1 << (i % 32), 0, 0, 0, 0, 0, 0, 0], 0));
+        }
+        // 8 "hard" class-1 samples: weak signal, near the class-0 cloud.
+        for i in 0..8u32 {
+            samples.push(sample([1 << (i % 32), 0, 0, 0, !0, !0, 0, 0], 1));
+        }
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let plain = score(&refit("m", 256, &refs, 0, 7), &refs);
+        let tuned = score(&refit("m", 256, &refs, 5, 7), &refs);
+        assert!(tuned >= plain, "STE must not lose to its own init: {tuned} < {plain}");
+        assert!(tuned > 0.95, "STE should nearly fit the training slice, got {tuned}");
+    }
+
+    #[test]
+    fn empty_class_falls_back_to_complement() {
+        let samples = separable(10);
+        let zeros_only: Vec<&Sample> = samples.iter().filter(|s| s.label == 0).collect();
+        let model = refit("m", 256, &zeros_only, 0, 7);
+        // Class-0 samples still classify as 0 against the complement.
+        assert!((score(&model, &zeros_only) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_candidate_is_systematically_wrong() {
+        let samples = separable(40);
+        let refs: Vec<&Sample> = samples.iter().collect();
+        let mut model = refit("m", 256, &refs, 0, 7);
+        invert_classes(&mut model);
+        assert!(score(&model, &refs) < 0.05);
+    }
+
+    #[test]
+    fn score_of_empty_slice_is_one() {
+        let model = centroid_fit("m", 256, &[], &[]);
+        assert_eq!(score(&model, &[]), 1.0);
+    }
+}

@@ -31,6 +31,11 @@
 //!   batching, and the unified serving runtime: one `InferencePlane`
 //!   trait over every backend, a named `BackendFactory`, and one
 //!   `Service` built by `ServeBuilder` (§3.2's orchestration).
+//! * [`learn`] — the online-learning subsystem: drift detection
+//!   (Page–Hinkley on per-window labeled accuracy), in-process
+//!   retraining from a bounded labeled reservoir, and gate-guarded
+//!   live republish with probation rollback over the registry's
+//!   zero-downtime hot swap.
 //! * `runtime` — PJRT loader/executor for the AOT artifacts (behind the
 //!   off-by-default `pjrt` feature: needs a vendored xla-rs).
 //! * [`scenario`] — the three paper use cases (§5: traffic analysis,
@@ -50,6 +55,7 @@ pub mod experiments;
 pub mod fattree;
 pub mod fpga;
 pub mod json;
+pub mod learn;
 pub mod metrics;
 pub mod net;
 pub mod nfp;

@@ -75,12 +75,17 @@ COMMANDS:
                                run never pauses, verdict tags move to
                                the new version, per-model swap counts
                                land in the report)
+               --online-learn NAME (registry mode: attach the online-
+                               learning loop to slot NAME — windowed
+                               labeled accuracy, Page–Hinkley drift
+                               detection, in-process refit, gated
+                               republish; telemetry lands in the report)
                In-process control plane: hold a clone of the service's
                RegistryHandle and call publish(name, &model) from any
                thread; readers observe the new version on their next
                batch, never a torn one.
-  scenario     <traffic|anomaly|tomography> — serve one paper use case
-               (§5) end-to-end with its seeded workload, calibrated
+  scenario     <traffic|anomaly|tomography|drift> — serve one paper use
+               case (§5) end-to-end with its seeded workload, calibrated
                model, and ground-truth oracle, then print the score
                --events N (0 = scenario default; packets for the
                            flow-stats scenarios, probe rounds for
@@ -92,9 +97,19 @@ COMMANDS:
                --pipeline N --batch N --shards N
                --table-cap N --evict lru|age:NS|off
                --shed-policy MAX_US[:RESUME_US] | off
+               --gate normal|sabotage|force-accept
+                             (drift only: promotion-gate fault injection.
+                              `sabotage` inverts every retrained
+                              candidate — the gate must reject them all;
+                              `force-accept` publishes one bad candidate
+                              past the gate — probation must roll it
+                              back.  Either mode passes on correct gate
+                              behavior instead of the accuracy floor)
                The report ends with `floor check ... PASS|FAIL` and an
                order-independent `verdict digest` — identical for
-               serial and pipelined runs of the same seed.
+               serial and pipelined runs of the same seed.  The drift
+               scenario also prints `drift check` and `recovery check`
+               lines covering the online-learning loop.
   experiment   <fig03|...|tab02|abl-crossover|abl-cam|all>
   models
   compile-p4   --model NAME [--format p4|bmv2]
@@ -221,6 +236,7 @@ fn main() -> n3ic::Result<()> {
             "swap-every",
             "shed-policy",
             "degrade",
+            "online-learn",
         ],
         "scenario" => &[
             "artifacts",
@@ -235,6 +251,7 @@ fn main() -> n3ic::Result<()> {
             "table-cap",
             "evict",
             "shed-policy",
+            "gate",
         ],
         "experiment" | "models" => &["artifacts"],
         "compile-p4" => &["artifacts", "model", "format"],
@@ -368,6 +385,15 @@ fn scenario_cmd(args: &Args) -> n3ic::Result<()> {
             Err(e) => usage_err(&e),
         },
         admin: None,
+        gate: {
+            let g = args.get("gate", "normal");
+            match n3ic::learn::GateMode::parse(&g) {
+                Some(m) => Some(m),
+                None => usage_err(&format!(
+                    "--gate {g:?} is not normal|sabotage|force-accept"
+                )),
+            }
+        },
     };
     let about = registry.get(name).map(|s| s.about().to_string());
     let rep = registry.run(name, &cfg)?;
@@ -406,6 +432,29 @@ fn scenario_cmd(args: &Args) -> n3ic::Result<()> {
             if d.ok { "ok" } else { "missed" }
         );
     }
+    let gate_mode = cfg.gate.unwrap_or_default();
+    if let Some(l) = &st.learn {
+        println!(
+            "learn            : windows={} evaluated={} retrains={} promotions={} \
+             rejections={} rollbacks={}",
+            l.windows, l.evaluated, l.retrains, l.promotions, l.rejections, l.rollbacks
+        );
+        if let (Some(c), Some(cur)) = (l.gate_last_candidate, l.gate_last_current) {
+            println!("gate last score  : candidate={c:.3} current={cur:.3}");
+        }
+        match l.drift_fired_at {
+            Some(p) => println!("drift check      : fired at packet {p} -> PASS"),
+            None => println!("drift check      : never fired -> FAIL"),
+        }
+        let dip = n3ic::learn::min_window_accuracy(&st.accuracy_timeline);
+        let rec = n3ic::learn::recovery_accuracy(&st.accuracy_timeline, 4);
+        println!(
+            "recovery check   : window accuracy dipped to {:.3}, last 4 windows {:.3} -> {}",
+            dip,
+            rec,
+            if gate_mode == n3ic::learn::GateMode::Normal && rec >= 0.75 { "PASS" } else { "n/a" }
+        );
+    }
     println!(
         "floor check      : accuracy {:.3} vs floor {:.2} -> {}",
         s.accuracy,
@@ -413,12 +462,47 @@ fn scenario_cmd(args: &Args) -> n3ic::Result<()> {
         if rep.passes_floor() { "PASS" } else { "FAIL" }
     );
     println!("verdict digest   : 0x{:016x}", rep.digest());
-    if !rep.passes_floor() {
-        anyhow::bail!(
-            "scenario {name}: accuracy {:.3} below floor {:.2}",
-            s.accuracy,
-            rep.floor
-        );
+    // Gate fault-injection runs pass on correct *gate* behavior — the
+    // accuracy floor legitimately fails when the loop is sabotaged.
+    match gate_mode {
+        n3ic::learn::GateMode::Normal => {
+            if !rep.passes_floor() {
+                anyhow::bail!(
+                    "scenario {name}: accuracy {:.3} below floor {:.2}",
+                    s.accuracy,
+                    rep.floor
+                );
+            }
+        }
+        n3ic::learn::GateMode::SabotageCandidate => {
+            let Some(l) = &st.learn else {
+                anyhow::bail!("--gate applies only to scenarios with a learning loop");
+            };
+            let ok = l.retrains >= 1 && l.promotions == 0 && l.rejections >= 1;
+            println!(
+                "gate check       : sabotaged candidates rejected={} promoted={} -> {}",
+                l.rejections,
+                l.promotions,
+                if ok { "PASS" } else { "FAIL" }
+            );
+            if !ok {
+                anyhow::bail!("scenario {name}: sabotaged candidate slipped the gate: {l:?}");
+            }
+        }
+        n3ic::learn::GateMode::ForceAccept => {
+            let Some(l) = &st.learn else {
+                anyhow::bail!("--gate applies only to scenarios with a learning loop");
+            };
+            let ok = l.rollbacks >= 1;
+            println!(
+                "gate check       : forced bad publish rolled back {} time(s) -> {}",
+                l.rollbacks,
+                if ok { "PASS" } else { "FAIL" }
+            );
+            if !ok {
+                anyhow::bail!("scenario {name}: probation never rolled back: {l:?}");
+            }
+        }
     }
     Ok(())
 }
@@ -583,7 +667,10 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
             }
             pairs.push((name.to_string(), path.to_string()));
         }
-        return serve_registry(&knobs, artifacts, &pairs);
+        return serve_registry(&knobs, artifacts, &pairs, args.get("online-learn", ""));
+    }
+    if !args.get("online-learn", "").is_empty() {
+        usage_err("--online-learn needs the registry backend (--model NAME=PATH pairs)");
     }
     if backend == "registry" {
         usage_err("--backend registry needs repeated --model NAME=PATH pairs");
@@ -599,7 +686,7 @@ fn serve(args: &Args, artifacts: &std::path::Path) -> n3ic::Result<()> {
         BackendFactory::single_sharded(&backend, m, knobs.shards)
             .map_err(|e| anyhow::anyhow!("{e}"))?
     };
-    run_and_report(&knobs, plane, None)
+    run_and_report(&knobs, plane, None, None)
 }
 
 /// Resolve one `--model NAME=PATH` pair: a readable model JSON wins;
@@ -623,6 +710,7 @@ fn serve_registry(
     knobs: &ServeKnobs,
     artifacts: &std::path::Path,
     pairs: &[(String, String)],
+    online_learn: String,
 ) -> n3ic::Result<()> {
     let registry = RegistryHandle::new();
     let mut names = Vec::new();
@@ -649,11 +737,32 @@ fn serve_registry(
     }
     let plane = BackendFactory::registry(&registry, &names, latency_ns, knobs.shards)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // The CLI demo has no ground-truth feed, so the learning loop runs
+    // with an all-benign labeler: windowed accuracy measures how far the
+    // served model strays from class 0 on live traffic, and a drifting
+    // slot is refit toward it.  Real deployments plug a delayed-feedback
+    // labeler into `ServeBuilder::online_learn` instead.
+    let learn = if online_learn.is_empty() {
+        None
+    } else {
+        if !names.iter().any(|n| *n == online_learn) {
+            anyhow::bail!(
+                "--online-learn {online_learn:?} is not among the served models ({})",
+                names.join(", ")
+            );
+        }
+        let mut spec = n3ic::learn::LearnSpec::new(
+            &online_learn,
+            std::sync::Arc::new(|_: &n3ic::net::packet::Packet| 0),
+        );
+        spec.window_pkts = (knobs.packets / 40).max(250);
+        Some(spec)
+    };
     let router = ModelRouter::hash_split(
         TriggerCondition::EveryNPackets(knobs.trigger_pkts),
         names,
     );
-    run_and_report(knobs, plane, Some((router, registry)))
+    run_and_report(knobs, plane, Some((router, registry)), learn)
 }
 
 /// Build the unified service from the parsed knobs, drive it with
@@ -663,6 +772,7 @@ fn run_and_report(
     knobs: &ServeKnobs,
     plane: Box<dyn InferencePlane>,
     routed: Option<(ModelRouter, RegistryHandle)>,
+    learn: Option<n3ic::learn::LearnSpec>,
 ) -> n3ic::Result<()> {
     let caps = plane.capabilities();
     let mut builder = ServeBuilder::new()
@@ -696,6 +806,9 @@ fn run_and_report(
         // fallback-model ladder is API-level (`DegradeSpec::with_fallback`)
         // since it needs a shape-matched model per registry slot.
         builder = builder.degrade(DegradeSpec::trigger_only());
+    }
+    if let Some(spec) = learn {
+        builder = builder.online_learn(spec);
     }
     let svc = builder
         .flow_capacity(knobs.table_cap)
@@ -776,6 +889,22 @@ fn run_and_report(
                 "plane health     : {:8} calls={} failovers={} trips={} open={}",
                 h.backend, h.calls, h.failovers, h.trips, h.open
             );
+        }
+    }
+    if let Some(l) = &st.learn {
+        println!(
+            "online learn     : windows={} evaluated={} retrains={} promotions={} \
+             rejections={} rollbacks={} last-window-acc={:.3}",
+            l.windows,
+            l.evaluated,
+            l.retrains,
+            l.promotions,
+            l.rejections,
+            l.rollbacks,
+            l.last_window_accuracy
+        );
+        if let Some(p) = l.drift_fired_at {
+            println!("drift            : fired at packet {p}");
         }
     }
     if let Some(registry) = registry {

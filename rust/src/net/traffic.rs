@@ -364,6 +364,154 @@ impl AttackMixGen {
     }
 }
 
+/// Two-phase drift workload specification (see [`DriftMixGen`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DriftSpec {
+    /// Benign background: the adversarial churn workload.
+    pub churn: ChurnSpec,
+    /// Fraction of packets belonging to attack flows (both phases).
+    pub attack_frac: f64,
+    /// Packets each attacker identity sends before a fresh one takes
+    /// over — size this above the serving trigger so every identity is
+    /// classified before it rotates away.
+    pub attack_pkts: u32,
+    /// Packet index after which the phase-2 recipe replaces phase 1
+    /// (the first `shift_at` packets use phase 1).
+    pub shift_at: u64,
+    /// Concurrent phase-2 attacker identities.  A pool spreads each
+    /// identity's packets out in time, so the low-and-slow flows get
+    /// benign-scale inter-arrival gaps instead of phase 1's bursts.
+    pub pool: usize,
+}
+
+/// Concept-drift workload: the benign churn background never changes,
+/// but the attack recipe does, mid-stream.
+///
+/// * **Phase 1** (packets `1..=shift_at`) is the [`AttackMixGen`]
+///   recipe: bursty 64-byte TCP SYN probes to port 23 from the `0x0C…`
+///   source prefix — loud, and trivially separable on packet-size and
+///   flag features.
+/// * **Phase 2** (after `shift_at`) switches to low-and-slow attackers
+///   from the `0x0E…` prefix: benign-sized packets, benign ACK flags,
+///   paced across a rotating identity pool so even their inter-arrival
+///   gaps look like background flows.  Only the port pair
+///   (`31337 → 8080`) and the pool's timing signature separate them —
+///   none of which a model calibrated on phase 1 has ever seen.
+///
+/// Ground truth stays recoverable per packet across both phases via
+/// [`DriftMixGen::is_attack`].  One master CBR clock paces the merged
+/// stream; the whole stream is a pure function of `(spec, seed)`.
+pub struct DriftMixGen {
+    rng: Rng,
+    spec: DriftSpec,
+    benign: ChurnGen,
+    /// Phase-1 burst attacker (one identity at a time).
+    cur_attacker: u64,
+    cur_left: u32,
+    /// Phase-2 rotating pool: (identity, remaining packet budget).
+    pool: Vec<(u64, u32)>,
+    next_p2: u64,
+    emitted: u64,
+    t_ns: f64,
+}
+
+impl DriftMixGen {
+    pub fn new(spec: DriftSpec, seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed ^ 0xD21F_7A11_AC5E_ED00),
+            spec,
+            benign: ChurnGen::new(spec.churn, seed),
+            cur_attacker: 0,
+            cur_left: spec.attack_pkts.max(1),
+            pool: Vec::new(),
+            next_p2: 0,
+            emitted: 0,
+            t_ns: 0.0,
+        }
+    }
+
+    /// Ground truth: was this packet emitted by an attack flow (either
+    /// phase's recipe)?
+    pub fn is_attack(p: &Packet) -> bool {
+        matches!(p.src_ip >> 24, 0x0C | 0x0E)
+    }
+
+    /// Is this a *phase-2* (post-shift recipe) attack packet?
+    pub fn is_shifted_attack(p: &Packet) -> bool {
+        p.src_ip >> 24 == 0x0E
+    }
+
+    /// Phase 1: the [`AttackMixGen`] recipe verbatim — short SYN probes.
+    fn phase1_packet(&mut self) -> Packet {
+        if self.cur_left == 0 {
+            self.cur_attacker += 1;
+            self.cur_left = self.spec.attack_pkts.max(1);
+        }
+        self.cur_left -= 1;
+        let id = self.cur_attacker;
+        Packet {
+            ts_ns: self.t_ns,
+            src_ip: 0x0C00_0000 | (id as u32 & 0x00FF_FFFF),
+            dst_ip: 0x0D00_0000 | ((id >> 24) as u32 & 0x00FF_FFFF),
+            src_port: 1024 + (id % 50000) as u16,
+            dst_port: 23,
+            proto: Proto::Tcp,
+            size: 64,
+            tcp_flags: 0x02,
+        }
+    }
+
+    /// Phase 2: benign-shaped packets (background size, ACK flags) whose
+    /// only stable tells are the fixed `31337 → 8080` port pair.  A
+    /// random pool member emits each packet, so per-flow inter-arrival
+    /// times stretch toward benign scales.
+    fn phase2_packet(&mut self) -> Packet {
+        if self.pool.is_empty() {
+            for _ in 0..self.spec.pool.max(1) {
+                let id = self.next_p2;
+                self.next_p2 += 1;
+                self.pool.push((id, self.spec.attack_pkts.max(1)));
+            }
+        }
+        let slot = self.rng.below(self.pool.len() as u64) as usize;
+        let (id, left) = self.pool[slot];
+        let p = Packet {
+            ts_ns: self.t_ns,
+            src_ip: 0x0E00_0000 | (id as u32 & 0x00FF_FFFF),
+            dst_ip: 0x0F00_0000 | ((id >> 24) as u32 & 0x00FF_FFFF),
+            src_port: 31337,
+            dst_port: 8080,
+            proto: Proto::Tcp,
+            size: self.spec.churn.cbr.pkt_size,
+            tcp_flags: 0x10,
+        };
+        if left <= 1 {
+            let id = self.next_p2;
+            self.next_p2 += 1;
+            self.pool[slot] = (id, self.spec.attack_pkts.max(1));
+        } else {
+            self.pool[slot].1 = left - 1;
+        }
+        p
+    }
+
+    /// Next packet of the merged stream (CBR-paced, monotone time).
+    pub fn next_packet(&mut self) -> Packet {
+        self.t_ns += self.spec.churn.cbr.gap_ns();
+        self.emitted += 1;
+        if self.spec.attack_frac > 0.0 && self.rng.next_f64() < self.spec.attack_frac {
+            return if self.emitted <= self.spec.shift_at {
+                self.phase1_packet()
+            } else {
+                self.phase2_packet()
+            };
+        }
+        let mut p = self.benign.next_packet();
+        p.ts_ns = self.t_ns;
+        p
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -560,6 +708,83 @@ mod tests {
         }
         assert!(per_src.len() >= 1000 / 20, "sources: {}", per_src.len());
         assert!(per_src.values().all(|&c| c <= 20));
+    }
+
+    fn drift_spec(shift_at: u64) -> DriftSpec {
+        DriftSpec {
+            churn: churn_spec(256, 0.2),
+            attack_frac: 0.3,
+            attack_pkts: 20,
+            shift_at,
+            pool: 16,
+        }
+    }
+
+    #[test]
+    fn drift_mix_swaps_attack_recipe_exactly_at_the_shift() {
+        let mut a = DriftMixGen::new(drift_spec(5000), 9);
+        let mut b = DriftMixGen::new(drift_spec(5000), 9);
+        let mut last = 0.0;
+        let (mut p1, mut p2) = (0usize, 0usize);
+        for i in 0..10_000u64 {
+            let p = a.next_packet();
+            assert_eq!(p, b.next_packet(), "stream must be a pure function of (spec, seed)");
+            assert!(p.ts_ns > last, "merged clock must stay monotone");
+            last = p.ts_ns;
+            match p.src_ip >> 24 {
+                0x0C => {
+                    p1 += 1;
+                    assert!(i < 5000, "phase-1 recipe after the shift (packet {i})");
+                    assert_eq!((p.dst_port, p.size, p.tcp_flags), (23, 64, 0x02));
+                }
+                0x0E => {
+                    p2 += 1;
+                    assert!(i >= 5000, "phase-2 recipe before the shift (packet {i})");
+                    // Benign-shaped: background size and flags; only the
+                    // port pair gives the flow away.
+                    assert_eq!((p.src_port, p.dst_port), (31337, 8080));
+                    assert_eq!((p.size, p.tcp_flags), (256, 0x10));
+                    let (_, fwd) = FlowKey::from_packet(&p);
+                    assert!(fwd, "0x0E… source must already be canonical");
+                }
+                0x0A => {}
+                other => panic!("unexpected source prefix 0x{other:02X}"),
+            }
+        }
+        // Both recipes actually ran, at roughly the configured fraction.
+        assert!(p1 > 1000 && p2 > 1000, "p1={p1} p2={p2}");
+        let frac = (p1 + p2) as f64 / 10_000.0;
+        assert!((frac - 0.3).abs() < 0.03, "attack frac {frac}");
+    }
+
+    #[test]
+    fn phase2_pool_rotates_identities_and_stretches_gaps() {
+        // Attack-only stream, all phase 2: every identity must retire
+        // after its budget, and per-flow gaps must span multiple ticks
+        // (the pool property the low-and-slow disguise relies on).
+        let mut g = DriftMixGen::new(
+            DriftSpec { attack_frac: 1.0, ..drift_spec(0) },
+            3,
+        );
+        let mut per_src: std::collections::HashMap<u32, (u32, f64, f64)> =
+            std::collections::HashMap::new();
+        for _ in 0..4000 {
+            let p = g.next_packet();
+            assert!(DriftMixGen::is_shifted_attack(&p));
+            let e = per_src.entry(p.src_ip).or_insert((0, p.ts_ns, 0.0));
+            e.0 += 1;
+            e.2 = p.ts_ns - e.1; // span from first to latest packet
+        }
+        assert!(per_src.len() >= 4000 / 20, "identities: {}", per_src.len());
+        assert!(per_src.values().all(|&(c, _, _)| c <= 20));
+        // A 16-deep pool means a full-budget identity spans ≫ its own
+        // packet count in ticks (phase 1 would span ~20).
+        let gap = g.spec.churn.cbr.gap_ns();
+        let stretched = per_src
+            .values()
+            .filter(|&&(c, _, span)| c == 20 && span > 100.0 * gap)
+            .count();
+        assert!(stretched > 0, "no identity paced across the pool");
     }
 
     #[test]

@@ -87,7 +87,7 @@ impl Scenario for AnomalyScenario {
         }
         let model = centroid_model("anomaly", INPUT_BITS, &class0, &class1);
         let oracle = oracle_from_firings(&firings, &model, label);
-        Prepared { events, trigger, model, oracle }
+        Prepared { events, trigger, model, oracle, learn: None }
     }
 }
 

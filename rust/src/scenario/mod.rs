@@ -14,14 +14,16 @@
 //!   trigger semantics both runtimes share, and
 //! * a typed [`ScenarioScore`] with an accuracy floor.
 //!
-//! The three implementations are [`TrafficScenario`] (§5 use case 1,
+//! The implementations are [`TrafficScenario`] (§5 use case 1,
 //! per-flow traffic analysis), [`AnomalyScenario`] (§5 use case 2, a
-//! labeled attack mix over churning background traffic), and
+//! labeled attack mix over churning background traffic),
 //! [`TomographyScenario`] (§5 use case 3, SIMON-style congestion
-//! inference from probe delays, with per-link-speed deadline checks).
-//! [`ScenarioRegistry`] is the single authoritative list — the CLI, the
-//! experiments table, and CI all consult it instead of hardcoding
-//! scenario or model names.
+//! inference from probe delays, with per-link-speed deadline checks),
+//! and [`DriftScenario`] (the online-learning loop: the anomaly setting
+//! under a mid-run concept shift, recoverable only by live retraining —
+//! see [`crate::learn`]).  [`ScenarioRegistry`] is the single
+//! authoritative list — the CLI, the experiments table, and CI all
+//! consult it instead of hardcoding scenario or model names.
 //!
 //! Scoring semantics: the service's memory sink is reduced to one
 //! verdict per flow (the *maximum* class over all emissions — "flagged
@@ -33,16 +35,18 @@
 //! fraction of scored *labeled* flows classified correctly.
 
 pub mod anomaly;
+pub mod drift;
 pub mod tomography;
 pub mod traffic;
 
 pub use anomaly::AnomalyScenario;
+pub use drift::DriftScenario;
 pub use tomography::TomographyScenario;
 pub use traffic::TrafficScenario;
 
 use std::collections::{BTreeMap, HashMap};
 
-use crate::bnn::{words_for, BnnExecutor, BnnLayer, BnnModel, ModelMetrics, RegistryHandle};
+use crate::bnn::{BnnExecutor, BnnModel, RegistryHandle};
 use crate::coordinator::admin::AdminHandle;
 use crate::coordinator::service::{flow_id, select_packed_input};
 use crate::coordinator::{
@@ -50,6 +54,7 @@ use crate::coordinator::{
     ShedPolicy, TriggerCondition,
 };
 use crate::fpga::FpgaTiming;
+use crate::learn::{GateMode, LearnSpec};
 use crate::net::flow::{EvictPolicy, FlowKey, FlowStats};
 use crate::net::packet::Packet;
 
@@ -92,6 +97,9 @@ pub struct ScenarioConfig {
     pub shed: Option<ShedPolicy>,
     /// Live admin/introspection surface to attach, if any.
     pub admin: Option<AdminHandle>,
+    /// Promotion-gate fault-injection mode for scenarios with a
+    /// learning loop (`None` = the scenario's default, `Normal`).
+    pub gate: Option<GateMode>,
 }
 
 impl Default for ScenarioConfig {
@@ -109,6 +117,7 @@ impl Default for ScenarioConfig {
             evict: EvictPolicy::Lru,
             shed: None,
             admin: None,
+            gate: None,
         }
     }
 }
@@ -121,6 +130,9 @@ pub struct Prepared {
     pub trigger: TriggerCondition,
     pub model: BnnModel,
     pub oracle: Oracle,
+    /// Online-learning loop to attach to the run, if the scenario has
+    /// one (forces the registry serving path — retraining republishes).
+    pub learn: Option<LearnSpec>,
 }
 
 /// Ground truth for one prepared run, keyed by the sink's flow id.
@@ -219,13 +231,15 @@ impl Default for ScenarioRegistry {
 }
 
 impl ScenarioRegistry {
-    /// The paper's three use cases, in §5 order.
+    /// The paper's three use cases in §5 order, then the
+    /// online-learning drift case layered on top of them.
     pub fn standard() -> Self {
         Self {
             scenarios: vec![
                 Box::new(TrafficScenario),
                 Box::new(AnomalyScenario),
                 Box::new(TomographyScenario),
+                Box::new(DriftScenario),
             ],
         }
     }
@@ -287,7 +301,7 @@ pub fn run_scenario(
     scenario: &dyn Scenario,
     cfg: &ScenarioConfig,
 ) -> crate::Result<ScenarioReport> {
-    let Prepared { events, trigger, model, oracle } = scenario.prepare(cfg);
+    let Prepared { events, trigger, model, oracle, learn } = scenario.prepare(cfg);
     let mut builder = ServeBuilder::new()
         .pipeline(cfg.workers)
         .flow_capacity(cfg.flow_capacity)
@@ -301,7 +315,9 @@ pub fn run_scenario(
     if let Some(admin) = cfg.admin.as_ref() {
         builder = builder.admin(admin.clone());
     }
-    builder = if cfg.backend == "registry" {
+    // A learning loop republishes into the registry, so it forces the
+    // hot-swap-capable serving path regardless of the requested backend.
+    builder = if cfg.backend == "registry" || learn.is_some() {
         let handle = RegistryHandle::default();
         handle
             .publish(&model.name, &model)
@@ -318,6 +334,9 @@ pub fn run_scenario(
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         builder.backend(plane).trigger(trigger)
     };
+    if let Some(spec) = learn {
+        builder = builder.online_learn(spec);
+    }
     let service = builder.build().map_err(|e| anyhow::anyhow!("{e}"))?;
     let caps = service.capabilities();
     let report = service.run(events).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -415,49 +434,18 @@ pub fn verdict_digest(report: &ServiceReport) -> u64 {
 /// centroid (the farthest point — everything classifies as the seen
 /// class); with no calibration at all the centroids are all-zeros and
 /// all-ones.
+///
+/// Since the online-learning subsystem landed this is the same fit the
+/// in-process trainer uses for its refits
+/// ([`centroid_fit`](crate::learn::trainer::centroid_fit)) — scenario
+/// seed models and retrained candidates come from one implementation.
 pub fn centroid_model(
     name: &str,
     in_bits: usize,
     class0: &[Vec<u32>],
     class1: &[Vec<u32>],
 ) -> BnnModel {
-    let in_words = words_for(in_bits);
-    let majority = |vs: &[Vec<u32>]| -> Vec<u32> {
-        let mut out = vec![0u32; in_words];
-        for (w, slot) in out.iter_mut().enumerate() {
-            for bit in 0..32 {
-                let ones = vs.iter().filter(|v| (v[w] >> bit) & 1 == 1).count();
-                if ones * 2 >= vs.len() && !vs.is_empty() {
-                    *slot |= 1 << bit;
-                }
-            }
-        }
-        out
-    };
-    let complement = |v: &[u32]| v.iter().map(|w| !w).collect::<Vec<u32>>();
-    let (c0, c1) = match (class0.is_empty(), class1.is_empty()) {
-        (false, false) => (majority(class0), majority(class1)),
-        (false, true) => {
-            let c0 = majority(class0);
-            let c1 = complement(&c0);
-            (c0, c1)
-        }
-        (true, false) => {
-            let c1 = majority(class1);
-            (complement(&c1), c1)
-        }
-        (true, true) => (vec![0u32; in_words], vec![!0u32; in_words]),
-    };
-    let mut words = c0;
-    words.extend_from_slice(&c1);
-    let layer = BnnLayer::new(2, in_words, words).expect("centroid layer dimensions");
-    BnnModel {
-        name: name.to_string(),
-        in_bits,
-        neurons: vec![2],
-        layers: vec![layer],
-        metrics: ModelMetrics::default(),
-    }
+    crate::learn::trainer::centroid_fit(name, in_bits, class0, class1)
 }
 
 /// Offline replay of the exact per-flow trigger semantics both runtimes
@@ -518,9 +506,9 @@ mod tests {
     use crate::bnn::infer_packed;
 
     #[test]
-    fn registry_lists_three_scenarios_in_paper_order() {
+    fn registry_lists_scenarios_in_paper_order() {
         let reg = ScenarioRegistry::standard();
-        assert_eq!(reg.names(), vec!["traffic", "anomaly", "tomography"]);
+        assert_eq!(reg.names(), vec!["traffic", "anomaly", "tomography", "drift"]);
         assert!(reg.get("traffic").is_some());
         assert!(reg.get("nope").is_none());
         // Every scenario carries at least one deployable model shape.
@@ -542,7 +530,8 @@ mod tests {
                 "anomaly",
                 "tomography_32",
                 "tomography_64",
-                "tomography_128"
+                "tomography_128",
+                "drift"
             ]
         );
         // Shape lookup resolves every listed artifact and nothing else.

@@ -105,7 +105,7 @@ impl Scenario for TomographyScenario {
             oracle.expected.insert(id, exec.classify(&s.packed));
             events.push(PacketEvent { packet, payload_words: Some(s.packed) });
         }
-        Prepared { events, trigger: TriggerCondition::NewFlow, model, oracle }
+        Prepared { events, trigger: TriggerCondition::NewFlow, model, oracle, learn: None }
     }
 
     fn deadlines(&self, caps: &Capabilities) -> Vec<DeadlineCheck> {

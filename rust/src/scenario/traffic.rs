@@ -72,7 +72,7 @@ impl Scenario for TrafficScenario {
         }
         let model = centroid_model("traffic", INPUT_BITS, &class0, &class1);
         let oracle = oracle_from_firings(&firings, &model, label);
-        Prepared { events, trigger, model, oracle }
+        Prepared { events, trigger, model, oracle, learn: None }
     }
 }
 

@@ -1,0 +1,212 @@
+//! ISSUE 10 acceptance: the online-learning subsystem end-to-end.  The
+//! drift scenario's mid-run recipe shift must be detected, retrained
+//! away, and republished live — with pipelined runs bit-identical to
+//! serial across the swap, the sabotage/force-accept fault injections
+//! exercising gate rejection and probation rollback, and the admin
+//! surface's `POST /models/<name>/retrain` draining into the learner.
+
+use std::sync::Arc;
+
+use n3ic::bnn::{words_for, BnnLayer, BnnModel, ModelMetrics, RegistryHandle};
+use n3ic::coordinator::{
+    AdminHandle, AdminRequest, AdminResponse, BackendFactory, ModelRouter, PacketEvent,
+    ServeBuilder, TriggerCondition,
+};
+use n3ic::learn::{min_window_accuracy, recovery_accuracy, GateMode, LearnSpec, LearnStats};
+use n3ic::net::features::INPUT_BITS;
+use n3ic::net::packet::Packet;
+use n3ic::net::traffic::{CbrSpec, ChurnGen, ChurnSpec};
+use n3ic::scenario::{ScenarioConfig, ScenarioRegistry, ScenarioReport};
+
+const EVENTS: u64 = 8_000;
+
+fn run_drift(cfg: &ScenarioConfig) -> ScenarioReport {
+    ScenarioRegistry::standard().run("drift", cfg).expect("drift scenario")
+}
+
+fn learn_stats(rep: &ScenarioReport) -> &LearnStats {
+    rep.service.stats.learn.as_ref().expect("drift run must export learn stats")
+}
+
+#[test]
+fn drift_fires_retrains_and_recovers_end_to_end() {
+    let rep = run_drift(&ScenarioConfig { events: EVENTS, ..Default::default() });
+    let st = &rep.service.stats;
+    let l = learn_stats(&rep);
+    let shift_at = EVENTS * 2 / 5;
+    assert!(
+        l.drift_fired_at.is_some_and(|p| p > shift_at),
+        "drift must fire after the recipe shift at {shift_at}: {l:?}"
+    );
+    assert!(l.retrains >= 1 && l.promotions >= 1, "{l:?}");
+    assert!(
+        min_window_accuracy(&st.accuracy_timeline) < 0.8,
+        "the shift must produce a visible accuracy dip"
+    );
+    assert!(
+        recovery_accuracy(&st.accuracy_timeline, 4) > 0.75,
+        "windowed accuracy must recover after the republish"
+    );
+    assert!(
+        rep.passes_floor(),
+        "whole-run accuracy {:.3} under floor {:.2}",
+        rep.score.accuracy,
+        rep.floor
+    );
+    // No eviction/shedding pressure at this size: the run must match
+    // the learner-replay oracle exactly — no dropped or version-mixed
+    // verdicts across the live swaps.
+    assert!(rep.score.coverage > 0.99, "coverage {}", rep.score.coverage);
+    assert_eq!(rep.score.agreement, 1.0, "verdicts diverged from the oracle replay");
+}
+
+#[test]
+fn pipelined_run_is_bit_identical_across_live_republishes() {
+    let serial = run_drift(&ScenarioConfig { events: EVENTS, ..Default::default() });
+    let piped = run_drift(&ScenarioConfig {
+        events: EVENTS,
+        workers: 3,
+        batch: 16,
+        ..Default::default()
+    });
+    assert_eq!(
+        serial.digest(),
+        piped.digest(),
+        "pipelined verdicts diverged from serial across a swap"
+    );
+    assert_eq!(
+        serial.service.stats.inferences, piped.service.stats.inferences,
+        "inference counts diverged"
+    );
+    let (a, b) = (learn_stats(&serial), learn_stats(&piped));
+    assert_eq!(a.drift_fired_at, b.drift_fired_at, "drift fired at different packets");
+    assert_eq!(a.retrains, b.retrains);
+    assert_eq!(a.promotions, b.promotions);
+    assert_eq!(a.rollbacks, b.rollbacks);
+    assert!(piped.passes_floor());
+}
+
+#[test]
+fn sabotaged_candidates_are_all_rejected_and_nothing_publishes() {
+    let rep = run_drift(&ScenarioConfig {
+        events: EVENTS,
+        gate: Some(GateMode::SabotageCandidate),
+        ..Default::default()
+    });
+    let l = learn_stats(&rep);
+    assert!(l.retrains >= 1, "{l:?}");
+    assert_eq!(l.promotions, 0, "a sabotaged candidate slipped the gate: {l:?}");
+    assert!(l.rejections >= l.retrains, "{l:?}");
+    assert_eq!(l.rollbacks, 0, "nothing published, nothing to roll back");
+    // The loop never recovers — the floor legitimately fails — but the
+    // oracle replays the same sabotage, so fidelity still holds.
+    assert!(!rep.passes_floor(), "sabotaged run must stay under the floor");
+    assert_eq!(rep.score.agreement, 1.0);
+}
+
+#[test]
+fn forced_bad_publish_is_rolled_back_then_recovers() {
+    let rep = run_drift(&ScenarioConfig {
+        events: EVENTS,
+        gate: Some(GateMode::ForceAccept),
+        ..Default::default()
+    });
+    let l = learn_stats(&rep);
+    assert!(l.rollbacks >= 1, "probation must catch the forced bad model: {l:?}");
+    assert!(
+        l.promotions >= 2,
+        "forced publish plus the honest recovery promotion: {l:?}"
+    );
+    assert!(
+        recovery_accuracy(&rep.service.stats.accuracy_timeline, 4) > 0.75,
+        "the loop must still recover after the rollback"
+    );
+    assert_eq!(rep.score.agreement, 1.0, "rollback path broke oracle fidelity");
+}
+
+/// A model whose two neurons share identical weights: tied raw scores,
+/// argmax resolves low, every input classifies as class 0.  With an
+/// all-benign labeler this serves at accuracy 1.0 — drift can never
+/// fire, so any retrain attempt must come from the admin queue.
+fn constant_class0_model() -> BnnModel {
+    let in_words = words_for(INPUT_BITS);
+    let words = vec![0u32; 2 * in_words];
+    BnnModel {
+        name: "m".into(),
+        in_bits: INPUT_BITS,
+        neurons: vec![2],
+        layers: vec![BnnLayer::new(2, in_words, words).expect("layer dims")],
+        metrics: ModelMetrics::default(),
+    }
+}
+
+#[test]
+fn admin_retrain_queue_drains_into_the_learner() {
+    let admin = AdminHandle::new();
+    // Queue before the run starts: the serving loop drains at its first
+    // snapshot tick, so the forced attempt is deterministic, not racy.
+    match admin.handle(AdminRequest::route("POST", "/models/m/retrain").unwrap()).unwrap() {
+        AdminResponse::RetrainQueued { name } => assert_eq!(name, "m"),
+        other => panic!("{other:?}"),
+    }
+    // A retrain for a slot nobody watches must be ignored, not crash.
+    admin
+        .handle(AdminRequest::route("POST", "/models/other/retrain").unwrap())
+        .unwrap();
+
+    let registry = RegistryHandle::new();
+    let model = constant_class0_model();
+    registry.publish("m", &model).unwrap();
+    let latency_ns = n3ic::fpga::FpgaTiming::new(&model).latency_ns();
+    let plane =
+        BackendFactory::registry(&registry, &["m".to_string()], latency_ns, 1).unwrap();
+
+    let mut spec = LearnSpec::new("m", Arc::new(|_: &Packet| 0));
+    spec.window_pkts = 2_000; // first close already has >32 labeled samples
+    spec.holdout = 16;
+    spec.train_recent = 64;
+    spec.reservoir = 256;
+
+    let trigger = TriggerCondition::EveryNPackets(5);
+    let svc = ServeBuilder::new()
+        .backend(plane)
+        .router(ModelRouter::rules(vec![(trigger, "m".to_string())]))
+        .admin(admin.clone())
+        .online_learn(spec)
+        .build()
+        .unwrap();
+
+    let churn = ChurnSpec {
+        cbr: CbrSpec { gbps: 40.0, pkt_size: 256 },
+        working_set: 64,
+        churn_frac: 0.2,
+        alpha: 1.2,
+        min_pkts: 2,
+        max_pkts: 10_000,
+    };
+    let mut gen = ChurnGen::new(churn, 7);
+    let events =
+        (0..20_000).map(move |_| PacketEvent { packet: gen.next_packet(), payload_words: None });
+    let report = svc.run(events).expect("serve");
+
+    let l = report.stats.learn.as_ref().expect("learn stats");
+    assert_eq!(l.retrains, 1, "exactly the one admin-forced attempt: {l:?}");
+    // Same-distribution candidate ties the live model on the holdout —
+    // it cannot clear the promotion margin, so the gate refuses it.
+    assert_eq!(l.rejections, 1, "{l:?}");
+    assert_eq!(l.promotions, 0, "{l:?}");
+    assert!(l.drift_fired_at.is_none(), "accuracy never dropped: {l:?}");
+    assert!(l.windows >= 9, "{l:?}");
+    assert!(l.last_window_accuracy > 0.999, "{l:?}");
+
+    // The post-run admin scrape renders the learn series in Prometheus
+    // text format — the live observability half of the subsystem.
+    match admin.handle(AdminRequest::route("GET", "/metrics").unwrap()).unwrap() {
+        AdminResponse::Metrics(text) => {
+            assert!(text.contains("n3ic_learn_retrains_total 1"), "{text}");
+            assert!(text.contains("n3ic_learn_rejections_total 1"), "{text}");
+            assert!(text.contains("n3ic_learn_promotions_total 0"), "{text}");
+        }
+        other => panic!("{other:?}"),
+    }
+}

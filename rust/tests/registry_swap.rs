@@ -342,6 +342,108 @@ fn pipeline_readers_survive_concurrent_publishes_with_consistent_tags() {
     assert!(reg.swap_count("anomaly") <= VERSIONS - 1);
 }
 
+/// ISSUE 10 (promotion-gate substrate): `rollback` to *any* previously
+/// snapshotted epoch — not just the immediately preceding one — must
+/// republish exactly that epoch's weights under a strictly newer
+/// version.  The gate's probation path leans on this: it snapshots
+/// `current()` before publishing a candidate and may unwind several
+/// promotions deep.
+#[test]
+fn rollback_replays_any_snapshotted_depth_with_monotone_versions() {
+    let xs = inputs(12, 15_000);
+    let expected = expected_table("anomaly", 600, 3, &xs);
+
+    let reg = RegistryHandle::new();
+    reg.publish("anomaly", &model_v("anomaly", 600, 1)).unwrap();
+    let e1 = reg.current("anomaly").unwrap();
+    reg.publish("anomaly", &model_v("anomaly", 600, 2)).unwrap();
+    let e2 = reg.current("anomaly").unwrap();
+    reg.publish("anomaly", &model_v("anomaly", 600, 3)).unwrap();
+    assert_eq!(e1.version(), 1);
+    assert_eq!(e2.version(), 2);
+
+    let names = vec!["anomaly".to_string()];
+    let mut exec = MultiModelExecutor::new(&reg, &names, 100.0).unwrap();
+
+    // Depth 1: roll back past v3 to the v2 snapshot → new version 4,
+    // serving v2's exact weights.
+    let tag = reg.rollback("anomaly", &e2).unwrap();
+    assert_eq!(tag.version(), 4, "rollback must mint a NEW version, never rewind");
+    for (i, x) in xs.iter().enumerate() {
+        let (class, tag) = exec.classify(0, x);
+        assert_eq!(tag.version(), 4);
+        assert_eq!(class, expected[1][i], "v4 must serve v2's weights (input {i})");
+    }
+
+    // Depth 2: roll back again, two publishes deep, to the v1 snapshot.
+    let tag = reg.rollback("anomaly", &e1).unwrap();
+    assert_eq!(tag.version(), 5);
+    for (i, x) in xs.iter().enumerate() {
+        let (class, tag) = exec.classify(0, x);
+        assert_eq!(tag.version(), 5);
+        assert_eq!(class, expected[0][i], "v5 must serve v1's weights (input {i})");
+    }
+
+    // The snapshots themselves are immutable: rolling back to e2 again
+    // still works even though the registry has moved on since.
+    let tag = reg.rollback("anomaly", &e2).unwrap();
+    assert_eq!(tag.version(), 6);
+    let (class, tag) = exec.classify(0, &xs[0]);
+    assert_eq!(tag.version(), 6);
+    assert_eq!(class, expected[1][0]);
+
+    // Slot creation isn't a swap; the 2 follow-up publishes and the
+    // 3 rollbacks each are.
+    assert_eq!(reg.swap_count("anomaly"), 5);
+}
+
+/// Interleave publish / touch / rollback and check every sharded batch
+/// verdict against the weights *its tag's version* was installed with.
+/// `touch` republishes the same weights, `rollback` republishes old
+/// weights — a reader that conflated "version" with "weights identity"
+/// would trip on either.
+#[test]
+fn sharded_reads_stay_tag_consistent_across_touch_and_rollback() {
+    let xs = inputs(17, 17_000);
+    let expected = expected_table("anomaly", 700, 3, &xs);
+    // weights_of[v - 1] = which of the 3 weight sets version v serves.
+    let mut weights_of: Vec<usize> = Vec::new();
+
+    let reg = RegistryHandle::new();
+    reg.publish("anomaly", &model_v("anomaly", 700, 1)).unwrap();
+    weights_of.push(1);
+    let pre = reg.current("anomaly").unwrap();
+
+    let names = vec!["anomaly".to_string()];
+    let mut exec = MultiModelExecutor::new(&reg, &names, 100.0).unwrap().sharded(3);
+    let mut classes = Vec::new();
+    let mut check = |exec: &mut MultiModelExecutor, weights_of: &[usize]| {
+        let tag = exec.classify_batch(0, &xs, &mut classes);
+        let v = tag.version() as usize;
+        assert_eq!(v, weights_of.len(), "freshness: pin after install sees it");
+        let w = weights_of[v - 1];
+        for (i, &c) in classes.iter().enumerate() {
+            assert_eq!(c, expected[w - 1][i], "v{v} serves weight set {w} (input {i})");
+        }
+    };
+
+    check(&mut exec, &weights_of);
+    reg.publish("anomaly", &model_v("anomaly", 700, 2)).unwrap();
+    weights_of.push(2);
+    check(&mut exec, &weights_of);
+    reg.touch("anomaly").unwrap(); // v3: same weights as v2
+    weights_of.push(2);
+    check(&mut exec, &weights_of);
+    reg.rollback("anomaly", &pre).unwrap(); // v4: v1's weights again
+    weights_of.push(1);
+    check(&mut exec, &weights_of);
+    reg.publish("anomaly", &model_v("anomaly", 700, 3)).unwrap();
+    weights_of.push(3);
+    check(&mut exec, &weights_of);
+
+    assert_eq!(reg.swap_count("anomaly"), 4);
+}
+
 /// Acceptance: a pipeline run with two named models yields per-model
 /// verdict histograms identical to two standalone single-model runs on
 /// the same seeded traffic.

@@ -113,14 +113,15 @@ echo "$overload_out" | grep -q "step-down" \
 echo "$overload_out" | grep -q "step-up" \
   || { echo "overload smoke: expected a ladder step-up (recovery)"; exit 1; }
 
-# Scenario smoke: every paper use case (§5) runs seeded and small
-# through the unified service, serial AND pipelined.  Each run must
-# clear its accuracy floor (the CLI exits nonzero and prints FAIL
-# otherwise), and the pipelined run must reproduce the serial run's
-# order-independent verdict digest — the determinism contract checked
-# end-to-end through the scenario subsystem.
-echo "== scenario smoke: all three use cases, floor + serial≡pipelined digest =="
-for sc in traffic anomaly tomography; do
+# Scenario smoke: every registered scenario — the three §5 use cases
+# plus the online-learning `drift` loop — runs seeded and small through
+# the unified service, serial AND pipelined.  Each run must clear its
+# accuracy floor (the CLI exits nonzero and prints FAIL otherwise), and
+# the pipelined run must reproduce the serial run's order-independent
+# verdict digest — the determinism contract checked end-to-end through
+# the scenario subsystem, drift's live republishes included.
+echo "== scenario smoke: all use cases, floor + serial≡pipelined digest =="
+for sc in traffic anomaly tomography drift; do
   if [ "$sc" = tomography ]; then ev=160; else ev=8000; fi
   serial_out=$(cargo run --release --quiet -- scenario "$sc" --events "$ev")
   echo "$serial_out"
@@ -134,7 +135,31 @@ for sc in traffic anomaly tomography; do
   d_piped=$(echo "$piped_out" | grep "verdict digest")
   [ -n "$d_serial" ] && [ "$d_serial" = "$d_piped" ] \
     || { echo "scenario smoke: $sc digest mismatch: '$d_serial' vs '$d_piped'"; exit 1; }
+  if [ "$sc" = drift ]; then
+    # The learning loop's own invariants: Page–Hinkley fired after the
+    # recipe shift, and windowed accuracy recovered post-republish.
+    echo "$serial_out" | grep -Eq "drift check *:.*PASS" \
+      || { echo "drift smoke: detector never fired"; exit 1; }
+    echo "$serial_out" | grep -Eq "recovery check *:.*PASS" \
+      || { echo "drift smoke: accuracy did not recover"; exit 1; }
+  fi
 done
+
+# Gate fault injection: sabotaged candidates must all be rejected (the
+# promotion gate earns its keep), and a bad candidate forced past the
+# gate must be rolled back by probation.  Both modes print their own
+# `gate check : … PASS` line and exit nonzero on failure.
+echo "== drift smoke: gate rejects sabotage, probation rolls back forced publish =="
+sab_out=$(cargo run --release --quiet -- scenario drift --events 8000 \
+  --gate sabotage)
+echo "$sab_out"
+echo "$sab_out" | grep -Eq "gate check *:.*PASS" \
+  || { echo "drift smoke: sabotage gate check failed"; exit 1; }
+force_out=$(cargo run --release --quiet -- scenario drift --events 8000 \
+  --gate force-accept)
+echo "$force_out"
+echo "$force_out" | grep -Eq "gate check *:.*PASS" \
+  || { echo "drift smoke: force-accept rollback check failed"; exit 1; }
 
 # Quantized-MLP backend smoke: the fixed-point executor must clear the
 # traffic-classification floor through the same scenario CLI (its
@@ -169,5 +194,16 @@ echo "== perf: simd bench (writes tracked BENCH.json) =="
 cargo bench --bench simd --features simd
 grep -q '"simd"' ../BENCH.json \
   || { echo "simd bench: no 'simd' entry in BENCH.json"; exit 1; }
+
+# Online-learning cost record: refit latency + the drift loop's
+# end-to-end throughput (the bench itself asserts the floor and at
+# least one live promotion).  Smoke first, then the tracked entry.
+echo "== perf smoke: learn bench =="
+N3IC_BENCH_SMOKE=1 cargo bench --bench learn
+
+echo "== perf: learn bench (writes tracked BENCH.json) =="
+cargo bench --bench learn
+grep -q '"learn"' ../BENCH.json \
+  || { echo "learn bench: no 'learn' entry in BENCH.json"; exit 1; }
 
 echo "verify.sh: all gates passed"
